@@ -1,0 +1,11 @@
+//! Bench E7 — regenerates **Fig. 6** (ablation: Baseline / Pipeline-O1 /
+//! Pipeline-O2 speedups over the GPU and non-optimised FPGA baselines).
+
+use dgnn_booster::metrics::bench_loop;
+use dgnn_booster::report::tables::{fig6, ReportCtx};
+
+fn main() {
+    let ctx = ReportCtx::default();
+    println!("{}", fig6(&ctx).expect("fig6"));
+    bench_loop("fig6 full regeneration", 3, || fig6(&ctx).unwrap());
+}

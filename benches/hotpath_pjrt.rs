@@ -1,0 +1,66 @@
+//! L3 hot-path microbench: the PJRT step execution that sits on the
+//! request path of the e2e server — literal creation, padding, execute,
+//! readback.  This is the §Perf optimisation target for Layer 3.
+//!
+//! Requires `make artifacts`; prints a notice and exits cleanly if the
+//! artifacts are absent (so `cargo bench` works in a fresh checkout).
+
+use dgnn_booster::baselines::cpu::features_for;
+use dgnn_booster::metrics::bench_loop;
+use dgnn_booster::models::{Dims, EvolveGcnParams, GcrnM2Params};
+use dgnn_booster::report::tables::{snapshots, ReportCtx};
+use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, Manifest};
+use dgnn_booster::coordinator::NodeStateStore;
+use dgnn_booster::datasets::BC_ALPHA;
+
+fn main() {
+    if Manifest::load("artifacts").is_err() {
+        println!("hotpath_pjrt: artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let ctx = ReportCtx::default();
+    let dims = Dims::default();
+    let mut snaps = snapshots(&ctx, &BC_ALPHA).expect("snaps");
+    snaps.truncate(8);
+    let client = xla::PjRtClient::cpu().expect("pjrt cpu client");
+
+    // EvolveGCN step
+    let params = EvolveGcnParams::init(ctx.seed, dims);
+    let mut exec = EvolveGcnExecutor::new(&client, "artifacts", &params).expect("executor");
+    let xs: Vec<_> = snaps.iter().map(|s| features_for(s, dims, ctx.seed)).collect();
+    let mut i = 0;
+    bench_loop("evolvegcn_step PJRT end-to-end", 50, || {
+        let s = &snaps[i % snaps.len()];
+        let out = exec.run_step(s, &xs[i % snaps.len()].data).unwrap();
+        i += 1;
+        out[0]
+    });
+
+    // GCRN step
+    let gparams = GcrnM2Params::init(ctx.seed, dims);
+    let mut gexec = GcrnExecutor::new(&client, "artifacts", &gparams).expect("executor");
+    let max_nodes = gexec.manifest().max_nodes;
+    let total = 4000;
+    let h_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let c_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut i = 0;
+    bench_loop("gcrn_m2_step PJRT end-to-end", 50, || {
+        let s = &snaps[i % snaps.len()];
+        let mut h = h_store.gather_padded(s, max_nodes);
+        let mut c = c_store.gather_padded(s, max_nodes);
+        gexec.run_step(s, &xs[i % snaps.len()].data, &mut h, &mut c).unwrap();
+        i += 1;
+        h[0]
+    });
+
+    // padding-only component (to separate padding from PJRT costs)
+    let manifest = gexec.manifest().clone();
+    let mut pg = dgnn_booster::runtime::PaddedGraph::new(&manifest);
+    let mut i = 0;
+    bench_loop("PaddedGraph::fill (padding only)", 2000, || {
+        let s = &snaps[i % snaps.len()];
+        pg.fill(s).unwrap();
+        i += 1;
+        pg.num_edges
+    });
+}

@@ -1,0 +1,27 @@
+//! Bench E1 — regenerates **Table II** (ZCU102 resource utilisation) and
+//! times the resource-model evaluation.
+
+use dgnn_booster::fpga::designs::AcceleratorConfig;
+use dgnn_booster::fpga::resources;
+use dgnn_booster::metrics::bench_loop;
+use dgnn_booster::models::ModelKind;
+use dgnn_booster::report::tables::{table2, ReportCtx};
+
+fn main() {
+    let ctx = ReportCtx::default();
+    println!("{}", table2(&ctx).expect("table2"));
+    bench_loop("resources::estimate(EvolveGCN)", 1000, || {
+        resources::estimate(
+            &AcceleratorConfig::paper_default(ModelKind::EvolveGcn),
+            608,
+            1728,
+        )
+    });
+    bench_loop("resources::estimate(GCRN-M2)", 1000, || {
+        resources::estimate(
+            &AcceleratorConfig::paper_default(ModelKind::GcrnM2),
+            608,
+            1728,
+        )
+    });
+}

@@ -1,0 +1,21 @@
+//! Bench E2 — regenerates **Table III** (dataset statistics) and times
+//! generation + preprocessing of both streams.
+
+use dgnn_booster::coordinator::preprocess::preprocess_stream;
+use dgnn_booster::datasets::{synth, BC_ALPHA, UCI};
+use dgnn_booster::metrics::bench_loop;
+use dgnn_booster::report::tables::{table3, ReportCtx};
+
+fn main() {
+    let ctx = ReportCtx::default();
+    println!("{}", table3(&ctx).expect("table3"));
+    for p in [&BC_ALPHA, &UCI] {
+        let stream = synth::generate(p, ctx.seed);
+        bench_loop(&format!("synth::generate({})", p.name), 5, || {
+            synth::generate(p, ctx.seed)
+        });
+        bench_loop(&format!("preprocess_stream({})", p.name), 5, || {
+            preprocess_stream(&stream, p.splitter_secs).unwrap()
+        });
+    }
+}

@@ -1,0 +1,42 @@
+//! Bench E3 — regenerates **Table IV** (per-snapshot latency, CPU vs GPU
+//! vs FPGA, with speedups) and times each platform model; also reports
+//! the *measured* pure-Rust CPU latency on this machine alongside the
+//! analytic 6226R model (DESIGN.md §4 CPU-baseline substitution).
+
+use dgnn_booster::baselines::cpu;
+use dgnn_booster::datasets::{BC_ALPHA, UCI};
+use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
+use dgnn_booster::metrics::bench_loop;
+use dgnn_booster::models::{EvolveGcnParams, GcrnM2Params, ModelKind};
+use dgnn_booster::report::tables::{snapshots, table4, ReportCtx};
+
+fn main() {
+    let ctx = ReportCtx::default();
+    println!("{}", table4(&ctx).expect("table4"));
+
+    // measured CPU baseline (pure-Rust mirror on this machine)
+    println!("Measured CPU baseline (this machine, pure-Rust mirror):");
+    for p in [&BC_ALPHA, &UCI] {
+        let mut snaps = snapshots(&ctx, p).expect("snaps");
+        snaps.truncate(40);
+        let ep = EvolveGcnParams::init(ctx.seed, Default::default());
+        let (ms_e, _) = cpu::measure_evolvegcn(&snaps, &ep, ctx.seed);
+        let gp = GcrnM2Params::init(ctx.seed, Default::default());
+        let total_nodes = snaps
+            .iter()
+            .flat_map(|s| s.renumber.iter().map(|(_, r)| r as usize + 1))
+            .max()
+            .unwrap_or(1);
+        let (ms_g, _) = cpu::measure_gcrn(&snaps, &gp, total_nodes, ctx.seed);
+        println!("  {:>9}: EvolveGCN {ms_e:.3} ms/snap, GCRN-M2 {ms_g:.3} ms/snap", p.name);
+    }
+
+    // timing of the FPGA simulator itself (it sits on the bench path)
+    let snaps = snapshots(&ctx, &BC_ALPHA).expect("snaps");
+    for model in [ModelKind::EvolveGcn, ModelKind::GcrnM2] {
+        let cfg = AcceleratorConfig::paper_default(model);
+        bench_loop(&format!("fpga sim full stream ({})", model.name()), 10, || {
+            avg_latency_ms(&cfg, &snaps)
+        });
+    }
+}

@@ -1,0 +1,11 @@
+//! Bench E4 — regenerates **Table V** (total energy incl. idle, J per
+//! 100 snapshots).
+
+use dgnn_booster::metrics::bench_loop;
+use dgnn_booster::report::tables::{table5, ReportCtx};
+
+fn main() {
+    let ctx = ReportCtx::default();
+    println!("{}", table5(&ctx).expect("table5"));
+    bench_loop("table5 full regeneration", 3, || table5(&ctx).unwrap());
+}

@@ -1,0 +1,11 @@
+//! Bench E5 — regenerates **Table VI** (runtime energy, J per 100
+//! snapshots) — the paper's headline 100×/1000× efficiency claim.
+
+use dgnn_booster::metrics::bench_loop;
+use dgnn_booster::report::tables::{table6, ReportCtx};
+
+fn main() {
+    let ctx = ReportCtx::default();
+    println!("{}", table6(&ctx).expect("table6"));
+    bench_loop("table6 full regeneration", 3, || table6(&ctx).unwrap());
+}

@@ -1,0 +1,22 @@
+//! Bench E6 — regenerates **Table VII** (DSP allocation + module
+//! latencies) and times the DSE sweep.
+
+use dgnn_booster::fpga::designs::AcceleratorConfig;
+use dgnn_booster::fpga::dse;
+use dgnn_booster::metrics::bench_loop;
+use dgnn_booster::models::ModelKind;
+use dgnn_booster::report::tables::{snapshots, table7, ReportCtx};
+use dgnn_booster::datasets::BC_ALPHA;
+
+fn main() {
+    let ctx = ReportCtx::default();
+    println!("{}", table7(&ctx).expect("table7"));
+    let mut snaps = snapshots(&ctx, &BC_ALPHA).expect("snaps");
+    snaps.truncate(24);
+    for model in [ModelKind::EvolveGcn, ModelKind::GcrnM2] {
+        let cfg = AcceleratorConfig::paper_default(model);
+        bench_loop(&format!("dse::sweep 12 pts ({})", model.name()), 5, || {
+            dse::sweep(&cfg, &snaps, cfg.total_dsp(), 12)
+        });
+    }
+}

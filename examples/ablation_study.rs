@@ -1,0 +1,61 @@
+//! Ablation study (paper Fig. 6) with extra detail: per-optimisation
+//! latency, the module-level breakdown it comes from, and a node-queue
+//! (FIFO) depth sweep showing where backpressure stops mattering.
+//!
+//! ```
+//! cargo run --release --example ablation_study
+//! ```
+
+use dgnn_booster::fpga::cycles_to_ms;
+use dgnn_booster::fpga::designs::{avg_latency_ms, simulate_stream, AcceleratorConfig, OptLevel};
+use dgnn_booster::baselines::gpu;
+use dgnn_booster::models::ModelKind;
+use dgnn_booster::report::tables::{snapshots, ReportCtx};
+use dgnn_booster::datasets::{BC_ALPHA, UCI};
+
+fn main() -> dgnn_booster::Result<()> {
+    let ctx = ReportCtx::default();
+    for (model, profile) in [
+        (ModelKind::EvolveGcn, &BC_ALPHA),
+        (ModelKind::GcrnM2, &BC_ALPHA),
+        (ModelKind::GcrnM2, &UCI),
+    ] {
+        let snaps = snapshots(&ctx, profile)?;
+        let gpu_ms = gpu::avg_latency_ms(model, &snaps, 32);
+        println!("=== {} on {} (GPU baseline {:.2} ms) ===", model.name(), profile.name, gpu_ms);
+        let base =
+            avg_latency_ms(&AcceleratorConfig::paper_default(model).with_opt(OptLevel::Baseline), &snaps);
+        for opt in [OptLevel::Baseline, OptLevel::PipelineO1, OptLevel::PipelineO2] {
+            let cfg = AcceleratorConfig::paper_default(model).with_opt(opt);
+            let ms = avg_latency_ms(&cfg, &snaps);
+            let (steps, _) = simulate_stream(&cfg, &snaps);
+            let avg = |f: fn(&dgnn_booster::fpga::StepTiming) -> f64| {
+                cycles_to_ms(steps.iter().map(f).sum::<f64>() / steps.len() as f64)
+            };
+            println!(
+                "  {:<12} {:>6.2} ms  [GL {:.3} | CONV {:.3} | MP {:.3} | NT {:.3} | RNN {:.3}]  vs-base {:.2}x  vs-GPU {:.2}x",
+                opt.name(),
+                ms,
+                avg(|s| s.gl),
+                avg(|s| s.conv),
+                avg(|s| s.mp),
+                avg(|s| s.nt),
+                avg(|s| s.rnn),
+                base / ms,
+                gpu_ms / ms
+            );
+        }
+        // FIFO depth sweep (V2 only has node queues; V1 ignores depth)
+        if model.booster_version() == 2 {
+            print!("  node-queue depth sweep:");
+            for depth in [1usize, 2, 4, 8, 16, 32, 64] {
+                let mut cfg = AcceleratorConfig::paper_default(model);
+                cfg.fifo_depth = depth;
+                print!("  d{depth}={:.3}ms", avg_latency_ms(&cfg, &snaps));
+            }
+            println!();
+        }
+        println!();
+    }
+    Ok(())
+}

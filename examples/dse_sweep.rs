@@ -1,0 +1,54 @@
+//! Design-space exploration demo (paper §V-D / Table VII): sweep the
+//! GNN/RNN DSP split for both designs and print the latency curve, the
+//! optimum, and the paper's shipped split.
+//!
+//! ```
+//! cargo run --release --example dse_sweep
+//! ```
+
+use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
+use dgnn_booster::fpga::dse;
+use dgnn_booster::fpga::resources;
+use dgnn_booster::models::ModelKind;
+use dgnn_booster::report::tables::{snapshots, ReportCtx};
+use dgnn_booster::datasets::BC_ALPHA;
+
+fn main() -> dgnn_booster::Result<()> {
+    let ctx = ReportCtx::default();
+    let mut snaps = snapshots(&ctx, &BC_ALPHA)?;
+    snaps.truncate(48);
+
+    for model in [ModelKind::EvolveGcn, ModelKind::GcrnM2] {
+        let cfg = AcceleratorConfig::paper_default(model);
+        println!(
+            "=== {} (DGNN-Booster V{}) — total {} DSP ===",
+            model.name(),
+            model.booster_version(),
+            cfg.total_dsp()
+        );
+        println!("{:>9} {:>9} {:>13}  {}", "GNN DSP", "RNN DSP", "latency (ms)", "bar");
+        let pts = dse::sweep(&cfg, &snaps, cfg.total_dsp(), 16);
+        let worst = pts.iter().map(|p| p.latency_ms).fold(0.0, f64::max);
+        for p in &pts {
+            let bar = "#".repeat((p.latency_ms / worst * 48.0) as usize);
+            println!("{:>9} {:>9} {:>13.3}  {bar}", p.dsp_gnn, p.dsp_rnn, p.latency_ms);
+        }
+        let best = dse::best(&pts);
+        let paper_ms = avg_latency_ms(&cfg, &snaps);
+        println!(
+            "sweep optimum: {}/{} DSP -> {:.3} ms | paper split {}/{} -> {:.3} ms",
+            best.dsp_gnn, best.dsp_rnn, best.latency_ms, cfg.dsp_gnn, cfg.dsp_rnn, paper_ms
+        );
+        // check the optimum still fits the device
+        let mut opt_cfg = cfg;
+        opt_cfg.dsp_gnn = best.dsp_gnn;
+        opt_cfg.dsp_rnn = best.dsp_rnn;
+        let usage = resources::estimate(&opt_cfg, ctx.max_nodes, ctx.max_edges);
+        usage.check_fits()?;
+        println!(
+            "optimum build: {} LUT, {:.1} BRAM, {} DSP — fits ZCU102\n",
+            usage.lut, usage.bram, usage.dsp
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,200 @@
+//! **End-to-end driver** (EXPERIMENTS.md E8): stream every snapshot of
+//! both datasets through the full three-layer stack — host preprocessing
+//! (L3) → AOT-compiled JAX/Pallas model steps (L2/L1) executed on the
+//! PJRT CPU client — for both models, cross-checking the numerics
+//! against the pure-Rust mirror, and reporting latency/throughput plus
+//! the FPGA-projected per-snapshot latency.
+//!
+//! Requires `make artifacts`.  Usage:
+//! ```
+//! cargo run --release --example e2e_serve              # full streams
+//! cargo run --release --example e2e_serve -- --snapshots 40
+//! ```
+
+use dgnn_booster::baselines::cpu::features_for;
+use dgnn_booster::coordinator::pipeline::{run_stream, Prepared};
+use dgnn_booster::coordinator::NodeStateStore;
+use dgnn_booster::datasets::{self, BC_ALPHA, UCI};
+use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
+use dgnn_booster::metrics::LatencyStats;
+use dgnn_booster::models::{Dims, EvolveGcnParams, GcrnM1Params, GcrnM2Params, ModelKind};
+use dgnn_booster::numerics::{self, Mat};
+use dgnn_booster::report::tables::{snapshots, ReportCtx};
+use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor};
+use dgnn_booster::testutil::max_abs_diff;
+
+const SEED: u64 = 42;
+
+fn main() -> dgnn_booster::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let limit = args
+        .windows(2)
+        .find(|w| w[0] == "--snapshots")
+        .map(|w| w[1].parse::<usize>().expect("--snapshots N"))
+        .unwrap_or(usize::MAX);
+
+    let client = xla::PjRtClient::cpu()?;
+    println!(
+        "PJRT platform: {} ({} devices)\n",
+        client.platform_name(),
+        client.device_count()
+    );
+
+    for profile in [&BC_ALPHA, &UCI] {
+        for model in ModelKind::all() {
+            serve(&client, model, profile, limit)?;
+        }
+    }
+    Ok(())
+}
+
+fn serve(
+    client: &xla::PjRtClient,
+    model: ModelKind,
+    profile: &'static datasets::DatasetProfile,
+    limit: usize,
+) -> dgnn_booster::Result<()> {
+    let dims = Dims::default();
+    let stream = datasets::load_or_generate(profile, "data", SEED)?;
+    let mut stats = LatencyStats::new();
+    let mut max_err = 0.0f32;
+    let mut count = 0usize;
+
+    match model {
+        ModelKind::EvolveGcn => {
+            let params = EvolveGcnParams::init(SEED, dims);
+            let mut exec = EvolveGcnExecutor::new(client, "artifacts", &params)?;
+            // mirror state for cross-check
+            let mut w1 = Mat::from_vec(dims.in_dim, dims.hidden_dim, params.w1.clone());
+            let mut w2 = Mat::from_vec(dims.hidden_dim, dims.out_dim, params.w2.clone());
+            let results = run_stream(
+                &stream,
+                profile.splitter_secs,
+                4,
+                |snap| {
+                    let x = features_for(&snap, dims, SEED);
+                    Ok(Prepared { snapshot: snap, payload: x })
+                },
+                |p| {
+                    if p.snapshot.index >= limit {
+                        return Ok(0usize);
+                    }
+                    let out = exec.run_step(&p.snapshot, &p.payload.data)?;
+                    // cross-check vs the pure-Rust mirror
+                    let (ref_out, w1n, w2n) =
+                        numerics::evolvegcn_step(&p.snapshot, &p.payload, &w1, &w2, &params);
+                    w1 = w1n;
+                    w2 = w2n;
+                    max_err = max_err.max(max_abs_diff(&out, &ref_out.data));
+                    Ok(out.len())
+                },
+            )?;
+            for r in results.iter().filter(|r| r.index < limit) {
+                stats.record(r.wall);
+                count += 1;
+            }
+        }
+        ModelKind::GcrnM1 => {
+            let params = GcrnM1Params::init(SEED, dims);
+            let mut exec = GcrnM1Executor::new(client, "artifacts", &params)?;
+            let max_nodes = exec.manifest().max_nodes;
+            let total = stream.num_nodes as usize;
+            let mut h_store = NodeStateStore::zeros(total, dims.hidden_dim);
+            let mut c_store = NodeStateStore::zeros(total, dims.hidden_dim);
+            let mut h_ref = NodeStateStore::zeros(total, dims.hidden_dim);
+            let mut c_ref = NodeStateStore::zeros(total, dims.hidden_dim);
+            let results = run_stream(
+                &stream,
+                profile.splitter_secs,
+                4,
+                |snap| {
+                    let x = features_for(&snap, dims, SEED);
+                    Ok(Prepared { snapshot: snap, payload: x })
+                },
+                |p| {
+                    if p.snapshot.index >= limit {
+                        return Ok(0usize);
+                    }
+                    let snap = &p.snapshot;
+                    let n = snap.num_nodes();
+                    let mut h = h_store.gather_padded(snap, max_nodes);
+                    let mut c = c_store.gather_padded(snap, max_nodes);
+                    exec.run_step(snap, &p.payload.data, &mut h, &mut c)?;
+                    h_store.scatter(snap, &h);
+                    c_store.scatter(snap, &c);
+                    let hm = Mat::from_vec(n, dims.hidden_dim,
+                        h_ref.gather_padded(snap, n));
+                    let cm = Mat::from_vec(n, dims.hidden_dim,
+                        c_ref.gather_padded(snap, n));
+                    let (hn, cn) = numerics::gcrn_m1_step(snap, &p.payload, &hm, &cm, &params);
+                    h_ref.scatter(snap, &hn.data);
+                    c_ref.scatter(snap, &cn.data);
+                    max_err = max_err
+                        .max(max_abs_diff(&h[..n * dims.hidden_dim], &hn.data));
+                    Ok(n)
+                },
+            )?;
+            for r in results.iter().filter(|r| r.index < limit) {
+                stats.record(r.wall);
+                count += 1;
+            }
+        }
+        ModelKind::GcrnM2 => {
+            let params = GcrnM2Params::init(SEED, dims);
+            let mut exec = GcrnExecutor::new(client, "artifacts", &params)?;
+            let max_nodes = exec.manifest().max_nodes;
+            let total = stream.num_nodes as usize;
+            let mut h_store = NodeStateStore::zeros(total, dims.hidden_dim);
+            let mut c_store = NodeStateStore::zeros(total, dims.hidden_dim);
+            // mirror state
+            let mut h_ref = NodeStateStore::zeros(total, dims.hidden_dim);
+            let mut c_ref = NodeStateStore::zeros(total, dims.hidden_dim);
+            let results = run_stream(
+                &stream,
+                profile.splitter_secs,
+                4,
+                |snap| {
+                    let x = features_for(&snap, dims, SEED);
+                    Ok(Prepared { snapshot: snap, payload: x })
+                },
+                |p| {
+                    if p.snapshot.index >= limit {
+                        return Ok(0usize);
+                    }
+                    let snap = &p.snapshot;
+                    let n = snap.num_nodes();
+                    let mut h = h_store.gather_padded(snap, max_nodes);
+                    let mut c = c_store.gather_padded(snap, max_nodes);
+                    exec.run_step(snap, &p.payload.data, &mut h, &mut c)?;
+                    h_store.scatter(snap, &h);
+                    c_store.scatter(snap, &c);
+                    // mirror
+                    let hm = Mat::from_vec(n, dims.hidden_dim,
+                        h_ref.gather_padded(snap, n));
+                    let cm = Mat::from_vec(n, dims.hidden_dim,
+                        c_ref.gather_padded(snap, n));
+                    let (hn, cn) = numerics::gcrn_m2_step(snap, &p.payload, &hm, &cm, &params);
+                    h_ref.scatter(snap, &hn.data);
+                    c_ref.scatter(snap, &cn.data);
+                    max_err = max_err
+                        .max(max_abs_diff(&h[..n * dims.hidden_dim], &hn.data));
+                    Ok(n)
+                },
+            )?;
+            for r in results.iter().filter(|r| r.index < limit) {
+                stats.record(r.wall);
+                count += 1;
+            }
+        }
+    }
+
+    let snaps = snapshots(&ReportCtx::default(), profile)?;
+    let fpga_ms = avg_latency_ms(&AcceleratorConfig::paper_default(model), &snaps);
+    println!("=== {} on {} ===", model.name(), profile.name);
+    println!("  snapshots processed:      {count}");
+    println!("  numerics max |Δ| vs mirror: {max_err:.2e}  (tolerance 1e-3)");
+    println!("  host PJRT:                {}", stats.summary());
+    println!("  FPGA projection:          {fpga_ms:.3} ms/snapshot\n");
+    assert!(max_err < 1e-3, "numerics cross-check failed: {max_err}");
+    Ok(())
+}

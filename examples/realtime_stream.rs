@@ -1,0 +1,67 @@
+//! Real-time streaming demo: the coordinator's two-stage pipeline
+//! (CPU preprocessing ∥ inference) with backpressure, the software
+//! analog of DGNN-Booster's "streamed in consecutively and processed
+//! on-the-fly".  Uses the pure-Rust mirror so it runs without artifacts.
+//!
+//! ```
+//! cargo run --release --example realtime_stream
+//! ```
+
+use dgnn_booster::baselines::cpu::features_for;
+use dgnn_booster::coordinator::pipeline::{run_stream, Prepared};
+use dgnn_booster::coordinator::NodeStateStore;
+use dgnn_booster::datasets::{self, UCI};
+use dgnn_booster::metrics::LatencyStats;
+use dgnn_booster::models::{Dims, GcrnM2Params};
+use dgnn_booster::numerics::{self, Mat};
+
+fn main() -> dgnn_booster::Result<()> {
+    let dims = Dims::default();
+    let profile = &UCI;
+    let stream = datasets::load_or_generate(profile, "data", 42)?;
+    let params = GcrnM2Params::init(42, dims);
+    let total = stream.num_nodes as usize;
+    let mut h_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut c_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut stats = LatencyStats::new();
+
+    println!(
+        "streaming {} ({} edges) through preprocess ∥ GCRN-M2 inference...",
+        profile.name,
+        stream.edges.len()
+    );
+    let t0 = std::time::Instant::now();
+    let results = run_stream(
+        &stream,
+        profile.splitter_secs,
+        8, // staging-queue depth: bounded DRAM prefetch
+        |snap| {
+            let x = features_for(&snap, dims, 42);
+            Ok(Prepared { snapshot: snap, payload: x })
+        },
+        |p| {
+            let snap = &p.snapshot;
+            let n = snap.num_nodes();
+            let h = Mat::from_vec(n, dims.hidden_dim, h_store.gather_padded(snap, n));
+            let c = Mat::from_vec(n, dims.hidden_dim, c_store.gather_padded(snap, n));
+            let (hn, cn) = numerics::gcrn_m2_step(snap, &p.payload, &h, &c, &params);
+            h_store.scatter(snap, &hn.data);
+            c_store.scatter(snap, &cn.data);
+            Ok(hn.data.iter().map(|v| v.abs()).sum::<f32>() / hn.data.len() as f32)
+        },
+    )?;
+    let wall = t0.elapsed().as_secs_f64();
+    for r in &results {
+        stats.record(r.wall);
+    }
+    let mean_act: f32 =
+        results.iter().map(|r| r.output).sum::<f32>() / results.len() as f32;
+    println!("processed {} snapshots in {:.2} s wall", results.len(), wall);
+    println!("inference stage: {}", stats.summary());
+    println!("mean |H| activation across stream: {mean_act:.4}");
+    println!(
+        "pipeline efficiency: inference busy {:.0}% of wall clock",
+        stats.mean() * results.len() as f64 / (wall * 1e3) * 100.0
+    );
+    Ok(())
+}

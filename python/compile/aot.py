@@ -1,0 +1,106 @@
+"""AOT lowering: JAX model steps -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange format:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's bundled XLA (xla_extension 0.5.1) rejects (``proto.id() <=
+INT_MAX``); the text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+  evolvegcn_step.hlo.txt   — V1 base model, per-snapshot step
+  gcrn_m2_step.hlo.txt     — V2 base model, per-snapshot step
+  gcrn_m1_step.hlo.txt     — stacked DGNN (runs on V1 and V2)
+  gcn_forward.hlo.txt      — static 2-layer GCN (ablation baseline)
+  manifest.txt             — shape/calling-convention manifest consumed by
+                             rust/src/runtime/manifest.rs (simple key=value;
+                             no serde available on the Rust side)
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _emit(fn, specs, path: str, donate=()) -> str:
+    # donate recurrent-state buffers (h, c): lowers to input_output_alias
+    # so PJRT can reuse the buffers instead of copying (§Perf L2 iter. 2)
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return text
+
+
+def build(out_dir: str, cfg: M.ModelConfig) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+
+    jobs = [
+        ("evolvegcn_step", M.evolvegcn_step, cfg.evolvegcn_arg_specs(), ()),
+        ("gcrn_m2_step", M.gcrn_m2_step, cfg.gcrn_arg_specs(), (5, 6)),
+        ("gcrn_m1_step", M.gcrn_m1_step, cfg.gcrn_m1_arg_specs(), (5, 6)),
+        ("gcn_forward", M.gcn_forward, cfg.evolvegcn_arg_specs()[:7], ()),
+    ]
+    sizes = {}
+    for name, fn, specs, donate in jobs:
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = _emit(fn, specs, path, donate)
+        sizes[name] = len(text)
+        print(f"wrote {path} ({len(text)} chars, {len(specs)} args)")
+
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("# DGNN-Booster AOT artifact manifest (key=value)\n")
+        f.write(f"max_nodes={cfg.max_nodes}\n")
+        f.write(f"max_edges={cfg.max_edges}\n")
+        f.write(f"in_dim={cfg.in_dim}\n")
+        f.write(f"hidden_dim={cfg.hidden_dim}\n")
+        f.write(f"out_dim={cfg.out_dim}\n")
+        f.write("evolvegcn_step.args=src:i32[E];dst:i32[E];coef:f32[E];"
+                "selfcoef:f32[N];x:f32[N,IN];w1:f32[IN,H];w2:f32[H,OUT];"
+                "gru1:9xf32;gru2:9xf32\n")
+        f.write("evolvegcn_step.outs=out:f32[N,OUT];w1:f32[IN,H];"
+                "w2:f32[H,OUT]\n")
+        f.write("gcrn_m1_step.args=src;dst;coef;selfcoef;x;h;c;w1;w2;wx;wh;b\n")
+        f.write("gcrn_m1_step.outs=h:f32[N,H];c:f32[N,H]\n")
+        f.write("gcrn_m2_step.args=src:i32[E];dst:i32[E];coef:f32[E];"
+                "selfcoef:f32[N];x:f32[N,IN];h:f32[N,H];c:f32[N,H];wx:f32[IN,4H];"
+                "wh:f32[H,4H];b:f32[4H]\n")
+        f.write("gcrn_m2_step.outs=h:f32[N,H];c:f32[N,H]\n")
+        f.write("gcn_forward.args=src;dst;coef;selfcoef;x;w1;w2\n")
+        f.write("gcn_forward.outs=out:f32[N,OUT]\n")
+    print(f"wrote {manifest}")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts")
+    p.add_argument("--max-nodes", type=int, default=608)
+    p.add_argument("--max-edges", type=int, default=1728)
+    p.add_argument("--dim", type=int, default=32)
+    a = p.parse_args()
+    cfg = M.ModelConfig(
+        max_nodes=a.max_nodes, max_edges=a.max_edges,
+        in_dim=a.dim, hidden_dim=a.dim, out_dim=a.dim,
+    )
+    build(a.out, cfg)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for DGNN-Booster.
+
+Every kernel here is the hardware analog of one DGNN-Booster processing
+element (PE):
+
+- :mod:`matmul`            — node-transformation (NT) PE: tiled dense matmul.
+- :mod:`message_passing`   — message-passing (MP) PE: CSR-style
+                             gather / edge-weight / scatter-accumulate.
+- :mod:`gru`               — EvolveGCN weight-evolution PE: fused matrix-GRU.
+- :mod:`lstm`              — GCRN-M2 temporal PE: fused LSTM gate stage.
+
+All kernels are lowered with ``interpret=True`` so they become plain HLO and
+run on the CPU PJRT client the Rust coordinator uses (real-TPU Mosaic
+lowering is compile-only in this environment; see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from . import matmul, message_passing, gru, lstm, ref  # noqa: F401

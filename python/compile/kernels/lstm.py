@@ -1,0 +1,92 @@
+"""Fused LSTM gate-stage Pallas kernel — GCRN-M2 temporal PE.
+
+GCRN-M2 (paper eq. (3)) replaces the LSTM's dense input/hidden projections
+with graph convolutions: the gate pre-activations are
+
+    P_x = (Â·X^t)  Wx   ∈ [n, 4h]      (GNN1 in the paper)
+    P_h = (Â·H^t)  Wh   ∈ [n, 4h]      (GNN2 in the paper)
+
+computed by the MP + NT PEs, and the recurrent *elementwise* stage
+
+    i, f, g, o = split(P_x + P_h + b)
+    C' = σ(f)⊙C + σ(i)⊙tanh(g)
+    H' = σ(o)⊙tanh(C')
+
+is this kernel.  On the ZCU102 these stages are FIFO-pipelined at node
+granularity (Pipeline-O1); here they fuse into a single VMEM-resident
+kernel tiled over node rows, so each node row makes exactly one HBM
+round-trip — the same memory-traffic shape the FPGA pipeline achieves.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_kernel(px_ref, ph_ref, b_ref, c_ref, h_out_ref, c_out_ref):
+    h4 = px_ref.shape[1]
+    h = h4 // 4
+    pre = px_ref[...] + ph_ref[...] + b_ref[...]
+    i = jax.nn.sigmoid(pre[:, 0 * h:1 * h])
+    f = jax.nn.sigmoid(pre[:, 1 * h:2 * h])
+    g = jnp.tanh(pre[:, 2 * h:3 * h])
+    o = jax.nn.sigmoid(pre[:, 3 * h:4 * h])
+    c_new = f * c_ref[...] + i * g
+    c_out_ref[...] = c_new
+    h_out_ref[...] = o * jnp.tanh(c_new)
+
+
+def _pick_block_m(m: int) -> int:
+    for cand in (256, 128, 64, 32, 16, 8):
+        if m % cand == 0:
+            return cand
+    return m
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def lstm_gate_stage(
+    px: jax.Array,
+    ph: jax.Array,
+    b: jax.Array,
+    c: jax.Array,
+    *,
+    block_m: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused LSTM elementwise stage.
+
+    Args:
+      px: [n, 4h] input-side gate pre-activations (gate order i,f,g,o).
+      ph: [n, 4h] hidden-side gate pre-activations.
+      b:  [4h] gate biases.
+      c:  [n, h] previous cell state.
+
+    Returns:
+      (h_new, c_new), each [n, h].
+    """
+    n, h4 = px.shape
+    hdim = h4 // 4
+    bm = block_m or _pick_block_m(n)
+    h_new, c_new = pl.pallas_call(
+        _lstm_kernel,
+        grid=(n // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, h4), lambda i: (i, 0)),
+            pl.BlockSpec((bm, h4), lambda i: (i, 0)),
+            pl.BlockSpec((1, h4), lambda i: (0, 0)),
+            pl.BlockSpec((bm, hdim), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, hdim), lambda i: (i, 0)),
+            pl.BlockSpec((bm, hdim), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, hdim), jnp.float32),
+            jax.ShapeDtypeStruct((n, hdim), jnp.float32),
+        ],
+        interpret=True,
+    )(px, ph, b.reshape(1, h4), c)
+    return h_new, c_new

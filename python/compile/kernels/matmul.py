@@ -1,0 +1,98 @@
+"""Tiled dense-matmul Pallas kernel — the node-transformation (NT) PE.
+
+DGNN-Booster's node transformation is ``X' = (ÂX) W`` — a dense
+[n, d_in] x [d_in, d_out] matmul fed by the message-passing PE.  On the
+ZCU102 this is a DSP systolic array; on the TPU analog we tile for the
+MXU: the M dimension is blocked so each grid step holds one
+(block_m, d_in) activation tile plus the whole (d_in, d_out) weight
+panel in VMEM, and accumulation happens in a VMEM scratch block.
+
+The kernel is shape-generic; `python/compile/aot.py` instantiates it at
+the padded snapshot shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One grid step: o[block_m, n] = x[block_m, k] @ w[k, n]."""
+    o_ref[...] = jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block_m(m: int) -> int:
+    """Largest MXU-friendly block that divides m (m is padded to 8|m)."""
+    for cand in (256, 128, 64, 32, 16, 8):
+        if m % cand == 0:
+            return cand
+    return m
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def matmul(x: jax.Array, w: jax.Array, *, block_m: int | None = None) -> jax.Array:
+    """``x @ w`` via a Pallas kernel tiled over rows of ``x``.
+
+    Args:
+      x: [m, k] float32 activations (m should be a multiple of 8).
+      w: [k, n] float32 weight panel (kept whole in VMEM — DGNN dims are
+         small, <= 32x128 here, exactly the paper's LUTRAM-resident weights).
+      block_m: row-tile size; auto-picked if None.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = block_m or _pick_block_m(m)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "relu"))
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    relu: bool = False,
+    block_m: int | None = None,
+) -> jax.Array:
+    """Fused ``act(x @ w + b)`` — one VMEM round-trip for the NT PE."""
+    m, k = x.shape
+    _, n = w.shape
+    bm = block_m or _pick_block_m(m)
+
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        acc = acc + b_ref[...]
+        if relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b.reshape(1, n))

@@ -1,0 +1,182 @@
+"""Layer-2 JAX model: per-snapshot step functions for both DGNN models.
+
+The temporal loop over snapshots lives in the Rust coordinator (L3) —
+snapshot count T is dynamic and graphs stream in, exactly as on the
+paper's CPU-FPGA platform.  Python only defines the *per-snapshot* step
+(one ``G^t`` in, evolved state out) at fixed padded shapes, calling the
+Pallas PE kernels, and is AOT-lowered once by ``aot.py``.
+
+Shapes (defaults; see :class:`ModelConfig`):
+  MAX_NODES = 608   — covers BC-Alpha max 578 / UCI max 501 (Table III)
+  MAX_EDGES = 1728  — covers BC-Alpha max 1686 / UCI max 1534; self-loop
+                      terms travel as a per-node `selfcoef` diagonal, not
+                      as edge-list entries, so they never inflate the list
+  D = 32            — in/hidden/out feature dim (EvolveGCN defaults)
+
+Padding contract (mask-correctness, property-tested in python/tests and
+rust/tests):
+  * padded edges have src = dst = 0 and coef = 0.0 → contribute nothing;
+  * padded node rows may hold garbage; consumers mask by node count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gru as gru_k
+from .kernels import lstm as lstm_k
+from .kernels import matmul as mm_k
+from .kernels import message_passing as mp_k
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration shared with the Rust runtime."""
+
+    max_nodes: int = 608
+    max_edges: int = 1728
+    in_dim: int = 32
+    hidden_dim: int = 32
+    out_dim: int = 32
+
+    def evolvegcn_arg_specs(self):
+        """Argument ShapeDtypeStructs, in AOT calling order."""
+        f32, i32 = jnp.float32, jnp.int32
+        s = jax.ShapeDtypeStruct
+        specs = [
+            s((self.max_edges,), i32),                   # src
+            s((self.max_edges,), i32),                   # dst
+            s((self.max_edges,), f32),                   # coef
+            s((self.max_nodes,), f32),                   # selfcoef
+            s((self.max_nodes, self.in_dim), f32),       # x
+            s((self.in_dim, self.hidden_dim), f32),      # w1
+            s((self.hidden_dim, self.out_dim), f32),     # w2
+        ]
+        # gru1 params (on w1: rows=in_dim, cols=hidden_dim)
+        for k in gru_k.gru_param_keys():
+            rows = self.in_dim
+            cols = self.hidden_dim
+            shape = (rows, cols) if k.startswith("b") else (rows, rows)
+            specs.append(s(shape, f32))
+        # gru2 params (on w2: rows=hidden_dim, cols=out_dim)
+        for k in gru_k.gru_param_keys():
+            rows = self.hidden_dim
+            cols = self.out_dim
+            shape = (rows, cols) if k.startswith("b") else (rows, rows)
+            specs.append(s(shape, f32))
+        return specs
+
+    def gcrn_m1_arg_specs(self):
+        f32, i32 = jnp.float32, jnp.int32
+        s = jax.ShapeDtypeStruct
+        return [
+            s((self.max_edges,), i32),                         # src
+            s((self.max_edges,), i32),                         # dst
+            s((self.max_edges,), f32),                         # coef
+            s((self.max_nodes,), f32),                         # selfcoef
+            s((self.max_nodes, self.in_dim), f32),             # x
+            s((self.max_nodes, self.hidden_dim), f32),         # h
+            s((self.max_nodes, self.hidden_dim), f32),         # c
+            s((self.in_dim, self.hidden_dim), f32),            # w1
+            s((self.hidden_dim, self.out_dim), f32),           # w2
+            s((self.out_dim, 4 * self.hidden_dim), f32),       # wx
+            s((self.hidden_dim, 4 * self.hidden_dim), f32),    # wh
+            s((4 * self.hidden_dim,), f32),                    # b
+        ]
+
+    def gcrn_arg_specs(self):
+        f32, i32 = jnp.float32, jnp.int32
+        s = jax.ShapeDtypeStruct
+        return [
+            s((self.max_edges,), i32),                         # src
+            s((self.max_edges,), i32),                         # dst
+            s((self.max_edges,), f32),                         # coef
+            s((self.max_nodes,), f32),                         # selfcoef
+            s((self.max_nodes, self.in_dim), f32),             # x
+            s((self.max_nodes, self.hidden_dim), f32),         # h
+            s((self.max_nodes, self.hidden_dim), f32),         # c
+            s((self.in_dim, 4 * self.hidden_dim), f32),        # wx
+            s((self.hidden_dim, 4 * self.hidden_dim), f32),    # wh
+            s((4 * self.hidden_dim,), f32),                    # b
+        ]
+
+
+def _unpack_gru(flat, rows, cols):
+    params = {}
+    for i, k in enumerate(gru_k.gru_param_keys()):
+        params[k] = flat[i]
+    return params
+
+
+def evolvegcn_step(src, dst, coef, selfcoef, x, w1, w2, *gru_flat):
+    """One EvolveGCN-O snapshot step (DGNN-Booster V1's base model).
+
+    Weight evolution (matrix-GRU PE) is independent of the snapshot's
+    graph — that independence is exactly what V1 exploits by overlapping
+    ``RNN(t+1)`` with ``MP(t)`` across ping-pong weight buffers.
+
+    Returns (out [n, out_dim], w1_new, w2_new) as a tuple.
+    """
+    n_gru = len(gru_k.gru_param_keys())
+    gru1 = _unpack_gru(gru_flat[:n_gru], *w1.shape)
+    gru2 = _unpack_gru(gru_flat[n_gru:], *w2.shape)
+    w1n = gru_k.gru_matrix_cell(w1, gru1)
+    w2n = gru_k.gru_matrix_cell(w2, gru2)
+    zeros1 = jnp.zeros((w1n.shape[1],), jnp.float32)
+    zeros2 = jnp.zeros((w2n.shape[1],), jnp.float32)
+    h1 = mp_k.gcn_layer(src, dst, coef, selfcoef, x, w1n, zeros1, relu=True)
+    h2 = mp_k.gcn_layer(src, dst, coef, selfcoef, h1, w2n, zeros2, relu=False)
+    return h2, w1n, w2n
+
+
+def gcrn_m2_step(src, dst, coef, selfcoef, x, h, c, wx, wh, b):
+    """One GCRN-M2 snapshot step (DGNN-Booster V2's base model).
+
+    GNN1 (on X) and GNN2 (on H) feed the fused LSTM gate stage — the
+    three units V2 couples with node queues.
+
+    Returns (h_new, c_new).
+    """
+    agg_x = mp_k.aggregate(src, dst, coef, selfcoef, x)
+    agg_h = mp_k.aggregate(src, dst, coef, selfcoef, h)
+    px = mm_k.matmul(agg_x, wx)
+    ph = mm_k.matmul(agg_h, wh)
+    h_new, c_new = lstm_k.lstm_gate_stage(px, ph, b, c)
+    return h_new, c_new
+
+
+def gcrn_m1_step(src, dst, coef, selfcoef, x, h, c, w1, w2, wx, wh, b):
+    """One GCRN-M1 snapshot step — the *stacked* DGNN of Table I.
+
+    GNN (2-layer GCN) encodes the snapshot, then a conventional dense
+    LSTM evolves per-node temporal state:
+
+        X' = GCN(G_t, X_t);  i,f,g,o = X'Wx + H Wh + b;  (H', C') = LSTM
+
+    Because the GNN never reads the RNN state, consecutive snapshots'
+    GNNs are independent — the property that makes stacked DGNNs eligible
+    for BOTH DGNN-Booster designs (V1 adjacent-step overlap and V2
+    within-step node queues).
+
+    Returns (h_new, c_new).
+    """
+    z1 = jnp.zeros((w1.shape[1],), jnp.float32)
+    z2 = jnp.zeros((w2.shape[1],), jnp.float32)
+    x1 = mp_k.gcn_layer(src, dst, coef, selfcoef, x, w1, z1, relu=True)
+    x2 = mp_k.gcn_layer(src, dst, coef, selfcoef, x1, w2, z2, relu=False)
+    px = mm_k.matmul(x2, wx)
+    ph = mm_k.matmul(h, wh)
+    h_new, c_new = lstm_k.lstm_gate_stage(px, ph, b, c)
+    return h_new, c_new
+
+
+def gcn_forward(src, dst, coef, selfcoef, x, w1, w2):
+    """Plain 2-layer GCN forward (no temporal part) — used by micro-benches
+    and as the static-GNN baseline in the ablation harness."""
+    z1 = jnp.zeros((w1.shape[1],), jnp.float32)
+    z2 = jnp.zeros((w2.shape[1],), jnp.float32)
+    h1 = mp_k.gcn_layer(src, dst, coef, selfcoef, x, w1, z1, relu=True)
+    return (mp_k.gcn_layer(src, dst, coef, selfcoef, h1, w2, z2, relu=False),)

@@ -1,0 +1,22 @@
+"""Shared fixtures/strategies for the kernel and model test suites."""
+
+import numpy as np
+import pytest
+from hypothesis import strategies as st
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xD64B)
+
+
+def dims(min_value=1, max_value=64, multiple_of=1):
+    """Strategy for a dimension size, optionally rounded to a multiple."""
+    base = st.integers(min_value=min_value, max_value=max_value)
+    if multiple_of == 1:
+        return base
+    return base.map(lambda v: max(multiple_of, (v // multiple_of) * multiple_of))
+
+
+def seeds():
+    return st.integers(min_value=0, max_value=2**31 - 1)

@@ -1,0 +1,76 @@
+"""NT-PE (tiled matmul) kernel vs pure-jnp oracle.
+
+Hypothesis sweeps shapes (rows padded to multiples of 8, as the AOT
+contract guarantees) and data scales; assert_allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+
+from .conftest import dims, seeds
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _mk(rng, *shape, scale=1.0):
+    return jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims(8, 256, multiple_of=8), k=dims(1, 64), n=dims(1, 64), seed=seeds())
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _mk(rng, m, k), _mk(rng, k, n)
+    np.testing.assert_allclose(mm.matmul(x, w), ref.matmul_ref(x, w), **TOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=dims(8, 128, multiple_of=8), k=dims(1, 48), n=dims(1, 48),
+       relu=st.booleans(), seed=seeds())
+def test_matmul_bias_act_matches_ref(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _mk(rng, m, k), _mk(rng, k, n), _mk(rng, n)
+    got = mm.matmul_bias_act(x, w, b, relu=relu)
+    want = ref.matmul_bias_act_ref(x, w, b, relu=relu)
+    np.testing.assert_allclose(got, want, **TOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(block_m=st.sampled_from([8, 16, 32, 64]), seed=seeds())
+def test_matmul_block_size_invariant(block_m, seed):
+    """Result must not depend on the M-tiling choice."""
+    rng = np.random.default_rng(seed)
+    x, w = _mk(rng, 64, 32), _mk(rng, 32, 32)
+    base = mm.matmul(x, w, block_m=64)
+    np.testing.assert_allclose(mm.matmul(x, w, block_m=block_m), base, **TOL)
+
+
+def test_matmul_zero_operand(rng):
+    x = jnp.zeros((32, 16), jnp.float32)
+    w = _mk(rng, 16, 16)
+    np.testing.assert_allclose(mm.matmul(x, w), np.zeros((32, 16)), **TOL)
+
+
+def test_matmul_identity(rng):
+    x = _mk(rng, 32, 32)
+    eye = jnp.eye(32, dtype=jnp.float32)
+    np.testing.assert_allclose(mm.matmul(x, eye), x, **TOL)
+
+
+def test_matmul_large_values(rng):
+    """fp32 headroom: values near 1e4 should still match within rtol."""
+    x, w = _mk(rng, 16, 16, scale=1e4), _mk(rng, 16, 16)
+    np.testing.assert_allclose(mm.matmul(x, w), ref.matmul_ref(x, w),
+                               rtol=1e-4, atol=1e-1)
+
+
+def test_relu_clamps_negative(rng):
+    x = _mk(rng, 16, 8)
+    w = jnp.eye(8, dtype=jnp.float32) * -1.0
+    x8 = x[:, :8]
+    out = mm.matmul_bias_act(x8, w, jnp.zeros((8,), jnp.float32), relu=True)
+    assert (np.asarray(out) >= 0).all()

@@ -1,0 +1,165 @@
+"""L2 model steps vs oracle + temporal rollout + padding invariance."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import model as M
+from compile.kernels import gru, ref
+
+from .conftest import dims, seeds
+
+TOL = dict(rtol=1e-4, atol=1e-4)
+
+
+def _inputs(rng, n, e, d):
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    coef = jnp.asarray(rng.normal(size=e) * 0.2, jnp.float32)
+    sc = jnp.asarray(rng.normal(size=n) * 0.5, jnp.float32)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    return src, dst, coef, sc, x
+
+
+def _gru_params(rng, rows, cols):
+    p = {}
+    for k in gru.gru_param_keys():
+        shape = (rows, cols) if k.startswith("b") else (rows, rows)
+        p[k] = jnp.asarray(rng.normal(size=shape) * 0.1, jnp.float32)
+    return p
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=dims(8, 64, multiple_of=8), e=dims(4, 128), d=dims(4, 24), seed=seeds())
+def test_evolvegcn_step_matches_ref(n, e, d, seed):
+    rng = np.random.default_rng(seed)
+    src, dst, coef, sc, x = _inputs(rng, n, e, d)
+    w1 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    g1, g2 = _gru_params(rng, d, d), _gru_params(rng, d, d)
+    flat = [g1[k] for k in gru.gru_param_keys()] + \
+           [g2[k] for k in gru.gru_param_keys()]
+    got = M.evolvegcn_step(src, dst, coef, sc, x, w1, w2, *flat)
+    want = ref.evolvegcn_step_ref(src, dst, coef, sc, x, w1, w2, g1, g2)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(a, b, **TOL)
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=dims(8, 64, multiple_of=8), e=dims(4, 128), d=dims(4, 24), seed=seeds())
+def test_gcrn_step_matches_ref(n, e, d, seed):
+    rng = np.random.default_rng(seed)
+    src, dst, coef, sc, x = _inputs(rng, n, e, d)
+    h = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    wx = jnp.asarray(rng.normal(size=(d, 4 * d)) * 0.3, jnp.float32)
+    wh = jnp.asarray(rng.normal(size=(d, 4 * d)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4 * d,)), jnp.float32)
+    got = M.gcrn_m2_step(src, dst, coef, sc, x, h, c, wx, wh, b)
+    want = ref.gcrn_m2_step_ref(src, dst, coef, sc, x, h, c, wx, wh, b)
+    for a, bv in zip(got, want):
+        np.testing.assert_allclose(a, bv, **TOL)
+
+
+def test_evolvegcn_weights_independent_of_graph():
+    """The evolved weights must not depend on the snapshot — this is the
+    independence DGNN-Booster V1 exploits to overlap RNN(t+1) with MP(t)."""
+    rng = np.random.default_rng(7)
+    d = 8
+    w1 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    g1, g2 = _gru_params(rng, d, d), _gru_params(rng, d, d)
+    flat = [g1[k] for k in gru.gru_param_keys()] + \
+           [g2[k] for k in gru.gru_param_keys()]
+    outs = []
+    for seed in (1, 2):
+        r2 = np.random.default_rng(seed)
+        src, dst, coef, sc, x = _inputs(r2, 16, 32, d)
+        _, w1n, w2n = M.evolvegcn_step(src, dst, coef, sc, x, w1, w2, *flat)
+        outs.append((np.asarray(w1n), np.asarray(w2n)))
+    np.testing.assert_array_equal(outs[0][0], outs[1][0])
+    np.testing.assert_array_equal(outs[0][1], outs[1][1])
+
+
+def test_gcrn_rollout_stable():
+    """Multi-snapshot rollout: hidden state stays bounded (|H| <= 1)."""
+    rng = np.random.default_rng(3)
+    n, e, d = 32, 64, 8
+    h = jnp.zeros((n, d), jnp.float32)
+    c = jnp.zeros((n, d), jnp.float32)
+    wx = jnp.asarray(rng.normal(size=(d, 4 * d)) * 0.3, jnp.float32)
+    wh = jnp.asarray(rng.normal(size=(d, 4 * d)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4 * d,)), jnp.float32)
+    for t in range(10):
+        src, dst, coef, sc, x = _inputs(np.random.default_rng(100 + t), n, e, d)
+        h, c = M.gcrn_m2_step(src, dst, coef, sc, x, h, c, wx, wh, b)
+    assert (np.abs(np.asarray(h)) <= 1.0 + 1e-6).all()
+    assert np.isfinite(np.asarray(c)).all()
+
+
+def test_padding_invariance_full_contract():
+    """A snapshot padded to MAX shapes gives identical results on real
+    node rows as the unpadded computation — the core AOT contract."""
+    rng = np.random.default_rng(11)
+    d = 8
+    n_real, e_real = 24, 40
+    n_pad, e_pad = 32, 64
+    src_r, dst_r, coef_r, sc_r, x_r = _inputs(rng, n_real, e_real, d)
+    h = jnp.asarray(rng.normal(size=(n_real, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(n_real, d)), jnp.float32)
+    wx = jnp.asarray(rng.normal(size=(d, 4 * d)) * 0.3, jnp.float32)
+    wh = jnp.asarray(rng.normal(size=(d, 4 * d)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4 * d,)), jnp.float32)
+
+    def pad1(a, n, fill=0):
+        out = np.full((n,) + a.shape[1:], fill, a.dtype)
+        out[: a.shape[0]] = np.asarray(a)
+        return jnp.asarray(out)
+
+    got_h, got_c = M.gcrn_m2_step(
+        pad1(src_r, e_pad), pad1(dst_r, e_pad), pad1(coef_r, e_pad),
+        pad1(sc_r, n_pad), pad1(x_r, n_pad), pad1(h, n_pad), pad1(c, n_pad),
+        wx, wh, b)
+    want_h, want_c = M.gcrn_m2_step(src_r, dst_r, coef_r, sc_r, x_r, h, c,
+                                    wx, wh, b)
+    np.testing.assert_allclose(np.asarray(got_h)[:n_real], want_h, **TOL)
+    np.testing.assert_allclose(np.asarray(got_c)[:n_real], want_c, **TOL)
+
+
+@settings(max_examples=6, deadline=None)
+@given(n=dims(8, 48, multiple_of=8), e=dims(4, 96), d=dims(4, 16), seed=seeds())
+def test_gcrn_m1_step_matches_ref(n, e, d, seed):
+    rng = np.random.default_rng(seed)
+    src, dst, coef, sc, x = _inputs(rng, n, e, d)
+    h = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    wx = jnp.asarray(rng.normal(size=(d, 4 * d)) * 0.3, jnp.float32)
+    wh = jnp.asarray(rng.normal(size=(d, 4 * d)) * 0.3, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4 * d,)), jnp.float32)
+    got = M.gcrn_m1_step(src, dst, coef, sc, x, h, c, w1, w2, wx, wh, b)
+    want = ref.gcrn_m1_step_ref(src, dst, coef, sc, x, h, c, w1, w2, wx, wh, b)
+    for a, bv in zip(got, want):
+        np.testing.assert_allclose(a, bv, **TOL)
+
+
+def test_gcrn_m1_gnn_independent_of_rnn_state():
+    """Stacked-DGNN property (Table I): the GNN encoding is independent
+    of H/C — the independence both Booster designs exploit."""
+    rng = np.random.default_rng(21)
+    d = 8
+    src, dst, coef, sc, x = _inputs(rng, 16, 32, d)
+    w1 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(d, d)) * 0.3, jnp.float32)
+    wx = jnp.asarray(rng.normal(size=(d, 4 * d)) * 0.3, jnp.float32)
+    wh = jnp.zeros((d, 4 * d), jnp.float32)  # decouple H from the gates
+    b = jnp.asarray(rng.normal(size=(4 * d,)), jnp.float32)
+    outs = []
+    for hseed in (1, 2):
+        r = np.random.default_rng(hseed)
+        h = jnp.asarray(r.normal(size=(16, d)), jnp.float32)
+        c = jnp.zeros((16, d), jnp.float32)
+        hn, _ = M.gcrn_m1_step(src, dst, coef, sc, x, h, c, w1, w2, wx, wh, b)
+        outs.append(np.asarray(hn))
+    np.testing.assert_allclose(outs[0], outs[1], **TOL)

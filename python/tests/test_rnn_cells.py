@@ -1,0 +1,86 @@
+"""RNN-PE kernels (matrix-GRU, fused LSTM gate stage) vs oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gru, lstm, ref
+
+from .conftest import dims, seeds
+
+TOL = dict(rtol=1e-5, atol=1e-5)
+
+
+def _gru_params(rng, rows, cols, scale=0.2):
+    p = {}
+    for k in gru.gru_param_keys():
+        shape = (rows, cols) if k.startswith("b") else (rows, rows)
+        p[k] = jnp.asarray(rng.normal(size=shape) * scale, jnp.float32)
+    return p
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=dims(1, 48), cols=dims(1, 48), seed=seeds())
+def test_gru_matches_ref(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(rows, cols)), jnp.float32)
+    p = _gru_params(rng, rows, cols)
+    np.testing.assert_allclose(
+        gru.gru_matrix_cell(h, p), ref.gru_matrix_cell_ref(h, p), **TOL)
+
+
+def test_gru_zero_gate_keeps_state(rng):
+    """With all params zero: Z = σ(0) = ½, H~ = 0, so H' = H/2."""
+    h = jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)
+    p = {k: jnp.zeros((16, 16), jnp.float32) for k in gru.gru_param_keys()}
+    np.testing.assert_allclose(gru.gru_matrix_cell(h, p), 0.5 * np.asarray(h), **TOL)
+
+
+def test_gru_output_bounded_under_saturation(rng):
+    """Even with huge params, H' is a convex combo of H and tanh output,
+    so |H'| <= max(|H|, 1)."""
+    h = jnp.asarray(rng.normal(size=(8, 8)) * 0.5, jnp.float32)
+    p = _gru_params(rng, 8, 8, scale=100.0)
+    out = np.asarray(gru.gru_matrix_cell(h, p))
+    assert (np.abs(out) <= np.maximum(np.abs(np.asarray(h)), 1.0) + 1e-6).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=dims(8, 128, multiple_of=8), h=dims(1, 32), seed=seeds())
+def test_lstm_matches_ref(n, h, seed):
+    rng = np.random.default_rng(seed)
+    px = jnp.asarray(rng.normal(size=(n, 4 * h)), jnp.float32)
+    ph = jnp.asarray(rng.normal(size=(n, 4 * h)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4 * h,)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(n, h)), jnp.float32)
+    got_h, got_c = lstm.lstm_gate_stage(px, ph, b, c)
+    want_h, want_c = ref.lstm_gate_stage_ref(px, ph, b, c)
+    np.testing.assert_allclose(got_h, want_h, **TOL)
+    np.testing.assert_allclose(got_c, want_c, **TOL)
+
+
+def test_lstm_forget_gate_saturated_keeps_cell(rng):
+    """f→1, i→0: C' = C exactly (up to σ saturation)."""
+    n, h = 8, 4
+    big = 50.0
+    px = np.zeros((n, 4 * h), np.float32)
+    px[:, 0 * h:1 * h] = -big   # i -> 0
+    px[:, 1 * h:2 * h] = +big   # f -> 1
+    px[:, 3 * h:4 * h] = -big   # o -> 0
+    c = rng.normal(size=(n, h)).astype(np.float32)
+    got_h, got_c = lstm.lstm_gate_stage(
+        jnp.asarray(px), jnp.zeros((n, 4 * h), jnp.float32),
+        jnp.zeros((4 * h,), jnp.float32), jnp.asarray(c))
+    np.testing.assert_allclose(got_c, c, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(got_h, np.zeros_like(c), atol=1e-4)
+
+
+def test_lstm_hidden_bounded(rng):
+    """|H'| <= 1 always (σ(o) * tanh(C'))."""
+    n, h = 16, 8
+    px = jnp.asarray(rng.normal(size=(n, 4 * h)) * 10, jnp.float32)
+    ph = jnp.asarray(rng.normal(size=(n, 4 * h)) * 10, jnp.float32)
+    b = jnp.asarray(rng.normal(size=(4 * h,)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(n, h)) * 10, jnp.float32)
+    got_h, _ = lstm.lstm_gate_stage(px, ph, b, c)
+    assert (np.abs(np.asarray(got_h)) <= 1.0 + 1e-6).all()

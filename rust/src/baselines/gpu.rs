@@ -1,0 +1,128 @@
+//! GPU baseline (RTX A6000, PyTorch) — analytic model.
+//!
+//! Mechanism (paper §V-C): "the message passing mechanism is not
+//! hardware-friendly to GPU [30] and also temporal data dependencies and
+//! frequent data exchange cause low GPU resource utilization and a large
+//! communication overhead between CPU and GPU [31], the latency reported
+//! by GPU baseline is a little higher than CPU."
+//!
+//! ```text
+//! latency = ops × (LAUNCH_S + GPU_DISPATCH_S)      kernel launch + dispatch
+//!         + host_bytes / PCIE_BYTES_PER_S          per-snapshot H2D/D2H
+//!         + flops / GPU_FLOPS_EFF                  ~negligible at this size
+//!         + SYNC_S                                 per-step sync
+//! ```
+//!
+//! Calibration to Table IV's GPU column (EvolveGCN/BC-Alpha 4.01 ms,
+//! GCRN-M2/BC-Alpha 11.35 ms): 44 ops × 82 µs + transfer ≈ 3.9 ms;
+//! 74 ops × 82 µs × gate-conv width penalty + transfer ≈ 10–11 ms.
+
+use super::{dispatch_ops, step_flops};
+use crate::graph::Snapshot;
+use crate::models::ModelKind;
+
+/// CUDA kernel launch + PyTorch CUDA dispatch per op (seconds).
+pub const GPU_OP_S: f64 = 82e-6;
+/// Extra per-op cost for scatter/gather ops on dynamic graphs (atomics,
+/// irregular access — ref [30]); applied to the conv-op share.
+pub const SCATTER_PENALTY_S: f64 = 160e-6;
+/// Effective PCIe 4.0 host↔device bandwidth.
+pub const PCIE_BYTES_PER_S: f64 = 12e9;
+/// Per-step device synchronisation (temporal dependency forces it).
+pub const SYNC_S: f64 = 120e-6;
+/// Effective GPU throughput at <1k-node occupancy (a sliver of the
+/// A6000's 38 TFLOP/s peak — tens of SMs idle).
+pub const GPU_FLOPS_EFF: f64 = 300e9;
+
+/// Number of scatter/gather-shaped ops per step (subject to the penalty).
+fn scatter_ops(model: ModelKind) -> f64 {
+    match model {
+        ModelKind::EvolveGcn => 4.0, // 2 layers × (gather + scatter-add)
+        ModelKind::GcrnM1 => 4.0,    // 2 layers × (gather + scatter-add)
+        ModelKind::GcrnM2 => 16.0,   // 8 gate convs × (gather + scatter-add)
+    }
+}
+
+/// Host→device bytes per snapshot (graph + features + state).
+fn h2d_bytes(snap: &Snapshot, d: usize) -> f64 {
+    (12 * snap.num_edges() + 4 * d * snap.num_nodes() + 8 * snap.num_nodes()) as f64
+}
+
+/// Analytic per-snapshot GPU latency (seconds).
+pub fn latency_s(model: ModelKind, snap: &Snapshot, d: usize) -> f64 {
+    let ops = dispatch_ops(model);
+    let flops = step_flops(model, snap, d);
+    ops * GPU_OP_S
+        + scatter_ops(model) * SCATTER_PENALTY_S
+        + 2.0 * h2d_bytes(snap, d) / PCIE_BYTES_PER_S
+        + flops / GPU_FLOPS_EFF
+        + SYNC_S
+}
+
+/// Average analytic latency over a stream, milliseconds.
+pub fn avg_latency_ms(model: ModelKind, snaps: &[Snapshot], d: usize) -> f64 {
+    let total: f64 = snaps.iter().map(|s| latency_s(model, s, d)).sum();
+    total / snaps.len().max(1) as f64 * 1e3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::cpu;
+    use crate::coordinator::preprocess::preprocess_stream;
+    use crate::datasets::{synth, BC_ALPHA, UCI};
+
+    #[test]
+    fn analytic_near_paper_table4() {
+        let bc = preprocess_stream(&synth::generate(&BC_ALPHA, 42), BC_ALPHA.splitter_secs).unwrap();
+        let uci = preprocess_stream(&synth::generate(&UCI, 42), UCI.splitter_secs).unwrap();
+        let e_bc = avg_latency_ms(ModelKind::EvolveGcn, &bc, 32);
+        let g_bc = avg_latency_ms(ModelKind::GcrnM2, &bc, 32);
+        let e_uci = avg_latency_ms(ModelKind::EvolveGcn, &uci, 32);
+        let g_uci = avg_latency_ms(ModelKind::GcrnM2, &uci, 32);
+        // Paper: 4.01 / 11.35 / 4.19 / 9.74 — within 40% (the paper's own
+        // BC-Alpha/UCI GPU ordering for GCRN is noisy)
+        assert!((e_bc - 4.01).abs() / 4.01 < 0.40, "evolvegcn bc {e_bc}");
+        assert!((g_bc - 11.35).abs() / 11.35 < 0.40, "gcrn bc {g_bc}");
+        assert!((e_uci - 4.19).abs() / 4.19 < 0.40, "evolvegcn uci {e_uci}");
+        assert!((g_uci - 9.74).abs() / 9.74 < 0.45, "gcrn uci {g_uci}");
+    }
+
+    #[test]
+    fn gpu_slower_than_cpu_on_tiny_graphs() {
+        // The paper's headline counter-intuitive result.
+        let bc = preprocess_stream(&synth::generate(&BC_ALPHA, 42), BC_ALPHA.splitter_secs).unwrap();
+        for model in [ModelKind::EvolveGcn, ModelKind::GcrnM2] {
+            let g = avg_latency_ms(model, &bc, 32);
+            let c = cpu::avg_latency_ms(model, &bc, 32);
+            assert!(g > c, "{}: gpu {g} !> cpu {c}", model.name());
+        }
+    }
+
+    #[test]
+    fn latency_grows_with_snapshot_size() {
+        use crate::graph::RenumberTable;
+        let small = Snapshot {
+            index: 0,
+            src: vec![0; 10],
+            dst: vec![1; 10],
+            coef: vec![0.1; 10],
+            selfcoef: vec![0.5; 2],
+            renumber: RenumberTable::build([(0, 1)].into_iter()),
+            t_start: 0,
+        };
+        let pairs: Vec<(u32, u32)> = (0..500u32).map(|i| (i, i + 1)).collect();
+        let big = Snapshot {
+            index: 0,
+            src: vec![0; 1500],
+            dst: vec![1; 1500],
+            coef: vec![0.1; 1500],
+            selfcoef: vec![0.5; 501],
+            renumber: RenumberTable::build(pairs.into_iter()),
+            t_start: 0,
+        };
+        assert!(
+            latency_s(ModelKind::GcrnM2, &big, 32) > latency_s(ModelKind::GcrnM2, &small, 32)
+        );
+    }
+}

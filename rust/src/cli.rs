@@ -1,0 +1,132 @@
+//! Hand-rolled CLI (the offline crate set has no clap).
+//!
+//! ```text
+//! dgnn-booster <command> [--key value]...
+//!
+//! commands:
+//!   table2|table3|table4|table5|table6|table7|fig6   regenerate a paper artefact
+//!   all                                              all tables + figure
+//!   serve     stream a dataset through the PJRT runtime (end-to-end)
+//!   dse       run a DSP-split sweep
+//!   stats     dataset statistics
+//! options:
+//!   --model evolvegcn|gcrn-m1|gcrn-m2   (serve/dse; default evolvegcn)
+//!   --dataset bc-alpha|uci     (default bc-alpha)
+//!   --seed N                   (default 42)
+//!   --snapshots N              limit processed snapshots
+//!   --artifacts DIR            (default artifacts)
+//!   --data DIR                 (default data)
+//! ```
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug)]
+pub struct Cli {
+    pub command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Cli {
+    /// Parse `args` (excluding argv[0]).
+    pub fn parse(args: &[String]) -> Result<Cli> {
+        let mut it = args.iter();
+        let command = it
+            .next()
+            .ok_or_else(|| Error::Usage("missing command; try `dgnn-booster all`".into()))?
+            .clone();
+        let mut flags = HashMap::new();
+        while let Some(a) = it.next() {
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| Error::Usage(format!("expected --flag, got {a}")))?;
+            let val = it
+                .next()
+                .ok_or_else(|| Error::Usage(format!("--{key} needs a value")))?;
+            flags.insert(key.to_string(), val.clone());
+        }
+        Ok(Cli { command, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Usage(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Usage(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    pub fn model(&self) -> Result<crate::models::ModelKind> {
+        match self.get_or("model", "evolvegcn").as_str() {
+            "evolvegcn" => Ok(crate::models::ModelKind::EvolveGcn),
+            "gcrn-m1" | "stacked" => Ok(crate::models::ModelKind::GcrnM1),
+            "gcrn" | "gcrn-m2" => Ok(crate::models::ModelKind::GcrnM2),
+            other => Err(Error::Usage(format!("unknown --model {other}"))),
+        }
+    }
+
+    pub fn dataset(&self) -> Result<&'static crate::datasets::DatasetProfile> {
+        match self.get_or("dataset", "bc-alpha").as_str() {
+            "bc-alpha" | "bitcoin-alpha" => Ok(&crate::datasets::BC_ALPHA),
+            "uci" => Ok(&crate::datasets::UCI),
+            other => Err(Error::Usage(format!("unknown --dataset {other}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let c = Cli::parse(&s(&["serve", "--model", "gcrn", "--seed", "7"])).unwrap();
+        assert_eq!(c.command, "serve");
+        assert_eq!(c.get("model"), Some("gcrn"));
+        assert_eq!(c.get_u64("seed", 0).unwrap(), 7);
+        assert_eq!(c.get_usize("snapshots", 99).unwrap(), 99);
+    }
+
+    #[test]
+    fn missing_command_is_usage_error() {
+        assert!(matches!(Cli::parse(&[]), Err(Error::Usage(_))));
+    }
+
+    #[test]
+    fn dangling_flag_is_usage_error() {
+        assert!(Cli::parse(&s(&["all", "--seed"])).is_err());
+        assert!(Cli::parse(&s(&["all", "seed", "3"])).is_err());
+    }
+
+    #[test]
+    fn model_and_dataset_resolution() {
+        let c = Cli::parse(&s(&["serve", "--model", "gcrn-m2", "--dataset", "uci"])).unwrap();
+        assert_eq!(c.model().unwrap(), crate::models::ModelKind::GcrnM2);
+        assert_eq!(c.dataset().unwrap().name, "uci");
+        let bad = Cli::parse(&s(&["serve", "--model", "bert"])).unwrap();
+        assert!(bad.model().is_err());
+    }
+}

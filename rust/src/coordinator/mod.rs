@@ -1,0 +1,21 @@
+//! Layer-3 coordinator: the host side of the CPU-FPGA platform.
+//!
+//! Task scheduling follows the paper's §IV-D split: *graph preprocessing
+//! and renumbering run on the CPU* (complex control flow, irregular
+//! memory access, low compute intensity) — that's [`preprocess`] — while
+//! *format transformation, GNN and RNN inference run on the FPGA* — the
+//! PJRT-executed model steps plus the `fpga` timing model.
+//!
+//! [`pipeline`] wires the stages into a streaming inference loop
+//! (std::thread + channels; snapshots are preprocessed while earlier ones
+//! are inferred, the software analog of the paper's GL/GNN overlap), and
+//! [`state`] owns the DRAM-resident model state (hidden/cell rows for
+//! GCRN, evolved weights for EvolveGCN) gathered/scattered through each
+//! snapshot's renumber table.
+
+pub mod preprocess;
+pub mod pipeline;
+pub mod state;
+
+pub use preprocess::{preprocess_stream, preprocess_window};
+pub use state::NodeStateStore;

@@ -1,0 +1,118 @@
+//! Host-side graph preprocessing (paper §IV-A/§IV-B, CPU-scheduled).
+//!
+//! COO stream → time windows → per-window renumbering → local edge lists
+//! → GCN normalisation coefficients.  Produces validated [`Snapshot`]s.
+
+use crate::error::Result;
+use crate::graph::{normalize_gcn, CooStream, RenumberTable, Snapshot};
+
+/// Preprocess one time window of the stream into a snapshot.
+pub fn preprocess_window(stream: &CooStream, window: std::ops::Range<usize>, index: usize) -> Result<Snapshot> {
+    let slice = &stream.edges[window.clone()];
+    let renumber = RenumberTable::build(slice.iter().map(|e| (e.src, e.dst)));
+    let n = renumber.len();
+    let mut src = Vec::with_capacity(slice.len());
+    let mut dst = Vec::with_capacity(slice.len());
+    let mut weight = Vec::with_capacity(slice.len());
+    for e in slice {
+        // unwraps are safe: the table was built from these endpoints
+        src.push(renumber.to_local(e.src).unwrap());
+        dst.push(renumber.to_local(e.dst).unwrap());
+        weight.push(e.weight);
+    }
+    let (coef, selfcoef) = normalize_gcn(n, &src, &dst, &weight);
+    let snap = Snapshot {
+        index,
+        src,
+        dst,
+        coef,
+        selfcoef,
+        renumber,
+        t_start: slice.first().map(|e| e.time).unwrap_or(0),
+    };
+    snap.validate()?;
+    Ok(snap)
+}
+
+/// Full preprocessing pipeline: split by the time splitter and build
+/// every snapshot (the CPU-side batch path; `pipeline` does the same
+/// incrementally).
+pub fn preprocess_stream(stream: &CooStream, splitter_secs: i64) -> Result<Vec<Snapshot>> {
+    stream
+        .split_windows(splitter_secs)
+        .into_iter()
+        .enumerate()
+        .map(|(i, w)| preprocess_window(stream, w, i))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{synth, BC_ALPHA};
+    use crate::graph::CooEdge;
+    use crate::testutil::{forall, Config};
+
+    #[test]
+    fn simple_stream_two_snapshots() {
+        let edges = vec![
+            CooEdge { src: 10, dst: 20, weight: 2.0, time: 0 },
+            CooEdge { src: 20, dst: 30, weight: 1.0, time: 5 },
+            CooEdge { src: 10, dst: 30, weight: 1.0, time: 100 },
+        ];
+        let stream = CooStream::from_edges("t", edges).unwrap();
+        let snaps = preprocess_stream(&stream, 50).unwrap();
+        assert_eq!(snaps.len(), 2);
+        assert_eq!(snaps[0].num_nodes(), 3);
+        assert_eq!(snaps[0].num_edges(), 2);
+        assert_eq!(snaps[1].num_nodes(), 2);
+        assert_eq!(snaps[1].num_edges(), 1);
+        // raw ids preserved through the renumber table
+        assert!(snaps[1].renumber.to_local(0).is_some()); // compacted id of 10
+    }
+
+    #[test]
+    fn all_snapshots_validate_on_real_profile() {
+        let stream = synth::generate(&BC_ALPHA, 5);
+        let snaps = preprocess_stream(&stream, BC_ALPHA.splitter_secs).unwrap();
+        assert!(snaps.len() > 100);
+        for s in &snaps {
+            s.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn snapshot_indices_sequential() {
+        let stream = synth::generate(&BC_ALPHA, 5);
+        let snaps = preprocess_stream(&stream, BC_ALPHA.splitter_secs).unwrap();
+        for (i, s) in snaps.iter().enumerate() {
+            assert_eq!(s.index, i);
+        }
+    }
+
+    #[test]
+    fn prop_preprocess_preserves_edge_count_and_ranges() {
+        forall(Config::default().cases(40), |rng, size| {
+            let n_edges = rng.range(1, 2 * size.max(2));
+            let universe = rng.range(2, size.max(3)) as u32;
+            let edges: Vec<CooEdge> = (0..n_edges)
+                .map(|i| CooEdge {
+                    src: rng.below(universe as usize) as u32,
+                    dst: rng.below(universe as usize) as u32,
+                    weight: rng.uniform_f32(-5.0, 5.0),
+                    time: (i as i64) * rng.range(1, 50) as i64,
+                })
+                .collect();
+            let stream = CooStream::from_edges("p", edges).unwrap();
+            let splitter = rng.range(10, 1000) as i64;
+            let snaps = preprocess_stream(&stream, splitter).unwrap();
+            let total: usize = snaps.iter().map(|s| s.num_edges()).sum();
+            assert_eq!(total, n_edges, "edges must be partitioned exactly");
+            for s in &snaps {
+                s.validate().unwrap();
+                // local ids dense
+                assert!(s.src.iter().chain(s.dst.iter()).all(|&v| (v as usize) < s.num_nodes()));
+            }
+        });
+    }
+}

@@ -1,0 +1,130 @@
+//! DRAM-resident node state (paper §IV-A data communication).
+//!
+//! Only the active snapshot lives on-chip; the full per-node recurrent
+//! state (H and C rows for GCRN-M2) stays in DRAM and is gathered into
+//! padded on-chip buffers via the renumber table before each step, then
+//! scattered back after — "the renumbering table will also guide the
+//! FPGA to correctly fetch data from DRAM and write back".
+
+use crate::graph::Snapshot;
+
+/// Dense [total_nodes × dim] f32 state store (one per state tensor).
+#[derive(Clone, Debug)]
+pub struct NodeStateStore {
+    pub dim: usize,
+    data: Vec<f32>,
+    total_nodes: usize,
+}
+
+impl NodeStateStore {
+    pub fn zeros(total_nodes: usize, dim: usize) -> Self {
+        NodeStateStore {
+            dim,
+            data: vec![0.0; total_nodes * dim],
+            total_nodes,
+        }
+    }
+
+    pub fn total_nodes(&self) -> usize {
+        self.total_nodes
+    }
+
+    pub fn row(&self, raw: u32) -> &[f32] {
+        let i = raw as usize * self.dim;
+        &self.data[i..i + self.dim]
+    }
+
+    pub fn row_mut(&mut self, raw: u32) -> &mut [f32] {
+        let i = raw as usize * self.dim;
+        &mut self.data[i..i + self.dim]
+    }
+
+    /// Gather this store's rows for a snapshot into a padded buffer of
+    /// `max_nodes` rows (rows beyond the snapshot stay zero).
+    pub fn gather_padded(&self, snap: &Snapshot, max_nodes: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; max_nodes * self.dim];
+        for (local, raw) in snap.renumber.iter() {
+            let dst = local as usize * self.dim;
+            out[dst..dst + self.dim].copy_from_slice(self.row(raw));
+        }
+        out
+    }
+
+    /// Scatter a padded on-chip buffer back into DRAM rows.
+    pub fn scatter(&mut self, snap: &Snapshot, padded: &[f32]) {
+        let dim = self.dim;
+        for (local, raw) in snap.renumber.iter() {
+            let src = local as usize * dim;
+            self.row_mut(raw).copy_from_slice(&padded[src..src + dim]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::RenumberTable;
+    use crate::testutil::{forall, Config};
+
+    fn snap_with(raws: &[(u32, u32)]) -> Snapshot {
+        let renumber = RenumberTable::build(raws.iter().copied());
+        let n = renumber.len();
+        Snapshot {
+            index: 0,
+            src: vec![],
+            dst: vec![],
+            coef: vec![],
+            selfcoef: vec![1.0; n],
+            renumber,
+            t_start: 0,
+        }
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut store = NodeStateStore::zeros(10, 2);
+        store.row_mut(7).copy_from_slice(&[1.0, 2.0]);
+        store.row_mut(3).copy_from_slice(&[3.0, 4.0]);
+        let snap = snap_with(&[(7, 3)]);
+        let padded = store.gather_padded(&snap, 4);
+        assert_eq!(&padded[0..2], &[1.0, 2.0]); // local 0 = raw 7
+        assert_eq!(&padded[2..4], &[3.0, 4.0]); // local 1 = raw 3
+        assert_eq!(&padded[4..8], &[0.0; 4]); // padding rows zero
+
+        let updated = vec![9.0, 9.0, 8.0, 8.0, 7.0, 7.0, 6.0, 6.0];
+        let mut store2 = store.clone();
+        store2.scatter(&snap, &updated);
+        assert_eq!(store2.row(7), &[9.0, 9.0]);
+        assert_eq!(store2.row(3), &[8.0, 8.0]);
+        // untouched rows keep their value
+        assert_eq!(store2.row(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn prop_scatter_then_gather_identity() {
+        forall(Config::default().cases(40), |rng, size| {
+            let total = rng.range(2, size.max(3) + 2);
+            let dim = rng.range(1, 9);
+            let mut store = NodeStateStore::zeros(total, dim);
+            // random snapshot over the universe
+            let n_pairs = rng.range(1, total.max(2));
+            let pairs: Vec<(u32, u32)> = (0..n_pairs)
+                .map(|_| (rng.below(total) as u32, rng.below(total) as u32))
+                .collect();
+            let snap = snap_with(&pairs);
+            let max_nodes = snap.renumber.len() + rng.range(0, 5);
+            // write random padded state, scatter, re-gather
+            let mut padded = vec![0.0f32; max_nodes * dim];
+            for local in 0..snap.renumber.len() {
+                for j in 0..dim {
+                    padded[local * dim + j] = rng.uniform_f32(-1.0, 1.0);
+                }
+            }
+            store.scatter(&snap, &padded);
+            let back = store.gather_padded(&snap, max_nodes);
+            for local in 0..snap.renumber.len() * dim {
+                assert_eq!(back[local], padded[local]);
+            }
+        });
+    }
+}

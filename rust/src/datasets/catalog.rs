@@ -1,0 +1,85 @@
+//! Dataset profiles: the paper's Table III targets plus global stats from
+//! the KONECT collection pages for the two datasets.
+
+/// Target statistics for one temporal-graph dataset.
+#[derive(Clone, Copy, Debug)]
+pub struct DatasetProfile {
+    pub name: &'static str,
+    /// KONECT raw filename looked up under `data/`.
+    pub konect_file: &'static str,
+    /// Total nodes in the full graph (KONECT).
+    pub total_nodes: usize,
+    /// Total timestamped edges in the full stream (KONECT).
+    pub total_edges: usize,
+    /// Time splitter in seconds (paper Table III).
+    pub splitter_secs: i64,
+    /// Expected snapshot count at that splitter.
+    pub snapshots: usize,
+    /// Per-snapshot statistics (paper Table III).
+    pub avg_nodes: usize,
+    pub avg_edges: usize,
+    pub max_nodes: usize,
+    pub max_edges: usize,
+    /// Edge weights are ratings in [-10, 10] (BC-Alpha) or message
+    /// counts >= 1 (UCI).
+    pub weighted: bool,
+}
+
+/// Bitcoin Alpha trust network (KONECT `soc-sign-bitcoinalpha`).
+pub const BC_ALPHA: DatasetProfile = DatasetProfile {
+    name: "bc-alpha",
+    konect_file: "out.soc-sign-bitcoinalpha",
+    total_nodes: 3783,
+    total_edges: 24186,
+    splitter_secs: 3 * 7 * 24 * 3600, // 3 weeks
+    snapshots: 137,
+    avg_nodes: 107,
+    avg_edges: 232,
+    max_nodes: 578,
+    max_edges: 1686,
+    weighted: true,
+};
+
+/// UC Irvine online-community messages (KONECT `opsahl-ucsocial`).
+pub const UCI: DatasetProfile = DatasetProfile {
+    name: "uci",
+    konect_file: "out.opsahl-ucsocial",
+    total_nodes: 1899,
+    total_edges: 59835,
+    splitter_secs: 24 * 3600, // 1 day
+    snapshots: 192,
+    avg_nodes: 118,
+    avg_edges: 269,
+    max_nodes: 501,
+    max_edges: 1534,
+    weighted: false,
+};
+
+/// Both paper datasets in evaluation order.
+pub fn all() -> [&'static DatasetProfile; 2] {
+    [&BC_ALPHA, &UCI]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_match_paper_table3() {
+        assert_eq!(BC_ALPHA.avg_nodes, 107);
+        assert_eq!(BC_ALPHA.max_edges, 1686);
+        assert_eq!(BC_ALPHA.snapshots, 137);
+        assert_eq!(UCI.avg_edges, 269);
+        assert_eq!(UCI.snapshots, 192);
+        assert_eq!(UCI.splitter_secs, 86400);
+    }
+
+    #[test]
+    fn max_shapes_fit_aot_budget() {
+        // AOT defaults: 608 nodes, 1728 edges (model.py ModelConfig)
+        for p in all() {
+            assert!(p.max_nodes <= 608, "{}", p.name);
+            assert!(p.max_edges <= 1728, "{}", p.name);
+        }
+    }
+}

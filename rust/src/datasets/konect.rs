@@ -1,0 +1,130 @@
+//! KONECT temporal-graph file parser.
+//!
+//! The KONECT `out.<name>` format is line-oriented:
+//! ```text
+//! % asym positive                      <- header lines start with %
+//! 7188 1 10 1407470400                 <- src dst [weight] [timestamp]
+//! ```
+//! Both paper datasets carry 4 columns (src dst weight time).  When a
+//! weight column is absent the weight defaults to 1.0.
+
+use crate::error::{Error, Result};
+use crate::graph::{CooEdge, CooStream};
+use std::io::BufRead;
+
+/// Parse one KONECT file into a time-sorted [`CooStream`].
+pub fn load(name: &str, path: &str) -> Result<CooStream> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Dataset(format!("{path}: {e}")))?;
+    let reader = std::io::BufReader::new(file);
+    let mut edges = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('%') || line.starts_with('#') {
+            continue;
+        }
+        edges.push(parse_line(line).map_err(|e| {
+            Error::Dataset(format!("{path}:{}: {e}", lineno + 1))
+        })?);
+    }
+    CooStream::from_edges(name, edges)
+}
+
+fn parse_line(line: &str) -> std::result::Result<CooEdge, String> {
+    let mut it = line.split_whitespace();
+    let src: u32 = it
+        .next()
+        .ok_or("missing src")?
+        .parse()
+        .map_err(|e| format!("src: {e}"))?;
+    let dst: u32 = it
+        .next()
+        .ok_or("missing dst")?
+        .parse()
+        .map_err(|e| format!("dst: {e}"))?;
+    let rest: Vec<&str> = it.collect();
+    let (weight, time) = match rest.len() {
+        0 => (1.0, 0),
+        1 => (1.0, rest[0].parse::<f64>().map_err(|e| format!("time: {e}"))? as i64),
+        _ => (
+            rest[0].parse::<f32>().map_err(|e| format!("weight: {e}"))?,
+            rest[1].parse::<f64>().map_err(|e| format!("time: {e}"))? as i64,
+        ),
+    };
+    Ok(CooEdge {
+        src,
+        dst,
+        weight,
+        time,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_tmp(content: &str) -> String {
+        let path = format!(
+            "{}/konect_test_{}.txt",
+            std::env::temp_dir().display(),
+            std::process::id()
+        );
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(content.as_bytes()).unwrap();
+        path
+    }
+
+    #[test]
+    fn parses_four_column_format() {
+        let p = write_tmp("% sym\n1 2 5 100\n2 3 -3 200\n");
+        let s = load("t", &p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(s.edges.len(), 2);
+        assert_eq!(s.num_nodes, 3);
+        assert_eq!(s.edges[0].weight, 5.0);
+        assert_eq!(s.edges[1].weight, -3.0);
+        assert_eq!(s.edges[1].time, 200);
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let p = write_tmp("% a\n# b\n\n1 2 1 10\n");
+        let s = load("t", &p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(s.edges.len(), 1);
+    }
+
+    #[test]
+    fn two_column_defaults() {
+        assert_eq!(
+            parse_line("3 4").unwrap(),
+            CooEdge {
+                src: 3,
+                dst: 4,
+                weight: 1.0,
+                time: 0
+            }
+        );
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        let p = write_tmp("1 x 1 10\n");
+        assert!(load("t", &p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(load("t", "/nonexistent/path").is_err());
+    }
+
+    #[test]
+    fn scientific_notation_timestamps() {
+        // some KONECT exports write times as 1.1107e+09
+        let e = parse_line("1 2 1 1.1107e+09").unwrap();
+        assert_eq!(e.time, 1110700000);
+    }
+}

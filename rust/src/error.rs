@@ -1,0 +1,50 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every layer of the coordinator.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Dataset file missing / malformed (KONECT loader).
+    #[error("dataset error: {0}")]
+    Dataset(String),
+
+    /// A snapshot violates the AOT padding budget (too many nodes/edges).
+    #[error("snapshot exceeds AOT budget: {what} = {got} > max {max}")]
+    Budget {
+        what: &'static str,
+        got: usize,
+        max: usize,
+    },
+
+    /// Graph structure invariant broken (bad index, non-bijective renumber).
+    #[error("graph invariant violated: {0}")]
+    Graph(String),
+
+    /// AOT artifact problems (missing file, manifest mismatch).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT / XLA failure, bubbled up from the `xla` crate.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// Accelerator configuration does not fit the device.
+    #[error("resource overflow: {0}")]
+    Resource(String),
+
+    /// CLI usage error.
+    #[error("usage: {0}")]
+    Usage(String),
+
+    #[error("i/o error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,235 @@
+//! DGNN-Booster V2: within-time-step overlap via node queues.
+//!
+//! The GNN's MP and NT stages and the RNN's gate stage are FIFO-coupled
+//! at node granularity (paper §IV-C-2): as soon as MP finishes
+//! aggregating a node, the node flows through NT into the RNN queue, so
+//! the three units work on different nodes concurrently ("node-level
+//! pipelining end-to-end").
+//!
+//! The simulation is a token-level max-plus recurrence over the *real*
+//! snapshot structure:
+//!
+//! * MP serves node v after its in-edges stream through the gather unit
+//!   (cycles ∝ in-degree); NT and RNN serve one token per II, with FIFO
+//!   backpressure of the configured queue depth in both couplings.
+//! * The node queues do **not** span time steps: the paper's overlap is
+//!   "within the same time step", and for an integrated DGNN the next
+//!   snapshot's convolutions read the H/C rows RNN(t) is producing, so
+//!   each snapshot's dataflow region starts only after the previous one
+//!   drains (region barrier).  GL/CONV still prefetch on the DMA engine.
+//! * A per-step synchronisation overhead (`V2_STEP_OVERHEAD_CYCLES`)
+//!   covers the PS↔PL handshake plus the H/C state write-back between
+//!   regions; it is the one constant calibrated from the paper's V2
+//!   end-to-end anchor (Table IV 1.35 ms vs Table VII 0.85/0.82 ms
+//!   module latencies — the gap the module numbers don't cover).
+
+use super::super::dma::DmaEngine;
+use super::super::fifo::backpressure;
+use super::super::units::{self, ETA_GNN_V2, ETA_RNN_V2, MP_FRACTION, PIPE_FILL};
+use super::{AcceleratorConfig, OptLevel, StepTiming, RNN_UNPIPELINED_FACTOR};
+use crate::graph::{Csr, Snapshot};
+
+/// Per-step PS↔PL synchronisation + H/C state write-back between dataflow
+/// regions (cycles).  Calibrated once from the paper's V2 BC-Alpha
+/// end-to-end row (see module docs); the UCI row then follows from the
+/// model.
+pub const V2_STEP_OVERHEAD_CYCLES: f64 = 40_000.0;
+
+/// Module latencies for one snapshot (used directly by O0/O1 and as the
+/// II source for the O2 token pipeline).
+pub(crate) fn module_latencies(cfg: &AcceleratorConfig, nodes: usize, edges: usize) -> StepTiming {
+    let w = cfg.workload(nodes, edges);
+    let (gnn_work, rnn_work) = cfg.model_work(nodes, edges);
+    let gnn = units::unit_cycles(gnn_work, cfg.dsp_gnn, ETA_GNN_V2);
+    let rnn_pipelined = units::unit_cycles(rnn_work, cfg.dsp_rnn, ETA_RNN_V2);
+    let rnn = match cfg.opt {
+        OptLevel::Baseline => rnn_pipelined * RNN_UNPIPELINED_FACTOR,
+        _ => rnn_pipelined,
+    };
+    StepTiming {
+        gl: units::gl_cycles(&w),
+        conv: units::conv_cycles(&w),
+        mp: gnn * MP_FRACTION,
+        nt: gnn * (1.0 - MP_FRACTION),
+        rnn,
+        interval: 0.0,
+    }
+}
+
+/// Simulate the stream; returns per-step timings and weight-load cycles.
+pub fn simulate(cfg: &AcceleratorConfig, snaps: &[Snapshot]) -> (Vec<StepTiming>, f64) {
+    let mut dma = DmaEngine::new();
+    let weight_load = dma.load_weights(cfg.weight_bytes());
+
+    match cfg.opt {
+        OptLevel::Baseline | OptLevel::PipelineO1 => {
+            let mut out = Vec::with_capacity(snaps.len());
+            for s in snaps {
+                let mut t = module_latencies(cfg, s.num_nodes(), s.num_edges());
+                t.interval = t.sequential_total() + V2_STEP_OVERHEAD_CYCLES;
+                out.push(t);
+            }
+            (out, weight_load)
+        }
+        OptLevel::PipelineO2 => simulate_o2(cfg, snaps, dma, weight_load),
+    }
+}
+
+fn simulate_o2(
+    cfg: &AcceleratorConfig,
+    snaps: &[Snapshot],
+    mut dma: DmaEngine,
+    weight_load: f64,
+) -> (Vec<StepTiming>, f64) {
+    let depth = cfg.fifo_depth;
+    // Integrated DGNNs force a region barrier (next step's convs read the
+    // H/C rows this step's RNN produces); stacked DGNNs have independent
+    // GNNs per step, so the unit pipelines flow straight across snapshot
+    // boundaries — V2's extra win on stacked models.
+    let barrier = matches!(
+        cfg.model.dataflow(),
+        crate::models::DataflowType::Integrated | crate::models::DataflowType::WeightsEvolved
+    );
+    let mut out = Vec::with_capacity(snaps.len());
+    let mut clock = weight_load;
+    // per-unit horizons carried across snapshots (stacked mode)
+    let mut mp_free = weight_load;
+    let mut nt_free = weight_load;
+    let mut rnn_free = weight_load;
+
+    for s in snaps {
+        let n = s.num_nodes();
+        let e = s.num_edges().max(1);
+        let lat = module_latencies(cfg, n, e);
+        // Per-token service times derived from the module latencies.
+        let mp_per_edge = (lat.mp - PIPE_FILL).max(0.0) / e as f64;
+        let ii_nt = (lat.nt - PIPE_FILL).max(0.0) / n.max(1) as f64;
+        let ii_rnn = (lat.rnn - PIPE_FILL).max(0.0) / n.max(1) as f64;
+
+        // GL/CONV: prefetched by the DMA engine as early as the channel
+        // allows; compute of the previous snapshot continues meanwhile.
+        let (_, gl_done) = dma.issue(clock - lat.gl, cfg.workload(n, e).dma_bytes());
+        let conv_done = gl_done + lat.conv;
+
+        // Region barrier: an integrated snapshot's dataflow region starts
+        // once the previous region drained (H/C dependency) and the data
+        // landed; a stacked snapshot only waits for its data.
+        let region_start = if barrier {
+            conv_done.max(clock) + PIPE_FILL
+        } else {
+            conv_done + PIPE_FILL
+        };
+        let (mp0, nt0, rnn0) = if barrier {
+            (region_start, region_start, region_start)
+        } else {
+            (
+                region_start.max(mp_free),
+                region_start.max(nt_free),
+                region_start.max(rnn_free),
+            )
+        };
+
+        // CSC view: in-edges per node drive the MP gather unit.
+        let csc = Csr::csc_from_coo(n, &s.src, &s.dst, &s.coef)
+            .expect("snapshot validated upstream");
+
+        let mut mp_done = vec![0.0f64; n];
+        let mut nt_done = vec![0.0f64; n];
+        let mut rnn_done = vec![0.0f64; n];
+        for v in 0..n {
+            let deg = csc.row(v).0.len() as f64;
+            let prev = if v == 0 { mp0 } else { mp_done[v - 1] };
+            let want = prev + mp_per_edge * deg.max(0.25);
+            // node-queue backpressure (MP -> NT)
+            let bp = if v >= depth { Some(nt_done[v - depth]) } else { None };
+            mp_done[v] = backpressure(want, bp);
+
+            let prev_nt = if v == 0 { nt0 } else { nt_done[v - 1] };
+            let want_nt = prev_nt.max(mp_done[v]) + ii_nt;
+            let bp = if v >= depth { Some(rnn_done[v - depth]) } else { None };
+            nt_done[v] = backpressure(want_nt, bp);
+
+            let prev_rnn = if v == 0 { rnn0 } else { rnn_done[v - 1] };
+            rnn_done[v] = prev_rnn.max(nt_done[v]) + ii_rnn;
+        }
+        mp_free = mp_done.last().copied().unwrap_or(region_start);
+        nt_free = nt_done.last().copied().unwrap_or(region_start);
+        rnn_free = rnn_done.last().copied().unwrap_or(region_start);
+        let step_done = rnn_free + V2_STEP_OVERHEAD_CYCLES;
+        out.push(StepTiming { interval: step_done - clock, ..lat });
+        clock = step_done;
+    }
+    (out, weight_load)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::preprocess::preprocess_stream;
+    use crate::datasets::{synth, BC_ALPHA};
+    use crate::models::ModelKind;
+
+    fn paper_cfg() -> AcceleratorConfig {
+        AcceleratorConfig::paper_default(ModelKind::GcrnM2)
+    }
+
+    fn bc_alpha_snaps() -> Vec<Snapshot> {
+        let stream = synth::generate(&BC_ALPHA, 42);
+        preprocess_stream(&stream, BC_ALPHA.splitter_secs).unwrap()
+    }
+
+    #[test]
+    fn o2_end_to_end_near_paper() {
+        // Paper Table IV: GCRN-M2 on BC-Alpha = 1.35 ms per snapshot.
+        let snaps = bc_alpha_snaps();
+        let ms = super::super::avg_latency_ms(&paper_cfg(), &snaps);
+        assert!((ms - 1.35).abs() < 0.4, "V2 O2 avg {ms} ms vs paper 1.35");
+    }
+
+    #[test]
+    fn o2_between_max_and_sum() {
+        // Overlap must beat sequential but cannot beat the max module.
+        let snaps = bc_alpha_snaps();
+        let cfg = paper_cfg();
+        let (steps, _) = simulate(&cfg, &snaps);
+        for st in &steps[2..] {
+            let bound_hi = st.sequential_total() + V2_STEP_OVERHEAD_CYCLES + 1.0;
+            let bound_lo = st.rnn;
+            assert!(st.interval <= bound_hi, "{} > {}", st.interval, bound_hi);
+            assert!(st.interval >= bound_lo * 0.8, "{} < {}", st.interval, bound_lo);
+        }
+    }
+
+    #[test]
+    fn ablation_ordering_holds() {
+        let snaps = bc_alpha_snaps();
+        let o0 = super::super::avg_latency_ms(&paper_cfg().with_opt(OptLevel::Baseline), &snaps);
+        let o1 = super::super::avg_latency_ms(&paper_cfg().with_opt(OptLevel::PipelineO1), &snaps);
+        let o2 = super::super::avg_latency_ms(&paper_cfg(), &snaps);
+        assert!(o0 > o1 && o1 > o2, "o0={o0} o1={o1} o2={o2}");
+    }
+
+    #[test]
+    fn deeper_fifo_never_hurts() {
+        let snaps = bc_alpha_snaps();
+        let mut shallow = paper_cfg();
+        shallow.fifo_depth = 2;
+        let mut deep = paper_cfg();
+        deep.fifo_depth = 64;
+        let s = super::super::avg_latency_ms(&shallow, &snaps);
+        let d = super::super::avg_latency_ms(&deep, &snaps);
+        assert!(d <= s + 1e-6, "deep {d} vs shallow {s}");
+    }
+
+    #[test]
+    fn more_gnn_dsp_helps_v2() {
+        // V2 allocates 96% of DSPs to the GNN because it is the heavier
+        // module (Table VII) — check the model agrees directionally.
+        let snaps = bc_alpha_snaps();
+        let mut starved = paper_cfg();
+        starved.dsp_gnn = 500;
+        let lat_paper = super::super::avg_latency_ms(&paper_cfg(), &snaps);
+        let lat_starved = super::super::avg_latency_ms(&starved, &snaps);
+        assert!(lat_paper < lat_starved);
+    }
+}

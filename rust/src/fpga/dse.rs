@@ -1,0 +1,134 @@
+//! Design-space exploration: the GNN/RNN DSP split (paper §V-D).
+//!
+//! "In DGNN-Booster V1, we allocate more DSPs to RNN since it is
+//! computationally heavier than GNN.  Conversely, in DGNN-Booster V2, we
+//! allocate more DSPs to GNN" — Table VII.  [`sweep`] evaluates a grid of
+//! splits under a total-DSP budget and returns the Pareto point, which
+//! the Table VII bench compares against the paper's shipped allocation.
+
+use super::designs::{avg_latency_ms, AcceleratorConfig};
+use crate::graph::Snapshot;
+
+/// One evaluated DSE point.
+#[derive(Clone, Copy, Debug)]
+pub struct DsePoint {
+    pub dsp_gnn: usize,
+    pub dsp_rnn: usize,
+    pub latency_ms: f64,
+}
+
+/// Sweep GNN/RNN splits of `total_dsp` in `steps` increments over the
+/// given snapshot stream; returns all points sorted by allocation.
+pub fn sweep(
+    base: &AcceleratorConfig,
+    snaps: &[Snapshot],
+    total_dsp: usize,
+    steps: usize,
+) -> Vec<DsePoint> {
+    let mut out = Vec::with_capacity(steps);
+    for i in 1..steps {
+        let dsp_gnn = (total_dsp * i / steps).max(10);
+        let dsp_rnn = (total_dsp - dsp_gnn).max(10);
+        let mut cfg = *base;
+        cfg.dsp_gnn = dsp_gnn;
+        cfg.dsp_rnn = dsp_rnn;
+        out.push(DsePoint {
+            dsp_gnn,
+            dsp_rnn,
+            latency_ms: avg_latency_ms(&cfg, snaps),
+        });
+    }
+    out
+}
+
+/// The latency-optimal point of a sweep.
+pub fn best(points: &[DsePoint]) -> DsePoint {
+    *points
+        .iter()
+        .min_by(|a, b| a.latency_ms.partial_cmp(&b.latency_ms).unwrap())
+        .expect("non-empty sweep")
+}
+
+/// Module-level latency split at a configuration — the Table VII
+/// latency columns (GNN ms, RNN ms, and their share of the sum).
+pub fn module_split(cfg: &AcceleratorConfig, snaps: &[Snapshot]) -> (f64, f64) {
+    use crate::fpga::cycles_to_ms;
+    let mut gnn = 0.0;
+    let mut rnn = 0.0;
+    for s in snaps {
+        let t = match cfg.model.booster_version() {
+            1 => super::designs::v1::module_latencies(cfg, s.num_nodes(), s.num_edges()),
+            _ => super::designs::v2::module_latencies(cfg, s.num_nodes(), s.num_edges()),
+        };
+        gnn += t.mp + t.nt;
+        rnn += t.rnn;
+    }
+    let n = snaps.len().max(1) as f64;
+    (cycles_to_ms(gnn / n), cycles_to_ms(rnn / n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::preprocess::preprocess_stream;
+    use crate::datasets::{synth, BC_ALPHA};
+    use crate::models::ModelKind;
+
+    fn snaps() -> Vec<Snapshot> {
+        let stream = synth::generate(&BC_ALPHA, 7);
+        let mut s = preprocess_stream(&stream, BC_ALPHA.splitter_secs).unwrap();
+        s.truncate(24); // keep the sweep fast
+        s
+    }
+
+    #[test]
+    fn v1_optimum_favours_rnn() {
+        // V1's RNN is the heavy module: the best split must give the RNN
+        // the majority of DSPs, as the paper's 288/1658 does.
+        let base = AcceleratorConfig::paper_default(ModelKind::EvolveGcn);
+        let pts = sweep(&base, &snaps(), 1946, 12);
+        let b = best(&pts);
+        assert!(
+            b.dsp_rnn > b.dsp_gnn,
+            "expected RNN-heavy optimum, got {}/{}",
+            b.dsp_gnn,
+            b.dsp_rnn
+        );
+    }
+
+    #[test]
+    fn v2_optimum_favours_gnn() {
+        let base = AcceleratorConfig::paper_default(ModelKind::GcrnM2);
+        let pts = sweep(&base, &snaps(), 2249, 12);
+        let b = best(&pts);
+        assert!(
+            b.dsp_gnn > b.dsp_rnn,
+            "expected GNN-heavy optimum, got {}/{}",
+            b.dsp_gnn,
+            b.dsp_rnn
+        );
+    }
+
+    #[test]
+    fn paper_split_close_to_sweep_optimum() {
+        let base = AcceleratorConfig::paper_default(ModelKind::EvolveGcn);
+        let s = snaps();
+        let pts = sweep(&base, &s, 1946, 12);
+        let b = best(&pts);
+        let paper = crate::fpga::designs::avg_latency_ms(&base, &s);
+        assert!(
+            paper <= b.latency_ms * 1.15,
+            "paper split {paper} ms vs sweep best {} ms",
+            b.latency_ms
+        );
+    }
+
+    #[test]
+    fn module_split_matches_table7_shares() {
+        // V1: GNN 43% / RNN 57% of module time (0.36 vs 0.47 ms).
+        let cfg = AcceleratorConfig::paper_default(ModelKind::EvolveGcn);
+        let (gnn, rnn) = module_split(&cfg, &snaps());
+        let share = gnn / (gnn + rnn);
+        assert!((share - 0.43).abs() < 0.08, "GNN share {share}");
+    }
+}

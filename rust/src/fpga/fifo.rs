@@ -1,0 +1,137 @@
+//! Timed FIFO — the node-queue primitive of DGNN-Booster V2.
+//!
+//! Models an HLS stream of bounded depth with single-cycle handshake.
+//! Used by the V2 token pipeline for backpressure: a producer may only
+//! finish token *i* once the consumer has drained token *i − depth*.
+//! Also usable as a functional queue (push/pop) by the coordinator.
+
+use std::collections::VecDeque;
+
+/// A bounded FIFO carrying timestamped tokens.
+#[derive(Clone, Debug)]
+pub struct Fifo<T> {
+    depth: usize,
+    items: VecDeque<(f64, T)>,
+    /// Completion times of the last `depth` pops (for backpressure calc).
+    pub pushes: u64,
+    pub pops: u64,
+    /// Max occupancy ever observed (reported by the ablation bench).
+    pub high_water: usize,
+}
+
+impl<T> Fifo<T> {
+    pub fn new(depth: usize) -> Self {
+        assert!(depth > 0, "FIFO depth must be positive");
+        Fifo {
+            depth,
+            items: VecDeque::new(),
+            pushes: 0,
+            pops: 0,
+            high_water: 0,
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.depth
+    }
+
+    /// Push a token produced at `time`; returns false (rejected) if full.
+    pub fn push(&mut self, time: f64, item: T) -> bool {
+        if self.is_full() {
+            return false;
+        }
+        self.items.push_back((time, item));
+        self.pushes += 1;
+        self.high_water = self.high_water.max(self.items.len());
+        true
+    }
+
+    /// Pop the oldest token; yields its production time too.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let it = self.items.pop_front();
+        if it.is_some() {
+            self.pops += 1;
+        }
+        it
+    }
+
+    pub fn front(&self) -> Option<&(f64, T)> {
+        self.items.front()
+    }
+}
+
+/// Backpressure recurrence used by the token pipeline: given the finish
+/// time a producer *wants* for token `i`, and the consumer-finish time of
+/// token `i - depth`, the earliest legal finish is the max of the two.
+/// (Kept as a free function so the schedule code reads like the timing
+/// algebra it is.)
+pub fn backpressure(want: f64, consumer_done_i_minus_depth: Option<f64>) -> f64 {
+    match consumer_done_i_minus_depth {
+        Some(t) => want.max(t),
+        None => want,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut f = Fifo::new(4);
+        for i in 0..3 {
+            assert!(f.push(i as f64, i));
+        }
+        assert_eq!(f.pop().unwrap().1, 0);
+        assert_eq!(f.pop().unwrap().1, 1);
+        assert_eq!(f.pop().unwrap().1, 2);
+        assert!(f.pop().is_none());
+    }
+
+    #[test]
+    fn rejects_when_full() {
+        let mut f = Fifo::new(2);
+        assert!(f.push(0.0, 'a'));
+        assert!(f.push(0.0, 'b'));
+        assert!(!f.push(0.0, 'c'));
+        f.pop();
+        assert!(f.push(0.0, 'c'));
+    }
+
+    #[test]
+    fn high_water_tracks_max_occupancy() {
+        let mut f = Fifo::new(8);
+        for i in 0..5 {
+            f.push(0.0, i);
+        }
+        f.pop();
+        f.pop();
+        assert_eq!(f.high_water, 5);
+        assert_eq!(f.len(), 3);
+    }
+
+    #[test]
+    fn backpressure_is_max() {
+        assert_eq!(backpressure(10.0, None), 10.0);
+        assert_eq!(backpressure(10.0, Some(5.0)), 10.0);
+        assert_eq!(backpressure(10.0, Some(15.0)), 15.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "depth must be positive")]
+    fn zero_depth_panics() {
+        let _ = Fifo::<u8>::new(0);
+    }
+}

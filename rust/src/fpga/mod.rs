@@ -1,0 +1,42 @@
+//! Cycle-approximate model of the DGNN-Booster FPGA accelerator.
+//!
+//! This module replaces the paper's ZCU102 + Vitis HLS testbed (DESIGN.md
+//! §4 substitutions).  It has two halves:
+//!
+//! * **Timing** — per-unit cycle models ([`units`]) calibrated against the
+//!   paper's Table VII module latencies, composed by the V1 ping-pong
+//!   schedule ([`designs::v1`]) and the V2 node-queue token pipeline
+//!   ([`designs::v2`]).  The composition is event-driven: ping-pong
+//!   buffer conflicts, FIFO backpressure and the cross-step hidden-state
+//!   dependency all emerge from explicit recurrences, not fitted factors.
+//! * **Resources & power** — an analytic ZCU102 resource model
+//!   ([`resources`]) and an activity-based power model ([`power`]) that
+//!   regenerate Tables II and V–VII.
+//!
+//! Clock: 100 MHz, the paper's target frequency.
+
+pub mod designs;
+pub mod dma;
+pub mod dse;
+pub mod fifo;
+pub mod incremental;
+pub mod pingpong;
+pub mod power;
+pub mod resources;
+pub mod units;
+
+pub use designs::{AcceleratorConfig, OptLevel, StepTiming};
+pub use resources::{ResourceUsage, Zcu102};
+
+/// Accelerator clock frequency (Hz) — paper §V-A.
+pub const CLOCK_HZ: f64 = 100e6;
+
+/// Convert cycles to milliseconds at the accelerator clock.
+pub fn cycles_to_ms(cycles: f64) -> f64 {
+    cycles / CLOCK_HZ * 1e3
+}
+
+/// Convert milliseconds to cycles.
+pub fn ms_to_cycles(ms: f64) -> f64 {
+    ms * 1e-3 * CLOCK_HZ
+}

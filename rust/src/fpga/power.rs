@@ -1,0 +1,65 @@
+//! Activity-based FPGA power model (substitute for the paper's power
+//! meter — DESIGN.md §4).
+//!
+//! Calibration: Table VI gives the FPGA runtime (dynamic) energy directly
+//! — e.g. EvolveGCN/BC-Alpha 0.02 J per 100 snapshots over 100 × 0.76 ms
+//! = 76 ms of runtime ⇒ ≈ 0.26 W dynamic.  Table V's total-energy rows
+//! imply the constant board draw: (1.92 − 0.02) J / 76 ms ≈ 25 W — the
+//! ZCU102 board idle (PS + fans + peripherals), consistent with the
+//! board's published idle figures.
+//!
+//! The dynamic draw is distributed over the active resources so that
+//! different configurations (DSE sweeps, V1 vs V2) scale sensibly:
+//! `P_dyn = DSP·0.115 mW + BRAM·0.05 mW + LUT·0.18 µW` at 100 MHz,
+//! which reproduces ≈0.26 W at the EvolveGCN build and ≈0.36 W at the
+//! (larger) GCRN-M2 build — matching Table VI's 0.05/0.06 J rows.
+
+use super::resources::ResourceUsage;
+
+/// ZCU102 board constant draw (PS, DDR, fan, peripherals), watts.
+pub const BOARD_IDLE_W: f64 = 25.0;
+
+/// Per-resource dynamic power at 100 MHz, watts.
+pub const DSP_DYN_W: f64 = 115e-6;
+pub const BRAM_DYN_W: f64 = 50e-6;
+pub const LUT_DYN_W: f64 = 0.18e-6;
+
+/// Dynamic (runtime) power of a build, watts.
+pub fn dynamic_w(u: &ResourceUsage) -> f64 {
+    u.dsp as f64 * DSP_DYN_W + u.bram * BRAM_DYN_W + u.lut as f64 * LUT_DYN_W
+}
+
+/// Total board power while running, watts.
+pub fn total_w(u: &ResourceUsage) -> f64 {
+    BOARD_IDLE_W + dynamic_w(u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::designs::AcceleratorConfig;
+    use crate::fpga::resources::estimate;
+    use crate::models::ModelKind;
+
+    #[test]
+    fn evolvegcn_dynamic_power_near_calibration() {
+        let cfg = AcceleratorConfig::paper_default(ModelKind::EvolveGcn);
+        let u = estimate(&cfg, 608, 1728);
+        let p = dynamic_w(&u);
+        assert!((p - 0.26).abs() < 0.08, "dyn {p} W vs ~0.26");
+    }
+
+    #[test]
+    fn gcrn_draws_more_than_evolvegcn() {
+        let e = estimate(&AcceleratorConfig::paper_default(ModelKind::EvolveGcn), 608, 1728);
+        let g = estimate(&AcceleratorConfig::paper_default(ModelKind::GcrnM2), 608, 1728);
+        assert!(dynamic_w(&g) > dynamic_w(&e));
+    }
+
+    #[test]
+    fn total_dominated_by_board_idle() {
+        let u = estimate(&AcceleratorConfig::paper_default(ModelKind::EvolveGcn), 608, 1728);
+        let t = total_w(&u);
+        assert!(t > 25.0 && t < 26.5, "{t}");
+    }
+}

@@ -1,0 +1,194 @@
+//! COO → CSR/CSC format conversion (paper §IV-B).
+//!
+//! "Instead of using COO format, we use compressed sparse row (CSR) format
+//! or compressed sparse column (CSC) format for GNN inference by designing
+//! a converter on FPGA for format transformation."  The converter here is
+//! the functional model (counting sort, two passes); its cycle cost on the
+//! fabric is modelled by `fpga::units::conv_cycles`.
+
+use crate::error::{Error, Result};
+
+/// Compressed sparse row: out-edges grouped by source.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr {
+    /// len n+1; row_ptr[s]..row_ptr[s+1] indexes cols/vals of node s.
+    pub row_ptr: Vec<u32>,
+    /// Destination of each edge, grouped by source.
+    pub cols: Vec<u32>,
+    /// Edge coefficient, same order as `cols`.
+    pub vals: Vec<f32>,
+    /// Permutation: position i in CSR order came from COO edge perm[i]
+    /// (needed to stream edge embeddings in the new order).
+    pub perm: Vec<u32>,
+}
+
+/// Compressed sparse column: in-edges grouped by destination.  For GCN
+/// message passing (accumulate at the destination) CSC is the natural
+/// layout; DGNN-Booster's MP unit walks it destination-major.
+pub type Csc = Csr; // same arrays, roles of src/dst swapped by the builder
+
+impl Csr {
+    /// Build CSR (group by `major`) from COO arrays via counting sort —
+    /// the same two-pass algorithm the fabric converter implements.
+    fn build(
+        n: usize,
+        major: &[u32],
+        minor: &[u32],
+        vals: &[f32],
+    ) -> Result<Csr> {
+        if major.len() != minor.len() || major.len() != vals.len() {
+            return Err(Error::Graph("COO array length mismatch".into()));
+        }
+        let e = major.len();
+        let mut row_ptr = vec![0u32; n + 1];
+        for &m in major {
+            if m as usize >= n {
+                return Err(Error::Graph(format!("node id {m} >= n {n}")));
+            }
+            row_ptr[m as usize + 1] += 1;
+        }
+        for i in 0..n {
+            row_ptr[i + 1] += row_ptr[i];
+        }
+        let mut cols = vec![0u32; e];
+        let mut out_vals = vec![0f32; e];
+        let mut perm = vec![0u32; e];
+        let mut cursor = row_ptr.clone();
+        for (i, (&m, (&mi, &v))) in major.iter().zip(minor.iter().zip(vals.iter())).enumerate() {
+            let p = cursor[m as usize] as usize;
+            cols[p] = mi;
+            out_vals[p] = v;
+            perm[p] = i as u32;
+            cursor[m as usize] += 1;
+        }
+        Ok(Csr {
+            row_ptr,
+            cols,
+            vals: out_vals,
+            perm,
+        })
+    }
+
+    /// Group out-edges by source (CSR proper).
+    pub fn from_coo(n: usize, src: &[u32], dst: &[u32], vals: &[f32]) -> Result<Csr> {
+        Self::build(n, src, dst, vals)
+    }
+
+    /// Group in-edges by destination (CSC view of the same graph).
+    pub fn csc_from_coo(n: usize, src: &[u32], dst: &[u32], vals: &[f32]) -> Result<Csc> {
+        Self::build(n, dst, src, vals)
+    }
+
+    pub fn num_rows(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Neighbour slice of one row.
+    pub fn row(&self, r: usize) -> (&[u32], &[f32]) {
+        let lo = self.row_ptr[r] as usize;
+        let hi = self.row_ptr[r + 1] as usize;
+        (&self.cols[lo..hi], &self.vals[lo..hi])
+    }
+
+    /// Convert back to COO triples (row-major order) — used by tests to
+    /// check the conversion is lossless.
+    pub fn to_coo(&self) -> Vec<(u32, u32, f32)> {
+        let mut out = Vec::with_capacity(self.num_edges());
+        for r in 0..self.num_rows() {
+            let (cols, vals) = self.row(r);
+            for (c, v) in cols.iter().zip(vals.iter()) {
+                out.push((r as u32, *c, *v));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{forall, Config};
+
+    #[test]
+    fn simple_csr() {
+        // edges: 0->1, 0->2, 2->0
+        let csr = Csr::from_coo(3, &[0, 0, 2], &[1, 2, 0], &[0.1, 0.2, 0.3]).unwrap();
+        assert_eq!(csr.row_ptr, vec![0, 2, 2, 3]);
+        assert_eq!(csr.row(0).0, &[1, 2]);
+        assert_eq!(csr.row(1).0, &[] as &[u32]);
+        assert_eq!(csr.row(2).0, &[0]);
+    }
+
+    #[test]
+    fn csc_groups_by_destination() {
+        let csc = Csr::csc_from_coo(3, &[0, 0, 2], &[1, 2, 0], &[0.1, 0.2, 0.3]).unwrap();
+        // in-edges: node0 <- 2, node1 <- 0, node2 <- 0
+        assert_eq!(csc.row(0).0, &[2]);
+        assert_eq!(csc.row(1).0, &[0]);
+        assert_eq!(csc.row(2).0, &[0]);
+    }
+
+    #[test]
+    fn out_of_range_is_error() {
+        assert!(Csr::from_coo(2, &[5], &[0], &[1.0]).is_err());
+    }
+
+    #[test]
+    fn multigraph_edges_preserved() {
+        let csr = Csr::from_coo(2, &[0, 0, 0], &[1, 1, 1], &[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(csr.row(0).1, &[1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn prop_coo_csr_roundtrip_is_lossless() {
+        forall(Config::default().cases(80), |rng, size| {
+            let n = rng.range(1, size.max(2));
+            let e = rng.range(0, 4 * size.max(1));
+            let src: Vec<u32> = (0..e).map(|_| rng.below(n) as u32).collect();
+            let dst: Vec<u32> = (0..e).map(|_| rng.below(n) as u32).collect();
+            let vals: Vec<f32> = (0..e).map(|_| rng.uniform_f32(-1.0, 1.0)).collect();
+            let csr = Csr::from_coo(n, &src, &dst, &vals).unwrap();
+            // multiset of triples must match
+            let mut got = csr.to_coo();
+            let mut want: Vec<(u32, u32, f32)> = src
+                .iter()
+                .zip(dst.iter())
+                .zip(vals.iter())
+                .map(|((s, d), v)| (*s, *d, *v))
+                .collect();
+            let key = |t: &(u32, u32, f32)| (t.0, t.1, t.2.to_bits());
+            got.sort_by_key(key);
+            want.sort_by_key(key);
+            assert_eq!(got, want);
+            // perm must be a permutation
+            let mut p = csr.perm.clone();
+            p.sort_unstable();
+            assert!(p.iter().enumerate().all(|(i, &v)| i as u32 == v));
+        });
+    }
+
+    #[test]
+    fn prop_csr_rows_sorted_and_complete() {
+        forall(Config::default().cases(40), |rng, size| {
+            let n = rng.range(1, size.max(2));
+            let e = rng.range(0, 2 * size.max(1));
+            let src: Vec<u32> = (0..e).map(|_| rng.below(n) as u32).collect();
+            let dst: Vec<u32> = (0..e).map(|_| rng.below(n) as u32).collect();
+            let vals = vec![1.0f32; e];
+            let csr = Csr::from_coo(n, &src, &dst, &vals).unwrap();
+            assert_eq!(csr.num_edges(), e);
+            assert_eq!(csr.row_ptr[n] as usize, e);
+            // row_ptr monotone
+            assert!(csr.row_ptr.windows(2).all(|w| w[0] <= w[1]));
+            // per-row degree matches a direct count
+            for r in 0..n {
+                let deg = src.iter().filter(|&&s| s as usize == r).count();
+                assert_eq!(csr.row(r).0.len(), deg, "row {r}");
+            }
+        });
+    }
+}

@@ -1,0 +1,27 @@
+//! Graph substrate: temporal COO streams, snapshots, renumbering, and
+//! hardware-friendly format conversion (COO → CSR/CSC).
+//!
+//! This is the paper's §IV-A/§IV-B host-plus-fabric pipeline:
+//!
+//! 1. the raw dynamic graph arrives as a time-ordered **COO** edge list
+//!    (the format of both KONECT datasets);
+//! 2. the host slices it into **snapshots** by a time splitter;
+//! 3. per snapshot, a **renumbering table** maps raw node ids to dense
+//!    on-chip addresses;
+//! 4. the fabric-side converter produces **CSR/CSC** so message passing
+//!    has regular access patterns;
+//! 5. GCN normalisation coefficients (Â = D̂^-1/2 (A+I) D̂^-1/2, with the
+//!    edge weight folded in — the paper's edge-embedding support) are
+//!    attached per edge, and self-loop terms per node.
+
+pub mod convert;
+pub mod coo;
+pub mod norm;
+pub mod renumber;
+pub mod snapshot;
+
+pub use convert::{Csc, Csr};
+pub use coo::{CooEdge, CooStream};
+pub use norm::normalize_gcn;
+pub use renumber::RenumberTable;
+pub use snapshot::{Snapshot, SnapshotStats};

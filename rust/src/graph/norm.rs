@@ -1,0 +1,101 @@
+//! GCN normalisation: Â = D̂^{-1/2} (A + I) D̂^{-1/2} with edge weights.
+//!
+//! Produces the per-edge message coefficients and per-node self-loop
+//! coefficients the AOT model consumes.  Edge weights (the paper's edge
+//! embeddings) enter the adjacency before normalisation via |w| so
+//! distrust edges (negative ratings in BC-Alpha) still contribute
+//! magnitude; the sign is preserved in the final coefficient.
+
+/// Compute (coef[e], selfcoef[n]) for a local-id edge list.
+///
+/// deĝ(i) = 1 + Σ_{edges touching i} |w| (in + out, treating the message
+/// graph as the directed graph given; self-loop contributes 1).
+/// coef[e]     = w_e / sqrt(deĝ(src) · deĝ(dst))
+/// selfcoef[i] = 1   / deĝ(i)
+pub fn normalize_gcn(
+    n: usize,
+    src: &[u32],
+    dst: &[u32],
+    weight: &[f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let mut deg = vec![1.0f64; n]; // self-loop
+    for ((&s, &d), &w) in src.iter().zip(dst.iter()).zip(weight.iter()) {
+        let aw = w.abs() as f64;
+        deg[s as usize] += aw;
+        deg[d as usize] += aw;
+    }
+    let inv_sqrt: Vec<f64> = deg.iter().map(|&d| 1.0 / d.sqrt()).collect();
+    let coef = src
+        .iter()
+        .zip(dst.iter())
+        .zip(weight.iter())
+        .map(|((&s, &d), &w)| (w as f64 * inv_sqrt[s as usize] * inv_sqrt[d as usize]) as f32)
+        .collect();
+    let selfcoef = inv_sqrt.iter().map(|&v| (v * v) as f32).collect();
+    (coef, selfcoef)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{forall, Config};
+
+    #[test]
+    fn isolated_node_selfcoef_is_one() {
+        let (_, sc) = normalize_gcn(2, &[], &[], &[]);
+        assert_eq!(sc, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn single_unit_edge() {
+        let (coef, sc) = normalize_gcn(2, &[0], &[1], &[1.0]);
+        // deg = [2, 2]; coef = 1/sqrt(4) = 0.5; selfcoef = 0.5
+        assert!((coef[0] - 0.5).abs() < 1e-6);
+        assert!((sc[0] - 0.5).abs() < 1e-6);
+        assert!((sc[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn negative_weight_keeps_sign() {
+        let (coef, _) = normalize_gcn(2, &[0], &[1], &[-1.0]);
+        assert!(coef[0] < 0.0);
+        assert!((coef[0] + 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_coefficients_bounded_and_finite() {
+        forall(Config::default().cases(50), |rng, size| {
+            let n = rng.range(1, size.max(2));
+            let e = rng.range(0, 3 * size.max(1));
+            let src: Vec<u32> = (0..e).map(|_| rng.below(n) as u32).collect();
+            let dst: Vec<u32> = (0..e).map(|_| rng.below(n) as u32).collect();
+            let w: Vec<f32> = (0..e).map(|_| rng.uniform_f32(-10.0, 10.0)).collect();
+            let (coef, sc) = normalize_gcn(n, &src, &dst, &w);
+            assert_eq!(coef.len(), e);
+            assert_eq!(sc.len(), n);
+            for c in coef.iter().chain(sc.iter()) {
+                assert!(c.is_finite());
+                assert!(c.abs() <= 1.0 + 1e-5, "|coef| {c} > 1");
+            }
+            // selfcoef positive
+            assert!(sc.iter().all(|&c| c > 0.0));
+        });
+    }
+
+    #[test]
+    fn star_graph_exact_values() {
+        // k leaves -> hub (node 0), unit weights.
+        // deg(hub) = 1 + k, deg(leaf) = 2.
+        let k = 5;
+        let src: Vec<u32> = (1..=k as u32).collect();
+        let dst = vec![0u32; k];
+        let w = vec![1.0f32; k];
+        let (coef, sc) = normalize_gcn(k + 1, &src, &dst, &w);
+        let expect = 1.0 / ((1.0 + k as f32) * 2.0).sqrt();
+        for c in &coef {
+            assert!((c - expect).abs() < 1e-6, "coef {c} != {expect}");
+        }
+        assert!((sc[0] - 1.0 / (1.0 + k as f32)).abs() < 1e-6);
+        assert!((sc[1] - 0.5).abs() < 1e-6);
+    }
+}

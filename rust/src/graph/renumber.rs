@@ -1,0 +1,146 @@
+//! Per-snapshot graph renumbering (paper §IV-B).
+//!
+//! During FPGA runtime only one snapshot lives in on-chip buffers, so the
+//! host generates a **renumbering table** mapping each raw node id that
+//! appears in the snapshot to a dense local index — the node's BRAM
+//! address.  The same table guides DRAM gather (hidden-state fetch) and
+//! write-back, which is exactly how `coordinator::state` uses it.
+
+use crate::error::{Error, Result};
+
+/// Bijection raw-id ↔ local index for one snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct RenumberTable {
+    /// local index -> raw node id (dense, len = n_local).
+    local_to_raw: Vec<u32>,
+    /// raw node id -> local index.
+    raw_to_local: std::collections::HashMap<u32, u32>,
+}
+
+impl RenumberTable {
+    /// Build from the raw (src, dst) pairs of one snapshot, first-seen
+    /// order (deterministic given the time-sorted edge slice).
+    pub fn build(edge_endpoints: impl Iterator<Item = (u32, u32)>) -> Self {
+        let mut t = RenumberTable::default();
+        for (s, d) in edge_endpoints {
+            t.intern(s);
+            t.intern(d);
+        }
+        t
+    }
+
+    fn intern(&mut self, raw: u32) -> u32 {
+        if let Some(&l) = self.raw_to_local.get(&raw) {
+            return l;
+        }
+        let l = self.local_to_raw.len() as u32;
+        self.local_to_raw.push(raw);
+        self.raw_to_local.insert(raw, l);
+        l
+    }
+
+    /// Number of distinct nodes in the snapshot.
+    pub fn len(&self) -> usize {
+        self.local_to_raw.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.local_to_raw.is_empty()
+    }
+
+    /// raw -> local (None if the node is not in this snapshot).
+    pub fn to_local(&self, raw: u32) -> Option<u32> {
+        self.raw_to_local.get(&raw).copied()
+    }
+
+    /// local -> raw; errors on out-of-range local index.
+    pub fn to_raw(&self, local: u32) -> Result<u32> {
+        self.local_to_raw
+            .get(local as usize)
+            .copied()
+            .ok_or_else(|| Error::Graph(format!("local index {local} out of range")))
+    }
+
+    /// Iterate (local, raw) pairs in local order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.local_to_raw
+            .iter()
+            .enumerate()
+            .map(|(l, &r)| (l as u32, r))
+    }
+
+    /// Verify the bijection invariant (used by property tests).
+    pub fn check_bijective(&self) -> Result<()> {
+        if self.raw_to_local.len() != self.local_to_raw.len() {
+            return Err(Error::Graph("renumber table not bijective".into()));
+        }
+        for (l, &r) in self.local_to_raw.iter().enumerate() {
+            if self.raw_to_local.get(&r) != Some(&(l as u32)) {
+                return Err(Error::Graph(format!(
+                    "renumber roundtrip failed for raw {r} (local {l})"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{forall, Config};
+
+    #[test]
+    fn first_seen_order() {
+        let t = RenumberTable::build([(5, 3), (3, 9)].into_iter());
+        assert_eq!(t.to_local(5), Some(0));
+        assert_eq!(t.to_local(3), Some(1));
+        assert_eq!(t.to_local(9), Some(2));
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = RenumberTable::build([(10, 20), (20, 30), (10, 30)].into_iter());
+        for (l, r) in t.iter() {
+            assert_eq!(t.to_local(r), Some(l));
+            assert_eq!(t.to_raw(l).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn missing_node_is_none() {
+        let t = RenumberTable::build([(0, 1)].into_iter());
+        assert_eq!(t.to_local(42), None);
+        assert!(t.to_raw(42).is_err());
+    }
+
+    #[test]
+    fn prop_bijective_on_random_snapshots() {
+        forall(Config::default().cases(60), |rng, size| {
+            let n_edges = rng.range(1, size.max(2));
+            let universe = rng.range(1, 4 * size.max(2)) as u32;
+            let edges: Vec<(u32, u32)> = (0..n_edges)
+                .map(|_| {
+                    (
+                        rng.below(universe as usize) as u32,
+                        rng.below(universe as usize) as u32,
+                    )
+                })
+                .collect();
+            let t = RenumberTable::build(edges.iter().copied());
+            t.check_bijective().unwrap();
+            // every endpoint is mapped, and local ids are dense
+            for (s, d) in &edges {
+                assert!(t.to_local(*s).is_some());
+                assert!(t.to_local(*d).is_some());
+            }
+            let max_local = edges
+                .iter()
+                .flat_map(|(s, d)| [t.to_local(*s).unwrap(), t.to_local(*d).unwrap()])
+                .max()
+                .unwrap();
+            assert_eq!(max_local as usize + 1, t.len());
+        });
+    }
+}

@@ -1,0 +1,74 @@
+//! A preprocessed snapshot: the unit of work streamed to the accelerator.
+//!
+//! A [`Snapshot`] is the output of the host pipeline (time-slice →
+//! renumber → normalise) and the input of both the PJRT runtime (after
+//! padding) and the FPGA timing model (which only needs the counts).
+
+use super::renumber::RenumberTable;
+use crate::error::{Error, Result};
+
+/// One dynamic-graph snapshot in local (renumbered) coordinates.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Snapshot index in the stream (time order).
+    pub index: usize,
+    /// Local edge endpoints (dense ids < num_nodes()).
+    pub src: Vec<u32>,
+    pub dst: Vec<u32>,
+    /// Per-edge message coefficient: Â_{ds} × edge-weight normalisation
+    /// (the paper's edge-embedding support folds edge data in here).
+    pub coef: Vec<f32>,
+    /// Per-node self-loop coefficient Â_{ii}.
+    pub selfcoef: Vec<f32>,
+    /// Renumbering table (local ↔ raw) — drives DRAM gather/write-back.
+    pub renumber: RenumberTable,
+    /// Window start time (seconds).
+    pub t_start: i64,
+}
+
+/// Size statistics of one snapshot (Table III columns).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SnapshotStats {
+    pub nodes: usize,
+    pub edges: usize,
+}
+
+impl Snapshot {
+    pub fn num_nodes(&self) -> usize {
+        self.renumber.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.src.len()
+    }
+
+    pub fn stats(&self) -> SnapshotStats {
+        SnapshotStats {
+            nodes: self.num_nodes(),
+            edges: self.num_edges(),
+        }
+    }
+
+    /// Validate structural invariants: index ranges, coef finiteness,
+    /// bijective renumbering, matching array lengths.
+    pub fn validate(&self) -> Result<()> {
+        let n = self.num_nodes() as u32;
+        if self.src.len() != self.dst.len() || self.src.len() != self.coef.len() {
+            return Err(Error::Graph("edge array length mismatch".into()));
+        }
+        if self.selfcoef.len() != n as usize {
+            return Err(Error::Graph("selfcoef length != num_nodes".into()));
+        }
+        for (&s, &d) in self.src.iter().zip(self.dst.iter()) {
+            if s >= n || d >= n {
+                return Err(Error::Graph(format!(
+                    "edge ({s},{d}) out of range (n={n})"
+                )));
+            }
+        }
+        if !self.coef.iter().chain(self.selfcoef.iter()).all(|c| c.is_finite()) {
+            return Err(Error::Graph("non-finite coefficient".into()));
+        }
+        self.renumber.check_bijective()
+    }
+}

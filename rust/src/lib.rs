@@ -1,0 +1,37 @@
+//! # DGNN-Booster — a generic accelerator framework for dynamic-GNN inference
+//!
+//! Rust reproduction of *DGNN-Booster: A Generic FPGA Accelerator Framework
+//! For Dynamic Graph Neural Network Inference* (Chen & Hao, 2023) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: host-side graph
+//!   preprocessing (time-splitting, renumbering, COO→CSR), the V1/V2
+//!   dataflow schedulers, a cycle-approximate ZCU102 model, CPU/GPU
+//!   baseline models, energy accounting, and the PJRT runtime that
+//!   executes the AOT-compiled model steps.
+//! * **Layer 2** — JAX per-snapshot model steps (`python/compile/model.py`),
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 1** — Pallas PE kernels (`python/compile/kernels/`).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the system inventory, the experiment index
+//! (Tables II–VII, Fig. 6) and the FPGA→simulator substitution rationale.
+
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod datasets;
+pub mod energy;
+pub mod error;
+pub mod fpga;
+pub mod graph;
+pub mod metrics;
+pub mod models;
+pub mod numerics;
+pub mod report;
+pub mod runtime;
+pub mod testutil;
+
+pub use error::{Error, Result};

@@ -1,0 +1,213 @@
+//! `dgnn-booster` — leader binary: regenerate paper artefacts, run the
+//! end-to-end PJRT serving loop, sweep the design space.
+
+use dgnn_booster::baselines::cpu::features_for;
+use dgnn_booster::cli::Cli;
+use dgnn_booster::coordinator::pipeline::{run_stream, Prepared};
+use dgnn_booster::coordinator::NodeStateStore;
+use dgnn_booster::datasets;
+use dgnn_booster::error::{Error, Result};
+use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
+use dgnn_booster::fpga::dse;
+use dgnn_booster::metrics::LatencyStats;
+use dgnn_booster::models::{Dims, EvolveGcnParams, GcrnM1Params, GcrnM2Params, ModelKind};
+use dgnn_booster::report::tables::{self, ReportCtx};
+use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let cli = Cli::parse(args)?;
+    let ctx = ReportCtx { seed: cli.get_u64("seed", 42)?, ..ReportCtx::default() };
+    match cli.command.as_str() {
+        "table1" => print!("{}", tables::table1()),
+        "table2" => print!("{}", tables::table2(&ctx)?),
+        "table3" => print!("{}", tables::table3(&ctx)?),
+        "table4" => print!("{}", tables::table4(&ctx)?),
+        "table5" => print!("{}", tables::table5(&ctx)?),
+        "table6" => print!("{}", tables::table6(&ctx)?),
+        "table7" => print!("{}", tables::table7(&ctx)?),
+        "fig6" => print!("{}", tables::fig6(&ctx)?),
+        "all" => {
+            println!("{}", tables::table1());
+            for f in [
+                tables::table2, tables::table3, tables::table4, tables::table5,
+                tables::table6, tables::table7, tables::fig6,
+            ] {
+                println!("{}", f(&ctx)?);
+            }
+        }
+        "stats" => cmd_stats(&cli, &ctx)?,
+        "dse" => cmd_dse(&cli, &ctx)?,
+        "serve" => cmd_serve(&cli, &ctx)?,
+        other => {
+            return Err(Error::Usage(format!(
+                "unknown command `{other}`; see rust/src/cli.rs for usage"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stats(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
+    let profile = cli.dataset()?;
+    let stream = datasets::load_or_generate(profile, &cli.get_or("data", "data"), ctx.seed)?;
+    let st = datasets::StreamStats::measure(&stream, profile.splitter_secs);
+    println!(
+        "{}: {} snapshots, avg {:.0} nodes / {:.0} edges, max {} / {}, total {} nodes {} edges",
+        profile.name, st.snapshots, st.avg_nodes, st.avg_edges, st.max_nodes, st.max_edges,
+        st.total_nodes, st.total_edges
+    );
+    Ok(())
+}
+
+fn cmd_dse(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
+    let model = cli.model()?;
+    let profile = cli.dataset()?;
+    let mut snaps = tables::snapshots(ctx, profile)?;
+    let limit = cli.get_usize("snapshots", 32)?;
+    snaps.truncate(limit);
+    let cfg = AcceleratorConfig::paper_default(model);
+    let steps = cli.get_usize("steps", 12)?;
+    println!("DSE sweep: {} on {} ({} snapshots, {} total DSP)",
+        model.name(), profile.name, snaps.len(), cfg.total_dsp());
+    println!("{:>8} {:>8} {:>12}", "GNN DSP", "RNN DSP", "latency(ms)");
+    for p in dse::sweep(&cfg, &snaps, cfg.total_dsp(), steps) {
+        println!("{:>8} {:>8} {:>12.3}", p.dsp_gnn, p.dsp_rnn, p.latency_ms);
+    }
+    println!("paper split -> {:.3} ms", avg_latency_ms(&cfg, &snaps));
+    Ok(())
+}
+
+/// End-to-end serving: stream snapshots through the preprocessing
+/// pipeline into the PJRT-compiled model step; report latency and the
+/// FPGA-projected latency side by side.
+fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
+    let model = cli.model()?;
+    let profile = cli.dataset()?;
+    let artifacts = cli.get_or("artifacts", "artifacts");
+    let limit = cli.get_usize("snapshots", usize::MAX)?;
+    let dims = Dims::default();
+    let stream = datasets::load_or_generate(profile, &cli.get_or("data", "data"), ctx.seed)?;
+    let client = xla::PjRtClient::cpu()?;
+    println!(
+        "serving {} on {} via PJRT ({} devices); artifacts: {artifacts}/",
+        model.name(),
+        profile.name,
+        client.device_count()
+    );
+    let mut stats = LatencyStats::new();
+    let mut count = 0usize;
+    let mut checksum = 0.0f64;
+
+    match model {
+        ModelKind::EvolveGcn => {
+            let params = EvolveGcnParams::init(ctx.seed, dims);
+            let mut exec = EvolveGcnExecutor::new(&client, &artifacts, &params)?;
+            let results = run_stream(
+                &stream,
+                profile.splitter_secs,
+                4,
+                |snap| {
+                    let x = features_for(&snap, dims, ctx.seed);
+                    Ok(Prepared { snapshot: snap, payload: x })
+                },
+                |p| {
+                    if p.snapshot.index >= limit {
+                        return Ok(0.0f32);
+                    }
+                    let out = exec.run_step(&p.snapshot, &p.payload.data)?;
+                    Ok(out.iter().sum::<f32>())
+                },
+            )?;
+            for r in results {
+                if r.index < limit {
+                    stats.record(r.wall);
+                    checksum += r.output as f64;
+                    count += 1;
+                }
+            }
+        }
+        ModelKind::GcrnM1 => {
+            let params = GcrnM1Params::init(ctx.seed, dims);
+            let mut exec = GcrnM1Executor::new(&client, &artifacts, &params)?;
+            let max_nodes = exec.manifest().max_nodes;
+            let mut h_store = NodeStateStore::zeros(stream.num_nodes as usize, dims.hidden_dim);
+            let mut c_store = NodeStateStore::zeros(stream.num_nodes as usize, dims.hidden_dim);
+            let results = run_stream(
+                &stream,
+                profile.splitter_secs,
+                4,
+                |snap| {
+                    let x = features_for(&snap, dims, ctx.seed);
+                    Ok(Prepared { snapshot: snap, payload: x })
+                },
+                |p| {
+                    if p.snapshot.index >= limit {
+                        return Ok(0.0f32);
+                    }
+                    let mut h = h_store.gather_padded(&p.snapshot, max_nodes);
+                    let mut c = c_store.gather_padded(&p.snapshot, max_nodes);
+                    exec.run_step(&p.snapshot, &p.payload.data, &mut h, &mut c)?;
+                    h_store.scatter(&p.snapshot, &h);
+                    c_store.scatter(&p.snapshot, &c);
+                    Ok(h[..p.snapshot.num_nodes() * dims.hidden_dim].iter().sum::<f32>())
+                },
+            )?;
+            for r in results {
+                if r.index < limit {
+                    stats.record(r.wall);
+                    checksum += r.output as f64;
+                    count += 1;
+                }
+            }
+        }
+        ModelKind::GcrnM2 => {
+            let params = GcrnM2Params::init(ctx.seed, dims);
+            let mut exec = GcrnExecutor::new(&client, &artifacts, &params)?;
+            let max_nodes = exec.manifest().max_nodes;
+            let mut h_store = NodeStateStore::zeros(stream.num_nodes as usize, dims.hidden_dim);
+            let mut c_store = NodeStateStore::zeros(stream.num_nodes as usize, dims.hidden_dim);
+            let results = run_stream(
+                &stream,
+                profile.splitter_secs,
+                4,
+                |snap| {
+                    let x = features_for(&snap, dims, ctx.seed);
+                    Ok(Prepared { snapshot: snap, payload: x })
+                },
+                |p| {
+                    if p.snapshot.index >= limit {
+                        return Ok(0.0f32);
+                    }
+                    let mut h = h_store.gather_padded(&p.snapshot, max_nodes);
+                    let mut c = c_store.gather_padded(&p.snapshot, max_nodes);
+                    exec.run_step(&p.snapshot, &p.payload.data, &mut h, &mut c)?;
+                    h_store.scatter(&p.snapshot, &h);
+                    c_store.scatter(&p.snapshot, &c);
+                    Ok(h[..p.snapshot.num_nodes() * dims.hidden_dim].iter().sum::<f32>())
+                },
+            )?;
+            for r in results {
+                if r.index < limit {
+                    stats.record(r.wall);
+                    checksum += r.output as f64;
+                    count += 1;
+                }
+            }
+        }
+    }
+
+    let snaps = tables::snapshots(ctx, profile)?;
+    let fpga_ms = avg_latency_ms(&AcceleratorConfig::paper_default(model), &snaps);
+    println!("processed {count} snapshots; output checksum {checksum:.4}");
+    println!("host PJRT latency: {}", stats.summary());
+    println!("FPGA-projected latency (paper design): {fpga_ms:.3} ms/snapshot");
+    Ok(())
+}

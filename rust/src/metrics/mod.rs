@@ -1,0 +1,163 @@
+//! Latency statistics for benches and the serving loop, plus the
+//! hand-rolled bench harness (criterion is unavailable offline): each
+//! `benches/*.rs` binary regenerates one paper table/figure and reports
+//! criterion-style timing (median ± MAD over N iterations) for the
+//! computation that produced it.
+
+/// Time `f` for `iters` iterations (after one warmup) and print a
+/// criterion-style line; returns the median seconds per iteration.
+pub fn bench_loop<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    std::hint::black_box(f()); // warmup
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let mad = {
+        let mut dev: Vec<f64> = samples.iter().map(|s| (s - median).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        dev[dev.len() / 2]
+    };
+    println!(
+        "bench {name:<40} {:>12} ± {:<10} ({} iters)",
+        fmt_time(median),
+        fmt_time(mad),
+        samples.len()
+    );
+    median
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Online latency accumulator with percentile support.
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples_ms: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn record(&mut self, d: std::time::Duration) {
+        self.record_ms(d.as_secs_f64() * 1e3);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        self.samples_ms.iter().sum::<f64>() / self.samples_ms.len() as f64
+    }
+
+    /// p in [0,100]; nearest-rank on the sorted samples.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples_ms.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn median(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples_ms.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples_ms.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Throughput in items/s given the mean.
+    pub fn throughput_per_s(&self) -> f64 {
+        let m = self.mean();
+        if m == 0.0 {
+            0.0
+        } else {
+            1e3 / m
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3}ms p50={:.3}ms p95={:.3}ms min={:.3}ms max={:.3}ms ({:.1}/s)",
+            self.count(),
+            self.mean(),
+            self.median(),
+            self.percentile(95.0),
+            self.min(),
+            self.max(),
+            self.throughput_per_s()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_stats() {
+        let mut s = LatencyStats::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.record_ms(v);
+        }
+        assert_eq!(s.count(), 5);
+        assert!((s.mean() - 3.0).abs() < 1e-9);
+        assert_eq!(s.median(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+    }
+
+    #[test]
+    fn percentiles_monotone() {
+        let mut s = LatencyStats::new();
+        for i in 0..100 {
+            s.record_ms(i as f64);
+        }
+        assert!(s.percentile(50.0) <= s.percentile(95.0));
+        assert!(s.percentile(95.0) <= s.percentile(100.0));
+    }
+
+    #[test]
+    fn empty_is_zeroes() {
+        let s = LatencyStats::new();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(50.0), 0.0);
+        assert_eq!(s.throughput_per_s(), 0.0);
+    }
+
+    #[test]
+    fn throughput_inverse_of_mean() {
+        let mut s = LatencyStats::new();
+        s.record_ms(2.0);
+        assert!((s.throughput_per_s() - 500.0).abs() < 1e-9);
+    }
+}

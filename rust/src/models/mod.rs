@@ -1,0 +1,251 @@
+//! DGNN model configurations and parameter initialisation.
+//!
+//! Two representative models, exactly the paper's choices (§V-A):
+//!
+//! * [`ModelKind::EvolveGcn`] — weights-evolved DGNN (Table I row 3);
+//!   GCN spatial encoder + matrix-GRU weight evolution.  Base model for
+//!   DGNN-Booster **V1**.
+//! * [`ModelKind::GcrnM2`] — integrated DGNN (Table I row 2); graph-conv
+//!   LSTM.  Base model for DGNN-Booster **V2**.
+//!
+//! Parameters are generated deterministically from a seed with the same
+//! scheme on the Rust and (via the e2e driver feeding them in) HLO side,
+//! so numerics cross-check bit-for-bit inputs.
+
+use crate::testutil::Pcg32;
+
+/// Which DGNN is being run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ModelKind {
+    /// Weights-evolved DGNN (EvolveGCN-O): GCN weights evolved by a GRU.
+    EvolveGcn,
+    /// Stacked DGNN (GCRN-M1): GCN encoder feeding a dense LSTM.
+    GcrnM1,
+    /// Integrated DGNN (GCRN-M2): graph-convolutional LSTM.
+    GcrnM2,
+}
+
+/// The three discrete-time DGNN dataflow classes of the paper's Table I.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataflowType {
+    /// GNN→RNN within a step; GNNs of different steps independent.
+    Stacked,
+    /// RNN output feeds the next step's GNN (H/C recurrent per node).
+    Integrated,
+    /// RNN evolves the GNN weights; GNNs of different steps independent.
+    WeightsEvolved,
+}
+
+impl ModelKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelKind::EvolveGcn => "EvolveGCN",
+            ModelKind::GcrnM1 => "GCRN-M1",
+            ModelKind::GcrnM2 => "GCRN-M2",
+        }
+    }
+
+    /// Table I row of this model.
+    pub fn dataflow(&self) -> DataflowType {
+        match self {
+            ModelKind::EvolveGcn => DataflowType::WeightsEvolved,
+            ModelKind::GcrnM1 => DataflowType::Stacked,
+            ModelKind::GcrnM2 => DataflowType::Integrated,
+        }
+    }
+
+    /// Which DGNN-Booster designs can run this model (Table I columns).
+    pub fn supports_version(&self, version: u8) -> bool {
+        match self.dataflow() {
+            DataflowType::Stacked => version == 1 || version == 2,
+            DataflowType::Integrated => version == 2,
+            DataflowType::WeightsEvolved => version == 1,
+        }
+    }
+
+    /// The design the paper evaluates this model on (Table I / §V-A);
+    /// stacked models default to V2 (deepest overlap).
+    pub fn booster_version(&self) -> u8 {
+        match self {
+            ModelKind::EvolveGcn => 1,
+            ModelKind::GcrnM1 => 2,
+            ModelKind::GcrnM2 => 2,
+        }
+    }
+
+    pub fn all() -> [ModelKind; 3] {
+        [ModelKind::EvolveGcn, ModelKind::GcrnM1, ModelKind::GcrnM2]
+    }
+}
+
+/// Feature dimensions (shared by both models; paper uses one config).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Dims {
+    pub in_dim: usize,
+    pub hidden_dim: usize,
+    pub out_dim: usize,
+}
+
+impl Default for Dims {
+    fn default() -> Self {
+        // EvolveGCN reference defaults for the link-prediction datasets
+        Dims {
+            in_dim: 32,
+            hidden_dim: 32,
+            out_dim: 32,
+        }
+    }
+}
+
+/// Matrix-GRU parameter set for one evolved weight matrix
+/// (rows×rows gates, rows×cols biases) in the canonical key order
+/// wz,uz,bz,wr,ur,br,wh,uh,bh shared with `python/compile/kernels/gru.py`.
+#[derive(Clone, Debug)]
+pub struct GruParams {
+    pub mats: Vec<Vec<f32>>, // 9 matrices, row-major
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl GruParams {
+    pub fn init(rng: &mut Pcg32, rows: usize, cols: usize, scale: f32) -> Self {
+        let mut mats = Vec::with_capacity(9);
+        for key in 0..9 {
+            let is_bias = key % 3 == 2; // bz, br, bh at positions 2,5,8
+            let len = if is_bias { rows * cols } else { rows * rows };
+            mats.push(rng.normal_vec(len, scale));
+        }
+        GruParams { mats, rows, cols }
+    }
+}
+
+/// Full EvolveGCN parameter set.
+#[derive(Clone, Debug)]
+pub struct EvolveGcnParams {
+    pub dims: Dims,
+    /// Initial layer-1 weight [in_dim × hidden_dim], row-major.
+    pub w1: Vec<f32>,
+    /// Initial layer-2 weight [hidden_dim × out_dim].
+    pub w2: Vec<f32>,
+    pub gru1: GruParams,
+    pub gru2: GruParams,
+}
+
+impl EvolveGcnParams {
+    pub fn init(seed: u64, dims: Dims) -> Self {
+        let mut rng = Pcg32::new(seed, 0xE0);
+        let scale = 0.3;
+        EvolveGcnParams {
+            dims,
+            w1: rng.normal_vec(dims.in_dim * dims.hidden_dim, scale),
+            w2: rng.normal_vec(dims.hidden_dim * dims.out_dim, scale),
+            gru1: GruParams::init(&mut rng, dims.in_dim, dims.hidden_dim, 0.1),
+            gru2: GruParams::init(&mut rng, dims.hidden_dim, dims.out_dim, 0.1),
+        }
+    }
+}
+
+/// Full GCRN-M1 (stacked) parameter set: 2-layer GCN + dense LSTM.
+#[derive(Clone, Debug)]
+pub struct GcrnM1Params {
+    pub dims: Dims,
+    /// GCN layer weights.
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+    /// LSTM input-side gate weights [out_dim × 4·hidden_dim] (i,f,g,o).
+    pub wx: Vec<f32>,
+    /// LSTM hidden-side gate weights [hidden_dim × 4·hidden_dim].
+    pub wh: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl GcrnM1Params {
+    pub fn init(seed: u64, dims: Dims) -> Self {
+        let mut rng = Pcg32::new(seed, 0xC1);
+        let scale = 0.3;
+        GcrnM1Params {
+            dims,
+            w1: rng.normal_vec(dims.in_dim * dims.hidden_dim, scale),
+            w2: rng.normal_vec(dims.hidden_dim * dims.out_dim, scale),
+            wx: rng.normal_vec(dims.out_dim * 4 * dims.hidden_dim, scale),
+            wh: rng.normal_vec(dims.hidden_dim * 4 * dims.hidden_dim, scale),
+            b: rng.normal_vec(4 * dims.hidden_dim, 0.1),
+        }
+    }
+}
+
+/// Full GCRN-M2 parameter set.
+#[derive(Clone, Debug)]
+pub struct GcrnM2Params {
+    pub dims: Dims,
+    /// Input-side gate weights [in_dim × 4·hidden_dim] (gate order i,f,g,o).
+    pub wx: Vec<f32>,
+    /// Hidden-side gate weights [hidden_dim × 4·hidden_dim].
+    pub wh: Vec<f32>,
+    /// Gate biases [4·hidden_dim].
+    pub b: Vec<f32>,
+}
+
+impl GcrnM2Params {
+    pub fn init(seed: u64, dims: Dims) -> Self {
+        let mut rng = Pcg32::new(seed, 0xC2);
+        let scale = 0.3;
+        GcrnM2Params {
+            dims,
+            wx: rng.normal_vec(dims.in_dim * 4 * dims.hidden_dim, scale),
+            wh: rng.normal_vec(dims.hidden_dim * 4 * dims.hidden_dim, scale),
+            b: rng.normal_vec(4 * dims.hidden_dim, 0.1),
+        }
+    }
+}
+
+/// Deterministic node features keyed by *raw* (global) node id so a node
+/// keeps its features across snapshots — the paper's host loads node
+/// features from DRAM the same way.
+pub fn node_features(raw_id: u32, dim: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::new(seed ^ (raw_id as u64).wrapping_mul(0x9E3779B97F4A7C15), 0xFEA7);
+    rng.normal_vec(dim, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_shapes() {
+        let d = Dims::default();
+        let p = EvolveGcnParams::init(1, d);
+        assert_eq!(p.w1.len(), 32 * 32);
+        assert_eq!(p.gru1.mats.len(), 9);
+        assert_eq!(p.gru1.mats[0].len(), 32 * 32); // wz
+        assert_eq!(p.gru1.mats[2].len(), 32 * 32); // bz (rows*cols)
+        let g = GcrnM2Params::init(1, d);
+        assert_eq!(g.wx.len(), 32 * 128);
+        assert_eq!(g.b.len(), 128);
+    }
+
+    #[test]
+    fn deterministic_params() {
+        let a = EvolveGcnParams::init(5, Dims::default());
+        let b = EvolveGcnParams::init(5, Dims::default());
+        assert_eq!(a.w1, b.w1);
+        assert_eq!(a.gru2.mats[7], b.gru2.mats[7]);
+    }
+
+    #[test]
+    fn node_features_stable_across_calls() {
+        let f1 = node_features(42, 32, 9);
+        let f2 = node_features(42, 32, 9);
+        assert_eq!(f1, f2);
+        let f3 = node_features(43, 32, 9);
+        assert_ne!(f1, f3);
+    }
+
+    #[test]
+    fn gru_bias_shape_nonsquare() {
+        let mut rng = Pcg32::seeded(2);
+        let p = GruParams::init(&mut rng, 16, 24, 0.1);
+        assert_eq!(p.mats[0].len(), 16 * 16);
+        assert_eq!(p.mats[2].len(), 16 * 24);
+    }
+}

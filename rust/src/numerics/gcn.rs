@@ -1,0 +1,81 @@
+//! GCN aggregation + layer — mirror of `kernels/message_passing.py`.
+
+use super::tensor::Mat;
+use crate::graph::Snapshot;
+
+/// Â·X: edge-wise scatter-accumulate plus the self-loop diagonal term.
+/// `x` has `snap.num_nodes()` rows (unpadded — the mirror never pads).
+pub fn aggregate(snap: &Snapshot, x: &Mat) -> Mat {
+    assert_eq!(x.rows, snap.num_nodes(), "embedding row count");
+    let mut out = Mat::zeros(x.rows, x.cols);
+    // self-loop diagonal
+    for (i, &sc) in snap.selfcoef.iter().enumerate() {
+        let src_row = x.row(i);
+        let dst_row = out.row_mut(i);
+        for (o, &v) in dst_row.iter_mut().zip(src_row.iter()) {
+            *o += sc * v;
+        }
+    }
+    // edge messages
+    for ((&s, &d), &c) in snap.src.iter().zip(snap.dst.iter()).zip(snap.coef.iter()) {
+        let (s, d) = (s as usize, d as usize);
+        // split borrow: copy the source row (dims are tiny)
+        let src_row: Vec<f32> = x.row(s).to_vec();
+        let dst_row = out.row_mut(d);
+        for (o, &v) in dst_row.iter_mut().zip(src_row.iter()) {
+            *o += c * v;
+        }
+    }
+    out
+}
+
+/// One GCN layer: `act((Â·X) W)` (bias fixed at zero, as in the AOT model).
+pub fn gcn_layer(snap: &Snapshot, x: &Mat, w: &Mat, relu: bool) -> Mat {
+    let agg = aggregate(snap, x);
+    let out = agg.matmul(w);
+    if relu {
+        out.relu()
+    } else {
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{RenumberTable, Snapshot};
+
+    fn snap2() -> Snapshot {
+        // 2 nodes, one edge 0->1 coef 0.5, selfcoef [0.5, 0.5]
+        Snapshot {
+            index: 0,
+            src: vec![0],
+            dst: vec![1],
+            coef: vec![0.5],
+            selfcoef: vec![0.5, 0.5],
+            renumber: RenumberTable::build([(10, 20)].into_iter()),
+            t_start: 0,
+        }
+    }
+
+    #[test]
+    fn aggregate_matches_hand_calc() {
+        let snap = snap2();
+        let x = Mat::from_vec(2, 2, vec![2.0, 4.0, 1.0, 1.0]);
+        let agg = aggregate(&snap, &x);
+        // node0: 0.5*x0 = [1,2]; node1: 0.5*x1 + 0.5*x0 = [1.5, 2.5]
+        assert_eq!(agg.data, vec![1.0, 2.0, 1.5, 2.5]);
+    }
+
+    #[test]
+    fn layer_applies_weight_and_relu() {
+        let snap = snap2();
+        let x = Mat::from_vec(2, 2, vec![2.0, 4.0, 1.0, 1.0]);
+        let w = Mat::from_vec(2, 1, vec![1.0, -1.0]);
+        let out = gcn_layer(&snap, &x, &w, true);
+        // agg@w = [1-2, 1.5-2.5] = [-1, -1] -> relu -> [0, 0]
+        assert_eq!(out.data, vec![0.0, 0.0]);
+        let out_lin = gcn_layer(&snap, &x, &w, false);
+        assert_eq!(out_lin.data, vec![-1.0, -1.0]);
+    }
+}

@@ -1,0 +1,94 @@
+//! Pure-Rust numerics: a mirror of the JAX/Pallas model used three ways:
+//!
+//! 1. **Cross-check** — integration tests assert the PJRT-executed HLO
+//!    artifacts match this mirror (the paper's "crosschecking with
+//!    PyTorch code").
+//! 2. **CPU baseline compute** — `baselines::cpu` measures this code's
+//!    wall-clock to anchor the CPU row of Table IV.
+//! 3. **Examples** — run without artifacts present.
+//!
+//! Everything is f32 row-major, matching the AOT layout.
+
+pub mod gcn;
+pub mod rnn;
+pub mod tensor;
+
+pub use gcn::{aggregate, gcn_layer};
+pub use rnn::{gru_matrix_cell, lstm_gate_stage};
+pub use tensor::Mat;
+
+use crate::graph::Snapshot;
+use crate::models::{EvolveGcnParams, GcrnM2Params, GruParams};
+
+/// One EvolveGCN-O snapshot step: evolve both layer weights with the
+/// matrix GRU, then run the 2-layer GCN.  Mirrors
+/// `python/compile/model.py::evolvegcn_step`.
+pub fn evolvegcn_step(
+    snap: &Snapshot,
+    x: &Mat,
+    w1: &Mat,
+    w2: &Mat,
+    params: &EvolveGcnParams,
+) -> (Mat, Mat, Mat) {
+    let w1n = gru_matrix_cell(w1, &params.gru1);
+    let w2n = gru_matrix_cell(w2, &params.gru2);
+    let h1 = gcn_layer(snap, x, &w1n, true);
+    let h2 = gcn_layer(snap, &h1, &w2n, false);
+    (h2, w1n, w2n)
+}
+
+/// One GCRN-M1 (stacked) snapshot step: 2-layer GCN then a dense LSTM.
+/// Mirrors `python/compile/model.py::gcrn_m1_step`.
+pub fn gcrn_m1_step(
+    snap: &Snapshot,
+    x: &Mat,
+    h: &Mat,
+    c: &Mat,
+    params: &crate::models::GcrnM1Params,
+) -> (Mat, Mat) {
+    let d = params.dims;
+    let w1 = Mat::from_vec(d.in_dim, d.hidden_dim, params.w1.clone());
+    let w2 = Mat::from_vec(d.hidden_dim, d.out_dim, params.w2.clone());
+    let wx = Mat::from_vec(d.out_dim, 4 * d.hidden_dim, params.wx.clone());
+    let wh = Mat::from_vec(d.hidden_dim, 4 * d.hidden_dim, params.wh.clone());
+    let x1 = gcn_layer(snap, x, &w1, true);
+    let x2 = gcn_layer(snap, &x1, &w2, false);
+    let px = x2.matmul(&wx);
+    let ph = h.matmul(&wh);
+    lstm_gate_stage(&px, &ph, &params.b, c)
+}
+
+/// One GCRN-M2 snapshot step: two graph convs feed the fused LSTM gate
+/// stage.  Mirrors `python/compile/model.py::gcrn_m2_step`.
+pub fn gcrn_m2_step(
+    snap: &Snapshot,
+    x: &Mat,
+    h: &Mat,
+    c: &Mat,
+    params: &GcrnM2Params,
+) -> (Mat, Mat) {
+    let wx = Mat::from_vec(params.dims.in_dim, 4 * params.dims.hidden_dim, params.wx.clone());
+    let wh = Mat::from_vec(
+        params.dims.hidden_dim,
+        4 * params.dims.hidden_dim,
+        params.wh.clone(),
+    );
+    let agg_x = aggregate(snap, x);
+    let agg_h = aggregate(snap, h);
+    let px = agg_x.matmul(&wx);
+    let ph = agg_h.matmul(&wh);
+    lstm_gate_stage(&px, &ph, &params.b, c)
+}
+
+/// Re-borrow GRU params as `Mat`s (gates rows×rows, biases rows×cols).
+pub(crate) fn gru_mats(p: &GruParams) -> Vec<Mat> {
+    p.mats
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let is_bias = i % 3 == 2;
+            let cols = if is_bias { p.cols } else { p.rows };
+            Mat::from_vec(p.rows, cols, m.clone())
+        })
+        .collect()
+}

@@ -1,0 +1,123 @@
+//! Matrix-GRU and LSTM gate-stage mirrors of `kernels/{gru,lstm}.py`.
+
+use super::tensor::{sigmoid, Mat};
+use crate::models::GruParams;
+
+/// One matrix-GRU step on weight matrix `h` (EvolveGCN-O weight
+/// evolution): gates are rows×rows matrices applied from the left,
+/// biases full rows×cols matrices.
+pub fn gru_matrix_cell(h: &Mat, p: &GruParams) -> Mat {
+    let mats = crate::numerics::gru_mats(p);
+    let (wz, uz, bz) = (&mats[0], &mats[1], &mats[2]);
+    let (wr, ur, br) = (&mats[3], &mats[4], &mats[5]);
+    let (wh, uh, bh) = (&mats[6], &mats[7], &mats[8]);
+    let z = wz.matmul(h).add(&uz.matmul(h)).add(bz).map(sigmoid);
+    let r = wr.matmul(h).add(&ur.matmul(h)).add(br).map(sigmoid);
+    let rh = r.zip(h, |a, b| a * b);
+    let htil = wh.matmul(h).add(&uh.matmul(&rh)).add(bh).map(f32::tanh);
+    // (1 - z) ⊙ h + z ⊙ h~
+    let mut out = Mat::zeros(h.rows, h.cols);
+    for i in 0..h.data.len() {
+        out.data[i] = (1.0 - z.data[i]) * h.data[i] + z.data[i] * htil.data[i];
+    }
+    out
+}
+
+/// Fused LSTM gate stage: `px`/`ph` are [n, 4h] pre-activations in gate
+/// order (i, f, g, o); `b` is [4h]; `c` is [n, h].
+/// Returns (h_new, c_new).
+pub fn lstm_gate_stage(px: &Mat, ph: &Mat, b: &[f32], c: &Mat) -> (Mat, Mat) {
+    assert_eq!(px.cols % 4, 0);
+    let hdim = px.cols / 4;
+    assert_eq!(c.cols, hdim);
+    assert_eq!(b.len(), 4 * hdim);
+    let n = px.rows;
+    let mut h_new = Mat::zeros(n, hdim);
+    let mut c_new = Mat::zeros(n, hdim);
+    for r in 0..n {
+        for j in 0..hdim {
+            let pre = |g: usize| px.at(r, g * hdim + j) + ph.at(r, g * hdim + j) + b[g * hdim + j];
+            let i = sigmoid(pre(0));
+            let f = sigmoid(pre(1));
+            let g = pre(2).tanh();
+            let o = sigmoid(pre(3));
+            let cn = f * c.at(r, j) + i * g;
+            *c_new.at_mut(r, j) = cn;
+            *h_new.at_mut(r, j) = o * cn.tanh();
+        }
+    }
+    (h_new, c_new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::GruParams;
+    use crate::testutil::Pcg32;
+
+    #[test]
+    fn gru_zero_params_halve_state() {
+        // all params zero: z = 0.5, h~ = 0 => h' = h/2
+        let p = GruParams {
+            mats: (0..9)
+                .map(|i| vec![0.0; if i % 3 == 2 { 12 } else { 16 }])
+                .collect(),
+            rows: 4,
+            cols: 3,
+        };
+        let mut rng = Pcg32::seeded(3);
+        let h = Mat::from_vec(4, 3, rng.normal_vec(12, 1.0));
+        let out = gru_matrix_cell(&h, &p);
+        for (o, x) in out.data.iter().zip(h.data.iter()) {
+            assert!((o - 0.5 * x).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gru_bounded_under_saturation() {
+        let mut rng = Pcg32::seeded(4);
+        let p = GruParams::init(&mut rng, 8, 8, 50.0);
+        let h = Mat::from_vec(8, 8, rng.normal_vec(64, 0.5));
+        let out = gru_matrix_cell(&h, &p);
+        for (o, x) in out.data.iter().zip(h.data.iter()) {
+            assert!(o.abs() <= x.abs().max(1.0) + 1e-5);
+        }
+    }
+
+    #[test]
+    fn lstm_forget_keeps_cell() {
+        let n = 3;
+        let h = 2;
+        let big = 60.0;
+        let mut px = Mat::zeros(n, 4 * h);
+        for r in 0..n {
+            for j in 0..h {
+                *px.at_mut(r, j) = -big; // i -> 0
+                *px.at_mut(r, h + j) = big; // f -> 1
+                *px.at_mut(r, 3 * h + j) = -big; // o -> 0
+            }
+        }
+        let ph = Mat::zeros(n, 4 * h);
+        let b = vec![0.0; 4 * h];
+        let mut rng = Pcg32::seeded(5);
+        let c = Mat::from_vec(n, h, rng.normal_vec(n * h, 1.0));
+        let (h_new, c_new) = lstm_gate_stage(&px, &ph, &b, &c);
+        for (cn, c0) in c_new.data.iter().zip(c.data.iter()) {
+            assert!((cn - c0).abs() < 1e-4);
+        }
+        assert!(h_new.data.iter().all(|v| v.abs() < 1e-4));
+    }
+
+    #[test]
+    fn lstm_hidden_bounded() {
+        let mut rng = Pcg32::seeded(6);
+        let n = 8;
+        let h = 4;
+        let px = Mat::from_vec(n, 4 * h, rng.normal_vec(n * 4 * h, 10.0));
+        let ph = Mat::from_vec(n, 4 * h, rng.normal_vec(n * 4 * h, 10.0));
+        let b = rng.normal_vec(4 * h, 1.0);
+        let c = Mat::from_vec(n, h, rng.normal_vec(n * h, 10.0));
+        let (h_new, _) = lstm_gate_stage(&px, &ph, &b, &c);
+        assert!(h_new.data.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+    }
+}

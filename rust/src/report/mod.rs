@@ -1,0 +1,49 @@
+//! Experiment report generation: every table and figure of the paper's
+//! evaluation, regenerated from the models in this crate.
+//!
+//! Each `tableN`/`fig6` function returns the formatted report so the CLI
+//! (`dgnn-booster tableN`) and the benches (`benches/tableN_*.rs`) share
+//! one implementation, and integration tests can assert on the content.
+
+pub mod tables;
+
+pub use tables::*;
+
+/// Paper reference values used in the side-by-side columns.
+pub mod paper {
+    /// Table IV latency ms: (model, dataset) -> (cpu, gpu, fpga).
+    pub const T4: [(&str, &str, f64, f64, f64); 4] = [
+        ("EvolveGCN", "bc-alpha", 3.18, 4.01, 0.76),
+        ("EvolveGCN", "uci", 3.68, 4.19, 0.86),
+        ("GCRN-M2", "bc-alpha", 7.39, 11.35, 1.35),
+        ("GCRN-M2", "uci", 8.50, 9.74, 1.51),
+    ];
+
+    /// Table V total energy J/100 snapshots: (cpu, gpu, fpga).
+    pub const T5: [(&str, &str, f64, f64, f64); 4] = [
+        ("EvolveGCN", "bc-alpha", 5.84, 32.16, 1.92),
+        ("EvolveGCN", "uci", 6.64, 32.97, 2.13),
+        ("GCRN-M2", "bc-alpha", 15.29, 73.03, 3.17),
+        ("GCRN-M2", "uci", 17.59, 85.14, 3.54),
+    ];
+
+    /// Table VI runtime energy J/100 snapshots.
+    pub const T6: [(&str, &str, f64, f64, f64); 4] = [
+        ("EvolveGCN", "bc-alpha", 1.83, 21.01, 0.02),
+        ("EvolveGCN", "uci", 2.08, 21.54, 0.03),
+        ("GCRN-M2", "bc-alpha", 6.57, 47.71, 0.05),
+        ("GCRN-M2", "uci", 7.56, 55.63, 0.06),
+    ];
+
+    /// Table II utilisation rows: model -> (LUT, LUTRAM, FF, BRAM, DSP).
+    pub const T2_EVOLVEGCN: (usize, usize, usize, f64, usize) =
+        (142_488, 31_210, 88_930, 496.5, 1952);
+    pub const T2_GCRN: (usize, usize, usize, f64, usize) =
+        (151_302, 27_482, 121_088, 382.5, 2242);
+
+    /// Table VII: (framework, gnn_ms, rnn_ms, gnn_dsp, rnn_dsp).
+    pub const T7: [(&str, f64, f64, usize, usize); 2] = [
+        ("V1 (EvolveGCN)", 0.36, 0.47, 288, 1658),
+        ("V2 (GCRN-M2)", 0.82, 0.85, 2171, 78),
+    ];
+}

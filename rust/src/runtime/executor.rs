@@ -1,0 +1,311 @@
+//! PJRT executors for the AOT model steps.
+//!
+//! One compiled executable per model variant (`evolvegcn_step`,
+//! `gcrn_m2_step`, `gcn_forward`), loaded from HLO text — the interchange
+//! format this environment's xla_extension accepts (see
+//! `python/compile/aot.py`).  Argument order mirrors the manifest.
+
+use crate::error::{Error, Result};
+use crate::graph::Snapshot;
+use crate::models::{EvolveGcnParams, GcrnM1Params, GcrnM2Params};
+use crate::runtime::manifest::Manifest;
+use crate::runtime::pad::{pad_rows, PaddedGraph};
+
+/// A compiled HLO step function on the PJRT CPU client.
+pub struct StepExecutable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl StepExecutable {
+    /// Load `<dir>/<name>.hlo.txt` and compile it.
+    pub fn load(client: &xla::PjRtClient, dir: &str, name: &str) -> Result<StepExecutable> {
+        let path = format!("{dir}/{name}.hlo.txt");
+        if !std::path::Path::new(&path).exists() {
+            return Err(Error::Artifact(format!(
+                "{path} not found (run `make artifacts`)"
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(StepExecutable { name: name.to_string(), exe })
+    }
+
+    /// Execute with the given literals; returns the flattened output
+    /// tuple (lowered with return_tuple=True).
+    pub fn run(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// f32 literal from a slice with a shape.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// i32 literal from a slice with a shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// EvolveGCN runtime: holds the compiled step, the GRU parameter
+/// literals (loaded once — the paper's one-time weight load) and the
+/// evolving weight state.
+pub struct EvolveGcnExecutor {
+    step: StepExecutable,
+    manifest: Manifest,
+    gru_lits: Vec<xla::Literal>,
+    /// Evolving weights, row-major host copies.
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
+    padded: PaddedGraph,
+    x_buf: Vec<f32>,
+}
+
+impl EvolveGcnExecutor {
+    pub fn new(
+        client: &xla::PjRtClient,
+        dir: &str,
+        params: &EvolveGcnParams,
+    ) -> Result<EvolveGcnExecutor> {
+        let manifest = Manifest::load(dir)?;
+        let step = StepExecutable::load(client, dir, "evolvegcn_step")?;
+        let d = params.dims;
+        let mut gru_lits = Vec::with_capacity(18);
+        for (gp, rows, cols) in [
+            (&params.gru1, d.in_dim, d.hidden_dim),
+            (&params.gru2, d.hidden_dim, d.out_dim),
+        ] {
+            for (i, m) in gp.mats.iter().enumerate() {
+                let is_bias = i % 3 == 2;
+                let shape = if is_bias { [rows, cols] } else { [rows, rows] };
+                gru_lits.push(lit_f32(m, &shape)?);
+            }
+        }
+        Ok(EvolveGcnExecutor {
+            step,
+            padded: PaddedGraph::new(&manifest),
+            manifest,
+            gru_lits,
+            w1: params.w1.clone(),
+            w2: params.w2.clone(),
+            x_buf: Vec::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Run one snapshot step: updates the evolving weights in place and
+    /// returns the output embeddings ([num_nodes × out_dim], unpadded).
+    pub fn run_step(&mut self, snap: &Snapshot, x: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        let n = snap.num_nodes();
+        self.padded.fill(snap)?;
+        pad_rows(x, n, m.in_dim, m.max_nodes, &mut self.x_buf);
+
+        let mut args = Vec::with_capacity(7 + 18);
+        args.push(lit_i32(&self.padded.src, &[m.max_edges])?);
+        args.push(lit_i32(&self.padded.dst, &[m.max_edges])?);
+        args.push(lit_f32(&self.padded.coef, &[m.max_edges])?);
+        args.push(lit_f32(&self.padded.selfcoef, &[m.max_nodes])?);
+        args.push(lit_f32(&self.x_buf, &[m.max_nodes, m.in_dim])?);
+        args.push(lit_f32(&self.w1, &[m.in_dim, m.hidden_dim])?);
+        args.push(lit_f32(&self.w2, &[m.hidden_dim, m.out_dim])?);
+        // execute with borrowed literals: the GRU parameter literals are
+        // created once at construction (the paper's one-time weight load)
+        // and passed by reference — execute() takes Borrow<Literal>.
+        let outs = {
+            let mut all: Vec<&xla::Literal> = args.iter().collect();
+            all.extend(self.gru_lits.iter());
+            let result = self.step.exe_ref().execute::<&xla::Literal>(&all)?;
+            let lit = result[0][0].to_literal_sync()?;
+            lit.to_tuple()?
+        };
+        if outs.len() != 3 {
+            return Err(Error::Artifact(format!(
+                "evolvegcn_step returned {} outputs, want 3",
+                outs.len()
+            )));
+        }
+        let out_full = outs[0].to_vec::<f32>()?;
+        self.w1 = outs[1].to_vec::<f32>()?;
+        self.w2 = outs[2].to_vec::<f32>()?;
+        Ok(out_full[..n * m.out_dim].to_vec())
+    }
+}
+
+impl StepExecutable {
+    fn exe_ref(&self) -> &xla::PjRtLoadedExecutable {
+        &self.exe
+    }
+}
+
+/// GCRN-M1 (stacked DGNN) runtime: compiled step + weight literals.
+/// Demonstrates the framework's genericity — same executor pattern, a
+/// different per-snapshot step artifact.
+pub struct GcrnM1Executor {
+    step: StepExecutable,
+    manifest: Manifest,
+    w_lits: Vec<xla::Literal>, // w1, w2, wx, wh, b
+    padded: PaddedGraph,
+    x_buf: Vec<f32>,
+}
+
+impl GcrnM1Executor {
+    pub fn new(client: &xla::PjRtClient, dir: &str, params: &GcrnM1Params) -> Result<GcrnM1Executor> {
+        let manifest = Manifest::load(dir)?;
+        let step = StepExecutable::load(client, dir, "gcrn_m1_step")?;
+        let d = params.dims;
+        let w_lits = vec![
+            lit_f32(&params.w1, &[d.in_dim, d.hidden_dim])?,
+            lit_f32(&params.w2, &[d.hidden_dim, d.out_dim])?,
+            lit_f32(&params.wx, &[d.out_dim, 4 * d.hidden_dim])?,
+            lit_f32(&params.wh, &[d.hidden_dim, 4 * d.hidden_dim])?,
+            lit_f32(&params.b, &[4 * d.hidden_dim])?,
+        ];
+        Ok(GcrnM1Executor {
+            step,
+            w_lits,
+            padded: PaddedGraph::new(&manifest),
+            manifest,
+            x_buf: Vec::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// One snapshot step; `h`/`c` are padded state buffers, overwritten.
+    pub fn run_step(
+        &mut self,
+        snap: &Snapshot,
+        x: &[f32],
+        h: &mut Vec<f32>,
+        c: &mut Vec<f32>,
+    ) -> Result<()> {
+        let m = &self.manifest;
+        let n = snap.num_nodes();
+        self.padded.fill(snap)?;
+        pad_rows(x, n, m.in_dim, m.max_nodes, &mut self.x_buf);
+        let args = [
+            lit_i32(&self.padded.src, &[m.max_edges])?,
+            lit_i32(&self.padded.dst, &[m.max_edges])?,
+            lit_f32(&self.padded.coef, &[m.max_edges])?,
+            lit_f32(&self.padded.selfcoef, &[m.max_nodes])?,
+            lit_f32(&self.x_buf, &[m.max_nodes, m.in_dim])?,
+            lit_f32(h, &[m.max_nodes, m.hidden_dim])?,
+            lit_f32(c, &[m.max_nodes, m.hidden_dim])?,
+        ];
+        let outs = {
+            let mut all: Vec<&xla::Literal> = args.iter().collect();
+            all.extend(self.w_lits.iter());
+            let result = self.step.exe_ref().execute::<&xla::Literal>(&all)?;
+            let lit = result[0][0].to_literal_sync()?;
+            lit.to_tuple()?
+        };
+        if outs.len() != 2 {
+            return Err(Error::Artifact(format!(
+                "gcrn_m1_step returned {} outputs, want 2",
+                outs.len()
+            )));
+        }
+        *h = outs[0].to_vec::<f32>()?;
+        *c = outs[1].to_vec::<f32>()?;
+        Ok(())
+    }
+}
+
+/// GCRN-M2 runtime: compiled step + weight literals + padded state
+/// buffers; recurrent state lives in `coordinator::NodeStateStore`.
+pub struct GcrnExecutor {
+    step: StepExecutable,
+    manifest: Manifest,
+    wx_lit: xla::Literal,
+    wh_lit: xla::Literal,
+    b_lit: xla::Literal,
+    padded: PaddedGraph,
+    x_buf: Vec<f32>,
+}
+
+impl GcrnExecutor {
+    pub fn new(client: &xla::PjRtClient, dir: &str, params: &GcrnM2Params) -> Result<GcrnExecutor> {
+        let manifest = Manifest::load(dir)?;
+        let step = StepExecutable::load(client, dir, "gcrn_m2_step")?;
+        let d = params.dims;
+        Ok(GcrnExecutor {
+            step,
+            wx_lit: lit_f32(&params.wx, &[d.in_dim, 4 * d.hidden_dim])?,
+            wh_lit: lit_f32(&params.wh, &[d.hidden_dim, 4 * d.hidden_dim])?,
+            b_lit: lit_f32(&params.b, &[4 * d.hidden_dim])?,
+            padded: PaddedGraph::new(&manifest),
+            manifest,
+            x_buf: Vec::new(),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Run one snapshot step.  `h`/`c` are padded [max_nodes × hidden]
+    /// buffers (gathered by the caller from DRAM state); they are
+    /// overwritten with the new state.  Returns nothing else — the new
+    /// H *is* the output embedding for integrated DGNNs.
+    pub fn run_step(
+        &mut self,
+        snap: &Snapshot,
+        x: &[f32],
+        h: &mut Vec<f32>,
+        c: &mut Vec<f32>,
+    ) -> Result<()> {
+        let m = &self.manifest;
+        let n = snap.num_nodes();
+        self.padded.fill(snap)?;
+        pad_rows(x, n, m.in_dim, m.max_nodes, &mut self.x_buf);
+        let args = [
+            lit_i32(&self.padded.src, &[m.max_edges])?,
+            lit_i32(&self.padded.dst, &[m.max_edges])?,
+            lit_f32(&self.padded.coef, &[m.max_edges])?,
+            lit_f32(&self.padded.selfcoef, &[m.max_nodes])?,
+            lit_f32(&self.x_buf, &[m.max_nodes, m.in_dim])?,
+            lit_f32(h, &[m.max_nodes, m.hidden_dim])?,
+            lit_f32(c, &[m.max_nodes, m.hidden_dim])?,
+        ];
+        let outs = {
+            let mut all: Vec<&xla::Literal> = args.iter().collect();
+            all.push(&self.wx_lit);
+            all.push(&self.wh_lit);
+            all.push(&self.b_lit);
+            let result = self.step.exe_ref().execute::<&xla::Literal>(&all)?;
+            let lit = result[0][0].to_literal_sync()?;
+            lit.to_tuple()?
+        };
+        if outs.len() != 2 {
+            return Err(Error::Artifact(format!(
+                "gcrn_m2_step returned {} outputs, want 2",
+                outs.len()
+            )));
+        }
+        *h = outs[0].to_vec::<f32>()?;
+        *c = outs[1].to_vec::<f32>()?;
+        Ok(())
+    }
+}

@@ -1,0 +1,95 @@
+//! AOT artifact manifest parser (`artifacts/manifest.txt`).
+//!
+//! The manifest is key=value text (no serde in the offline crate set);
+//! it records the padded shapes the artifacts were lowered at so the
+//! runtime can validate snapshots against the AOT budget.
+
+use crate::error::{Error, Result};
+
+/// Parsed manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Manifest {
+    pub max_nodes: usize,
+    pub max_edges: usize,
+    pub in_dim: usize,
+    pub hidden_dim: usize,
+    pub out_dim: usize,
+}
+
+impl Manifest {
+    /// Parse from the manifest file's text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut kv = std::collections::HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            if let Some((k, v)) = line.split_once('=') {
+                kv.insert(k.to_string(), v.to_string());
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .ok_or_else(|| Error::Artifact(format!("manifest missing key {k}")))?
+                .parse()
+                .map_err(|e| Error::Artifact(format!("manifest key {k}: {e}")))
+        };
+        Ok(Manifest {
+            max_nodes: get("max_nodes")?,
+            max_edges: get("max_edges")?,
+            in_dim: get("in_dim")?,
+            hidden_dim: get("hidden_dim")?,
+            out_dim: get("out_dim")?,
+        })
+    }
+
+    /// Load from `<dir>/manifest.txt`.
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Artifact(format!("{path}: {e} (run `make artifacts`)")))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "# comment\nmax_nodes=608\nmax_edges=1728\n\
+        in_dim=32\nhidden_dim=32\nout_dim=32\nextra.key=ignored\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(
+            m,
+            Manifest {
+                max_nodes: 608,
+                max_edges: 1728,
+                in_dim: 32,
+                hidden_dim: 32,
+                out_dim: 32
+            }
+        );
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let e = Manifest::parse("max_nodes=1\n").unwrap_err();
+        assert!(e.to_string().contains("missing key"));
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let text = SAMPLE.replace("608", "not-a-number");
+        assert!(Manifest::parse(&text).is_err());
+    }
+
+    #[test]
+    fn load_reports_make_hint_when_absent() {
+        let e = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(e.to_string().contains("make artifacts"));
+    }
+}

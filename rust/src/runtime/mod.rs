@@ -1,0 +1,16 @@
+//! PJRT runtime: load the AOT-compiled HLO artifacts and execute them on
+//! the request path.
+//!
+//! `make artifacts` (Python, build-time only) lowers the L2 model steps
+//! to HLO *text*; this module parses the [`manifest`], [`pad`]s each
+//! snapshot to the fixed AOT shapes, and [`executor`] compiles + runs the
+//! computations on the PJRT CPU client (`xla` crate).  No Python is ever
+//! imported at runtime.
+
+pub mod executor;
+pub mod manifest;
+pub mod pad;
+
+pub use executor::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor, StepExecutable};
+pub use manifest::Manifest;
+pub use pad::PaddedGraph;

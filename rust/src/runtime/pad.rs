@@ -1,0 +1,147 @@
+//! Snapshot padding to the fixed AOT shapes.
+//!
+//! The padding contract (shared with `python/compile/model.py`):
+//! * padded edges: `src = dst = 0`, `coef = 0.0` → contribute nothing;
+//! * padded node rows: `selfcoef = 0.0`; feature/state rows zero;
+//! * consumers read back only the first `num_nodes` rows.
+//!
+//! Buffers are reusable across snapshots (the hot path never
+//! reallocates — see EXPERIMENTS.md §Perf).
+
+use crate::error::{Error, Result};
+use crate::graph::Snapshot;
+use crate::runtime::manifest::Manifest;
+
+/// Reusable padded buffers for one snapshot's graph arrays.
+#[derive(Clone, Debug)]
+pub struct PaddedGraph {
+    pub max_nodes: usize,
+    pub max_edges: usize,
+    pub src: Vec<i32>,
+    pub dst: Vec<i32>,
+    pub coef: Vec<f32>,
+    pub selfcoef: Vec<f32>,
+    /// Nodes actually valid in the current contents.
+    pub num_nodes: usize,
+    pub num_edges: usize,
+}
+
+impl PaddedGraph {
+    pub fn new(m: &Manifest) -> Self {
+        PaddedGraph {
+            max_nodes: m.max_nodes,
+            max_edges: m.max_edges,
+            src: vec![0; m.max_edges],
+            dst: vec![0; m.max_edges],
+            coef: vec![0.0; m.max_edges],
+            selfcoef: vec![0.0; m.max_nodes],
+            num_nodes: 0,
+            num_edges: 0,
+        }
+    }
+
+    /// Fill the buffers from a snapshot; errors if it exceeds the budget.
+    pub fn fill(&mut self, snap: &Snapshot) -> Result<()> {
+        let n = snap.num_nodes();
+        let e = snap.num_edges();
+        if n > self.max_nodes {
+            return Err(Error::Budget { what: "nodes", got: n, max: self.max_nodes });
+        }
+        if e > self.max_edges {
+            return Err(Error::Budget { what: "edges", got: e, max: self.max_edges });
+        }
+        for i in 0..e {
+            self.src[i] = snap.src[i] as i32;
+            self.dst[i] = snap.dst[i] as i32;
+            self.coef[i] = snap.coef[i];
+        }
+        // zero the padding tail (previous contents may linger)
+        for i in e..self.max_edges {
+            self.src[i] = 0;
+            self.dst[i] = 0;
+            self.coef[i] = 0.0;
+        }
+        self.selfcoef[..n].copy_from_slice(&snap.selfcoef);
+        for v in &mut self.selfcoef[n..] {
+            *v = 0.0;
+        }
+        self.num_nodes = n;
+        self.num_edges = e;
+        Ok(())
+    }
+}
+
+/// Pad a dense [n × dim] row-major buffer to [max_nodes × dim], reusing
+/// `out`.
+pub fn pad_rows(data: &[f32], n: usize, dim: usize, max_nodes: usize, out: &mut Vec<f32>) {
+    debug_assert_eq!(data.len(), n * dim);
+    out.resize(max_nodes * dim, 0.0);
+    out[..n * dim].copy_from_slice(data);
+    for v in &mut out[n * dim..] {
+        *v = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::RenumberTable;
+
+    fn manifest() -> Manifest {
+        Manifest { max_nodes: 8, max_edges: 6, in_dim: 4, hidden_dim: 4, out_dim: 4 }
+    }
+
+    fn snap(n: usize, e: usize) -> Snapshot {
+        let pairs: Vec<(u32, u32)> = (0..n as u32 - 1).map(|i| (i, i + 1)).collect();
+        let mut pairs = pairs;
+        if pairs.is_empty() {
+            pairs.push((0, 0));
+        }
+        Snapshot {
+            index: 0,
+            src: vec![0; e],
+            dst: vec![(n - 1) as u32; e],
+            coef: vec![0.25; e],
+            selfcoef: vec![0.5; n],
+            renumber: RenumberTable::build(pairs.into_iter()),
+            t_start: 0,
+        }
+    }
+
+    #[test]
+    fn fill_pads_tail_with_zeros() {
+        let mut pg = PaddedGraph::new(&manifest());
+        pg.fill(&snap(3, 2)).unwrap();
+        assert_eq!(pg.num_nodes, 3);
+        assert_eq!(pg.num_edges, 2);
+        assert_eq!(&pg.coef[2..], &[0.0; 4]);
+        assert_eq!(&pg.selfcoef[3..], &[0.0; 5]);
+        assert_eq!(pg.dst[0], 2);
+    }
+
+    #[test]
+    fn refill_clears_previous_contents() {
+        let mut pg = PaddedGraph::new(&manifest());
+        pg.fill(&snap(8, 6)).unwrap();
+        pg.fill(&snap(2, 1)).unwrap();
+        assert!(pg.src[1..].iter().all(|&v| v == 0));
+        assert!(pg.coef[1..].iter().all(|&v| v == 0.0));
+        assert!(pg.selfcoef[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn budget_overflow_rejected() {
+        let mut pg = PaddedGraph::new(&manifest());
+        let err = pg.fill(&snap(3, 7)).unwrap_err();
+        assert!(matches!(err, Error::Budget { what: "edges", .. }));
+    }
+
+    #[test]
+    fn pad_rows_reuses_buffer() {
+        let mut out = Vec::new();
+        pad_rows(&[1.0, 2.0, 3.0, 4.0], 2, 2, 4, &mut out);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+        pad_rows(&[5.0, 6.0], 1, 2, 4, &mut out);
+        assert_eq!(out, vec![5.0, 6.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+}

@@ -1,0 +1,35 @@
+//! Test utilities: a seeded PRNG and a small property-testing harness.
+//!
+//! The offline crate set has neither `rand` nor `proptest`, so this module
+//! provides the two pieces the test suites need: [`rng::Pcg32`], a tiny
+//! deterministic PRNG (PCG-XSH-RR 64/32), and [`prop`], a
+//! proptest-flavoured harness (seeded case generation, failure shrinking,
+//! seed reporting) used by the coordinator/graph invariant tests.
+
+pub mod prop;
+pub mod rng;
+
+pub use prop::{forall, Config};
+pub use rng::Pcg32;
+
+/// Assert two f32 slices are elementwise close (rtol + atol), with a
+/// useful failure message.
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "mismatch at [{i}]: got {g}, want {w} (|Δ|={} > tol={tol})",
+            (g - w).abs()
+        );
+    }
+}
+
+/// Max absolute elementwise difference.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}

@@ -1,0 +1,134 @@
+//! A minimal property-testing harness (proptest is unavailable offline).
+//!
+//! [`forall`] runs a property over `Config::cases` seeded random inputs;
+//! on failure it re-runs the generator with progressively "smaller" size
+//! hints to find a reduced counterexample, then panics with the seed so
+//! the exact case can be replayed.
+//!
+//! ```no_run
+//! // (no_run: rustdoc test binaries lack the xla rpath in this image)
+//! use dgnn_booster::testutil::{forall, Config, Pcg32};
+//! forall(Config::default().cases(64), |rng: &mut Pcg32, size: usize| {
+//!     let n = rng.range(1, size.max(2));
+//!     assert!(n < size.max(2));
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Harness configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Maximum size hint passed to the property (cases ramp up to this).
+    pub max_size: usize,
+    /// Base seed; every case derives its own stream from this.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 100,
+            max_size: 256,
+            seed: 0xB0057E12,
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn max_size(mut self, n: usize) -> Self {
+        self.max_size = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop(rng, size)` for `cfg.cases` seeded cases with a ramping size
+/// hint.  On panic, retries smaller sizes with the same seed to shrink,
+/// then reports the minimal failing (seed, size).
+pub fn forall<F>(cfg: Config, prop: F)
+where
+    F: Fn(&mut Pcg32, usize) + std::panic::RefUnwindSafe,
+{
+    for case in 0..cfg.cases {
+        // sizes ramp from tiny to max so early failures are small already
+        let size = 2 + (cfg.max_size.saturating_sub(2)) * case / cfg.cases.max(1);
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg32::seeded(case_seed);
+            prop(&mut rng, size);
+        });
+        if let Err(payload) = result {
+            // shrink: re-run at smaller sizes, keep the smallest that fails
+            let mut min_fail = size;
+            let mut min_payload = payload;
+            let mut s = size / 2;
+            while s >= 2 {
+                let r = std::panic::catch_unwind(|| {
+                    let mut rng = Pcg32::seeded(case_seed);
+                    prop(&mut rng, s);
+                });
+                match r {
+                    Err(p) => {
+                        min_fail = s;
+                        min_payload = p;
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            let msg = min_payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| min_payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, \
+                 shrunk size {min_fail} from {size}): {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(Config::default().cases(20), |rng, size| {
+            let n = rng.range(0, size.max(1) + 1);
+            assert!(n <= size);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failure_with_seed() {
+        forall(Config::default().cases(20), |_rng, size| {
+            assert!(size < 50, "sizes eventually exceed 50");
+        });
+    }
+
+    #[test]
+    fn shrinks_to_smaller_size() {
+        let res = std::panic::catch_unwind(|| {
+            forall(Config::default().cases(30).max_size(200), |_rng, size| {
+                assert!(size < 10);
+            });
+        });
+        let msg = res.unwrap_err();
+        let msg = msg.downcast_ref::<String>().unwrap();
+        // must have shrunk below the first failing ramp size
+        assert!(msg.contains("shrunk size"), "{msg}");
+    }
+}

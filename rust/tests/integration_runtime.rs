@@ -1,0 +1,195 @@
+//! Integration: PJRT-executed AOT artifacts vs the pure-Rust mirror —
+//! the reproduction's "crosschecking with PyTorch" (paper §I-1).
+//!
+//! Requires `make artifacts`; every test skips (with a notice) when the
+//! artifacts are absent so plain `cargo test` works in a fresh checkout.
+
+use dgnn_booster::baselines::cpu::features_for;
+use dgnn_booster::coordinator::preprocess::preprocess_stream;
+use dgnn_booster::coordinator::NodeStateStore;
+use dgnn_booster::datasets::{synth, BC_ALPHA};
+use dgnn_booster::graph::Snapshot;
+use dgnn_booster::models::{Dims, EvolveGcnParams, GcrnM2Params};
+use dgnn_booster::numerics::{self, Mat};
+use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, Manifest};
+use dgnn_booster::testutil::assert_allclose;
+
+const DIR: &str = "artifacts";
+
+fn artifacts_ready() -> bool {
+    let ok = Manifest::load(DIR).is_ok();
+    if !ok {
+        eprintln!("skipping: artifacts/ missing — run `make artifacts`");
+    }
+    ok
+}
+
+fn snaps(n: usize) -> Vec<Snapshot> {
+    let stream = synth::generate(&BC_ALPHA, 42);
+    let mut s = preprocess_stream(&stream, BC_ALPHA.splitter_secs).unwrap();
+    s.truncate(n);
+    s
+}
+
+#[test]
+fn evolvegcn_pjrt_matches_mirror_over_stream() {
+    if !artifacts_ready() {
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let dims = Dims::default();
+    let params = EvolveGcnParams::init(1, dims);
+    let mut exec = EvolveGcnExecutor::new(&client, DIR, &params).unwrap();
+    let mut w1 = Mat::from_vec(dims.in_dim, dims.hidden_dim, params.w1.clone());
+    let mut w2 = Mat::from_vec(dims.hidden_dim, dims.out_dim, params.w2.clone());
+    for s in &snaps(12) {
+        let x = features_for(s, dims, 42);
+        let got = exec.run_step(s, &x.data).unwrap();
+        let (want, w1n, w2n) = numerics::evolvegcn_step(s, &x, &w1, &w2, &params);
+        w1 = w1n;
+        w2 = w2n;
+        assert_allclose(&got, &want.data, 1e-4, 1e-4);
+        // evolving weights also tracked bit-close
+        assert_allclose(&exec.w1, &w1.data, 1e-4, 1e-4);
+        assert_allclose(&exec.w2, &w2.data, 1e-4, 1e-4);
+    }
+}
+
+#[test]
+fn gcrn_pjrt_matches_mirror_with_state_carry() {
+    if !artifacts_ready() {
+        return;
+    }
+    let client = xla::PjRtClient::cpu().unwrap();
+    let dims = Dims::default();
+    let params = GcrnM2Params::init(2, dims);
+    let mut exec = GcrnExecutor::new(&client, DIR, &params).unwrap();
+    let max_nodes = exec.manifest().max_nodes;
+    let total = 4000;
+    let mut h_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut c_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut h_ref = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut c_ref = NodeStateStore::zeros(total, dims.hidden_dim);
+    for s in &snaps(12) {
+        let n = s.num_nodes();
+        let x = features_for(s, dims, 42);
+        let mut h = h_store.gather_padded(s, max_nodes);
+        let mut c = c_store.gather_padded(s, max_nodes);
+        exec.run_step(s, &x.data, &mut h, &mut c).unwrap();
+        h_store.scatter(s, &h);
+        c_store.scatter(s, &c);
+        let hm = Mat::from_vec(n, dims.hidden_dim, h_ref.gather_padded(s, n));
+        let cm = Mat::from_vec(n, dims.hidden_dim, c_ref.gather_padded(s, n));
+        let (hn, cn) = numerics::gcrn_m2_step(s, &x, &hm, &cm, &params);
+        h_ref.scatter(s, &hn.data);
+        c_ref.scatter(s, &cn.data);
+        assert_allclose(&h[..n * dims.hidden_dim], &hn.data, 1e-4, 1e-4);
+        assert_allclose(&c[..n * dims.hidden_dim], &cn.data, 1e-4, 1e-4);
+    }
+}
+
+#[test]
+fn manifest_matches_aot_defaults() {
+    if !artifacts_ready() {
+        return;
+    }
+    let m = Manifest::load(DIR).unwrap();
+    assert_eq!(m.max_nodes, 608);
+    assert_eq!(m.max_edges, 1728);
+    assert_eq!(m.in_dim, 32);
+}
+
+#[test]
+fn oversized_snapshot_rejected_not_truncated() {
+    if !artifacts_ready() {
+        return;
+    }
+    use dgnn_booster::graph::RenumberTable;
+    let client = xla::PjRtClient::cpu().unwrap();
+    let dims = Dims::default();
+    let params = EvolveGcnParams::init(1, dims);
+    let mut exec = EvolveGcnExecutor::new(&client, DIR, &params).unwrap();
+    let e = 3000; // > max_edges
+    let snap = Snapshot {
+        index: 0,
+        src: vec![0; e],
+        dst: vec![1; e],
+        coef: vec![0.1; e],
+        selfcoef: vec![0.5; 2],
+        renumber: RenumberTable::build([(0, 1)].into_iter()),
+        t_start: 0,
+    };
+    let x = vec![0.0f32; 2 * dims.in_dim];
+    let err = exec.run_step(&snap, &x).unwrap_err();
+    assert!(err.to_string().contains("exceeds AOT budget"), "{err}");
+}
+
+#[test]
+fn gcn_forward_artifact_loads_and_runs() {
+    if !artifacts_ready() {
+        return;
+    }
+    use dgnn_booster::runtime::executor::{lit_f32, lit_i32, StepExecutable};
+    let client = xla::PjRtClient::cpu().unwrap();
+    let m = Manifest::load(DIR).unwrap();
+    let exe = StepExecutable::load(&client, DIR, "gcn_forward").unwrap();
+    let src = vec![0i32; m.max_edges];
+    let dst = vec![0i32; m.max_edges];
+    let coef = vec![0.0f32; m.max_edges];
+    let selfcoef = vec![1.0f32; m.max_nodes];
+    let x = vec![0.5f32; m.max_nodes * m.in_dim];
+    let w1 = vec![0.1f32; m.in_dim * m.hidden_dim];
+    let w2 = vec![0.1f32; m.hidden_dim * m.out_dim];
+    let outs = exe
+        .run(&[
+            lit_i32(&src, &[m.max_edges]).unwrap(),
+            lit_i32(&dst, &[m.max_edges]).unwrap(),
+            lit_f32(&coef, &[m.max_edges]).unwrap(),
+            lit_f32(&selfcoef, &[m.max_nodes]).unwrap(),
+            lit_f32(&x, &[m.max_nodes, m.in_dim]).unwrap(),
+            lit_f32(&w1, &[m.in_dim, m.hidden_dim]).unwrap(),
+            lit_f32(&w2, &[m.hidden_dim, m.out_dim]).unwrap(),
+        ])
+        .unwrap();
+    assert_eq!(outs.len(), 1);
+    let out = outs[0].to_vec::<f32>().unwrap();
+    assert_eq!(out.len(), m.max_nodes * m.out_dim);
+    // identity graph, x=0.5, w=0.1: layer1 = relu(0.5*32*0.1)=1.6,
+    // layer2 = 1.6*32*0.1 = 5.12
+    assert!((out[0] - 5.12).abs() < 1e-3, "got {}", out[0]);
+}
+
+#[test]
+fn gcrn_m1_pjrt_matches_mirror_with_state_carry() {
+    if !artifacts_ready() {
+        return;
+    }
+    use dgnn_booster::models::GcrnM1Params;
+    use dgnn_booster::runtime::GcrnM1Executor;
+    let client = xla::PjRtClient::cpu().unwrap();
+    let dims = Dims::default();
+    let params = GcrnM1Params::init(3, dims);
+    let mut exec = GcrnM1Executor::new(&client, DIR, &params).unwrap();
+    let max_nodes = exec.manifest().max_nodes;
+    let total = 4000;
+    let mut h_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut c_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut h_ref = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut c_ref = NodeStateStore::zeros(total, dims.hidden_dim);
+    for s in &snaps(10) {
+        let n = s.num_nodes();
+        let x = features_for(s, dims, 42);
+        let mut h = h_store.gather_padded(s, max_nodes);
+        let mut c = c_store.gather_padded(s, max_nodes);
+        exec.run_step(s, &x.data, &mut h, &mut c).unwrap();
+        h_store.scatter(s, &h);
+        c_store.scatter(s, &c);
+        let hm = Mat::from_vec(n, dims.hidden_dim, h_ref.gather_padded(s, n));
+        let cm = Mat::from_vec(n, dims.hidden_dim, c_ref.gather_padded(s, n));
+        let (hn, cn) = numerics::gcrn_m1_step(s, &x, &hm, &cm, &params);
+        h_ref.scatter(s, &hn.data);
+        c_ref.scatter(s, &cn.data);
+        assert_allclose(&h[..n * dims.hidden_dim], &hn.data, 1e-4, 1e-4);
+        assert_allclose(&c[..n * dims.hidden_dim], &cn.data, 1e-4, 1e-4);
+    }
+}

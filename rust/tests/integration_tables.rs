@@ -1,0 +1,98 @@
+//! Integration: the report generators produce every paper artefact with
+//! the paper's qualitative shape.
+
+use dgnn_booster::report::tables::{self, ReportCtx};
+
+fn ctx() -> ReportCtx {
+    ReportCtx::default()
+}
+
+#[test]
+fn all_tables_generate() {
+    for (name, f) in [
+        ("table2", tables::table2 as fn(&ReportCtx) -> dgnn_booster::Result<String>),
+        ("table3", tables::table3),
+        ("table4", tables::table4),
+        ("table5", tables::table5),
+        ("table6", tables::table6),
+        ("table7", tables::table7),
+        ("fig6", tables::fig6),
+    ] {
+        let t = f(&ctx()).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(t.lines().count() >= 4, "{name} too short:\n{t}");
+    }
+}
+
+#[test]
+fn table4_speedup_bands() {
+    // Parse our vs-CPU / vs-GPU columns back out and check paper bands:
+    // "speedup of up to 5.6x vs CPU and 8.4x vs GPU".
+    let t = tables::table4(&ctx()).unwrap();
+    let mut max_cpu = 0.0f64;
+    let mut max_gpu = 0.0f64;
+    for line in t.lines().skip(3) {
+        let cols: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cols.len() < 7 || !cols[5].ends_with('x') {
+            continue;
+        }
+        max_cpu = max_cpu.max(cols[5].trim_end_matches('x').parse().unwrap());
+        max_gpu = max_gpu.max(cols[6].trim_end_matches('x').parse().unwrap());
+    }
+    assert!((4.0..8.0).contains(&max_cpu), "max vs-CPU {max_cpu}");
+    assert!((5.0..11.0).contains(&max_gpu), "max vs-GPU {max_gpu}");
+}
+
+#[test]
+fn table6_runtime_efficiency_over_100x_cpu_1000x_gpu() {
+    let t = tables::table6(&ctx()).unwrap();
+    let mut best_cpu = 0.0f64;
+    let mut best_gpu = 0.0f64;
+    for line in t.lines() {
+        let cols: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cols.len() < 8 || !cols[5].ends_with('x') {
+            continue;
+        }
+        best_cpu = best_cpu.max(cols[5].trim_end_matches('x').parse().unwrap());
+        best_gpu = best_gpu.max(cols[6].trim_end_matches('x').parse().unwrap());
+    }
+    assert!(best_cpu > 100.0, "runtime energy vs CPU only {best_cpu}x");
+    assert!(best_gpu > 700.0, "runtime energy vs GPU only {best_gpu}x");
+}
+
+#[test]
+fn fig6_o2_beats_o1_beats_baseline_in_output() {
+    let t = tables::fig6(&ctx()).unwrap();
+    // For each model/dataset block the three rows appear in order with
+    // non-increasing latency.
+    let mut lat = Vec::new();
+    for line in t.lines() {
+        let cols: Vec<&str> = line.split('|').map(str::trim).collect();
+        if cols.len() >= 5 && (cols[2] == "Baseline" || cols[2].starts_with("Pipeline")) {
+            lat.push(cols[3].parse::<f64>().unwrap());
+        }
+    }
+    assert_eq!(lat.len() % 3, 0);
+    for chunk in lat.chunks(3) {
+        assert!(chunk[0] > chunk[1] && chunk[1] > chunk[2], "{chunk:?}");
+    }
+}
+
+#[test]
+fn table7_dsp_splits_match_paper_direction() {
+    let t = tables::table7(&ctx()).unwrap();
+    assert!(t.contains("288"), "V1 GNN DSP");
+    assert!(t.contains("1658"), "V1 RNN DSP");
+    assert!(t.contains("2171"), "V2 GNN DSP");
+    assert!(t.contains("sweep optimum"));
+}
+
+#[test]
+fn table1_matches_paper_taxonomy() {
+    let t = dgnn_booster::report::tables::table1();
+    // Stacked row supports both; Integrated V2-only; WeightsEvolved V1-only
+    let lines: Vec<&str> = t.lines().filter(|l| l.contains("GCRN") || l.contains("Evolve")).collect();
+    assert_eq!(lines.len(), 3);
+    assert!(lines[0].contains("Stacked") && lines[0].matches("ok").count() == 2);
+    assert!(lines[1].contains("Integrated") && lines[1].contains("--") && lines[1].contains("ok"));
+    assert!(lines[2].contains("WeightsEvolved"));
+}
