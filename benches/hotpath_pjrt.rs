@@ -2,16 +2,24 @@
 //! request path of the e2e server — literal creation, padding, execute,
 //! readback.  This is the §Perf optimisation target for Layer 3.
 //!
+//! The end-to-end benches run the optimised steady-state path: a
+//! persistent `StepRunner` (argument literals rewritten in place, `&mut`
+//! out-buffers) and delta-aware `ResidentState` gathers.  Results are
+//! also written to `BENCH_hotpath.json` (median + MAD per bench, plus
+//! the measured shared-node fraction) so the perf trajectory is
+//! machine-tracked across PRs.
+//!
 //! Requires `make artifacts`; prints a notice and exits cleanly if the
 //! artifacts are absent (so `cargo bench` works in a fresh checkout).
 
 use dgnn_booster::baselines::cpu::features_for;
-use dgnn_booster::metrics::bench_loop;
-use dgnn_booster::models::{Dims, EvolveGcnParams, GcrnM2Params};
-use dgnn_booster::report::tables::{snapshots, ReportCtx};
-use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, Manifest};
-use dgnn_booster::coordinator::NodeStateStore;
+use dgnn_booster::coordinator::{NodeStateStore, ResidentState};
 use dgnn_booster::datasets::BC_ALPHA;
+use dgnn_booster::fpga::incremental::{overlap_stats, DeltaStats};
+use dgnn_booster::metrics::{bench_loop_record, write_bench_json, BenchRecord};
+use dgnn_booster::models::{node_features_into, Dims, EvolveGcnParams, GcrnM2Params};
+use dgnn_booster::report::tables::{snapshots, ReportCtx};
+use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, Manifest, PaddedGraph, StagingSlot};
 
 fn main() {
     if Manifest::load("artifacts").is_err() {
@@ -23,44 +31,83 @@ fn main() {
     let mut snaps = snapshots(&ctx, &BC_ALPHA).expect("snaps");
     snaps.truncate(8);
     let client = xla::PjRtClient::cpu().expect("pjrt cpu client");
+    let mut records: Vec<BenchRecord> = Vec::new();
 
-    // EvolveGCN step
+    // measured shared-node fraction of the bench stream, reported
+    // alongside the timings (the delta-gather win scales with it)
+    let deltas = overlap_stats(&snaps);
+    let shared_frac = deltas.iter().skip(1).map(DeltaStats::shared_frac).sum::<f64>()
+        / deltas.len().saturating_sub(1).max(1) as f64;
+
+    // EvolveGCN step — reused out-buffer, in-place argument staging
     let params = EvolveGcnParams::init(ctx.seed, dims);
     let mut exec = EvolveGcnExecutor::new(&client, "artifacts", &params).expect("executor");
     let xs: Vec<_> = snaps.iter().map(|s| features_for(s, dims, ctx.seed)).collect();
+    let mut out = Vec::new();
     let mut i = 0;
-    bench_loop("evolvegcn_step PJRT end-to-end", 50, || {
+    records.push(bench_loop_record("evolvegcn_step PJRT end-to-end", 50, || {
         let s = &snaps[i % snaps.len()];
-        let out = exec.run_step(s, &xs[i % snaps.len()].data).unwrap();
+        exec.run_step_into(s, &xs[i % snaps.len()].data, &mut out).unwrap();
         i += 1;
         out[0]
-    });
+    }));
 
-    // GCRN step
+    // GCRN step — delta-aware resident state, no per-step gather allocation
     let gparams = GcrnM2Params::init(ctx.seed, dims);
     let mut gexec = GcrnExecutor::new(&client, "artifacts", &gparams).expect("executor");
     let max_nodes = gexec.manifest().max_nodes;
     let total = 4000;
-    let h_store = NodeStateStore::zeros(total, dims.hidden_dim);
-    let c_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut h_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut c_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut h_res = ResidentState::new(max_nodes, dims.hidden_dim);
+    let mut c_res = ResidentState::new(max_nodes, dims.hidden_dim);
     let mut i = 0;
-    bench_loop("gcrn_m2_step PJRT end-to-end", 50, || {
+    records.push(bench_loop_record("gcrn_m2_step PJRT end-to-end", 50, || {
         let s = &snaps[i % snaps.len()];
-        let mut h = h_store.gather_padded(s, max_nodes);
-        let mut c = c_store.gather_padded(s, max_nodes);
-        gexec.run_step(s, &xs[i % snaps.len()].data, &mut h, &mut c).unwrap();
+        h_res.advance(&mut h_store, s).unwrap();
+        c_res.advance(&mut c_store, s).unwrap();
+        gexec
+            .run_step(s, &xs[i % snaps.len()].data, h_res.buf_mut(), c_res.buf_mut())
+            .unwrap();
         i += 1;
-        h[0]
-    });
+        h_res.buf()[0]
+    }));
 
     // padding-only component (to separate padding from PJRT costs)
     let manifest = gexec.manifest().clone();
-    let mut pg = dgnn_booster::runtime::PaddedGraph::new(&manifest);
+    let mut pg = PaddedGraph::new(&manifest);
     let mut i = 0;
-    bench_loop("PaddedGraph::fill (padding only)", 2000, || {
+    records.push(bench_loop_record("PaddedGraph::fill (padding only)", 2000, || {
         let s = &snaps[i % snaps.len()];
         pg.fill(s).unwrap();
         i += 1;
         pg.num_edges
-    });
+    }));
+
+    // staging-only: padding + feature materialisation + delta advance —
+    // the whole producer-side step path; zero heap allocation at steady
+    // state (asserted by tests/alloc_hotpath.rs)
+    let mut slot = StagingSlot::new(&manifest);
+    let mut sh_store = NodeStateStore::zeros(total, dims.hidden_dim);
+    let mut sh_res = ResidentState::new(manifest.max_nodes, dims.hidden_dim);
+    let seed = ctx.seed;
+    let mut i = 0;
+    records.push(bench_loop_record("staging path (pad+features+delta)", 2000, || {
+        let s = &snaps[i % snaps.len()];
+        slot.stage(s, |raw, row| node_features_into(raw, seed, row)).unwrap();
+        sh_res.advance(&mut sh_store, s).unwrap();
+        i += 1;
+        slot.graph.num_edges
+    }));
+
+    write_bench_json(
+        "BENCH_hotpath.json",
+        &records,
+        &[
+            ("shared_node_frac", shared_frac),
+            ("snapshots", snaps.len() as f64),
+        ],
+    )
+    .expect("write BENCH_hotpath.json");
+    println!("wrote BENCH_hotpath.json (shared-node fraction {shared_frac:.3})");
 }

@@ -5,25 +5,37 @@
 //! against the pure-Rust mirror, and reporting latency/throughput plus
 //! the FPGA-projected per-snapshot latency.
 //!
+//! The request path runs the staged hot path: the three-stage pipeline
+//! (preprocess → stage → infer) pads graphs and materialises features on
+//! producer threads into recycled `StagingSlot`s, overlapped with PJRT
+//! execution; with `--delta`, recurrent state uses delta-aware
+//! `ResidentState` gathers (paper §VI) instead of full gather/scatter —
+//! the mirror cross-check always uses full gathers, so it also validates
+//! that the delta path matches bit-close.
+//!
 //! Requires `make artifacts`.  Usage:
 //! ```
 //! cargo run --release --example e2e_serve              # full streams
 //! cargo run --release --example e2e_serve -- --snapshots 40
+//! cargo run --release --example e2e_serve -- --delta   # §VI delta gathers
 //! ```
 
 use dgnn_booster::baselines::cpu::features_for;
-use dgnn_booster::coordinator::pipeline::{run_stream, Prepared};
-use dgnn_booster::coordinator::NodeStateStore;
+use dgnn_booster::coordinator::pipeline::{run_stream_staged, StepResult};
+use dgnn_booster::coordinator::{NodeStateStore, ResidentState};
 use dgnn_booster::datasets::{self, BC_ALPHA, UCI};
 use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
+use dgnn_booster::graph::{CooStream, Snapshot};
 use dgnn_booster::metrics::LatencyStats;
 use dgnn_booster::models::{Dims, EvolveGcnParams, GcrnM1Params, GcrnM2Params, ModelKind};
 use dgnn_booster::numerics::{self, Mat};
 use dgnn_booster::report::tables::{snapshots, ReportCtx};
-use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor};
+use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor, Manifest, StagingSlot};
 use dgnn_booster::testutil::max_abs_diff;
 
 const SEED: u64 = 42;
+/// Staging slots in flight (bounds the pipeline's peak memory).
+const POOL: usize = 4;
 
 fn main() -> dgnn_booster::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -32,20 +44,107 @@ fn main() -> dgnn_booster::Result<()> {
         .find(|w| w[0] == "--snapshots")
         .map(|w| w[1].parse::<usize>().expect("--snapshots N"))
         .unwrap_or(usize::MAX);
+    let delta = args.iter().any(|a| a == "--delta");
 
     let client = xla::PjRtClient::cpu()?;
     println!(
-        "PJRT platform: {} ({} devices)\n",
+        "PJRT platform: {} ({} devices){}\n",
         client.platform_name(),
-        client.device_count()
+        client.device_count(),
+        if delta { ", delta-aware state gathers" } else { "" }
     );
 
     for profile in [&BC_ALPHA, &UCI] {
         for model in ModelKind::all() {
-            serve(&client, model, profile, limit)?;
+            serve(&client, model, profile, limit, delta)?;
         }
     }
     Ok(())
+}
+
+/// Shared serving loop for the recurrent (GCRN) variants: staged
+/// three-stage pipeline, full-gather or delta-aware state handling, and
+/// the mirror cross-check (always on full gathers, so it validates the
+/// delta path too).  `run_staged` executes one PJRT step from a staged
+/// slot; `mirror_step` is the pure-Rust reference.  Returns the step
+/// results and, when `delta`, the (shared, seen) node counts.
+#[allow(clippy::too_many_arguments)]
+fn serve_recurrent<FRun, FMirror>(
+    stream: &CooStream,
+    profile: &datasets::DatasetProfile,
+    limit: usize,
+    delta: bool,
+    dims: Dims,
+    manifest: &Manifest,
+    max_err: &mut f32,
+    mut run_staged: FRun,
+    mut mirror_step: FMirror,
+) -> dgnn_booster::Result<(Vec<StepResult<usize>>, Option<(usize, usize)>)>
+where
+    FRun: FnMut(&StagingSlot, &mut Vec<f32>, &mut Vec<f32>) -> dgnn_booster::Result<()>,
+    FMirror: FnMut(&Snapshot, &Mat, &Mat, &Mat) -> (Mat, Mat),
+{
+    let max_nodes = manifest.max_nodes;
+    let dh = dims.hidden_dim;
+    let pool: Vec<StagingSlot> = (0..POOL).map(|_| StagingSlot::new(manifest)).collect();
+    let total = stream.num_nodes as usize;
+    let mut h_store = NodeStateStore::zeros(total, dh);
+    let mut c_store = NodeStateStore::zeros(total, dh);
+    // mirror state, always full-gathered
+    let mut h_ref = NodeStateStore::zeros(total, dh);
+    let mut c_ref = NodeStateStore::zeros(total, dh);
+    let mut h_res = ResidentState::new(max_nodes, dh);
+    let mut c_res = ResidentState::new(max_nodes, dh);
+    let mut h_buf = Vec::new();
+    let mut c_buf = Vec::new();
+    let (mut shared, mut seen) = (0usize, 0usize);
+    let results = run_stream_staged(
+        stream,
+        profile.splitter_secs,
+        POOL,
+        pool,
+        |snap| Ok(features_for(snap, dims, SEED)),
+        |snap, x, slot| slot.stage_from_rows(snap, &x.data),
+        |snap, x, slot| {
+            if snap.index >= limit {
+                return Ok(0usize);
+            }
+            let n = snap.num_nodes();
+            if delta {
+                let st = h_res.advance(&mut h_store, snap)?;
+                c_res.advance(&mut c_store, snap)?;
+                shared += st.shared_nodes;
+                seen += st.nodes;
+                run_staged(slot, h_res.buf_mut(), c_res.buf_mut())?;
+            } else {
+                h_store.gather_padded_into(snap, max_nodes, &mut h_buf);
+                c_store.gather_padded_into(snap, max_nodes, &mut c_buf);
+                run_staged(slot, &mut h_buf, &mut c_buf)?;
+                h_store.scatter(snap, &h_buf);
+                c_store.scatter(snap, &c_buf);
+            }
+            let hm = Mat::from_vec(n, dh, h_ref.gather_padded(snap, n));
+            let cm = Mat::from_vec(n, dh, c_ref.gather_padded(snap, n));
+            let (hn, cn) = mirror_step(snap, x, &hm, &cm);
+            h_ref.scatter(snap, &hn.data);
+            c_ref.scatter(snap, &cn.data);
+            let got = if delta {
+                &h_res.buf()[..n * dh]
+            } else {
+                &h_buf[..n * dh]
+            };
+            *max_err = max_err.max(max_abs_diff(got, &hn.data));
+            Ok(n)
+        },
+    )?;
+    let counts = if delta {
+        h_res.flush(&mut h_store);
+        c_res.flush(&mut c_store);
+        Some((shared, seen))
+    } else {
+        None
+    };
+    Ok((results, counts))
 }
 
 fn serve(
@@ -53,40 +152,45 @@ fn serve(
     model: ModelKind,
     profile: &'static datasets::DatasetProfile,
     limit: usize,
+    delta: bool,
 ) -> dgnn_booster::Result<()> {
     let dims = Dims::default();
     let stream = datasets::load_or_generate(profile, "data", SEED)?;
     let mut stats = LatencyStats::new();
     let mut max_err = 0.0f32;
     let mut count = 0usize;
+    // (shared, seen) node counts when running delta-aware gathers
+    let mut delta_counts: Option<(usize, usize)> = None;
 
     match model {
         ModelKind::EvolveGcn => {
             let params = EvolveGcnParams::init(SEED, dims);
             let mut exec = EvolveGcnExecutor::new(client, "artifacts", &params)?;
+            let pool: Vec<StagingSlot> =
+                (0..POOL).map(|_| StagingSlot::new(exec.manifest())).collect();
             // mirror state for cross-check
             let mut w1 = Mat::from_vec(dims.in_dim, dims.hidden_dim, params.w1.clone());
             let mut w2 = Mat::from_vec(dims.hidden_dim, dims.out_dim, params.w2.clone());
-            let results = run_stream(
+            let mut out_buf = Vec::new();
+            let results = run_stream_staged(
                 &stream,
                 profile.splitter_secs,
-                4,
-                |snap| {
-                    let x = features_for(&snap, dims, SEED);
-                    Ok(Prepared { snapshot: snap, payload: x })
-                },
-                |p| {
-                    if p.snapshot.index >= limit {
+                POOL,
+                pool,
+                |snap| Ok(features_for(snap, dims, SEED)),
+                |snap, x, slot| slot.stage_from_rows(snap, &x.data),
+                |snap, x, slot| {
+                    if snap.index >= limit {
                         return Ok(0usize);
                     }
-                    let out = exec.run_step(&p.snapshot, &p.payload.data)?;
+                    exec.run_step_staged(slot, &mut out_buf)?;
                     // cross-check vs the pure-Rust mirror
                     let (ref_out, w1n, w2n) =
-                        numerics::evolvegcn_step(&p.snapshot, &p.payload, &w1, &w2, &params);
+                        numerics::evolvegcn_step(snap, x, &w1, &w2, &params);
                     w1 = w1n;
                     w2 = w2n;
-                    max_err = max_err.max(max_abs_diff(&out, &ref_out.data));
-                    Ok(out.len())
+                    max_err = max_err.max(max_abs_diff(&out_buf, &ref_out.data));
+                    Ok(out_buf.len())
                 },
             )?;
             for r in results.iter().filter(|r| r.index < limit) {
@@ -97,43 +201,19 @@ fn serve(
         ModelKind::GcrnM1 => {
             let params = GcrnM1Params::init(SEED, dims);
             let mut exec = GcrnM1Executor::new(client, "artifacts", &params)?;
-            let max_nodes = exec.manifest().max_nodes;
-            let total = stream.num_nodes as usize;
-            let mut h_store = NodeStateStore::zeros(total, dims.hidden_dim);
-            let mut c_store = NodeStateStore::zeros(total, dims.hidden_dim);
-            let mut h_ref = NodeStateStore::zeros(total, dims.hidden_dim);
-            let mut c_ref = NodeStateStore::zeros(total, dims.hidden_dim);
-            let results = run_stream(
+            let manifest = exec.manifest().clone();
+            let (results, dc) = serve_recurrent(
                 &stream,
-                profile.splitter_secs,
-                4,
-                |snap| {
-                    let x = features_for(&snap, dims, SEED);
-                    Ok(Prepared { snapshot: snap, payload: x })
-                },
-                |p| {
-                    if p.snapshot.index >= limit {
-                        return Ok(0usize);
-                    }
-                    let snap = &p.snapshot;
-                    let n = snap.num_nodes();
-                    let mut h = h_store.gather_padded(snap, max_nodes);
-                    let mut c = c_store.gather_padded(snap, max_nodes);
-                    exec.run_step(snap, &p.payload.data, &mut h, &mut c)?;
-                    h_store.scatter(snap, &h);
-                    c_store.scatter(snap, &c);
-                    let hm = Mat::from_vec(n, dims.hidden_dim,
-                        h_ref.gather_padded(snap, n));
-                    let cm = Mat::from_vec(n, dims.hidden_dim,
-                        c_ref.gather_padded(snap, n));
-                    let (hn, cn) = numerics::gcrn_m1_step(snap, &p.payload, &hm, &cm, &params);
-                    h_ref.scatter(snap, &hn.data);
-                    c_ref.scatter(snap, &cn.data);
-                    max_err = max_err
-                        .max(max_abs_diff(&h[..n * dims.hidden_dim], &hn.data));
-                    Ok(n)
-                },
+                profile,
+                limit,
+                delta,
+                dims,
+                &manifest,
+                &mut max_err,
+                |slot, h, c| exec.run_step_staged(slot, h, c),
+                |snap, x, hm, cm| numerics::gcrn_m1_step(snap, x, hm, cm, &params),
             )?;
+            delta_counts = dc;
             for r in results.iter().filter(|r| r.index < limit) {
                 stats.record(r.wall);
                 count += 1;
@@ -142,45 +222,19 @@ fn serve(
         ModelKind::GcrnM2 => {
             let params = GcrnM2Params::init(SEED, dims);
             let mut exec = GcrnExecutor::new(client, "artifacts", &params)?;
-            let max_nodes = exec.manifest().max_nodes;
-            let total = stream.num_nodes as usize;
-            let mut h_store = NodeStateStore::zeros(total, dims.hidden_dim);
-            let mut c_store = NodeStateStore::zeros(total, dims.hidden_dim);
-            // mirror state
-            let mut h_ref = NodeStateStore::zeros(total, dims.hidden_dim);
-            let mut c_ref = NodeStateStore::zeros(total, dims.hidden_dim);
-            let results = run_stream(
+            let manifest = exec.manifest().clone();
+            let (results, dc) = serve_recurrent(
                 &stream,
-                profile.splitter_secs,
-                4,
-                |snap| {
-                    let x = features_for(&snap, dims, SEED);
-                    Ok(Prepared { snapshot: snap, payload: x })
-                },
-                |p| {
-                    if p.snapshot.index >= limit {
-                        return Ok(0usize);
-                    }
-                    let snap = &p.snapshot;
-                    let n = snap.num_nodes();
-                    let mut h = h_store.gather_padded(snap, max_nodes);
-                    let mut c = c_store.gather_padded(snap, max_nodes);
-                    exec.run_step(snap, &p.payload.data, &mut h, &mut c)?;
-                    h_store.scatter(snap, &h);
-                    c_store.scatter(snap, &c);
-                    // mirror
-                    let hm = Mat::from_vec(n, dims.hidden_dim,
-                        h_ref.gather_padded(snap, n));
-                    let cm = Mat::from_vec(n, dims.hidden_dim,
-                        c_ref.gather_padded(snap, n));
-                    let (hn, cn) = numerics::gcrn_m2_step(snap, &p.payload, &hm, &cm, &params);
-                    h_ref.scatter(snap, &hn.data);
-                    c_ref.scatter(snap, &cn.data);
-                    max_err = max_err
-                        .max(max_abs_diff(&h[..n * dims.hidden_dim], &hn.data));
-                    Ok(n)
-                },
+                profile,
+                limit,
+                delta,
+                dims,
+                &manifest,
+                &mut max_err,
+                |slot, h, c| exec.run_step_staged(slot, h, c),
+                |snap, x, hm, cm| numerics::gcrn_m2_step(snap, x, hm, cm, &params),
             )?;
+            delta_counts = dc;
             for r in results.iter().filter(|r| r.index < limit) {
                 stats.record(r.wall);
                 count += 1;
@@ -194,6 +248,12 @@ fn serve(
     println!("  snapshots processed:      {count}");
     println!("  numerics max |Δ| vs mirror: {max_err:.2e}  (tolerance 1e-3)");
     println!("  host PJRT:                {}", stats.summary());
+    if let Some((shared, seen)) = delta_counts {
+        println!(
+            "  delta gathers:            {:.1}% of state rows stayed on-chip",
+            100.0 * shared as f64 / seen.max(1) as f64
+        );
+    }
     println!("  FPGA projection:          {fpga_ms:.3} ms/snapshot\n");
     assert!(max_err < 1e-3, "numerics cross-check failed: {max_err}");
     Ok(())

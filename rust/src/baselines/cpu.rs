@@ -18,6 +18,7 @@
 //! (more memory traffic), modelled via `BYTES_PER_S`.
 
 use super::{dispatch_ops, step_flops};
+use crate::coordinator::{NodeStateStore, ResidentState};
 use crate::graph::Snapshot;
 use crate::models::{Dims, EvolveGcnParams, GcrnM2Params, ModelKind};
 use crate::numerics::{self, Mat};
@@ -100,6 +101,48 @@ pub fn measure_gcrn(
     (ms, checksum)
 }
 
+/// Measured mode for GCRN-M2 with delta-aware state residency (paper
+/// §VI): rows shared with the previous snapshot stay in the padded
+/// on-chip buffer, and only the delta moves through the DRAM store.
+/// Returns (avg ms, checksum, measured shared-node fraction) — the
+/// mirror of what `ResidentState` buys the PJRT hot path.
+pub fn measure_gcrn_delta(
+    snaps: &[Snapshot],
+    params: &GcrnM2Params,
+    total_nodes: usize,
+    seed: u64,
+) -> (f64, f32, f64) {
+    let dims = params.dims;
+    let max_nodes = snaps.iter().map(Snapshot::num_nodes).max().unwrap_or(1);
+    let mut h_store = NodeStateStore::zeros(total_nodes, dims.hidden_dim);
+    let mut c_store = NodeStateStore::zeros(total_nodes, dims.hidden_dim);
+    let mut h_res = ResidentState::new(max_nodes, dims.hidden_dim);
+    let mut c_res = ResidentState::new(max_nodes, dims.hidden_dim);
+    let mut checksum = 0.0f32;
+    let (mut shared, mut nodes) = (0usize, 0usize);
+    let start = std::time::Instant::now();
+    for s in snaps {
+        let n = s.num_nodes();
+        let x = features_for(s, dims, seed);
+        let st = h_res.advance(&mut h_store, s).expect("snapshot within max_nodes");
+        c_res.advance(&mut c_store, s).expect("snapshot within max_nodes");
+        shared += st.shared_nodes;
+        nodes += st.nodes;
+        let dh = dims.hidden_dim;
+        let h = Mat::from_vec(n, dh, h_res.buf()[..n * dh].to_vec());
+        let c = Mat::from_vec(n, dh, c_res.buf()[..n * dh].to_vec());
+        let (hn, cn) = numerics::gcrn_m2_step(s, &x, &h, &c, params);
+        h_res.buf_mut()[..n * dh].copy_from_slice(&hn.data);
+        c_res.buf_mut()[..n * dh].copy_from_slice(&cn.data);
+        checksum += hn.data.iter().sum::<f32>();
+    }
+    h_res.flush(&mut h_store);
+    c_res.flush(&mut c_store);
+    let ms = start.elapsed().as_secs_f64() * 1e3 / snaps.len().max(1) as f64;
+    let frac = if nodes == 0 { 0.0 } else { shared as f64 / nodes as f64 };
+    (ms, checksum, frac)
+}
+
 /// Deterministic node features for a snapshot (keyed by raw id).
 pub fn features_for(s: &Snapshot, dims: Dims, seed: u64) -> Mat {
     let n = s.num_nodes();
@@ -132,6 +175,19 @@ mod tests {
         assert!((g_uci - 8.50).abs() / 8.50 < 0.35, "gcrn uci {g_uci}");
         // ordering: GCRN slower than EvolveGCN on CPU
         assert!(g_bc > e_bc && g_uci > e_uci);
+    }
+
+    #[test]
+    fn delta_measured_mode_matches_full_bitwise() {
+        let mut snaps =
+            preprocess_stream(&synth::generate(&BC_ALPHA, 1), BC_ALPHA.splitter_secs).unwrap();
+        snaps.truncate(20);
+        let p = crate::models::GcrnM2Params::init(1, Default::default());
+        let total = 4000;
+        let (_, sum_full) = measure_gcrn(&snaps, &p, total, 9);
+        let (_, sum_delta, frac) = measure_gcrn_delta(&snaps, &p, total, 9);
+        assert_eq!(sum_full, sum_delta, "delta-gather path diverged from full gather");
+        assert!(frac > 0.0 && frac < 1.0, "shared fraction {frac}");
     }
 
     #[test]

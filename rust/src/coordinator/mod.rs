@@ -18,4 +18,4 @@ pub mod pipeline;
 pub mod state;
 
 pub use preprocess::{preprocess_stream, preprocess_window};
-pub use state::NodeStateStore;
+pub use state::{NodeStateStore, ResidentState};

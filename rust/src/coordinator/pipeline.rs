@@ -7,6 +7,18 @@
 //! accelerator thread infers snapshot *t*; a bounded channel provides
 //! the backpressure a finite DRAM staging area would.
 //!
+//! Two topologies:
+//!
+//! * [`run_stream`] — the original two stages, preprocess+prepare ∥
+//!   infer.
+//! * [`run_stream_staged`] — three stages, preprocess → stage → infer:
+//!   snapshot padding and feature materialisation run on a dedicated
+//!   producer thread into a bounded pool of recycled [`Staged`] buffers
+//!   (the software analog of the paper's ping-pong DRAM staging area),
+//!   overlapped with PJRT execution of earlier snapshots.  Used slots
+//!   flow back through a return channel, so peak memory is bounded by
+//!   the pool size regardless of stream length.
+//!
 //! The inference stage is sequential by construction — the temporal
 //! dependency (evolved weights / recurrent state) is exactly why DGNNs
 //! cannot batch across time, which is the premise of the paper.
@@ -91,6 +103,109 @@ where
     })
 }
 
+/// A staged snapshot: payload from `prepare` plus a recycled staging
+/// buffer filled by `stage`.
+pub struct Staged<P, B> {
+    pub snapshot: Snapshot,
+    pub payload: P,
+    pub buf: B,
+}
+
+/// Run the three-stage pipeline: preprocess+prepare ∥ stage ∥ infer.
+///
+/// * `prepare` runs on the first producer thread right after window
+///   preprocessing (CPU feature/metadata work).
+/// * `stage` runs on the second producer thread, materialising each
+///   snapshot into a recycled buffer from `pool` (padding, feature
+///   gather) while the consumer infers earlier snapshots.
+/// * `infer` runs on the calling thread, strictly in time order (PJRT
+///   executables are not Send).
+///
+/// After each inference the staging buffer is sent back to the stage
+/// thread, so at most `pool.len()` slots are ever in flight.
+pub fn run_stream_staged<P, B, O, FPrep, FStage, FInfer>(
+    stream: &CooStream,
+    splitter_secs: i64,
+    prefetch: usize,
+    pool: Vec<B>,
+    mut prepare: FPrep,
+    mut stage: FStage,
+    mut infer: FInfer,
+) -> Result<Vec<StepResult<O>>>
+where
+    P: Send,
+    B: Send,
+    FPrep: FnMut(&Snapshot) -> Result<P> + Send,
+    FStage: FnMut(&Snapshot, &P, &mut B) -> Result<()> + Send,
+    FInfer: FnMut(&Snapshot, &P, &mut B) -> Result<O>,
+{
+    if pool.is_empty() {
+        return Err(Error::Usage(
+            "staging pool must hold at least one buffer".into(),
+        ));
+    }
+    let windows = stream.split_windows(splitter_secs);
+    let (tx1, rx1) = mpsc::sync_channel::<Prepared<P>>(prefetch.max(1));
+    let (tx2, rx2) = mpsc::sync_channel::<Staged<P, B>>(prefetch.max(1));
+    let (tx_ret, rx_ret) = mpsc::channel::<B>();
+    for b in pool {
+        // pre-load the free-slot queue (rx_ret is alive, send cannot fail)
+        let _ = tx_ret.send(b);
+    }
+
+    std::thread::scope(|scope| -> Result<Vec<StepResult<O>>> {
+        // rx2/tx_ret move INTO the scope closure so they drop — unblocking
+        // producers stuck in send/recv — before the scope joins, on
+        // success, error and panic paths alike.
+        let rx2 = rx2;
+        let tx_ret = tx_ret;
+        let preparer = scope.spawn(move || -> Result<()> {
+            for (i, w) in windows.into_iter().enumerate() {
+                let snap = super::preprocess::preprocess_window(stream, w, i)?;
+                let payload = prepare(&snap)?;
+                if tx1.send(Prepared { snapshot: snap, payload }).is_err() {
+                    return Ok(()); // downstream hung up; stop quietly
+                }
+            }
+            Ok(())
+        });
+        let stager = scope.spawn(move || -> Result<()> {
+            for p in rx1.iter() {
+                let mut buf = match rx_ret.recv() {
+                    Ok(b) => b,
+                    Err(_) => return Ok(()), // consumer hung up
+                };
+                stage(&p.snapshot, &p.payload, &mut buf)?;
+                let staged = Staged { snapshot: p.snapshot, payload: p.payload, buf };
+                if tx2.send(staged).is_err() {
+                    return Ok(());
+                }
+            }
+            Ok(())
+        });
+
+        let mut results = Vec::new();
+        for staged in rx2.iter() {
+            let Staged { snapshot, payload, mut buf } = staged;
+            let start = std::time::Instant::now();
+            let output = infer(&snapshot, &payload, &mut buf)?;
+            results.push(StepResult {
+                index: snapshot.index,
+                wall: start.elapsed(),
+                output,
+            });
+            let _ = tx_ret.send(buf); // recycle; stager may already be done
+        }
+        preparer
+            .join()
+            .map_err(|_| Error::Graph("prepare thread panicked".into()))??;
+        stager
+            .join()
+            .map_err(|_| Error::Graph("stage thread panicked".into()))??;
+        Ok(results)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -151,6 +266,97 @@ mod tests {
             },
         );
         assert!(res.is_err());
+    }
+
+    #[test]
+    fn staged_pipeline_recycles_buffers_in_order() {
+        let stream = synth::generate(&BC_ALPHA, 3);
+        let expect = stream.split_windows(BC_ALPHA.splitter_secs).len();
+        let pool: Vec<(usize, Vec<u32>)> = vec![(0, Vec::new()), (1, Vec::new())];
+        let mut seen = std::collections::HashSet::new();
+        let results = run_stream_staged(
+            &stream,
+            BC_ALPHA.splitter_secs,
+            4,
+            pool,
+            |snap| Ok(snap.num_nodes()),
+            |snap, _n, buf| {
+                buf.1.clear();
+                buf.1.extend(snap.src.iter().copied());
+                Ok(())
+            },
+            |snap, n, buf| {
+                assert_eq!(*n, snap.num_nodes());
+                assert_eq!(buf.1.len(), snap.num_edges());
+                seen.insert(buf.0);
+                Ok(snap.index)
+            },
+        )
+        .unwrap();
+        assert_eq!(results.len(), expect);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.output, i);
+        }
+        // only the pool's slots ever circulate
+        assert!(seen.len() <= 2, "saw {} distinct buffers", seen.len());
+    }
+
+    #[test]
+    fn staged_stage_error_propagates() {
+        let stream = synth::generate(&BC_ALPHA, 3);
+        let res = run_stream_staged(
+            &stream,
+            BC_ALPHA.splitter_secs,
+            2,
+            vec![(), ()],
+            |_| Ok(()),
+            |snap, _, _| {
+                if snap.index == 3 {
+                    Err(Error::Graph("stage boom".into()))
+                } else {
+                    Ok(())
+                }
+            },
+            |_, _, _| Ok(()),
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn staged_infer_error_propagates_and_unblocks_producers() {
+        let stream = synth::generate(&BC_ALPHA, 3);
+        let res = run_stream_staged(
+            &stream,
+            BC_ALPHA.splitter_secs,
+            2,
+            vec![(), ()],
+            |_| Ok(()),
+            |_, _, _| Ok(()),
+            |snap, _, _| {
+                if snap.index == 4 {
+                    Err(Error::Graph("infer boom".into()))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn staged_empty_pool_rejected() {
+        let stream = synth::generate(&BC_ALPHA, 3);
+        let res = run_stream_staged(
+            &stream,
+            BC_ALPHA.splitter_secs,
+            2,
+            Vec::<()>::new(),
+            |_| Ok(()),
+            |_, _, _| Ok(()),
+            |_, _, _| Ok(()),
+        );
+        assert!(matches!(res.unwrap_err(), Error::Usage(_)));
     }
 
     #[test]

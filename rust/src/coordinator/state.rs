@@ -5,8 +5,16 @@
 //! padded on-chip buffers via the renumber table before each step, then
 //! scattered back after — "the renumbering table will also guide the
 //! FPGA to correctly fetch data from DRAM and write back".
+//!
+//! [`ResidentState`] is the delta-aware variant (paper §VI incremental
+//! snapshot loading): rows for nodes shared with the previous snapshot
+//! stay resident in the padded buffer and only the delta moves through
+//! DRAM — fetches for arriving nodes, write-backs for departing ones.
 
+use crate::error::{Error, Result};
+use crate::fpga::incremental::{DeltaPlan, DeltaStats};
 use crate::graph::Snapshot;
+use std::collections::HashMap;
 
 /// Dense [total_nodes × dim] f32 state store (one per state tensor).
 #[derive(Clone, Debug)]
@@ -39,15 +47,28 @@ impl NodeStateStore {
         &mut self.data[i..i + self.dim]
     }
 
+    /// Raw view of the whole store, `[total_nodes × dim]` row-major.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
     /// Gather this store's rows for a snapshot into a padded buffer of
     /// `max_nodes` rows (rows beyond the snapshot stay zero).
     pub fn gather_padded(&self, snap: &Snapshot, max_nodes: usize) -> Vec<f32> {
-        let mut out = vec![0.0f32; max_nodes * self.dim];
+        let mut out = Vec::new();
+        self.gather_padded_into(snap, max_nodes, &mut out);
+        out
+    }
+
+    /// Allocation-free [`Self::gather_padded`]: reuses `out`'s capacity
+    /// across calls (the hot-path variant).
+    pub fn gather_padded_into(&self, snap: &Snapshot, max_nodes: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.resize(max_nodes * self.dim, 0.0);
         for (local, raw) in snap.renumber.iter() {
             let dst = local as usize * self.dim;
             out[dst..dst + self.dim].copy_from_slice(self.row(raw));
         }
-        out
     }
 
     /// Scatter a padded on-chip buffer back into DRAM rows.
@@ -56,6 +77,111 @@ impl NodeStateStore {
         for (local, raw) in snap.renumber.iter() {
             let src = local as usize * dim;
             self.row_mut(raw).copy_from_slice(&padded[src..src + dim]);
+        }
+    }
+}
+
+/// Delta-aware on-chip residency for one state tensor (paper §VI).
+///
+/// Owns the padded `[max_nodes × dim]` buffer the accelerator step reads
+/// and writes.  [`Self::advance`] transitions it from the previous
+/// snapshot's layout to the next one's: rows for shared nodes are moved
+/// on-chip without touching the DRAM store, rows for departing nodes are
+/// written back, and only arriving nodes' rows are fetched — the
+/// measured-runtime version of `fpga::incremental`'s analytic saving.
+///
+/// The DRAM store is updated lazily (on eviction); call [`Self::flush`]
+/// before reading the store directly.  After a warm-up period the whole
+/// advance path performs no heap allocation.
+#[derive(Clone, Debug)]
+pub struct ResidentState {
+    dim: usize,
+    max_nodes: usize,
+    /// Resident padded buffer, laid out by the current snapshot's locals.
+    buf: Vec<f32>,
+    /// Double buffer for layout transitions.
+    scratch: Vec<f32>,
+    /// Raw id of each resident row (current snapshot's local order).
+    prev_raws: Vec<u32>,
+    /// raw id → resident row for the current layout.
+    prev_map: HashMap<u32, u32>,
+    plan: DeltaPlan,
+}
+
+impl ResidentState {
+    pub fn new(max_nodes: usize, dim: usize) -> Self {
+        ResidentState {
+            dim,
+            max_nodes,
+            buf: vec![0.0; max_nodes * dim],
+            scratch: vec![0.0; max_nodes * dim],
+            prev_raws: Vec::new(),
+            prev_map: HashMap::new(),
+            plan: DeltaPlan::new(),
+        }
+    }
+
+    /// The padded on-chip buffer in the layout of the last `advance`d
+    /// snapshot.  The step executor reads state from and writes updated
+    /// state into this buffer.
+    pub fn buf(&self) -> &[f32] {
+        &self.buf
+    }
+
+    pub fn buf_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.buf
+    }
+
+    /// Number of valid (non-padding) rows currently resident.
+    pub fn resident_nodes(&self) -> usize {
+        self.prev_raws.len()
+    }
+
+    /// Transition the resident buffer to `snap`'s layout: write departing
+    /// rows back to `store`, move shared rows on-chip, fetch arriving
+    /// rows from `store`, and zero the padding tail (the previous step's
+    /// compute may have dirtied every padded row).  Returns the overlap
+    /// stats so callers can report the measured shared-node fraction.
+    pub fn advance(&mut self, store: &mut NodeStateStore, snap: &Snapshot) -> Result<DeltaStats> {
+        let n = snap.num_nodes();
+        if n > self.max_nodes {
+            return Err(Error::Budget { what: "nodes", got: n, max: self.max_nodes });
+        }
+        debug_assert_eq!(store.dim, self.dim, "store/resident dim mismatch");
+        let dim = self.dim;
+        {
+            let (plan, prev_raws, prev_map) = (&mut self.plan, &self.prev_raws, &self.prev_map);
+            plan.build(prev_raws, |r| prev_map.get(&r).copied(), &snap.renumber);
+        }
+        for &(j, raw) in &self.plan.evict {
+            let src = j as usize * dim;
+            store.row_mut(raw).copy_from_slice(&self.buf[src..src + dim]);
+        }
+        for &(i, j) in &self.plan.shared {
+            let (dst, src) = (i as usize * dim, j as usize * dim);
+            self.scratch[dst..dst + dim].copy_from_slice(&self.buf[src..src + dim]);
+        }
+        for &(i, raw) in &self.plan.fetch {
+            let dst = i as usize * dim;
+            self.scratch[dst..dst + dim].copy_from_slice(store.row(raw));
+        }
+        self.scratch[n * dim..].fill(0.0);
+        std::mem::swap(&mut self.buf, &mut self.scratch);
+        self.prev_raws.clear();
+        self.prev_raws.extend_from_slice(snap.renumber.raws());
+        self.prev_map.clear();
+        for (local, raw) in snap.renumber.iter() {
+            self.prev_map.insert(raw, local);
+        }
+        Ok(self.plan.stats())
+    }
+
+    /// Write every resident row back to the DRAM store (end-of-stream, or
+    /// whenever the store must be externally consistent).
+    pub fn flush(&self, store: &mut NodeStateStore) {
+        let dim = self.dim;
+        for (j, &raw) in self.prev_raws.iter().enumerate() {
+            store.row_mut(raw).copy_from_slice(&self.buf[j * dim..j * dim + dim]);
         }
     }
 }
@@ -98,6 +224,88 @@ mod tests {
         assert_eq!(store2.row(3), &[8.0, 8.0]);
         // untouched rows keep their value
         assert_eq!(store2.row(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn resident_state_evicts_and_refetches() {
+        let mut store = NodeStateStore::zeros(10, 1);
+        let mut rs = ResidentState::new(4, 1);
+        let s1 = snap_with(&[(1, 2)]); // nodes 1, 2
+        rs.advance(&mut store, &s1).unwrap();
+        rs.buf_mut()[0] = 10.0; // node 1 state
+        rs.buf_mut()[1] = 20.0; // node 2 state
+        let s2 = snap_with(&[(2, 3)]); // node 1 departs, 3 arrives
+        let st = rs.advance(&mut store, &s2).unwrap();
+        assert_eq!(st.shared_nodes, 1);
+        assert_eq!(st.new_nodes, 1);
+        assert_eq!(store.row(1), &[10.0]); // evicted → written back
+        assert_eq!(rs.buf()[0], 20.0); // node 2 moved on-chip
+        assert_eq!(rs.buf()[1], 0.0); // node 3 fetched (still zero)
+        let s3 = snap_with(&[(1, 2)]); // node 1 returns
+        rs.advance(&mut store, &s3).unwrap();
+        assert_eq!(rs.buf()[0], 10.0); // refetched from DRAM
+        assert_eq!(rs.buf()[1], 20.0);
+    }
+
+    #[test]
+    fn resident_state_rejects_oversized_snapshot() {
+        let mut store = NodeStateStore::zeros(10, 2);
+        let mut rs = ResidentState::new(2, 2);
+        let s = snap_with(&[(1, 2), (3, 4)]); // 4 nodes > max 2
+        assert!(rs.advance(&mut store, &s).is_err());
+    }
+
+    /// Deterministic fake step: writes f(step, raw, input row) into the
+    /// valid rows and garbage into every padding row — the worst case a
+    /// real LSTM step produces (gate biases dirty the padded rows).
+    fn fake_step(padded: &mut [f32], snap: &Snapshot, dim: usize, step: usize) {
+        let n = snap.renumber.len();
+        for (local, raw) in snap.renumber.iter() {
+            let i = local as usize * dim;
+            for (k, v) in padded[i..i + dim].iter_mut().enumerate() {
+                *v = *v * 0.5 + (raw as f32) * 0.25 + step as f32 + k as f32 * 0.125;
+            }
+        }
+        for v in &mut padded[n * dim..] {
+            *v = f32::NAN; // must never leak into the next step
+        }
+    }
+
+    #[test]
+    fn prop_delta_gather_bitwise_matches_full() {
+        forall(Config::default().cases(30), |rng, size| {
+            let total = rng.range(4, size.max(5) + 4);
+            let dim = rng.range(1, 6);
+            let steps = rng.range(2, 8);
+            let mut full = NodeStateStore::zeros(total, dim);
+            let mut delta = NodeStateStore::zeros(total, dim);
+            let mut snaps = Vec::new();
+            let mut widest = 0;
+            for _ in 0..steps {
+                let n_pairs = rng.range(1, total.max(2));
+                let pairs: Vec<(u32, u32)> = (0..n_pairs)
+                    .map(|_| (rng.below(total) as u32, rng.below(total) as u32))
+                    .collect();
+                let s = snap_with(&pairs);
+                widest = widest.max(s.renumber.len());
+                snaps.push(s);
+            }
+            let max_nodes = widest + rng.range(0, 4);
+            let mut resident = ResidentState::new(max_nodes, dim);
+            let mut padded_full = Vec::new();
+            for (t, s) in snaps.iter().enumerate() {
+                full.gather_padded_into(s, max_nodes, &mut padded_full);
+                let stats = resident.advance(&mut delta, s).unwrap();
+                assert_eq!(stats.nodes, s.renumber.len());
+                // staged step inputs must agree bit-for-bit
+                assert_eq!(resident.buf(), &padded_full[..], "step {t} gather mismatch");
+                fake_step(&mut padded_full, s, dim, t);
+                fake_step(resident.buf_mut(), s, dim, t);
+                full.scatter(s, &padded_full);
+            }
+            resident.flush(&mut delta);
+            assert_eq!(full.data(), delta.data());
+        });
     }
 
     #[test]

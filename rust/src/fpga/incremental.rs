@@ -12,7 +12,7 @@
 
 use super::designs::{simulate_stream, AcceleratorConfig};
 use super::units::{DMA_BYTES_PER_CYCLE, DMA_SETUP_CYCLES};
-use crate::graph::Snapshot;
+use crate::graph::{RenumberTable, Snapshot};
 
 /// Overlap between one snapshot and its predecessor.
 #[derive(Clone, Copy, Debug, Default)]
@@ -34,25 +34,78 @@ impl DeltaStats {
     }
 }
 
+/// Reusable row-movement plan between two adjacent snapshot layouts.
+///
+/// Classifies every node of the next snapshot as *shared* (its state row
+/// is already on-chip at a known previous local index — move it, no DRAM
+/// traffic) or *fetch* (gather its row from DRAM), and every departing
+/// node of the previous snapshot as *evict* (write its row back).  This
+/// is the runtime counterpart of [`DeltaStats`]: the same overlap the
+/// analytic model counts, as an executable plan.
+///
+/// The vectors are cleared and refilled by [`DeltaPlan::build`], so a
+/// plan reused across a stream performs no steady-state allocation.
+#[derive(Clone, Debug, Default)]
+pub struct DeltaPlan {
+    /// (new_local, prev_local): rows already resident on-chip.
+    pub shared: Vec<(u32, u32)>,
+    /// (new_local, raw): rows that must be gathered from DRAM.
+    pub fetch: Vec<(u32, u32)>,
+    /// (prev_local, raw): rows leaving the window — write back to DRAM.
+    pub evict: Vec<(u32, u32)>,
+}
+
+impl DeltaPlan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Classify `next`'s nodes against the previous layout, given the
+    /// previous snapshot's raw ids in local order and a raw → prev-local
+    /// lookup.  Pass an empty slice and `|_| None` for the first
+    /// snapshot (everything becomes a fetch).
+    pub fn build(
+        &mut self,
+        prev_raws: &[u32],
+        prev_local_of: impl Fn(u32) -> Option<u32>,
+        next: &RenumberTable,
+    ) {
+        self.shared.clear();
+        self.fetch.clear();
+        self.evict.clear();
+        for (local, raw) in next.iter() {
+            match prev_local_of(raw) {
+                Some(j) => self.shared.push((local, j)),
+                None => self.fetch.push((local, raw)),
+            }
+        }
+        for (j, &raw) in prev_raws.iter().enumerate() {
+            if next.to_local(raw).is_none() {
+                self.evict.push((j as u32, raw));
+            }
+        }
+    }
+
+    pub fn stats(&self) -> DeltaStats {
+        DeltaStats {
+            nodes: self.shared.len() + self.fetch.len(),
+            shared_nodes: self.shared.len(),
+            new_nodes: self.fetch.len(),
+        }
+    }
+}
+
 /// Per-snapshot overlap statistics for a stream.
 pub fn overlap_stats(snaps: &[Snapshot]) -> Vec<DeltaStats> {
     let mut out = Vec::with_capacity(snaps.len());
+    let mut plan = DeltaPlan::new();
     let mut prev: Option<&Snapshot> = None;
     for s in snaps {
-        let nodes = s.num_nodes();
-        let shared = match prev {
-            None => 0,
-            Some(p) => s
-                .renumber
-                .iter()
-                .filter(|(_, raw)| p.renumber.to_local(*raw).is_some())
-                .count(),
-        };
-        out.push(DeltaStats {
-            nodes,
-            shared_nodes: shared,
-            new_nodes: nodes - shared,
-        });
+        match prev {
+            None => plan.build(&[], |_| None, &s.renumber),
+            Some(p) => plan.build(p.renumber.raws(), |r| p.renumber.to_local(r), &s.renumber),
+        }
+        out.push(plan.stats());
         prev = Some(s);
     }
     out
@@ -128,6 +181,44 @@ mod tests {
             / (d.len() - 1) as f64;
         assert!(avg > 0.2, "avg shared fraction {avg}");
         assert!(avg < 0.95, "suspiciously total overlap {avg}");
+    }
+
+    #[test]
+    fn plan_partitions_nodes_and_evictions() {
+        let s = snaps();
+        let mut plan = DeltaPlan::new();
+        for w in s.windows(2) {
+            let (p, n) = (&w[0], &w[1]);
+            plan.build(p.renumber.raws(), |r| p.renumber.to_local(r), &n.renumber);
+            // shared + fetch partition the new snapshot's nodes
+            assert_eq!(plan.shared.len() + plan.fetch.len(), n.num_nodes());
+            for &(local, j) in &plan.shared {
+                let raw = n.renumber.to_raw(local).unwrap();
+                assert_eq!(p.renumber.to_local(raw), Some(j));
+            }
+            for &(local, raw) in &plan.fetch {
+                assert_eq!(n.renumber.to_raw(local).unwrap(), raw);
+                assert!(p.renumber.to_local(raw).is_none());
+            }
+            // evictions are exactly prev's nodes minus the shared ones
+            assert_eq!(plan.evict.len(), p.num_nodes() - plan.shared.len());
+            for &(j, raw) in &plan.evict {
+                assert_eq!(p.renumber.to_raw(j).unwrap(), raw);
+                assert!(n.renumber.to_local(raw).is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn plan_stats_match_overlap_stats() {
+        let s = snaps();
+        let expect = overlap_stats(&s);
+        let mut plan = DeltaPlan::new();
+        plan.build(&[], |_| None, &s[0].renumber);
+        assert_eq!(plan.stats().new_nodes, expect[0].new_nodes);
+        plan.build(s[0].renumber.raws(), |r| s[0].renumber.to_local(r), &s[1].renumber);
+        assert_eq!(plan.stats().shared_nodes, expect[1].shared_nodes);
+        assert_eq!(plan.stats().nodes, expect[1].nodes);
     }
 
     #[test]

@@ -69,6 +69,13 @@ impl RenumberTable {
             .map(|(l, &r)| (l as u32, r))
     }
 
+    /// Raw node ids in local-index order (`raws()[local] == raw`).
+    /// Lets delta planners snapshot one step's layout without cloning
+    /// the whole table.
+    pub fn raws(&self) -> &[u32] {
+        &self.local_to_raw
+    }
+
     /// Verify the bijection invariant (used by property tests).
     pub fn check_bijective(&self) -> Result<()> {
         if self.raw_to_local.len() != self.local_to_raw.len() {

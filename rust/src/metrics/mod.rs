@@ -4,9 +4,24 @@
 //! criterion-style timing (median ± MAD over N iterations) for the
 //! computation that produced it.
 
+/// One bench measurement: median ± MAD over `iters` iterations.
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    pub name: String,
+    pub median_s: f64,
+    pub mad_s: f64,
+    pub iters: usize,
+}
+
 /// Time `f` for `iters` iterations (after one warmup) and print a
 /// criterion-style line; returns the median seconds per iteration.
-pub fn bench_loop<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+pub fn bench_loop<T>(name: &str, iters: usize, f: impl FnMut() -> T) -> f64 {
+    bench_loop_record(name, iters, f).median_s
+}
+
+/// [`bench_loop`] that also returns the full record, so bench binaries
+/// can write machine-trackable JSON alongside the console line.
+pub fn bench_loop_record<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchRecord {
     std::hint::black_box(f()); // warmup
     let mut samples = Vec::with_capacity(iters);
     for _ in 0..iters.max(1) {
@@ -27,7 +42,44 @@ pub fn bench_loop<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> f64 
         fmt_time(mad),
         samples.len()
     );
-    median
+    BenchRecord {
+        name: name.to_string(),
+        median_s: median,
+        mad_s: mad,
+        iters: samples.len(),
+    }
+}
+
+/// Serialise bench records plus scalar metadata as JSON (hand-rolled —
+/// no serde in the offline crate set).
+pub fn bench_json(records: &[BenchRecord], extra: &[(&str, f64)]) -> String {
+    let mut s = String::from("{\n  \"benches\": [\n");
+    for (i, r) in records.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": {:?}, \"median_s\": {:e}, \"mad_s\": {:e}, \"iters\": {}}}{}\n",
+            r.name,
+            r.median_s,
+            r.mad_s,
+            r.iters,
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]");
+    for (k, v) in extra {
+        s.push_str(&format!(",\n  {k:?}: {v:e}"));
+    }
+    s.push_str("\n}\n");
+    s
+}
+
+/// Write [`bench_json`] to `path` so the perf trajectory is tracked
+/// across PRs (e.g. `BENCH_hotpath.json`).
+pub fn write_bench_json(
+    path: &str,
+    records: &[BenchRecord],
+    extra: &[(&str, f64)],
+) -> std::io::Result<()> {
+    std::fs::write(path, bench_json(records, extra))
 }
 
 fn fmt_time(s: f64) -> String {
@@ -152,6 +204,25 @@ mod tests {
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(50.0), 0.0);
         assert_eq!(s.throughput_per_s(), 0.0);
+    }
+
+    #[test]
+    fn bench_record_and_json_shape() {
+        let rec = bench_loop_record("unit_test_bench", 5, || 2 + 2);
+        assert_eq!(rec.iters, 5);
+        assert!(rec.median_s >= 0.0 && rec.mad_s >= 0.0);
+        let json = bench_json(
+            &[rec.clone(), rec],
+            &[("shared_node_frac", 0.75), ("snapshots", 8.0)],
+        );
+        // structurally sound: balanced braces/brackets, both records,
+        // metadata keys present
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert_eq!(json.matches("unit_test_bench").count(), 2);
+        assert!(json.contains("\"shared_node_frac\": 7.5e-1"));
+        assert!(json.contains("\"benches\""));
+        assert!(json.contains("\"median_s\""));
     }
 
     #[test]

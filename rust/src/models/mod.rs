@@ -203,8 +203,16 @@ impl GcrnM2Params {
 /// keeps its features across snapshots — the paper's host loads node
 /// features from DRAM the same way.
 pub fn node_features(raw_id: u32, dim: usize, seed: u64) -> Vec<f32> {
+    let mut out = vec![0.0; dim];
+    node_features_into(raw_id, seed, &mut out);
+    out
+}
+
+/// Allocation-free [`node_features`]: writes `out.len()` features for
+/// `raw_id` into `out` (the staging hot path's variant).
+pub fn node_features_into(raw_id: u32, seed: u64, out: &mut [f32]) {
     let mut rng = Pcg32::new(seed ^ (raw_id as u64).wrapping_mul(0x9E3779B97F4A7C15), 0xFEA7);
-    rng.normal_vec(dim, 1.0)
+    rng.fill_normal(out, 1.0);
 }
 
 #[cfg(test)]

@@ -40,15 +40,32 @@ impl Mat {
         &mut self.data[r * self.cols..(r + 1) * self.cols]
     }
 
+    /// Fraction of zero entries in a bounded sample of the data (cheap
+    /// one-pass check used to decide whether a sparsity skip pays off).
+    fn sampled_zero_frac(&self) -> f32 {
+        let sample = self.data.len().min(1024);
+        if sample == 0 {
+            return 0.0;
+        }
+        let zeros = self.data[..sample].iter().filter(|&&v| v == 0.0).count();
+        zeros as f32 / sample as f32
+    }
+
     /// `self @ other` — ikj loop order (row-major friendly).
+    ///
+    /// The zero-skip in the k-loop only pays off when `self` is actually
+    /// sparse; on dense weight matrices the branch mispredicts every
+    /// iteration, so it is gated on a sampled density check and the
+    /// dense path runs branch-free.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
+        let use_skip = self.sampled_zero_frac() > 0.25;
         for i in 0..self.rows {
             let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
             for k in 0..self.cols {
                 let a = self.data[i * self.cols + k];
-                if a == 0.0 {
+                if use_skip && a == 0.0 {
                     continue;
                 }
                 let b_row = &other.data[k * other.cols..(k + 1) * other.cols];
@@ -124,6 +141,35 @@ mod tests {
             *i3.at_mut(k, k) = 1.0;
         }
         assert_eq!(a.matmul(&i3).data, a.data);
+    }
+
+    #[test]
+    fn matmul_gate_matches_reference_on_sparse_and_dense() {
+        // both the branch-free dense path and the zero-skip sparse path
+        // must agree with the naive triple loop
+        for zero_frac in [0.0f64, 0.9] {
+            let mut rng = crate::testutil::Pcg32::seeded(17);
+            let (m, k, n) = (5, 7, 3);
+            let mut a = Mat::zeros(m, k);
+            for v in a.data.iter_mut() {
+                *v = if rng.uniform() < zero_frac {
+                    0.0
+                } else {
+                    rng.uniform_f32(-1.0, 1.0)
+                };
+            }
+            let mut b = Mat::zeros(k, n);
+            for v in b.data.iter_mut() {
+                *v = rng.uniform_f32(-1.0, 1.0);
+            }
+            let got = a.matmul(&b);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f32 = (0..k).map(|p| a.at(i, p) * b.at(p, j)).sum();
+                    assert!((got.at(i, j) - want).abs() < 1e-5);
+                }
+            }
+        }
     }
 
     #[test]

@@ -4,12 +4,22 @@
 //! `gcrn_m2_step`, `gcn_forward`), loaded from HLO text — the interchange
 //! format this environment's xla_extension accepts (see
 //! `python/compile/aot.py`).  Argument order mirrors the manifest.
+//!
+//! All three model variants run through one generic [`StepRunner`] that
+//! owns persistent staging state: the padded graph buffers, the padded
+//! feature buffer, the argument-literal vector (weight literals built
+//! once at construction — the paper's one-time weight load — and
+//! per-step slots overwritten in place), and `&mut` out-buffers instead
+//! of freshly returned `Vec`s.  On the steady-state path the only
+//! remaining Rust-side allocation is the transient copy `to_vec`
+//! performs inside the XLA readback bridge; the staging side is
+//! allocation-free (asserted by `tests/alloc_hotpath.rs`).
 
 use crate::error::{Error, Result};
 use crate::graph::Snapshot;
 use crate::models::{EvolveGcnParams, GcrnM1Params, GcrnM2Params};
 use crate::runtime::manifest::Manifest;
-use crate::runtime::pad::{pad_rows, PaddedGraph};
+use crate::runtime::pad::{pad_rows, PaddedGraph, StagingSlot};
 
 /// A compiled HLO step function on the PJRT CPU client.
 pub struct StepExecutable {
@@ -63,18 +73,293 @@ pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
     )?)
 }
 
-/// EvolveGCN runtime: holds the compiled step, the GRU parameter
-/// literals (loaded once — the paper's one-time weight load) and the
-/// evolving weight state.
-pub struct EvolveGcnExecutor {
+/// Read an f32 literal into a reusable host buffer.  The caller's `Vec`
+/// keeps its allocation across steps; the transient copy lives inside
+/// the XLA readback bridge.
+fn read_into(lit: &xla::Literal, out: &mut Vec<f32>) -> Result<()> {
+    let v = lit.to_vec::<f32>()?;
+    out.clear();
+    out.extend_from_slice(&v);
+    Ok(())
+}
+
+/// Which compiled step artifact a [`StepRunner`] drives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepKind {
+    /// `evolvegcn_step`: weights-evolved; inputs w1/w2, outputs (y, w1, w2).
+    EvolveGcn,
+    /// `gcrn_m1_step`: stacked; inputs h/c, outputs (h, c).
+    GcrnM1,
+    /// `gcrn_m2_step`: integrated; inputs h/c, outputs (h, c).
+    GcrnM2,
+}
+
+impl StepKind {
+    pub fn artifact_name(self) -> &'static str {
+        match self {
+            StepKind::EvolveGcn => "evolvegcn_step",
+            StepKind::GcrnM1 => "gcrn_m1_step",
+            StepKind::GcrnM2 => "gcrn_m2_step",
+        }
+    }
+}
+
+/// Overwrite the five graph/feature argument slots in place from padded
+/// staging buffers (either the runner's own or a pipeline
+/// [`StagingSlot`]'s).
+fn set_graph_args(
+    args: &mut [xla::Literal],
+    m: &Manifest,
+    g: &PaddedGraph,
+    x: &[f32],
+) -> Result<()> {
+    if g.max_edges != m.max_edges || g.max_nodes != m.max_nodes
+        || x.len() != m.max_nodes * m.in_dim
+    {
+        return Err(Error::Artifact(format!(
+            "staging buffers mismatch manifest: edges {}/{}, nodes {}/{}, x {}/{}",
+            g.max_edges,
+            m.max_edges,
+            g.max_nodes,
+            m.max_nodes,
+            x.len(),
+            m.max_nodes * m.in_dim
+        )));
+    }
+    args[0] = lit_i32(&g.src, &[m.max_edges])?;
+    args[1] = lit_i32(&g.dst, &[m.max_edges])?;
+    args[2] = lit_f32(&g.coef, &[m.max_edges])?;
+    args[3] = lit_f32(&g.selfcoef, &[m.max_nodes])?;
+    args[4] = lit_f32(x, &[m.max_nodes, m.in_dim])?;
+    Ok(())
+}
+
+/// Generic step-execution core shared by all model variants.
+///
+/// Argument layout (mirrors every step artifact's signature):
+/// slots `0..5` are graph + features, slots `5..7` are the evolving
+/// state (w1/w2 for EvolveGCN, h/c for the GCRN variants), and the tail
+/// holds the fixed weight literals built once at construction.  Per-step
+/// slots are overwritten in place, so the argument vector itself is
+/// never reallocated.
+pub struct StepRunner {
+    kind: StepKind,
     step: StepExecutable,
     manifest: Manifest,
-    gru_lits: Vec<xla::Literal>,
-    /// Evolving weights, row-major host copies.
-    pub w1: Vec<f32>,
-    pub w2: Vec<f32>,
+    /// `[graph..5, state 5..7, fixed weights 7..]`; leading slots
+    /// rewritten each step.
+    args: Vec<xla::Literal>,
+    /// Internal staging for the unstaged (`run_*` from a raw snapshot)
+    /// path.
     padded: PaddedGraph,
     x_buf: Vec<f32>,
+}
+
+impl StepRunner {
+    /// Compile `kind`'s artifact and pre-build the argument vector.
+    /// `weight_lits` are the model's fixed parameters in artifact order.
+    pub fn new(
+        client: &xla::PjRtClient,
+        dir: &str,
+        kind: StepKind,
+        weight_lits: Vec<xla::Literal>,
+    ) -> Result<StepRunner> {
+        let manifest = Manifest::load(dir)?;
+        let step = StepExecutable::load(client, dir, kind.artifact_name())?;
+        let m = &manifest;
+        let padded = PaddedGraph::new(m);
+        let x_buf = vec![0.0f32; m.max_nodes * m.in_dim];
+        let zero_edges = vec![0i32; m.max_edges];
+        let zero_coef = vec![0.0f32; m.max_edges];
+        let zero_nodes = vec![0.0f32; m.max_nodes];
+        let (d5, d6) = match kind {
+            StepKind::EvolveGcn => (
+                [m.in_dim, m.hidden_dim],
+                [m.hidden_dim, m.out_dim],
+            ),
+            StepKind::GcrnM1 | StepKind::GcrnM2 => (
+                [m.max_nodes, m.hidden_dim],
+                [m.max_nodes, m.hidden_dim],
+            ),
+        };
+        let z5 = vec![0.0f32; d5[0] * d5[1]];
+        let z6 = vec![0.0f32; d6[0] * d6[1]];
+        let mut args = Vec::with_capacity(7 + weight_lits.len());
+        args.push(lit_i32(&zero_edges, &[m.max_edges])?);
+        args.push(lit_i32(&zero_edges, &[m.max_edges])?);
+        args.push(lit_f32(&zero_coef, &[m.max_edges])?);
+        args.push(lit_f32(&zero_nodes, &[m.max_nodes])?);
+        args.push(lit_f32(&x_buf, &[m.max_nodes, m.in_dim])?);
+        args.push(lit_f32(&z5, &d5)?);
+        args.push(lit_f32(&z6, &d6)?);
+        args.extend(weight_lits);
+        Ok(StepRunner { kind, step, manifest, args, padded, x_buf })
+    }
+
+    pub fn kind(&self) -> StepKind {
+        self.kind
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Recurrent step (GCRN variants) from a raw snapshot: pads
+    /// internally, then executes.  `h`/`c` are padded
+    /// `[max_nodes × hidden_dim]` buffers, overwritten with the new
+    /// state.
+    pub fn run_recurrent(
+        &mut self,
+        snap: &Snapshot,
+        x: &[f32],
+        h: &mut Vec<f32>,
+        c: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.padded.fill(snap)?;
+        pad_rows(
+            x,
+            snap.num_nodes(),
+            self.manifest.in_dim,
+            self.manifest.max_nodes,
+            &mut self.x_buf,
+        );
+        set_graph_args(&mut self.args, &self.manifest, &self.padded, &self.x_buf)?;
+        self.finish_recurrent(h, c)
+    }
+
+    /// Recurrent step from a pre-staged slot (graph + features already
+    /// padded on the pipeline's stage thread).
+    pub fn run_recurrent_staged(
+        &mut self,
+        slot: &StagingSlot,
+        h: &mut Vec<f32>,
+        c: &mut Vec<f32>,
+    ) -> Result<()> {
+        set_graph_args(&mut self.args, &self.manifest, &slot.graph, &slot.x)?;
+        self.finish_recurrent(h, c)
+    }
+
+    /// Weights-evolved step (EvolveGCN) from a raw snapshot.  `w1`/`w2`
+    /// are the evolving weights, updated in place; `out` receives the
+    /// first `num_nodes × out_dim` embeddings.
+    pub fn run_evolve(
+        &mut self,
+        snap: &Snapshot,
+        x: &[f32],
+        w1: &mut Vec<f32>,
+        w2: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let n = snap.num_nodes();
+        self.padded.fill(snap)?;
+        pad_rows(
+            x,
+            n,
+            self.manifest.in_dim,
+            self.manifest.max_nodes,
+            &mut self.x_buf,
+        );
+        set_graph_args(&mut self.args, &self.manifest, &self.padded, &self.x_buf)?;
+        self.finish_evolve(w1, w2, out, n)
+    }
+
+    /// Weights-evolved step from a pre-staged slot.
+    pub fn run_evolve_staged(
+        &mut self,
+        slot: &StagingSlot,
+        w1: &mut Vec<f32>,
+        w2: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        set_graph_args(&mut self.args, &self.manifest, &slot.graph, &slot.x)?;
+        self.finish_evolve(w1, w2, out, slot.graph.num_nodes)
+    }
+
+    fn finish_recurrent(&mut self, h: &mut Vec<f32>, c: &mut Vec<f32>) -> Result<()> {
+        if self.kind == StepKind::EvolveGcn {
+            return Err(Error::Artifact(
+                "recurrent step requested on an EvolveGCN runner".into(),
+            ));
+        }
+        let (mn, hd) = (self.manifest.max_nodes, self.manifest.hidden_dim);
+        if h.len() != mn * hd || c.len() != mn * hd {
+            return Err(Error::Artifact(format!(
+                "state buffers must be padded to {mn}×{hd} (got h={}, c={})",
+                h.len(),
+                c.len()
+            )));
+        }
+        self.args[5] = lit_f32(h, &[mn, hd])?;
+        self.args[6] = lit_f32(c, &[mn, hd])?;
+        let outs = self.execute()?;
+        if outs.len() != 2 {
+            return Err(Error::Artifact(format!(
+                "{} returned {} outputs, want 2",
+                self.kind.artifact_name(),
+                outs.len()
+            )));
+        }
+        read_into(&outs[0], h)?;
+        read_into(&outs[1], c)?;
+        Ok(())
+    }
+
+    fn finish_evolve(
+        &mut self,
+        w1: &mut Vec<f32>,
+        w2: &mut Vec<f32>,
+        out: &mut Vec<f32>,
+        n_valid: usize,
+    ) -> Result<()> {
+        if self.kind != StepKind::EvolveGcn {
+            return Err(Error::Artifact(
+                "evolve step requested on a recurrent runner".into(),
+            ));
+        }
+        let (ind, hd, od) = (
+            self.manifest.in_dim,
+            self.manifest.hidden_dim,
+            self.manifest.out_dim,
+        );
+        if w1.len() != ind * hd || w2.len() != hd * od {
+            return Err(Error::Artifact(format!(
+                "weight buffers must be {ind}×{hd} and {hd}×{od} (got {}, {})",
+                w1.len(),
+                w2.len()
+            )));
+        }
+        self.args[5] = lit_f32(w1, &[ind, hd])?;
+        self.args[6] = lit_f32(w2, &[hd, od])?;
+        let outs = self.execute()?;
+        if outs.len() != 3 {
+            return Err(Error::Artifact(format!(
+                "{} returned {} outputs, want 3",
+                self.kind.artifact_name(),
+                outs.len()
+            )));
+        }
+        read_into(&outs[0], out)?;
+        read_into(&outs[1], w1)?;
+        read_into(&outs[2], w2)?;
+        out.truncate(n_valid * od);
+        Ok(())
+    }
+
+    fn execute(&self) -> Result<Vec<xla::Literal>> {
+        let result = self.step.exe.execute::<xla::Literal>(&self.args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// EvolveGCN runtime: a [`StepRunner`] plus the evolving-weight host
+/// copies (the GRU parameter literals are loaded once — the paper's
+/// one-time weight load).
+pub struct EvolveGcnExecutor {
+    runner: StepRunner,
+    /// Evolving weights, row-major host copies, updated in place.
+    pub w1: Vec<f32>,
+    pub w2: Vec<f32>,
 }
 
 impl EvolveGcnExecutor {
@@ -83,8 +368,6 @@ impl EvolveGcnExecutor {
         dir: &str,
         params: &EvolveGcnParams,
     ) -> Result<EvolveGcnExecutor> {
-        let manifest = Manifest::load(dir)?;
-        let step = StepExecutable::load(client, dir, "evolvegcn_step")?;
         let d = params.dims;
         let mut gru_lits = Vec::with_capacity(18);
         for (gp, rows, cols) in [
@@ -97,81 +380,49 @@ impl EvolveGcnExecutor {
                 gru_lits.push(lit_f32(m, &shape)?);
             }
         }
+        let runner = StepRunner::new(client, dir, StepKind::EvolveGcn, gru_lits)?;
         Ok(EvolveGcnExecutor {
-            step,
-            padded: PaddedGraph::new(&manifest),
-            manifest,
-            gru_lits,
+            runner,
             w1: params.w1.clone(),
             w2: params.w2.clone(),
-            x_buf: Vec::new(),
         })
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        self.runner.manifest()
     }
 
-    /// Run one snapshot step: updates the evolving weights in place and
-    /// returns the output embeddings ([num_nodes × out_dim], unpadded).
+    /// One snapshot step into a reused output buffer (the steady-state
+    /// hot path): updates the evolving weights in place and writes the
+    /// `[num_nodes × out_dim]` embeddings into `out`.
+    pub fn run_step_into(&mut self, snap: &Snapshot, x: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        self.runner.run_evolve(snap, x, &mut self.w1, &mut self.w2, out)
+    }
+
+    /// Staged variant: graph + features already padded into `slot` by
+    /// the pipeline's stage thread.
+    pub fn run_step_staged(&mut self, slot: &StagingSlot, out: &mut Vec<f32>) -> Result<()> {
+        self.runner.run_evolve_staged(slot, &mut self.w1, &mut self.w2, out)
+    }
+
+    /// Convenience wrapper returning a fresh `Vec` (allocates; use
+    /// [`Self::run_step_into`] on the hot path).
     pub fn run_step(&mut self, snap: &Snapshot, x: &[f32]) -> Result<Vec<f32>> {
-        let m = &self.manifest;
-        let n = snap.num_nodes();
-        self.padded.fill(snap)?;
-        pad_rows(x, n, m.in_dim, m.max_nodes, &mut self.x_buf);
-
-        let mut args = Vec::with_capacity(7 + 18);
-        args.push(lit_i32(&self.padded.src, &[m.max_edges])?);
-        args.push(lit_i32(&self.padded.dst, &[m.max_edges])?);
-        args.push(lit_f32(&self.padded.coef, &[m.max_edges])?);
-        args.push(lit_f32(&self.padded.selfcoef, &[m.max_nodes])?);
-        args.push(lit_f32(&self.x_buf, &[m.max_nodes, m.in_dim])?);
-        args.push(lit_f32(&self.w1, &[m.in_dim, m.hidden_dim])?);
-        args.push(lit_f32(&self.w2, &[m.hidden_dim, m.out_dim])?);
-        // execute with borrowed literals: the GRU parameter literals are
-        // created once at construction (the paper's one-time weight load)
-        // and passed by reference — execute() takes Borrow<Literal>.
-        let outs = {
-            let mut all: Vec<&xla::Literal> = args.iter().collect();
-            all.extend(self.gru_lits.iter());
-            let result = self.step.exe_ref().execute::<&xla::Literal>(&all)?;
-            let lit = result[0][0].to_literal_sync()?;
-            lit.to_tuple()?
-        };
-        if outs.len() != 3 {
-            return Err(Error::Artifact(format!(
-                "evolvegcn_step returned {} outputs, want 3",
-                outs.len()
-            )));
-        }
-        let out_full = outs[0].to_vec::<f32>()?;
-        self.w1 = outs[1].to_vec::<f32>()?;
-        self.w2 = outs[2].to_vec::<f32>()?;
-        Ok(out_full[..n * m.out_dim].to_vec())
+        let mut out = Vec::new();
+        self.run_step_into(snap, x, &mut out)?;
+        Ok(out)
     }
 }
 
-impl StepExecutable {
-    fn exe_ref(&self) -> &xla::PjRtLoadedExecutable {
-        &self.exe
-    }
-}
-
-/// GCRN-M1 (stacked DGNN) runtime: compiled step + weight literals.
-/// Demonstrates the framework's genericity — same executor pattern, a
-/// different per-snapshot step artifact.
+/// GCRN-M1 (stacked DGNN) runtime.  Demonstrates the framework's
+/// genericity — same [`StepRunner`] core, a different per-snapshot step
+/// artifact and weight literals.
 pub struct GcrnM1Executor {
-    step: StepExecutable,
-    manifest: Manifest,
-    w_lits: Vec<xla::Literal>, // w1, w2, wx, wh, b
-    padded: PaddedGraph,
-    x_buf: Vec<f32>,
+    runner: StepRunner,
 }
 
 impl GcrnM1Executor {
     pub fn new(client: &xla::PjRtClient, dir: &str, params: &GcrnM1Params) -> Result<GcrnM1Executor> {
-        let manifest = Manifest::load(dir)?;
-        let step = StepExecutable::load(client, dir, "gcrn_m1_step")?;
         let d = params.dims;
         let w_lits = vec![
             lit_f32(&params.w1, &[d.in_dim, d.hidden_dim])?,
@@ -181,16 +432,12 @@ impl GcrnM1Executor {
             lit_f32(&params.b, &[4 * d.hidden_dim])?,
         ];
         Ok(GcrnM1Executor {
-            step,
-            w_lits,
-            padded: PaddedGraph::new(&manifest),
-            manifest,
-            x_buf: Vec::new(),
+            runner: StepRunner::new(client, dir, StepKind::GcrnM1, w_lits)?,
         })
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        self.runner.manifest()
     }
 
     /// One snapshot step; `h`/`c` are padded state buffers, overwritten.
@@ -201,74 +448,47 @@ impl GcrnM1Executor {
         h: &mut Vec<f32>,
         c: &mut Vec<f32>,
     ) -> Result<()> {
-        let m = &self.manifest;
-        let n = snap.num_nodes();
-        self.padded.fill(snap)?;
-        pad_rows(x, n, m.in_dim, m.max_nodes, &mut self.x_buf);
-        let args = [
-            lit_i32(&self.padded.src, &[m.max_edges])?,
-            lit_i32(&self.padded.dst, &[m.max_edges])?,
-            lit_f32(&self.padded.coef, &[m.max_edges])?,
-            lit_f32(&self.padded.selfcoef, &[m.max_nodes])?,
-            lit_f32(&self.x_buf, &[m.max_nodes, m.in_dim])?,
-            lit_f32(h, &[m.max_nodes, m.hidden_dim])?,
-            lit_f32(c, &[m.max_nodes, m.hidden_dim])?,
-        ];
-        let outs = {
-            let mut all: Vec<&xla::Literal> = args.iter().collect();
-            all.extend(self.w_lits.iter());
-            let result = self.step.exe_ref().execute::<&xla::Literal>(&all)?;
-            let lit = result[0][0].to_literal_sync()?;
-            lit.to_tuple()?
-        };
-        if outs.len() != 2 {
-            return Err(Error::Artifact(format!(
-                "gcrn_m1_step returned {} outputs, want 2",
-                outs.len()
-            )));
-        }
-        *h = outs[0].to_vec::<f32>()?;
-        *c = outs[1].to_vec::<f32>()?;
-        Ok(())
+        self.runner.run_recurrent(snap, x, h, c)
+    }
+
+    /// Staged variant (graph + features pre-padded in `slot`).
+    pub fn run_step_staged(
+        &mut self,
+        slot: &StagingSlot,
+        h: &mut Vec<f32>,
+        c: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.runner.run_recurrent_staged(slot, h, c)
     }
 }
 
-/// GCRN-M2 runtime: compiled step + weight literals + padded state
-/// buffers; recurrent state lives in `coordinator::NodeStateStore`.
+/// GCRN-M2 runtime; recurrent state lives in
+/// `coordinator::NodeStateStore` / `coordinator::ResidentState`.
 pub struct GcrnExecutor {
-    step: StepExecutable,
-    manifest: Manifest,
-    wx_lit: xla::Literal,
-    wh_lit: xla::Literal,
-    b_lit: xla::Literal,
-    padded: PaddedGraph,
-    x_buf: Vec<f32>,
+    runner: StepRunner,
 }
 
 impl GcrnExecutor {
     pub fn new(client: &xla::PjRtClient, dir: &str, params: &GcrnM2Params) -> Result<GcrnExecutor> {
-        let manifest = Manifest::load(dir)?;
-        let step = StepExecutable::load(client, dir, "gcrn_m2_step")?;
         let d = params.dims;
+        let w_lits = vec![
+            lit_f32(&params.wx, &[d.in_dim, 4 * d.hidden_dim])?,
+            lit_f32(&params.wh, &[d.hidden_dim, 4 * d.hidden_dim])?,
+            lit_f32(&params.b, &[4 * d.hidden_dim])?,
+        ];
         Ok(GcrnExecutor {
-            step,
-            wx_lit: lit_f32(&params.wx, &[d.in_dim, 4 * d.hidden_dim])?,
-            wh_lit: lit_f32(&params.wh, &[d.hidden_dim, 4 * d.hidden_dim])?,
-            b_lit: lit_f32(&params.b, &[4 * d.hidden_dim])?,
-            padded: PaddedGraph::new(&manifest),
-            manifest,
-            x_buf: Vec::new(),
+            runner: StepRunner::new(client, dir, StepKind::GcrnM2, w_lits)?,
         })
     }
 
     pub fn manifest(&self) -> &Manifest {
-        &self.manifest
+        self.runner.manifest()
     }
 
-    /// Run one snapshot step.  `h`/`c` are padded [max_nodes × hidden]
-    /// buffers (gathered by the caller from DRAM state); they are
-    /// overwritten with the new state.  Returns nothing else — the new
-    /// H *is* the output embedding for integrated DGNNs.
+    /// Run one snapshot step.  `h`/`c` are padded `[max_nodes × hidden]`
+    /// buffers (gathered by the caller from DRAM state, or resident via
+    /// `coordinator::ResidentState`); they are overwritten with the new
+    /// state.  The new H *is* the output embedding for integrated DGNNs.
     pub fn run_step(
         &mut self,
         snap: &Snapshot,
@@ -276,36 +496,16 @@ impl GcrnExecutor {
         h: &mut Vec<f32>,
         c: &mut Vec<f32>,
     ) -> Result<()> {
-        let m = &self.manifest;
-        let n = snap.num_nodes();
-        self.padded.fill(snap)?;
-        pad_rows(x, n, m.in_dim, m.max_nodes, &mut self.x_buf);
-        let args = [
-            lit_i32(&self.padded.src, &[m.max_edges])?,
-            lit_i32(&self.padded.dst, &[m.max_edges])?,
-            lit_f32(&self.padded.coef, &[m.max_edges])?,
-            lit_f32(&self.padded.selfcoef, &[m.max_nodes])?,
-            lit_f32(&self.x_buf, &[m.max_nodes, m.in_dim])?,
-            lit_f32(h, &[m.max_nodes, m.hidden_dim])?,
-            lit_f32(c, &[m.max_nodes, m.hidden_dim])?,
-        ];
-        let outs = {
-            let mut all: Vec<&xla::Literal> = args.iter().collect();
-            all.push(&self.wx_lit);
-            all.push(&self.wh_lit);
-            all.push(&self.b_lit);
-            let result = self.step.exe_ref().execute::<&xla::Literal>(&all)?;
-            let lit = result[0][0].to_literal_sync()?;
-            lit.to_tuple()?
-        };
-        if outs.len() != 2 {
-            return Err(Error::Artifact(format!(
-                "gcrn_m2_step returned {} outputs, want 2",
-                outs.len()
-            )));
-        }
-        *h = outs[0].to_vec::<f32>()?;
-        *c = outs[1].to_vec::<f32>()?;
-        Ok(())
+        self.runner.run_recurrent(snap, x, h, c)
+    }
+
+    /// Staged variant (graph + features pre-padded in `slot`).
+    pub fn run_step_staged(
+        &mut self,
+        slot: &StagingSlot,
+        h: &mut Vec<f32>,
+        c: &mut Vec<f32>,
+    ) -> Result<()> {
+        self.runner.run_recurrent_staged(slot, h, c)
     }
 }

@@ -11,6 +11,6 @@ pub mod executor;
 pub mod manifest;
 pub mod pad;
 
-pub use executor::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor, StepExecutable};
+pub use executor::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor, StepExecutable, StepKind, StepRunner};
 pub use manifest::Manifest;
-pub use pad::PaddedGraph;
+pub use pad::{PaddedGraph, StagingSlot};

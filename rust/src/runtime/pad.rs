@@ -12,7 +12,18 @@ use crate::error::{Error, Result};
 use crate::graph::Snapshot;
 use crate::runtime::manifest::Manifest;
 
+/// Reinterpret a `&[u32]` of local node ids as `&[i32]` (same layout;
+/// ids are bounded by the node budget, far below 2³¹).
+fn ids_as_i32(v: &[u32]) -> &[i32] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const i32, v.len()) }
+}
+
 /// Reusable padded buffers for one snapshot's graph arrays.
+///
+/// Between fills the buffers must be treated as read-only: `fill` tracks
+/// a high-water mark so only the previously-dirty tail is re-zeroed, and
+/// external writes past `num_edges`/`num_nodes` would break that
+/// invariant.
 #[derive(Clone, Debug)]
 pub struct PaddedGraph {
     pub max_nodes: usize,
@@ -24,6 +35,9 @@ pub struct PaddedGraph {
     /// Nodes actually valid in the current contents.
     pub num_nodes: usize,
     pub num_edges: usize,
+    /// Dirty high-water marks: entries beyond these are known-zero.
+    edge_hwm: usize,
+    node_hwm: usize,
 }
 
 impl PaddedGraph {
@@ -37,10 +51,15 @@ impl PaddedGraph {
             selfcoef: vec![0.0; m.max_nodes],
             num_nodes: 0,
             num_edges: 0,
+            edge_hwm: 0,
+            node_hwm: 0,
         }
     }
 
     /// Fill the buffers from a snapshot; errors if it exceeds the budget.
+    /// Bulk copies plus tail zeroing bounded by the high-water mark —
+    /// allocation-free and O(edges of this and the previous snapshot),
+    /// not O(max_edges).
     pub fn fill(&mut self, snap: &Snapshot) -> Result<()> {
         let n = snap.num_nodes();
         let e = snap.num_edges();
@@ -50,23 +69,84 @@ impl PaddedGraph {
         if e > self.max_edges {
             return Err(Error::Budget { what: "edges", got: e, max: self.max_edges });
         }
-        for i in 0..e {
-            self.src[i] = snap.src[i] as i32;
-            self.dst[i] = snap.dst[i] as i32;
-            self.coef[i] = snap.coef[i];
+        self.src[..e].copy_from_slice(ids_as_i32(&snap.src));
+        self.dst[..e].copy_from_slice(ids_as_i32(&snap.dst));
+        self.coef[..e].copy_from_slice(&snap.coef);
+        if self.edge_hwm > e {
+            // only the previously-dirty tail needs re-zeroing
+            self.src[e..self.edge_hwm].fill(0);
+            self.dst[e..self.edge_hwm].fill(0);
+            self.coef[e..self.edge_hwm].fill(0.0);
         }
-        // zero the padding tail (previous contents may linger)
-        for i in e..self.max_edges {
-            self.src[i] = 0;
-            self.dst[i] = 0;
-            self.coef[i] = 0.0;
-        }
+        self.edge_hwm = e;
         self.selfcoef[..n].copy_from_slice(&snap.selfcoef);
-        for v in &mut self.selfcoef[n..] {
-            *v = 0.0;
+        if self.node_hwm > n {
+            self.selfcoef[n..self.node_hwm].fill(0.0);
         }
+        self.node_hwm = n;
         self.num_nodes = n;
         self.num_edges = e;
+        Ok(())
+    }
+}
+
+/// One recyclable staging buffer for the three-stage pipeline: the
+/// padded graph arrays plus the padded feature matrix — everything the
+/// producer-side stage can materialise ahead of inference.
+#[derive(Clone, Debug)]
+pub struct StagingSlot {
+    pub graph: PaddedGraph,
+    /// Padded features, `[max_nodes × in_dim]` row-major.
+    pub x: Vec<f32>,
+    in_dim: usize,
+    /// Feature rows possibly nonzero from a previous stage.
+    x_hwm: usize,
+}
+
+impl StagingSlot {
+    pub fn new(m: &Manifest) -> Self {
+        StagingSlot {
+            graph: PaddedGraph::new(m),
+            x: vec![0.0; m.max_nodes * m.in_dim],
+            in_dim: m.in_dim,
+            x_hwm: 0,
+        }
+    }
+
+    /// Stage one snapshot: pad the graph arrays and materialise features
+    /// row by row via `features(raw_id, row_out)`.  Allocation-free once
+    /// constructed.
+    pub fn stage(
+        &mut self,
+        snap: &Snapshot,
+        mut features: impl FnMut(u32, &mut [f32]),
+    ) -> Result<()> {
+        self.graph.fill(snap)?;
+        let d = self.in_dim;
+        for (local, raw) in snap.renumber.iter() {
+            let i = local as usize * d;
+            features(raw, &mut self.x[i..i + d]);
+        }
+        let n = snap.num_nodes();
+        if self.x_hwm > n {
+            self.x[n * d..self.x_hwm * d].fill(0.0);
+        }
+        self.x_hwm = n;
+        Ok(())
+    }
+
+    /// Stage from an already-materialised dense `[n × in_dim]` feature
+    /// matrix (e.g. a pipeline payload computed on the prepare thread).
+    pub fn stage_from_rows(&mut self, snap: &Snapshot, x: &[f32]) -> Result<()> {
+        self.graph.fill(snap)?;
+        let d = self.in_dim;
+        let n = snap.num_nodes();
+        debug_assert_eq!(x.len(), n * d, "feature matrix must be [num_nodes × in_dim]");
+        self.x[..n * d].copy_from_slice(x);
+        if self.x_hwm > n {
+            self.x[n * d..self.x_hwm * d].fill(0.0);
+        }
+        self.x_hwm = n;
         Ok(())
     }
 }
@@ -127,6 +207,34 @@ mod tests {
         assert!(pg.src[1..].iter().all(|&v| v == 0));
         assert!(pg.coef[1..].iter().all(|&v| v == 0.0));
         assert!(pg.selfcoef[2..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn hwm_grow_shrink_grow_stays_clean() {
+        let mut pg = PaddedGraph::new(&manifest());
+        pg.fill(&snap(8, 6)).unwrap();
+        pg.fill(&snap(2, 1)).unwrap();
+        pg.fill(&snap(4, 3)).unwrap();
+        // tail beyond 3 edges / 4 nodes must be zero after the regrow
+        assert!(pg.src[3..].iter().all(|&v| v == 0));
+        assert!(pg.dst[3..].iter().all(|&v| v == 0));
+        assert!(pg.coef[3..].iter().all(|&v| v == 0.0));
+        assert!(pg.selfcoef[4..].iter().all(|&v| v == 0.0));
+        assert_eq!(pg.num_edges, 3);
+        assert_eq!(pg.num_nodes, 4);
+    }
+
+    #[test]
+    fn staging_slot_pads_features_and_zeroes_tail() {
+        let m = manifest();
+        let mut slot = StagingSlot::new(&m);
+        slot.stage(&snap(4, 3), |raw, row| row.fill(raw as f32 + 1.0)).unwrap();
+        assert!(slot.x[..4 * m.in_dim].iter().all(|&v| v != 0.0));
+        assert!(slot.x[4 * m.in_dim..].iter().all(|&v| v == 0.0));
+        slot.stage(&snap(2, 1), |_raw, row| row.fill(0.5)).unwrap();
+        assert!(slot.x[..2 * m.in_dim].iter().all(|&v| v == 0.5));
+        assert!(slot.x[2 * m.in_dim..].iter().all(|&v| v == 0.0));
+        assert_eq!(slot.graph.num_nodes, 2);
     }
 
     #[test]

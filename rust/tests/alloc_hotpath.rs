@@ -1,0 +1,88 @@
+//! Steady-state zero-allocation assertion for the staging hot path.
+//!
+//! A counting global allocator wraps `System`; after a warm-up cycle
+//! over the snapshot stream (letting every buffer and map reach its
+//! high-water capacity), a full staging step — `PaddedGraph::fill` via
+//! `StagingSlot::stage`, feature materialisation, a full-gather
+//! `gather_padded_into`, and the delta-aware `ResidentState::advance` —
+//! must perform zero heap allocations.
+//!
+//! This binary intentionally holds a single `#[test]` so no concurrent
+//! test thread can perturb the allocation counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+use dgnn_booster::coordinator::preprocess::preprocess_stream;
+use dgnn_booster::coordinator::{NodeStateStore, ResidentState};
+use dgnn_booster::datasets::{synth, BC_ALPHA};
+use dgnn_booster::models::{node_features_into, Dims};
+use dgnn_booster::runtime::{Manifest, StagingSlot};
+
+#[test]
+fn staging_path_steady_state_is_allocation_free() {
+    let dims = Dims::default();
+    let stream = synth::generate(&BC_ALPHA, 42);
+    let mut snaps = preprocess_stream(&stream, BC_ALPHA.splitter_secs).unwrap();
+    snaps.truncate(12);
+    let max_nodes = snaps.iter().map(|s| s.num_nodes()).max().unwrap();
+    let max_edges = snaps.iter().map(|s| s.num_edges()).max().unwrap();
+    let m = Manifest {
+        max_nodes,
+        max_edges,
+        in_dim: dims.in_dim,
+        hidden_dim: dims.hidden_dim,
+        out_dim: dims.out_dim,
+    };
+    let mut slot = StagingSlot::new(&m);
+    let mut store = NodeStateStore::zeros(4000, dims.hidden_dim);
+    let mut res = ResidentState::new(max_nodes, dims.hidden_dim);
+    let mut gathered = Vec::new();
+
+    // warm-up: two full cycles so every Vec/HashMap reaches its
+    // high-water capacity (including the wrap-around transition)
+    for s in snaps.iter().chain(snaps.iter()) {
+        slot.stage(s, |raw, row| node_features_into(raw, 42, row)).unwrap();
+        store.gather_padded_into(s, max_nodes, &mut gathered);
+        res.advance(&mut store, s).unwrap();
+    }
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for s in &snaps {
+        slot.stage(s, |raw, row| node_features_into(raw, 42, row)).unwrap();
+        store.gather_padded_into(s, max_nodes, &mut gathered);
+        res.advance(&mut store, s).unwrap();
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "staging hot path performed {} heap allocations at steady state",
+        after - before
+    );
+}
