@@ -1,0 +1,142 @@
+//! Host message-passing kernel sweep: the COO edge-walk reference vs
+//! the CSR engine (serial and node-parallel at several thread counts)
+//! vs the fused aggregate-project kernel, over several synthetic graph
+//! sizes.  The paper's V2 speedup comes from node-parallel message
+//! passing (§V); this bench tracks how much of that the host-side
+//! engine recovers on this machine.
+//!
+//! Writes `BENCH_kernels.json` (median + MAD per bench, same format as
+//! `BENCH_hotpath.json`, plus the headline parallel-vs-COO speedup on
+//! the largest graph) so the perf trajectory is machine-tracked across
+//! PRs.  Before any timing, every CSR path is asserted bitwise-equal to
+//! the COO reference.
+//!
+//! `cargo bench --bench kernels` — full sweep.
+//! `cargo bench --bench kernels -- --smoke` — single-iteration CI gate.
+
+use dgnn_booster::datasets::synth::random_snapshot;
+use dgnn_booster::graph::SnapshotCsr;
+use dgnn_booster::metrics::{bench_loop_record, write_bench_json, BenchRecord};
+use dgnn_booster::numerics::{self, Engine, Mat};
+use dgnn_booster::testutil::Pcg32;
+
+/// (nodes, avg degree, feature dim); the last entry is the "largest
+/// synthetic graph" the headline speedup is measured on.
+const SIZES: [(usize, usize, usize); 3] = [(256, 8, 32), (1024, 16, 32), (4096, 16, 64)];
+const THREADS: [usize; 3] = [1, 2, 4];
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut rng = Pcg32::seeded(42);
+    let mut records: Vec<BenchRecord> = Vec::new();
+    // headline numbers, taken on the largest size: the COO serial path
+    // as shipped (allocating `numerics::aggregate`) and the alloc-free
+    // COO walk, so the CSR/parallelism win is separable from the
+    // allocation-removal win
+    let mut coo_largest = 0.0f64;
+    let mut coo_into_largest = 0.0f64;
+    let mut csr4_largest = 0.0f64;
+    let (n_big, _, _) = SIZES[SIZES.len() - 1];
+
+    for (n, deg, d) in SIZES {
+        let e = n * deg;
+        let snap = random_snapshot(&mut rng, n, e);
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        let x = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+        let w = Mat::from_vec(d, d, rng.normal_vec(d * d, 0.5));
+        let serial = Engine::serial();
+        // iteration budget scaled so each record costs roughly the same
+        // wall time; --smoke collapses to one iteration per record
+        let iters = if smoke { 1 } else { (40_000_000 / (e * d)).clamp(12, 200) };
+
+        // --- bitwise gate before any timing -------------------------
+        let reference = numerics::aggregate(&snap, &x);
+        for t in THREADS {
+            let eng = Engine::new(t);
+            let got = eng.aggregate(&csr, &snap.selfcoef, &x);
+            assert_eq!(
+                got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                reference.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "CSR t={t} diverged from COO reference at n={n}"
+            );
+        }
+
+        // --- COO serial path (the reference walk, fresh output) -----
+        let coo = bench_loop_record(&format!("aggregate coo n={n} deg={deg} d={d}"), iters, || {
+            numerics::aggregate(&snap, &x).data[0]
+        });
+        // allocation-free COO variant, for the alloc-vs-kernel split
+        let mut out = Mat::zeros(n, d);
+        let coo_into = bench_loop_record(
+            &format!("aggregate coo-into n={n} deg={deg} d={d}"),
+            iters,
+            || {
+                numerics::aggregate_into(&snap, &x, &mut out);
+                out.data[0]
+            },
+        );
+
+        // --- CSR engine at each thread count ------------------------
+        for t in THREADS {
+            let eng = Engine::new(t);
+            let rec = bench_loop_record(
+                &format!("aggregate csr t={t} n={n} deg={deg} d={d}"),
+                iters,
+                || {
+                    eng.aggregate_into(&csr, &snap.selfcoef, &x, &mut out);
+                    out.data[0]
+                },
+            );
+            if n == n_big && t == *THREADS.last().unwrap() {
+                coo_largest = coo.median_s;
+                coo_into_largest = coo_into.median_s;
+                csr4_largest = rec.median_s;
+            }
+            records.push(rec);
+        }
+
+        // --- fused vs two-step GCN projection (serial) --------------
+        let mut proj = Mat::zeros(n, d);
+        records.push(bench_loop_record(
+            &format!("agg+matmul two-step n={n} deg={deg} d={d}"),
+            iters,
+            || {
+                serial.aggregate_into(&csr, &snap.selfcoef, &x, &mut out);
+                serial.matmul_into(&out, &w, &mut proj);
+                proj.data[0]
+            },
+        ));
+        records.push(bench_loop_record(
+            &format!("agg+matmul fused n={n} deg={deg} d={d}"),
+            iters,
+            || {
+                serial.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut proj);
+                proj.data[0]
+            },
+        ));
+        records.push(coo);
+        records.push(coo_into);
+    }
+
+    let speedup = if csr4_largest > 0.0 { coo_largest / csr4_largest } else { 0.0 };
+    let speedup_into =
+        if csr4_largest > 0.0 { coo_into_largest / csr4_largest } else { 0.0 };
+    write_bench_json(
+        "BENCH_kernels.json",
+        &records,
+        &[
+            ("speedup_parallel_csr_vs_coo_largest", speedup),
+            ("speedup_parallel_csr_vs_coo_into_largest", speedup_into),
+            ("threads_max", *THREADS.last().unwrap() as f64),
+            ("largest_nodes", n_big as f64),
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+        ],
+    )
+    .expect("write BENCH_kernels.json");
+    println!(
+        "wrote BENCH_kernels.json (parallel-CSR vs COO on n={n_big}: {speedup:.2}x \
+         vs the shipped serial path, {speedup_into:.2}x vs the alloc-free walk, \
+         at {} threads)",
+        THREADS.last().unwrap()
+    );
+}

@@ -14,8 +14,10 @@ fn main() {
     let ctx = ReportCtx::default();
     println!("{}", table4(&ctx).expect("table4"));
 
-    // measured CPU baseline (pure-Rust mirror on this machine)
+    // measured CPU baseline (pure-Rust mirror on this machine), serial
+    // and through the 4-thread sparse engine (node-parallel CSR kernels)
     println!("Measured CPU baseline (this machine, pure-Rust mirror):");
+    let eng4 = dgnn_booster::numerics::Engine::new(4);
     for p in [&BC_ALPHA, &UCI] {
         let mut snaps = snapshots(&ctx, p).expect("snaps");
         snaps.truncate(40);
@@ -27,8 +29,13 @@ fn main() {
             .flat_map(|s| s.renumber.iter().map(|(_, r)| r as usize + 1))
             .max()
             .unwrap_or(1);
-        let (ms_g, _) = cpu::measure_gcrn(&snaps, &gp, total_nodes, ctx.seed);
-        println!("  {:>9}: EvolveGCN {ms_e:.3} ms/snap, GCRN-M2 {ms_g:.3} ms/snap", p.name);
+        let (ms_g, sum_serial) = cpu::measure_gcrn(&snaps, &gp, total_nodes, ctx.seed);
+        let (ms_g4, sum_par) = cpu::measure_gcrn_with(&eng4, &snaps, &gp, total_nodes, ctx.seed);
+        assert_eq!(sum_serial, sum_par, "parallel engine diverged from serial");
+        println!(
+            "  {:>9}: EvolveGCN {ms_e:.3} ms/snap, GCRN-M2 {ms_g:.3} ms/snap (x4 engine {ms_g4:.3})",
+            p.name
+        );
     }
 
     // timing of the FPGA simulator itself (it sits on the bench path)

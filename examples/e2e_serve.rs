@@ -6,18 +6,26 @@
 //! the FPGA-projected per-snapshot latency.
 //!
 //! The request path runs the staged hot path: the three-stage pipeline
-//! (preprocess → stage → infer) pads graphs and materialises features on
-//! producer threads into recycled `StagingSlot`s, overlapped with PJRT
-//! execution; with `--delta`, recurrent state uses delta-aware
-//! `ResidentState` gathers (paper §VI) instead of full gather/scatter —
-//! the mirror cross-check always uses full gathers, so it also validates
-//! that the delta path matches bit-close.
+//! (preprocess → stage → infer) materialises features on the prepare
+//! thread, then pads graphs and rebuilds each snapshot's
+//! destination-major CSR on the stage thread into recycled
+//! `StagingSlot`s, overlapped with PJRT execution.  With `--delta`,
+//! recurrent state uses delta-aware `ResidentState` gathers (paper §VI)
+//! **and** feature staging goes through `StagingSlot::stage_delta` on a
+//! persistent cache slot (pool slots recycle every POOL snapshots, so
+//! their own bookkeeping would measure overlap at distance POOL, not
+//! 1), which only materialises rows for nodes absent from the previous
+//! snapshot.  The mirror cross-check always uses full gathers and runs
+//! through the sparse engine (`numerics::spmm`) over the slot's cached
+//! CSR — `--threads N` sets its worker count — so it also validates
+//! that the delta and parallel paths match bit-close.
 //!
 //! Requires `make artifacts`.  Usage:
 //! ```
 //! cargo run --release --example e2e_serve              # full streams
 //! cargo run --release --example e2e_serve -- --snapshots 40
-//! cargo run --release --example e2e_serve -- --delta   # §VI delta gathers
+//! cargo run --release --example e2e_serve -- --delta   # §VI delta gathers + delta feature staging
+//! cargo run --release --example e2e_serve -- --threads 4   # parallel mirror engine
 //! ```
 
 use dgnn_booster::baselines::cpu::features_for;
@@ -25,10 +33,10 @@ use dgnn_booster::coordinator::pipeline::{run_stream_staged, StepResult};
 use dgnn_booster::coordinator::{NodeStateStore, ResidentState};
 use dgnn_booster::datasets::{self, BC_ALPHA, UCI};
 use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
-use dgnn_booster::graph::{CooStream, Snapshot};
+use dgnn_booster::graph::{CooStream, Snapshot, SnapshotCsr};
 use dgnn_booster::metrics::LatencyStats;
-use dgnn_booster::models::{Dims, EvolveGcnParams, GcrnM1Params, GcrnM2Params, ModelKind};
-use dgnn_booster::numerics::{self, Mat};
+use dgnn_booster::models::{node_features_into, Dims, EvolveGcnParams, GcrnM1Params, GcrnM2Params, ModelKind};
+use dgnn_booster::numerics::{self, Engine, Mat};
 use dgnn_booster::report::tables::{snapshots, ReportCtx};
 use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor, Manifest, StagingSlot};
 use dgnn_booster::testutil::max_abs_diff;
@@ -45,30 +53,73 @@ fn main() -> dgnn_booster::Result<()> {
         .map(|w| w[1].parse::<usize>().expect("--snapshots N"))
         .unwrap_or(usize::MAX);
     let delta = args.iter().any(|a| a == "--delta");
+    let threads = args
+        .windows(2)
+        .find(|w| w[0] == "--threads")
+        .map(|w| w[1].parse::<usize>().expect("--threads N"))
+        .unwrap_or(1)
+        .max(1);
 
     let client = xla::PjRtClient::cpu()?;
     println!(
-        "PJRT platform: {} ({} devices){}\n",
+        "PJRT platform: {} ({} devices), {} mirror-engine thread(s){}\n",
         client.platform_name(),
         client.device_count(),
-        if delta { ", delta-aware state gathers" } else { "" }
+        threads,
+        if delta { ", delta-aware state + feature staging" } else { "" }
     );
 
     for profile in [&BC_ALPHA, &UCI] {
         for model in ModelKind::all() {
-            serve(&client, model, profile, limit, delta)?;
+            serve(&client, model, profile, limit, delta, threads)?;
         }
     }
     Ok(())
 }
 
+/// Fill one staging slot for `snap`.  Non-delta mode (`x` is `Some`):
+/// features were already materialised on the prepare thread, so the
+/// stage thread only pads and rebuilds the CSR.  Delta mode (`x` is
+/// `None`): the §VI delta path runs `stage_delta` on the **persistent
+/// cache slot** — pool slots recycle every POOL snapshots, so their own
+/// bookkeeping would measure overlap at distance POOL, not against the
+/// previous snapshot — then copies the staged rows into the pool slot.
+/// Feature-row reuse counts only accumulate for snapshots that will
+/// actually be served (`index < limit`).
+#[allow(clippy::too_many_arguments)]
+fn stage_slot(
+    slot: &mut StagingSlot,
+    cache: &mut StagingSlot,
+    snap: &Snapshot,
+    x: &Option<Mat>,
+    in_dim: usize,
+    limit: usize,
+    x_shared: &mut usize,
+    x_seen: &mut usize,
+) -> dgnn_booster::Result<()> {
+    match x {
+        Some(x) => slot.stage_from_rows(snap, &x.data),
+        None => {
+            let st = cache.stage_delta(snap, |raw, row| node_features_into(raw, SEED, row))?;
+            if snap.index < limit {
+                *x_shared += st.shared_nodes;
+                *x_seen += st.nodes;
+            }
+            let n = snap.num_nodes();
+            slot.stage_from_rows(snap, &cache.x[..n * in_dim])
+        }
+    }
+}
+
 /// Shared serving loop for the recurrent (GCRN) variants: staged
 /// three-stage pipeline, full-gather or delta-aware state handling, and
-/// the mirror cross-check (always on full gathers, so it validates the
-/// delta path too).  `run_staged` executes one PJRT step from a staged
-/// slot; `mirror_step` is the pure-Rust reference.  Returns the step
-/// results and, when `delta`, the (shared, seen) node counts.
-#[allow(clippy::too_many_arguments)]
+/// the mirror cross-check (always on full gathers, through the sparse
+/// engine over the slot's cached CSR — so it validates the delta and
+/// parallel paths too).  `run_staged` executes one PJRT step from a
+/// staged slot; `mirror_step` is the pure-Rust reference.  Returns the
+/// step results plus, when `delta`, the (shared, seen) node counts for
+/// recurrent state and for staged feature rows.
+#[allow(clippy::too_many_arguments, clippy::type_complexity)]
 fn serve_recurrent<FRun, FMirror>(
     stream: &CooStream,
     profile: &datasets::DatasetProfile,
@@ -79,14 +130,20 @@ fn serve_recurrent<FRun, FMirror>(
     max_err: &mut f32,
     mut run_staged: FRun,
     mut mirror_step: FMirror,
-) -> dgnn_booster::Result<(Vec<StepResult<usize>>, Option<(usize, usize)>)>
+) -> dgnn_booster::Result<(
+    Vec<StepResult<usize>>,
+    Option<(usize, usize)>,
+    Option<(usize, usize)>,
+)>
 where
     FRun: FnMut(&StagingSlot, &mut Vec<f32>, &mut Vec<f32>) -> dgnn_booster::Result<()>,
-    FMirror: FnMut(&Snapshot, &Mat, &Mat, &Mat) -> (Mat, Mat),
+    FMirror: FnMut(&Snapshot, &SnapshotCsr, &Mat, &Mat, &Mat) -> (Mat, Mat),
 {
     let max_nodes = manifest.max_nodes;
-    let dh = dims.hidden_dim;
+    let (dh, ind) = (dims.hidden_dim, dims.in_dim);
     let pool: Vec<StagingSlot> = (0..POOL).map(|_| StagingSlot::new(manifest)).collect();
+    // persistent delta-staging cache (see stage_slot)
+    let mut cache = StagingSlot::new(manifest);
     let total = stream.num_nodes as usize;
     let mut h_store = NodeStateStore::zeros(total, dh);
     let mut c_store = NodeStateStore::zeros(total, dh);
@@ -98,14 +155,15 @@ where
     let mut h_buf = Vec::new();
     let mut c_buf = Vec::new();
     let (mut shared, mut seen) = (0usize, 0usize);
+    let (mut x_shared, mut x_seen) = (0usize, 0usize);
     let results = run_stream_staged(
         stream,
         profile.splitter_secs,
         POOL,
         pool,
-        |snap| Ok(features_for(snap, dims, SEED)),
-        |snap, x, slot| slot.stage_from_rows(snap, &x.data),
-        |snap, x, slot| {
+        |snap| Ok(if delta { None } else { Some(features_for(snap, dims, SEED)) }),
+        |snap, x, slot| stage_slot(slot, &mut cache, snap, x, ind, limit, &mut x_shared, &mut x_seen),
+        |snap, _x, slot| {
             if snap.index >= limit {
                 return Ok(0usize);
             }
@@ -123,9 +181,11 @@ where
                 h_store.scatter(snap, &h_buf);
                 c_store.scatter(snap, &c_buf);
             }
+            // mirror step over the slot's staged features and cached CSR
+            let x = Mat::from_vec(n, ind, slot.x[..n * ind].to_vec());
             let hm = Mat::from_vec(n, dh, h_ref.gather_padded(snap, n));
             let cm = Mat::from_vec(n, dh, c_ref.gather_padded(snap, n));
-            let (hn, cn) = mirror_step(snap, x, &hm, &cm);
+            let (hn, cn) = mirror_step(snap, &slot.csr, &x, &hm, &cm);
             h_ref.scatter(snap, &hn.data);
             c_ref.scatter(snap, &cn.data);
             let got = if delta {
@@ -140,11 +200,11 @@ where
     let counts = if delta {
         h_res.flush(&mut h_store);
         c_res.flush(&mut c_store);
-        Some((shared, seen))
+        (Some((shared, seen)), Some((x_shared, x_seen)))
     } else {
-        None
+        (None, None)
     };
-    Ok((results, counts))
+    Ok((results, counts.0, counts.1))
 }
 
 fn serve(
@@ -153,46 +213,62 @@ fn serve(
     profile: &'static datasets::DatasetProfile,
     limit: usize,
     delta: bool,
+    threads: usize,
 ) -> dgnn_booster::Result<()> {
     let dims = Dims::default();
+    let eng = Engine::new(threads);
     let stream = datasets::load_or_generate(profile, "data", SEED)?;
     let mut stats = LatencyStats::new();
     let mut max_err = 0.0f32;
     let mut count = 0usize;
     // (shared, seen) node counts when running delta-aware gathers
     let mut delta_counts: Option<(usize, usize)> = None;
+    let mut feature_counts: Option<(usize, usize)> = None;
 
     match model {
         ModelKind::EvolveGcn => {
             let params = EvolveGcnParams::init(SEED, dims);
             let mut exec = EvolveGcnExecutor::new(client, "artifacts", &params)?;
+            let manifest = exec.manifest().clone();
             let pool: Vec<StagingSlot> =
-                (0..POOL).map(|_| StagingSlot::new(exec.manifest())).collect();
+                (0..POOL).map(|_| StagingSlot::new(&manifest)).collect();
+            // persistent delta-staging cache (see stage_slot)
+            let mut cache = StagingSlot::new(&manifest);
             // mirror state for cross-check
             let mut w1 = Mat::from_vec(dims.in_dim, dims.hidden_dim, params.w1.clone());
             let mut w2 = Mat::from_vec(dims.hidden_dim, dims.out_dim, params.w2.clone());
             let mut out_buf = Vec::new();
+            let (mut x_shared, mut x_seen) = (0usize, 0usize);
+            let ind = dims.in_dim;
             let results = run_stream_staged(
                 &stream,
                 profile.splitter_secs,
                 POOL,
                 pool,
-                |snap| Ok(features_for(snap, dims, SEED)),
-                |snap, x, slot| slot.stage_from_rows(snap, &x.data),
+                |snap| Ok(if delta { None } else { Some(features_for(snap, dims, SEED)) }),
                 |snap, x, slot| {
+                    stage_slot(slot, &mut cache, snap, x, ind, limit, &mut x_shared, &mut x_seen)
+                },
+                |snap, _x, slot| {
                     if snap.index >= limit {
                         return Ok(0usize);
                     }
                     exec.run_step_staged(slot, &mut out_buf)?;
-                    // cross-check vs the pure-Rust mirror
+                    // cross-check vs the pure-Rust mirror on the sparse
+                    // engine (slot CSR, --threads workers)
+                    let n = snap.num_nodes();
+                    let x = Mat::from_vec(n, ind, slot.x[..n * ind].to_vec());
                     let (ref_out, w1n, w2n) =
-                        numerics::evolvegcn_step(snap, x, &w1, &w2, &params);
+                        numerics::evolvegcn_step_with(&eng, &slot.csr, snap, &x, &w1, &w2, &params);
                     w1 = w1n;
                     w2 = w2n;
                     max_err = max_err.max(max_abs_diff(&out_buf, &ref_out.data));
                     Ok(out_buf.len())
                 },
             )?;
+            if delta {
+                feature_counts = Some((x_shared, x_seen));
+            }
             for r in results.iter().filter(|r| r.index < limit) {
                 stats.record(r.wall);
                 count += 1;
@@ -202,7 +278,7 @@ fn serve(
             let params = GcrnM1Params::init(SEED, dims);
             let mut exec = GcrnM1Executor::new(client, "artifacts", &params)?;
             let manifest = exec.manifest().clone();
-            let (results, dc) = serve_recurrent(
+            let (results, dc, fc) = serve_recurrent(
                 &stream,
                 profile,
                 limit,
@@ -211,9 +287,10 @@ fn serve(
                 &manifest,
                 &mut max_err,
                 |slot, h, c| exec.run_step_staged(slot, h, c),
-                |snap, x, hm, cm| numerics::gcrn_m1_step(snap, x, hm, cm, &params),
+                |snap, csr, x, hm, cm| numerics::gcrn_m1_step_with(&eng, csr, snap, x, hm, cm, &params),
             )?;
             delta_counts = dc;
+            feature_counts = fc;
             for r in results.iter().filter(|r| r.index < limit) {
                 stats.record(r.wall);
                 count += 1;
@@ -223,7 +300,7 @@ fn serve(
             let params = GcrnM2Params::init(SEED, dims);
             let mut exec = GcrnExecutor::new(client, "artifacts", &params)?;
             let manifest = exec.manifest().clone();
-            let (results, dc) = serve_recurrent(
+            let (results, dc, fc) = serve_recurrent(
                 &stream,
                 profile,
                 limit,
@@ -232,9 +309,10 @@ fn serve(
                 &manifest,
                 &mut max_err,
                 |slot, h, c| exec.run_step_staged(slot, h, c),
-                |snap, x, hm, cm| numerics::gcrn_m2_step(snap, x, hm, cm, &params),
+                |snap, csr, x, hm, cm| numerics::gcrn_m2_step_with(&eng, csr, snap, x, hm, cm, &params),
             )?;
             delta_counts = dc;
+            feature_counts = fc;
             for r in results.iter().filter(|r| r.index < limit) {
                 stats.record(r.wall);
                 count += 1;
@@ -250,7 +328,13 @@ fn serve(
     println!("  host PJRT:                {}", stats.summary());
     if let Some((shared, seen)) = delta_counts {
         println!(
-            "  delta gathers:            {:.1}% of state rows stayed on-chip",
+            "  delta state gathers:      {:.1}% of state rows stayed on-chip",
+            100.0 * shared as f64 / seen.max(1) as f64
+        );
+    }
+    if let Some((shared, seen)) = feature_counts {
+        println!(
+            "  delta feature staging:    {:.1}% of X rows reused in place",
             100.0 * shared as f64 / seen.max(1) as f64
         );
     }

@@ -19,9 +19,9 @@
 
 use super::{dispatch_ops, step_flops};
 use crate::coordinator::{NodeStateStore, ResidentState};
-use crate::graph::Snapshot;
+use crate::graph::{Snapshot, SnapshotCsr};
 use crate::models::{Dims, EvolveGcnParams, GcrnM2Params, ModelKind};
-use crate::numerics::{self, Mat};
+use crate::numerics::{self, Engine, Mat};
 
 /// PyTorch eager per-op dispatch cost on the 6226R class (seconds).
 pub const DISPATCH_S: f64 = 65e-6;
@@ -51,15 +51,30 @@ pub fn avg_latency_ms(model: ModelKind, snaps: &[Snapshot], d: usize) -> f64 {
 
 /// Measured mode: wall-clock the pure-Rust mirror over the stream on
 /// this machine.  Returns (avg ms, checksum of outputs to defeat DCE).
+/// Serial-engine wrapper over [`measure_evolvegcn_with`].
 pub fn measure_evolvegcn(snaps: &[Snapshot], params: &EvolveGcnParams, seed: u64) -> (f64, f32) {
+    measure_evolvegcn_with(&Engine::serial(), snaps, params, seed)
+}
+
+/// [`measure_evolvegcn`] through a caller-supplied engine; the CSR is
+/// rebuilt in place per snapshot (the incremental reuse the staging
+/// slots also get), so the loop's steady state is allocation-light.
+pub fn measure_evolvegcn_with(
+    eng: &Engine,
+    snaps: &[Snapshot],
+    params: &EvolveGcnParams,
+    seed: u64,
+) -> (f64, f32) {
     let dims = params.dims;
     let mut w1 = Mat::from_vec(dims.in_dim, dims.hidden_dim, params.w1.clone());
     let mut w2 = Mat::from_vec(dims.hidden_dim, dims.out_dim, params.w2.clone());
+    let mut csr = SnapshotCsr::new();
     let mut checksum = 0.0f32;
     let start = std::time::Instant::now();
     for s in snaps {
         let x = features_for(s, dims, seed);
-        let (out, w1n, w2n) = numerics::evolvegcn_step(s, &x, &w1, &w2, params);
+        csr.rebuild(s);
+        let (out, w1n, w2n) = numerics::evolvegcn_step_with(eng, &csr, s, &x, &w1, &w2, params);
         w1 = w1n;
         w2 = w2n;
         checksum += out.data.iter().sum::<f32>();
@@ -70,7 +85,20 @@ pub fn measure_evolvegcn(snaps: &[Snapshot], params: &EvolveGcnParams, seed: u64
 
 /// Measured mode for GCRN-M2 with hidden-state carry across snapshots
 /// (gather/scatter through the renumber tables, as the host would).
+/// Serial-engine wrapper over [`measure_gcrn_with`].
 pub fn measure_gcrn(
+    snaps: &[Snapshot],
+    params: &GcrnM2Params,
+    total_nodes: usize,
+    seed: u64,
+) -> (f64, f32) {
+    measure_gcrn_with(&Engine::serial(), snaps, params, total_nodes, seed)
+}
+
+/// [`measure_gcrn`] through a caller-supplied engine and an in-place
+/// rebuilt CSR.
+pub fn measure_gcrn_with(
+    eng: &Engine,
     snaps: &[Snapshot],
     params: &GcrnM2Params,
     total_nodes: usize,
@@ -79,6 +107,7 @@ pub fn measure_gcrn(
     let dims = params.dims;
     let mut h_store = Mat::zeros(total_nodes, dims.hidden_dim);
     let mut c_store = Mat::zeros(total_nodes, dims.hidden_dim);
+    let mut csr = SnapshotCsr::new();
     let mut checksum = 0.0f32;
     let start = std::time::Instant::now();
     for s in snaps {
@@ -90,7 +119,8 @@ pub fn measure_gcrn(
             h.row_mut(local as usize).copy_from_slice(h_store.row(raw as usize));
             c.row_mut(local as usize).copy_from_slice(c_store.row(raw as usize));
         }
-        let (hn, cn) = numerics::gcrn_m2_step(s, &x, &h, &c, params);
+        csr.rebuild(s);
+        let (hn, cn) = numerics::gcrn_m2_step_with(eng, &csr, s, &x, &h, &c, params);
         for (local, raw) in s.renumber.iter() {
             h_store.row_mut(raw as usize).copy_from_slice(hn.row(local as usize));
             c_store.row_mut(raw as usize).copy_from_slice(cn.row(local as usize));
@@ -112,12 +142,25 @@ pub fn measure_gcrn_delta(
     total_nodes: usize,
     seed: u64,
 ) -> (f64, f32, f64) {
+    measure_gcrn_delta_with(&Engine::serial(), snaps, params, total_nodes, seed)
+}
+
+/// [`measure_gcrn_delta`] through a caller-supplied engine and an
+/// in-place rebuilt CSR.
+pub fn measure_gcrn_delta_with(
+    eng: &Engine,
+    snaps: &[Snapshot],
+    params: &GcrnM2Params,
+    total_nodes: usize,
+    seed: u64,
+) -> (f64, f32, f64) {
     let dims = params.dims;
     let max_nodes = snaps.iter().map(Snapshot::num_nodes).max().unwrap_or(1);
     let mut h_store = NodeStateStore::zeros(total_nodes, dims.hidden_dim);
     let mut c_store = NodeStateStore::zeros(total_nodes, dims.hidden_dim);
     let mut h_res = ResidentState::new(max_nodes, dims.hidden_dim);
     let mut c_res = ResidentState::new(max_nodes, dims.hidden_dim);
+    let mut csr = SnapshotCsr::new();
     let mut checksum = 0.0f32;
     let (mut shared, mut nodes) = (0usize, 0usize);
     let start = std::time::Instant::now();
@@ -131,7 +174,8 @@ pub fn measure_gcrn_delta(
         let dh = dims.hidden_dim;
         let h = Mat::from_vec(n, dh, h_res.buf()[..n * dh].to_vec());
         let c = Mat::from_vec(n, dh, c_res.buf()[..n * dh].to_vec());
-        let (hn, cn) = numerics::gcrn_m2_step(s, &x, &h, &c, params);
+        csr.rebuild(s);
+        let (hn, cn) = numerics::gcrn_m2_step_with(eng, &csr, s, &x, &h, &c, params);
         h_res.buf_mut()[..n * dh].copy_from_slice(&hn.data);
         c_res.buf_mut()[..n * dh].copy_from_slice(&cn.data);
         checksum += hn.data.iter().sum::<f32>();
@@ -188,6 +232,23 @@ mod tests {
         let (_, sum_delta, frac) = measure_gcrn_delta(&snaps, &p, total, 9);
         assert_eq!(sum_full, sum_delta, "delta-gather path diverged from full gather");
         assert!(frac > 0.0 && frac < 1.0, "shared fraction {frac}");
+    }
+
+    #[test]
+    fn parallel_engine_measured_mode_bitwise_matches_serial() {
+        let mut snaps =
+            preprocess_stream(&synth::generate(&BC_ALPHA, 1), BC_ALPHA.splitter_secs).unwrap();
+        snaps.truncate(10);
+        let p = crate::models::GcrnM2Params::init(1, Default::default());
+        let total = 4000;
+        let (_, sum_serial) = measure_gcrn(&snaps, &p, total, 9);
+        let eng = Engine::new(4);
+        let (_, sum_par) = measure_gcrn_with(&eng, &snaps, &p, total, 9);
+        assert_eq!(
+            sum_serial.to_bits(),
+            sum_par.to_bits(),
+            "4-thread engine diverged from serial"
+        );
     }
 
     #[test]

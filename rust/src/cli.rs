@@ -9,6 +9,8 @@
 //!   serve     stream a dataset through the PJRT runtime (end-to-end)
 //!   dse       run a DSP-split sweep
 //!   stats     dataset statistics
+//!   kernels   time the host message-passing kernels (COO vs CSR vs
+//!             parallel CSR vs fused) on a synthetic graph
 //! options:
 //!   --model evolvegcn|gcrn-m1|gcrn-m2   (serve/dse; default evolvegcn)
 //!   --dataset bc-alpha|uci     (default bc-alpha)
@@ -16,6 +18,10 @@
 //!   --snapshots N              limit processed snapshots
 //!   --artifacts DIR            (default artifacts)
 //!   --data DIR                 (default data)
+//!   --threads N                worker threads for the host sparse
+//!                              engine (kernels; default 1 = serial)
+//!   --nodes N / --degree N / --dim N / --iters N
+//!                              synthetic graph shape for `kernels`
 //! ```
 
 use crate::error::{Error, Result};
@@ -75,6 +81,12 @@ impl Cli {
         }
     }
 
+    /// Worker-thread count for the host sparse engine (`--threads`,
+    /// default 1 = serial; 0 is clamped to 1).
+    pub fn threads(&self) -> Result<usize> {
+        Ok(self.get_usize("threads", 1)?.max(1))
+    }
+
     pub fn model(&self) -> Result<crate::models::ModelKind> {
         match self.get_or("model", "evolvegcn").as_str() {
             "evolvegcn" => Ok(crate::models::ModelKind::EvolveGcn),
@@ -119,6 +131,16 @@ mod tests {
     fn dangling_flag_is_usage_error() {
         assert!(Cli::parse(&s(&["all", "--seed"])).is_err());
         assert!(Cli::parse(&s(&["all", "seed", "3"])).is_err());
+    }
+
+    #[test]
+    fn threads_flag_defaults_and_clamps() {
+        let c = Cli::parse(&s(&["kernels"])).unwrap();
+        assert_eq!(c.threads().unwrap(), 1);
+        let c = Cli::parse(&s(&["kernels", "--threads", "4"])).unwrap();
+        assert_eq!(c.threads().unwrap(), 4);
+        let c = Cli::parse(&s(&["kernels", "--threads", "0"])).unwrap();
+        assert_eq!(c.threads().unwrap(), 1);
     }
 
     #[test]

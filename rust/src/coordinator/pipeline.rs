@@ -12,12 +12,21 @@
 //! * [`run_stream`] — the original two stages, preprocess+prepare ∥
 //!   infer.
 //! * [`run_stream_staged`] — three stages, preprocess → stage → infer:
-//!   snapshot padding and feature materialisation run on a dedicated
-//!   producer thread into a bounded pool of recycled [`Staged`] buffers
-//!   (the software analog of the paper's ping-pong DRAM staging area),
-//!   overlapped with PJRT execution of earlier snapshots.  Used slots
-//!   flow back through a return channel, so peak memory is bounded by
-//!   the pool size regardless of stream length.
+//!   snapshot padding, CSR conversion and feature materialisation run on
+//!   a dedicated producer thread into a bounded pool of recycled
+//!   [`Staged`] buffers (the software analog of the paper's ping-pong
+//!   DRAM staging area), overlapped with PJRT execution of earlier
+//!   snapshots.  Used slots flow back through a return channel, so peak
+//!   memory is bounded by the pool size regardless of stream length.
+//!
+//! The stage thread is where the sparse engine's inputs are prepared:
+//! `runtime::StagingSlot::stage` rebuilds each snapshot's
+//! destination-major CSR in place (and, with `stage_delta`, reuses
+//! feature rows shared with the previous snapshot), so by the time the
+//! consumer thread runs message passing the adjacency is already in the
+//! cache-friendly layout `numerics::spmm` wants.  The worker-pool
+//! pattern inside that engine is the same scoped leader/worker topology
+//! as these pipeline stages, kept persistent across snapshots.
 //!
 //! The inference stage is sequential by construction — the temporal
 //! dependency (evolved weights / recurrent state) is exactly why DGNNs
@@ -300,6 +309,47 @@ mod tests {
         }
         // only the pool's slots ever circulate
         assert!(seen.len() <= 2, "saw {} distinct buffers", seen.len());
+    }
+
+    #[test]
+    fn staged_pipeline_builds_csr_on_stage_thread() {
+        // staging slots carry a per-snapshot CSR rebuilt in place by the
+        // stage thread; the consumer must see an adjacency identical to
+        // the snapshot's COO arrays, and serial CSR aggregation must be
+        // bitwise-equal to the COO reference walk
+        use crate::graph::SnapshotCsr;
+        use crate::numerics::{self, Engine, Mat};
+        let stream = synth::generate(&BC_ALPHA, 5);
+        let eng = Engine::serial();
+        let pool: Vec<SnapshotCsr> = vec![SnapshotCsr::new(), SnapshotCsr::new()];
+        let results = run_stream_staged(
+            &stream,
+            BC_ALPHA.splitter_secs,
+            4,
+            pool,
+            |snap| Ok(snap.num_edges()),
+            |snap, _e, csr| {
+                csr.rebuild(snap);
+                Ok(())
+            },
+            |snap, e, csr| {
+                assert_eq!(csr.num_edges(), *e);
+                let n = snap.num_nodes();
+                let mut x = Mat::zeros(n, 3);
+                for (i, v) in x.data.iter_mut().enumerate() {
+                    *v = (i % 7) as f32 - 3.0;
+                }
+                let want = numerics::aggregate(snap, &x);
+                let got = eng.aggregate(csr, &snap.selfcoef, &x);
+                assert_eq!(
+                    got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+                );
+                Ok(n)
+            },
+        )
+        .unwrap();
+        assert!(!results.is_empty());
     }
 
     #[test]

@@ -21,7 +21,7 @@
 //!    1.0 for UCI.
 
 use super::catalog::DatasetProfile;
-use crate::graph::{CooEdge, CooStream};
+use crate::graph::{CooEdge, CooStream, RenumberTable, Snapshot};
 use crate::testutil::Pcg32;
 
 /// Sigma of the log-normal snapshot-size law.  Calibrated so that the
@@ -135,6 +135,24 @@ pub fn generate(profile: &DatasetProfile, seed: u64) -> CooStream {
         t0 += profile.splitter_secs;
     }
     CooStream::from_edges(profile.name, edges).expect("generator produced edges")
+}
+
+/// Standalone random snapshot over an identity renumbering (locals ==
+/// raws): `n` nodes, `e` uniformly random edges, uniform coefficients.
+/// The unit the kernel benches (`benches/kernels.rs`, the `kernels` CLI
+/// command) and the engine property tests feed `numerics::spmm`
+/// directly, bypassing the stream pipeline.
+pub fn random_snapshot(rng: &mut Pcg32, n: usize, e: usize) -> Snapshot {
+    let e = if n == 0 { 0 } else { e }; // no edges without endpoints
+    Snapshot {
+        index: 0,
+        src: (0..e).map(|_| rng.below(n) as u32).collect(),
+        dst: (0..e).map(|_| rng.below(n) as u32).collect(),
+        coef: (0..e).map(|_| rng.uniform_f32(-1.0, 1.0)).collect(),
+        selfcoef: (0..n).map(|_| rng.uniform_f32(0.0, 1.0)).collect(),
+        renumber: RenumberTable::build((0..n as u32).map(|i| (i, i))),
+        t_start: 0,
+    }
 }
 
 /// Linear membership check on the arrival list (bounded by total_nodes;

@@ -1,0 +1,191 @@
+//! Per-snapshot destination-major CSR, incrementally reusable.
+//!
+//! [`SnapshotCsr`] is the host-side cache of the fabric converter's
+//! output (paper §IV-B): in-edges grouped by **destination** row so the
+//! message-passing engine (`numerics::spmm`) walks each output row's
+//! inputs contiguously — the access pattern DGNN-Booster V2's
+//! node-parallel PEs rely on.  Unlike [`super::convert::Csr`] (the
+//! one-shot functional model of the converter), this struct is built to
+//! be **rebuilt in place** once per snapshot on the pipeline's producer
+//! thread: all arrays are cleared and refilled within their high-water
+//! capacity, so a `SnapshotCsr` reused across a stream performs no
+//! steady-state heap allocation (asserted by `tests/alloc_hotpath.rs`).
+//!
+//! The counting sort is **stable**: within one destination row the
+//! in-edges keep their COO (time) order, which is what makes CSR
+//! aggregation bitwise-equal to the COO edge-walk reference
+//! (`numerics::gcn::aggregate`) — the floating-point additions happen in
+//! the same sequence per output element.
+
+use super::snapshot::Snapshot;
+
+/// Destination-major compressed adjacency of one snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct SnapshotCsr {
+    /// Number of destination rows (== `snap.num_nodes()` after rebuild).
+    num_nodes: usize,
+    /// len `num_nodes + 1`; `row_ptr[d]..row_ptr[d+1]` indexes
+    /// `cols`/`vals` of destination `d`.
+    row_ptr: Vec<u32>,
+    /// Source endpoint of each in-edge, grouped by destination, COO
+    /// order within a row.
+    cols: Vec<u32>,
+    /// Message coefficient of each in-edge, same order as `cols`.
+    vals: Vec<f32>,
+    /// Counting-sort cursor, reused across rebuilds.
+    cursor: Vec<u32>,
+}
+
+impl SnapshotCsr {
+    /// An empty CSR; call [`Self::rebuild`] to populate it.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build a fresh CSR from a snapshot (convenience for one-shot
+    /// callers; streaming callers should `rebuild` a reused instance).
+    pub fn from_snapshot(snap: &Snapshot) -> Self {
+        let mut csr = Self::new();
+        csr.rebuild(snap);
+        csr
+    }
+
+    /// Re-derive this CSR from `snap`, reusing every buffer.  Two-pass
+    /// stable counting sort — the same algorithm as
+    /// [`super::convert::Csr::build`] (kept separate on purpose: the
+    /// converter is the one-shot functional model with permutation
+    /// tracking and id validation, this is the reusable cache;
+    /// `prop_rebuild_matches_oneshot_converter` pins their
+    /// equivalence), O(nodes + edges), allocation-free once the buffers
+    /// have reached the stream's high-water sizes.
+    ///
+    /// Expects a structurally valid snapshot (`Snapshot::validate`):
+    /// out-of-range endpoints panic on the index rather than `Err`.
+    pub fn rebuild(&mut self, snap: &Snapshot) {
+        let n = snap.num_nodes();
+        let e = snap.num_edges();
+        self.num_nodes = n;
+        self.row_ptr.clear();
+        self.row_ptr.resize(n + 1, 0);
+        for &d in &snap.dst {
+            self.row_ptr[d as usize + 1] += 1;
+        }
+        for i in 0..n {
+            self.row_ptr[i + 1] += self.row_ptr[i];
+        }
+        self.cols.clear();
+        self.cols.resize(e, 0);
+        self.vals.clear();
+        self.vals.resize(e, 0.0);
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.row_ptr[..n]);
+        for ((&s, &d), &c) in snap.src.iter().zip(&snap.dst).zip(&snap.coef) {
+            let p = self.cursor[d as usize] as usize;
+            self.cols[p] = s;
+            self.vals[p] = c;
+            self.cursor[d as usize] += 1;
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.num_nodes
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// In-edges of destination `d`: (sources, coefficients), COO order.
+    #[inline]
+    pub fn row(&self, d: usize) -> (&[u32], &[f32]) {
+        let lo = self.row_ptr[d] as usize;
+        let hi = self.row_ptr[d + 1] as usize;
+        (&self.cols[lo..hi], &self.vals[lo..hi])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::random_snapshot;
+    use crate::graph::{Csr, RenumberTable};
+    use crate::testutil::{forall, Config, Pcg32};
+
+    #[test]
+    fn groups_in_edges_by_destination() {
+        let snap = Snapshot {
+            index: 0,
+            src: vec![0, 0, 2],
+            dst: vec![1, 2, 0],
+            coef: vec![0.1, 0.2, 0.3],
+            selfcoef: vec![1.0; 3],
+            renumber: RenumberTable::build((0..3).map(|i| (i, i))),
+            t_start: 0,
+        };
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        assert_eq!(csr.num_nodes(), 3);
+        assert_eq!(csr.row(0), (&[2u32][..], &[0.3f32][..]));
+        assert_eq!(csr.row(1), (&[0u32][..], &[0.1f32][..]));
+        assert_eq!(csr.row(2), (&[0u32][..], &[0.2f32][..]));
+    }
+
+    #[test]
+    fn empty_snapshot_ok() {
+        let snap = Snapshot {
+            index: 0,
+            src: vec![],
+            dst: vec![],
+            coef: vec![],
+            selfcoef: vec![],
+            renumber: RenumberTable::default(),
+            t_start: 0,
+        };
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        assert_eq!(csr.num_nodes(), 0);
+        assert_eq!(csr.num_edges(), 0);
+    }
+
+    #[test]
+    fn prop_rebuild_matches_oneshot_converter() {
+        forall(Config::default().cases(60), |rng, size| {
+            let mut csr = SnapshotCsr::new();
+            // rebuild the same instance over several random snapshots;
+            // each must match the one-shot CSC converter exactly
+            for _ in 0..3 {
+                let n = rng.range(1, size.max(2));
+                let e = rng.range(0, 4 * size.max(1));
+                let snap = random_snapshot(rng, n, e);
+                csr.rebuild(&snap);
+                let want =
+                    Csr::csc_from_coo(n, &snap.src, &snap.dst, &snap.coef).unwrap();
+                assert_eq!(csr.num_edges(), want.num_edges());
+                for d in 0..n {
+                    let (got_s, got_v) = csr.row(d);
+                    let (want_s, want_v) = want.row(d);
+                    assert_eq!(got_s, want_s, "row {d} sources");
+                    // counting sort is stable in both: values must be
+                    // bitwise identical and in the same order
+                    assert_eq!(
+                        got_v.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        want_v.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "row {d} coefficients"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn rebuild_shrinks_cleanly() {
+        let mut rng = Pcg32::seeded(11);
+        let big = random_snapshot(&mut rng, 50, 200);
+        let small = random_snapshot(&mut rng, 3, 2);
+        let mut csr = SnapshotCsr::new();
+        csr.rebuild(&big);
+        csr.rebuild(&small);
+        assert_eq!(csr.num_nodes(), 3);
+        assert_eq!(csr.num_edges(), 2);
+        let degree_sum: usize = (0..3).map(|d| csr.row(d).0.len()).sum();
+        assert_eq!(degree_sum, 2);
+    }
+}

@@ -16,12 +16,14 @@
 
 pub mod convert;
 pub mod coo;
+pub mod csr;
 pub mod norm;
 pub mod renumber;
 pub mod snapshot;
 
 pub use convert::{Csc, Csr};
 pub use coo::{CooEdge, CooStream};
+pub use csr::SnapshotCsr;
 pub use norm::normalize_gcn;
 pub use renumber::RenumberTable;
 pub use snapshot::{Snapshot, SnapshotStats};

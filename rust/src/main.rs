@@ -9,10 +9,13 @@ use dgnn_booster::datasets;
 use dgnn_booster::error::{Error, Result};
 use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
 use dgnn_booster::fpga::dse;
-use dgnn_booster::metrics::LatencyStats;
+use dgnn_booster::graph::SnapshotCsr;
+use dgnn_booster::metrics::{bench_loop, LatencyStats};
 use dgnn_booster::models::{Dims, EvolveGcnParams, GcrnM1Params, GcrnM2Params, ModelKind};
+use dgnn_booster::numerics::{self, Engine, Mat};
 use dgnn_booster::report::tables::{self, ReportCtx};
 use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor};
+use dgnn_booster::testutil::Pcg32;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -46,6 +49,7 @@ fn run(args: &[String]) -> Result<()> {
         "stats" => cmd_stats(&cli, &ctx)?,
         "dse" => cmd_dse(&cli, &ctx)?,
         "serve" => cmd_serve(&cli, &ctx)?,
+        "kernels" => cmd_kernels(&cli, &ctx)?,
         other => {
             return Err(Error::Usage(format!(
                 "unknown command `{other}`; see rust/src/cli.rs for usage"
@@ -63,6 +67,67 @@ fn cmd_stats(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
         "{}: {} snapshots, avg {:.0} nodes / {:.0} edges, max {} / {}, total {} nodes {} edges",
         profile.name, st.snapshots, st.avg_nodes, st.avg_edges, st.max_nodes, st.max_edges,
         st.total_nodes, st.total_edges
+    );
+    Ok(())
+}
+
+/// Quick host-kernel timing on one synthetic graph: the COO reference
+/// walk vs the CSR engine, serial and with `--threads N` workers, plus
+/// the fused aggregate-project kernel.  The full sweep (several sizes ×
+/// thread counts, JSON output) lives in `cargo bench --bench kernels`.
+fn cmd_kernels(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
+    let threads = cli.threads()?;
+    let n = cli.get_usize("nodes", 2048)?.max(1);
+    let deg = cli.get_usize("degree", 16)?;
+    let d = cli.get_usize("dim", 64)?.max(1);
+    let iters = cli.get_usize("iters", 40)?.max(1);
+    let mut rng = Pcg32::seeded(ctx.seed);
+    let snap = datasets::synth::random_snapshot(&mut rng, n, n * deg);
+    let csr = SnapshotCsr::from_snapshot(&snap);
+    let x = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+    let w = Mat::from_vec(d, d, rng.normal_vec(d * d, 0.5));
+    println!(
+        "host kernels: {n} nodes, {} edges, dim {d}, {threads} engine threads",
+        snap.num_edges()
+    );
+
+    let serial = Engine::serial();
+    let eng = Engine::new(threads);
+    // bitwise sanity before timing: CSR (serial and parallel) vs COO
+    let reference = numerics::aggregate(&snap, &x);
+    for (e, label) in [(&serial, "serial"), (&eng, "parallel")] {
+        let got = e.aggregate(&csr, &snap.selfcoef, &x);
+        assert_eq!(got.data, reference.data, "CSR {label} diverged from COO");
+    }
+
+    let mut out = Mat::zeros(n, d);
+    let coo_s = bench_loop("aggregate COO serial (reference)", iters, || {
+        numerics::aggregate_into(&snap, &x, &mut out);
+        out.data[0]
+    });
+    let csr_s = bench_loop("aggregate CSR serial", iters, || {
+        serial.aggregate_into(&csr, &snap.selfcoef, &x, &mut out);
+        out.data[0]
+    });
+    let csr_p = bench_loop(&format!("aggregate CSR x{threads}"), iters, || {
+        eng.aggregate_into(&csr, &snap.selfcoef, &x, &mut out);
+        out.data[0]
+    });
+    let mut proj = Mat::zeros(n, d);
+    let two_step = bench_loop("aggregate+matmul two-step", iters, || {
+        serial.aggregate_into(&csr, &snap.selfcoef, &x, &mut out);
+        serial.matmul_into(&out, &w, &mut proj);
+        proj.data[0]
+    });
+    let fused = bench_loop(&format!("aggregate+matmul fused x{threads}"), iters, || {
+        eng.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut proj);
+        proj.data[0]
+    });
+    println!(
+        "speedups vs COO walk: CSR serial {:.2}x, CSR x{threads} {:.2}x; fused vs two-step {:.2}x",
+        coo_s / csr_s,
+        coo_s / csr_p,
+        two_step / fused
     );
     Ok(())
 }

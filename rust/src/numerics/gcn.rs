@@ -1,13 +1,33 @@
 //! GCN aggregation + layer — mirror of `kernels/message_passing.py`.
+//!
+//! [`aggregate`] is the COO edge-walk **reference**: the simplest
+//! correct form, kept as the ground truth the CSR engine
+//! (`numerics::spmm`) is property-tested against bitwise.  The layer
+//! entry points route through the engine: [`gcn_layer_csr`] for callers
+//! that hold a cached [`SnapshotCsr`] (pipeline staging slots, the CPU
+//! baseline loops), and [`gcn_layer`] as a convenience that builds one
+//! on the spot.
 
+use super::spmm::Engine;
 use super::tensor::Mat;
-use crate::graph::Snapshot;
+use crate::graph::{Snapshot, SnapshotCsr};
 
 /// Â·X: edge-wise scatter-accumulate plus the self-loop diagonal term.
 /// `x` has `snap.num_nodes()` rows (unpadded — the mirror never pads).
 pub fn aggregate(snap: &Snapshot, x: &Mat) -> Mat {
-    assert_eq!(x.rows, snap.num_nodes(), "embedding row count");
     let mut out = Mat::zeros(x.rows, x.cols);
+    aggregate_into(snap, x, &mut out);
+    out
+}
+
+/// Allocation-free [`aggregate`]: the COO reference walk into a caller
+/// buffer, with an index-based split borrow instead of the per-edge row
+/// copy the seed carried (`x` and `out` are distinct matrices, so the
+/// source row and destination row never alias).
+pub fn aggregate_into(snap: &Snapshot, x: &Mat, out: &mut Mat) {
+    assert_eq!(x.rows, snap.num_nodes(), "embedding row count");
+    assert_eq!((out.rows, out.cols), (x.rows, x.cols), "output shape");
+    out.data.fill(0.0);
     // self-loop diagonal
     for (i, &sc) in snap.selfcoef.iter().enumerate() {
         let src_row = x.row(i);
@@ -19,25 +39,46 @@ pub fn aggregate(snap: &Snapshot, x: &Mat) -> Mat {
     // edge messages
     for ((&s, &d), &c) in snap.src.iter().zip(snap.dst.iter()).zip(snap.coef.iter()) {
         let (s, d) = (s as usize, d as usize);
-        // split borrow: copy the source row (dims are tiny)
-        let src_row: Vec<f32> = x.row(s).to_vec();
+        let src_row = x.row(s);
         let dst_row = out.row_mut(d);
         for (o, &v) in dst_row.iter_mut().zip(src_row.iter()) {
             *o += c * v;
         }
     }
+}
+
+/// One GCN layer through the sparse engine: `act((Â·X) W)` (bias fixed
+/// at zero, as in the AOT model).  When the input width is at least the
+/// output width the fused kernel runs and Â·X is never materialised;
+/// otherwise aggregation in the narrow input space then a blocked
+/// matmul is cheaper.
+pub fn gcn_layer_csr(
+    eng: &Engine,
+    csr: &SnapshotCsr,
+    selfcoef: &[f32],
+    x: &Mat,
+    w: &Mat,
+    relu: bool,
+) -> Mat {
+    let mut out = Mat::zeros(x.rows, w.cols);
+    if x.cols >= w.cols {
+        eng.aggregate_matmul_into(csr, selfcoef, x, w, &mut out);
+    } else {
+        let mut agg = Mat::zeros(x.rows, x.cols);
+        eng.aggregate_into(csr, selfcoef, x, &mut agg);
+        eng.matmul_into(&agg, w, &mut out);
+    }
+    if relu {
+        out.relu_inplace();
+    }
     out
 }
 
-/// One GCN layer: `act((Â·X) W)` (bias fixed at zero, as in the AOT model).
+/// One GCN layer from a raw snapshot (builds the CSR on the spot; hot
+/// paths should cache a [`SnapshotCsr`] and call [`gcn_layer_csr`]).
 pub fn gcn_layer(snap: &Snapshot, x: &Mat, w: &Mat, relu: bool) -> Mat {
-    let agg = aggregate(snap, x);
-    let out = agg.matmul(w);
-    if relu {
-        out.relu()
-    } else {
-        out
-    }
+    let csr = SnapshotCsr::from_snapshot(snap);
+    gcn_layer_csr(&Engine::serial(), &csr, &snap.selfcoef, x, w, relu)
 }
 
 #[cfg(test)]
@@ -68,6 +109,25 @@ mod tests {
     }
 
     #[test]
+    fn aggregate_into_reuses_buffer() {
+        let snap = snap2();
+        let x = Mat::from_vec(2, 2, vec![2.0, 4.0, 1.0, 1.0]);
+        let mut out = Mat::from_vec(2, 2, vec![9.0; 4]); // stale contents
+        aggregate_into(&snap, &x, &mut out);
+        assert_eq!(out.data, vec![1.0, 2.0, 1.5, 2.5]);
+    }
+
+    #[test]
+    fn csr_layer_matches_coo_reference() {
+        let snap = snap2();
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        let x = Mat::from_vec(2, 2, vec![2.0, 4.0, 1.0, 1.0]);
+        let eng = Engine::serial();
+        let agg = eng.aggregate(&csr, &snap.selfcoef, &x);
+        assert_eq!(agg.data, aggregate(&snap, &x).data);
+    }
+
+    #[test]
     fn layer_applies_weight_and_relu() {
         let snap = snap2();
         let x = Mat::from_vec(2, 2, vec![2.0, 4.0, 1.0, 1.0]);
@@ -77,5 +137,16 @@ mod tests {
         assert_eq!(out.data, vec![0.0, 0.0]);
         let out_lin = gcn_layer(&snap, &x, &w, false);
         assert_eq!(out_lin.data, vec![-1.0, -1.0]);
+    }
+
+    #[test]
+    fn layer_narrow_input_takes_two_step_path() {
+        // in_dim < out_dim exercises the aggregate-then-matmul branch
+        let snap = snap2();
+        let x = Mat::from_vec(2, 1, vec![2.0, 3.0]);
+        let w = Mat::from_vec(1, 3, vec![1.0, 2.0, -1.0]);
+        let out = gcn_layer(&snap, &x, &w, false);
+        // agg = [1.0, 2.5]; out rows = agg_i * w
+        assert_eq!(out.data, vec![1.0, 2.0, -1.0, 2.5, 5.0, -2.5]);
     }
 }

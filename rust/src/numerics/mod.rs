@@ -8,16 +8,26 @@
 //! 3. **Examples** — run without artifacts present.
 //!
 //! Everything is f32 row-major, matching the AOT layout.
+//!
+//! Message passing runs through the sparse compute engine
+//! ([`spmm::Engine`]): destination-major CSR aggregation, optionally
+//! row-partitioned across a persistent worker pool, cache-blocked
+//! matmul, and a fused aggregate-project kernel.  The `*_step_with`
+//! variants take a caller-cached [`SnapshotCsr`] + [`Engine`] (the hot
+//! path); the original `*_step` functions build a serial engine and a
+//! throwaway CSR per call and remain bitwise-compatible wrappers.
 
 pub mod gcn;
 pub mod rnn;
+pub mod spmm;
 pub mod tensor;
 
-pub use gcn::{aggregate, gcn_layer};
-pub use rnn::{gru_matrix_cell, lstm_gate_stage};
+pub use gcn::{aggregate, aggregate_into, gcn_layer, gcn_layer_csr};
+pub use rnn::{gru_matrix_cell, lstm_gate_stage, lstm_gate_stage_with};
+pub use spmm::Engine;
 pub use tensor::Mat;
 
-use crate::graph::Snapshot;
+use crate::graph::{Snapshot, SnapshotCsr};
 use crate::models::{EvolveGcnParams, GcrnM2Params, GruParams};
 
 /// One EvolveGCN-O snapshot step: evolve both layer weights with the
@@ -30,10 +40,24 @@ pub fn evolvegcn_step(
     w2: &Mat,
     params: &EvolveGcnParams,
 ) -> (Mat, Mat, Mat) {
+    let csr = SnapshotCsr::from_snapshot(snap);
+    evolvegcn_step_with(&Engine::serial(), &csr, snap, x, w1, w2, params)
+}
+
+/// [`evolvegcn_step`] over a caller-cached CSR and engine.
+pub fn evolvegcn_step_with(
+    eng: &Engine,
+    csr: &SnapshotCsr,
+    snap: &Snapshot,
+    x: &Mat,
+    w1: &Mat,
+    w2: &Mat,
+    params: &EvolveGcnParams,
+) -> (Mat, Mat, Mat) {
     let w1n = gru_matrix_cell(w1, &params.gru1);
     let w2n = gru_matrix_cell(w2, &params.gru2);
-    let h1 = gcn_layer(snap, x, &w1n, true);
-    let h2 = gcn_layer(snap, &h1, &w2n, false);
+    let h1 = gcn_layer_csr(eng, csr, &snap.selfcoef, x, &w1n, true);
+    let h2 = gcn_layer_csr(eng, csr, &snap.selfcoef, &h1, &w2n, false);
     (h2, w1n, w2n)
 }
 
@@ -46,21 +70,55 @@ pub fn gcrn_m1_step(
     c: &Mat,
     params: &crate::models::GcrnM1Params,
 ) -> (Mat, Mat) {
+    let csr = SnapshotCsr::from_snapshot(snap);
+    gcrn_m1_step_with(&Engine::serial(), &csr, snap, x, h, c, params)
+}
+
+/// [`gcrn_m1_step`] over a caller-cached CSR and engine.
+#[allow(clippy::too_many_arguments)]
+pub fn gcrn_m1_step_with(
+    eng: &Engine,
+    csr: &SnapshotCsr,
+    snap: &Snapshot,
+    x: &Mat,
+    h: &Mat,
+    c: &Mat,
+    params: &crate::models::GcrnM1Params,
+) -> (Mat, Mat) {
     let d = params.dims;
     let w1 = Mat::from_vec(d.in_dim, d.hidden_dim, params.w1.clone());
     let w2 = Mat::from_vec(d.hidden_dim, d.out_dim, params.w2.clone());
     let wx = Mat::from_vec(d.out_dim, 4 * d.hidden_dim, params.wx.clone());
     let wh = Mat::from_vec(d.hidden_dim, 4 * d.hidden_dim, params.wh.clone());
-    let x1 = gcn_layer(snap, x, &w1, true);
-    let x2 = gcn_layer(snap, &x1, &w2, false);
-    let px = x2.matmul(&wx);
-    let ph = h.matmul(&wh);
-    lstm_gate_stage(&px, &ph, &params.b, c)
+    let x1 = gcn_layer_csr(eng, csr, &snap.selfcoef, x, &w1, true);
+    let x2 = gcn_layer_csr(eng, csr, &snap.selfcoef, &x1, &w2, false);
+    let mut px = Mat::zeros(x2.rows, wx.cols);
+    eng.matmul_into(&x2, &wx, &mut px);
+    let mut ph = Mat::zeros(h.rows, wh.cols);
+    eng.matmul_into(h, &wh, &mut ph);
+    lstm_gate_stage_with(eng, &px, &ph, &params.b, c)
 }
 
 /// One GCRN-M2 snapshot step: two graph convs feed the fused LSTM gate
 /// stage.  Mirrors `python/compile/model.py::gcrn_m2_step`.
 pub fn gcrn_m2_step(
+    snap: &Snapshot,
+    x: &Mat,
+    h: &Mat,
+    c: &Mat,
+    params: &GcrnM2Params,
+) -> (Mat, Mat) {
+    let csr = SnapshotCsr::from_snapshot(snap);
+    gcrn_m2_step_with(&Engine::serial(), &csr, snap, x, h, c, params)
+}
+
+/// [`gcrn_m2_step`] over a caller-cached CSR and engine: both graph
+/// convolutions run fused (Â·X and Â·H are never materialised) and the
+/// gate stage row-partitions across the pool.
+#[allow(clippy::too_many_arguments)]
+pub fn gcrn_m2_step_with(
+    eng: &Engine,
+    csr: &SnapshotCsr,
     snap: &Snapshot,
     x: &Mat,
     h: &Mat,
@@ -73,11 +131,13 @@ pub fn gcrn_m2_step(
         4 * params.dims.hidden_dim,
         params.wh.clone(),
     );
-    let agg_x = aggregate(snap, x);
-    let agg_h = aggregate(snap, h);
-    let px = agg_x.matmul(&wx);
-    let ph = agg_h.matmul(&wh);
-    lstm_gate_stage(&px, &ph, &params.b, c)
+    let agg_x = eng.aggregate(csr, &snap.selfcoef, x);
+    let agg_h = eng.aggregate(csr, &snap.selfcoef, h);
+    let mut px = Mat::zeros(agg_x.rows, wx.cols);
+    eng.matmul_into(&agg_x, &wx, &mut px);
+    let mut ph = Mat::zeros(agg_h.rows, wh.cols);
+    eng.matmul_into(&agg_h, &wh, &mut ph);
+    lstm_gate_stage_with(eng, &px, &ph, &params.b, c)
 }
 
 /// Re-borrow GRU params as `Mat`s (gates rows×rows, biases rows×cols).

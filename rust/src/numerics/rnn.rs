@@ -1,5 +1,11 @@
 //! Matrix-GRU and LSTM gate-stage mirrors of `kernels/{gru,lstm}.py`.
+//!
+//! The LSTM gate stage is elementwise per node row, so it row-partitions
+//! across the sparse engine's worker pool just like aggregation:
+//! [`lstm_gate_stage_with`] writes disjoint row ranges of the new H/C
+//! and is bitwise-equal to the serial path at any thread count.
 
+use super::spmm::{Engine, SendPtr};
 use super::tensor::{sigmoid, Mat};
 use crate::models::GruParams;
 
@@ -27,14 +33,47 @@ pub fn gru_matrix_cell(h: &Mat, p: &GruParams) -> Mat {
 /// order (i, f, g, o); `b` is [4h]; `c` is [n, h].
 /// Returns (h_new, c_new).
 pub fn lstm_gate_stage(px: &Mat, ph: &Mat, b: &[f32], c: &Mat) -> (Mat, Mat) {
+    lstm_gate_stage_with(&Engine::serial(), px, ph, b, c)
+}
+
+/// [`lstm_gate_stage`] with node rows partitioned across `eng`'s worker
+/// pool; bitwise-equal to the serial path (the per-element math is
+/// independent across rows).
+pub fn lstm_gate_stage_with(eng: &Engine, px: &Mat, ph: &Mat, b: &[f32], c: &Mat) -> (Mat, Mat) {
     assert_eq!(px.cols % 4, 0);
     let hdim = px.cols / 4;
-    assert_eq!(c.cols, hdim);
+    assert_eq!((ph.rows, ph.cols), (px.rows, px.cols));
+    assert_eq!((c.rows, c.cols), (px.rows, hdim));
     assert_eq!(b.len(), 4 * hdim);
     let n = px.rows;
     let mut h_new = Mat::zeros(n, hdim);
     let mut c_new = Mat::zeros(n, hdim);
-    for r in 0..n {
+    let hp = SendPtr(h_new.data.as_mut_ptr());
+    let cp = SendPtr(c_new.data.as_mut_ptr());
+    eng.run_partitioned(n, |lo, hi| {
+        // SAFETY: disjoint row ranges — see `spmm::SendPtr`
+        let hs = unsafe { std::slice::from_raw_parts_mut(hp.0.add(lo * hdim), (hi - lo) * hdim) };
+        let cs = unsafe { std::slice::from_raw_parts_mut(cp.0.add(lo * hdim), (hi - lo) * hdim) };
+        lstm_gate_rows(px, ph, b, c, hs, cs, lo, hi, hdim);
+    });
+    (h_new, c_new)
+}
+
+/// Serial gate math over node rows `lo..hi`; `h_out`/`c_out` cover
+/// exactly those rows.
+#[allow(clippy::too_many_arguments)]
+fn lstm_gate_rows(
+    px: &Mat,
+    ph: &Mat,
+    b: &[f32],
+    c: &Mat,
+    h_out: &mut [f32],
+    c_out: &mut [f32],
+    lo: usize,
+    hi: usize,
+    hdim: usize,
+) {
+    for r in lo..hi {
         for j in 0..hdim {
             let pre = |g: usize| px.at(r, g * hdim + j) + ph.at(r, g * hdim + j) + b[g * hdim + j];
             let i = sigmoid(pre(0));
@@ -42,11 +81,10 @@ pub fn lstm_gate_stage(px: &Mat, ph: &Mat, b: &[f32], c: &Mat) -> (Mat, Mat) {
             let g = pre(2).tanh();
             let o = sigmoid(pre(3));
             let cn = f * c.at(r, j) + i * g;
-            *c_new.at_mut(r, j) = cn;
-            *h_new.at_mut(r, j) = o * cn.tanh();
+            c_out[(r - lo) * hdim + j] = cn;
+            h_out[(r - lo) * hdim + j] = o * cn.tanh();
         }
     }
-    (h_new, c_new)
 }
 
 #[cfg(test)]
@@ -106,6 +144,30 @@ mod tests {
             assert!((cn - c0).abs() < 1e-4);
         }
         assert!(h_new.data.iter().all(|v| v.abs() < 1e-4));
+    }
+
+    #[test]
+    fn lstm_gate_stage_parallel_bitwise_equals_serial() {
+        let mut rng = Pcg32::seeded(14);
+        let n = 37;
+        let h = 8;
+        let px = Mat::from_vec(n, 4 * h, rng.normal_vec(n * 4 * h, 1.0));
+        let ph = Mat::from_vec(n, 4 * h, rng.normal_vec(n * 4 * h, 1.0));
+        let b = rng.normal_vec(4 * h, 0.5);
+        let c = Mat::from_vec(n, h, rng.normal_vec(n * h, 1.0));
+        let (hs, cs) = lstm_gate_stage(&px, &ph, &b, &c);
+        for threads in [2, 4] {
+            let eng = crate::numerics::Engine::new(threads);
+            let (hp, cp) = lstm_gate_stage_with(&eng, &px, &ph, &b, &c);
+            assert_eq!(
+                hp.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                hs.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+            assert_eq!(
+                cp.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                cs.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,513 @@
+//! Node-parallel sparse compute engine: row-partitioned Â·X aggregation
+//! over a persistent worker pool, cache-blocked dense matmul, and a
+//! fused aggregate-then-project kernel.
+//!
+//! This is the host-side mirror of DGNN-Booster V2's node-parallel
+//! message passing (paper §V): each worker owns a **disjoint range of
+//! destination rows**, so writes never race and — because every output
+//! element accumulates its terms in exactly the same order as the serial
+//! path — the result is **bitwise-equal** regardless of thread count
+//! (asserted by `tests/prop_kernels.rs`).
+//!
+//! The offline crate set has no rayon/tokio, so [`WorkerPool`] is a
+//! small persistent `std::thread` pool: the scoped leader/worker
+//! topology of `coordinator::pipeline`, kept alive across calls so the
+//! per-snapshot hot path pays no thread-spawn cost.  Dispatch blocks
+//! until every worker finishes, which is what makes lending the workers
+//! non-`'static` borrows sound.
+
+use super::tensor::Mat;
+use crate::graph::SnapshotCsr;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// Column-block width for the dense matmul: a `KC × NC` f32 panel of the
+/// right-hand matrix (16 KiB) stays L1-resident while every output row
+/// streams past it.
+const NC: usize = 64;
+/// Depth-block (k) for the dense matmul.
+const KC: usize = 64;
+
+type Job = Box<dyn FnOnce() + Send>;
+
+struct PoolState {
+    pending: Mutex<usize>,
+    done: Condvar,
+    panicked: AtomicBool,
+}
+
+/// A persistent pool of worker threads executing broadcast jobs.
+///
+/// Dispatches are serialized by the `dispatch` mutex: the
+/// borrow-lending in [`Self::broadcast`] requires that two broadcasts
+/// never interleave on the shared completion counter (`mpsc::Sender`
+/// has been `Sync` since Rust 1.72, so a `&WorkerPool` *can* be shared
+/// across threads — the lock is what makes that safe).
+pub struct WorkerPool {
+    txs: Vec<mpsc::Sender<Job>>,
+    state: Arc<PoolState>,
+    /// Held for the whole of each broadcast (dispatch + wait).
+    dispatch: Mutex<()>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads` workers (at least one).
+    pub fn new(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let state = Arc::new(PoolState {
+            pending: Mutex::new(0),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        let mut txs = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            let (tx, rx) = mpsc::channel::<Job>();
+            txs.push(tx);
+            handles.push(std::thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    job();
+                }
+            }));
+        }
+        WorkerPool { txs, state, dispatch: Mutex::new(()), handles }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Run `f(worker_index)` once on every worker, blocking until all of
+    /// them finish.  Panics (after all workers settle) if any task
+    /// panicked.  Concurrent callers serialize on the dispatch lock.
+    ///
+    /// Each dispatch boxes one job per worker (plus an `Arc` clone) —
+    /// a handful of small allocations per broadcast, negligible next to
+    /// the row work it fans out but not zero; see the ROADMAP item on a
+    /// generation-counter dispatcher for the fully allocation-free
+    /// variant.
+    pub fn broadcast<F: Fn(usize) + Sync>(&self, f: &F) {
+        // ignore poisoning: the guard protects no data, only exclusivity,
+        // and a panicked broadcast leaves the workers fully settled
+        let _dispatch = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
+        let nw = self.txs.len();
+        {
+            let mut pending = self.state.pending.lock().unwrap();
+            *pending = nw;
+        }
+        let f_obj: &(dyn Fn(usize) + Sync) = f;
+        // SAFETY: the jobs borrow `f` for the duration of this call only;
+        // the condvar wait below does not return until every worker has
+        // finished running its job, so the 'static lifetime never
+        // outlives the actual borrow.
+        let f_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(f_obj) };
+        for (w, tx) in self.txs.iter().enumerate() {
+            let state = Arc::clone(&self.state);
+            let job: Job = Box::new(move || {
+                if panic::catch_unwind(AssertUnwindSafe(|| f_static(w))).is_err() {
+                    state.panicked.store(true, Ordering::SeqCst);
+                }
+                let mut pending = state.pending.lock().unwrap();
+                *pending -= 1;
+                if *pending == 0 {
+                    state.done.notify_one();
+                }
+            });
+            tx.send(job).expect("worker thread alive");
+        }
+        let mut pending = self.state.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.state.done.wait(pending).unwrap();
+        }
+        drop(pending);
+        if self.state.panicked.swap(false, Ordering::SeqCst) {
+            panic!("worker pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.txs.clear(); // closes every channel; workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw output cursor shared with workers.  Each worker only ever touches
+/// the disjoint row range it owns.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr(pub *mut f32);
+// SAFETY: the engine hands every worker a non-overlapping region.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Balanced contiguous row range of worker `w` out of `nw`.
+#[inline]
+fn chunk(n: usize, w: usize, nw: usize) -> (usize, usize) {
+    (n * w / nw, n * (w + 1) / nw)
+}
+
+/// The sparse compute engine: a thread count plus (for `threads > 1`)
+/// a persistent [`WorkerPool`].
+///
+/// Every kernel is deterministic: the parallel paths produce bitwise the
+/// same output as [`Engine::serial`], which in turn is bitwise-equal to
+/// the COO edge-walk reference `numerics::gcn::aggregate`.
+pub struct Engine {
+    threads: usize,
+    pool: Option<WorkerPool>,
+}
+
+impl Engine {
+    /// Single-threaded engine (no pool, no spawn cost).
+    pub fn serial() -> Engine {
+        Engine { threads: 1, pool: None }
+    }
+
+    /// Engine with `threads` workers; `threads <= 1` degenerates to the
+    /// serial engine.
+    pub fn new(threads: usize) -> Engine {
+        let threads = threads.max(1);
+        Engine {
+            threads,
+            pool: if threads > 1 { Some(WorkerPool::new(threads)) } else { None },
+        }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(lo, hi)` over disjoint row ranges covering `0..n` — on the
+    /// calling thread when serial, fanned across the pool otherwise.
+    pub(crate) fn run_partitioned(&self, n: usize, f: impl Fn(usize, usize) + Sync) {
+        match &self.pool {
+            Some(pool) if n > 1 => {
+                let nw = self.threads;
+                pool.broadcast(&|w| {
+                    let (lo, hi) = chunk(n, w, nw);
+                    if lo < hi {
+                        f(lo, hi);
+                    }
+                });
+            }
+            _ => f(0, n),
+        }
+    }
+
+    /// Â·X into `out`: per destination row, the self-loop term then the
+    /// in-edges in COO order — bitwise-equal to the COO reference at any
+    /// thread count.
+    pub fn aggregate_into(&self, csr: &SnapshotCsr, selfcoef: &[f32], x: &Mat, out: &mut Mat) {
+        let n = csr.num_nodes();
+        assert_eq!(x.rows, n, "embedding row count");
+        assert_eq!(selfcoef.len(), n, "selfcoef length");
+        assert_eq!((out.rows, out.cols), (x.rows, x.cols), "output shape");
+        let d = x.cols;
+        let ptr = SendPtr(out.data.as_mut_ptr());
+        self.run_partitioned(n, |lo, hi| {
+            // SAFETY: disjoint row ranges — see SendPtr
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * d), (hi - lo) * d) };
+            aggregate_rows(csr, selfcoef, x, slice, lo, hi);
+        });
+    }
+
+    /// Allocating convenience wrapper over [`Self::aggregate_into`].
+    pub fn aggregate(&self, csr: &SnapshotCsr, selfcoef: &[f32], x: &Mat) -> Mat {
+        let mut out = Mat::zeros(x.rows, x.cols);
+        self.aggregate_into(csr, selfcoef, x, &mut out);
+        out
+    }
+
+    /// Cache-blocked `a @ b` into `out`, rows of `a` partitioned across
+    /// the pool.  Per output element the k-terms accumulate in ascending
+    /// order, so the result is bitwise-equal to the naive ikj loop at
+    /// any thread count.
+    pub fn matmul_into(&self, a: &Mat, b: &Mat, out: &mut Mat) {
+        assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+        assert_eq!((out.rows, out.cols), (a.rows, b.cols), "output shape");
+        let n = b.cols;
+        let ptr = SendPtr(out.data.as_mut_ptr());
+        self.run_partitioned(a.rows, |lo, hi| {
+            // SAFETY: disjoint row ranges — see SendPtr
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * n), (hi - lo) * n) };
+            matmul_rows(a, b, slice, lo, hi);
+        });
+    }
+
+    /// Fused `(Â·X) @ W` into `out` without materialising Â·X: each
+    /// worker aggregates one destination row into a scratch register
+    /// block and immediately projects it.  Bitwise-equal to
+    /// `aggregate_into` + `matmul_into`.
+    pub fn aggregate_matmul_into(
+        &self,
+        csr: &SnapshotCsr,
+        selfcoef: &[f32],
+        x: &Mat,
+        w: &Mat,
+        out: &mut Mat,
+    ) {
+        let n = csr.num_nodes();
+        assert_eq!(x.rows, n, "embedding row count");
+        assert_eq!(selfcoef.len(), n, "selfcoef length");
+        assert_eq!(x.cols, w.rows, "matmul shape mismatch");
+        assert_eq!((out.rows, out.cols), (x.rows, w.cols), "output shape");
+        let nc = w.cols;
+        let ptr = SendPtr(out.data.as_mut_ptr());
+        self.run_partitioned(n, |lo, hi| {
+            // SAFETY: disjoint row ranges — see SendPtr
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * nc), (hi - lo) * nc) };
+            FUSED_SCRATCH.with(|cell| {
+                let mut scratch = cell.borrow_mut();
+                scratch.resize(x.cols, 0.0);
+                fused_rows(csr, selfcoef, x, w, slice, lo, hi, &mut scratch[..]);
+            });
+        });
+    }
+}
+
+thread_local! {
+    /// Per-thread scratch row for the fused kernel.  Worker threads are
+    /// long-lived, so after the first call at a given width the fused
+    /// kernel itself performs no steady-state heap allocation (the
+    /// serial path is fully allocation-free; parallel dispatch still
+    /// pays the per-broadcast job boxes — see [`WorkerPool::broadcast`]).
+    static FUSED_SCRATCH: std::cell::RefCell<Vec<f32>> = std::cell::RefCell::new(Vec::new());
+}
+
+/// Serial Â·X over destination rows `lo..hi`; `out` covers exactly those
+/// rows.  Accumulation order per row: zero, self-loop term, in-edges in
+/// COO order — the exact addition sequence of the COO reference.
+pub(crate) fn aggregate_rows(
+    csr: &SnapshotCsr,
+    selfcoef: &[f32],
+    x: &Mat,
+    out: &mut [f32],
+    lo: usize,
+    hi: usize,
+) {
+    let d = x.cols;
+    debug_assert_eq!(out.len(), (hi - lo) * d);
+    for r in lo..hi {
+        let orow = &mut out[(r - lo) * d..(r - lo + 1) * d];
+        orow.fill(0.0);
+        let sc = selfcoef[r];
+        for (o, &v) in orow.iter_mut().zip(x.row(r)) {
+            *o += sc * v;
+        }
+        let (srcs, coefs) = csr.row(r);
+        for (&s, &c) in srcs.iter().zip(coefs) {
+            for (o, &v) in orow.iter_mut().zip(x.row(s as usize)) {
+                *o += c * v;
+            }
+        }
+    }
+}
+
+/// Cache-blocked serial `a @ b` over rows `lo..hi` of `a`; `out` covers
+/// exactly those rows.  k-terms accumulate in ascending order per output
+/// element (bitwise-equal to the naive ikj loop); the `KC × NC` panel of
+/// `b` stays L1-resident across the row sweep.
+pub(crate) fn matmul_rows(a: &Mat, b: &Mat, out: &mut [f32], lo: usize, hi: usize) {
+    let k_total = a.cols;
+    let n = b.cols;
+    debug_assert_eq!(out.len(), (hi - lo) * n);
+    out.fill(0.0);
+    if n == 0 || k_total == 0 {
+        return;
+    }
+    for kb in (0..k_total).step_by(KC) {
+        let kend = (kb + KC).min(k_total);
+        for jb in (0..n).step_by(NC) {
+            let jend = (jb + NC).min(n);
+            for i in lo..hi {
+                let arow = &a.data[i * k_total..(i + 1) * k_total];
+                let orow = &mut out[(i - lo) * n + jb..(i - lo) * n + jend];
+                for (&aik, brow) in arow[kb..kend]
+                    .iter()
+                    .zip(b.data[kb * n..kend * n].chunks_exact(n))
+                {
+                    for (o, &bv) in orow.iter_mut().zip(&brow[jb..jend]) {
+                        *o += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Fused serial aggregate-project over destination rows `lo..hi`:
+/// aggregate one row into `scratch` (len `x.cols`), then project it
+/// through `w` — Â·X is never materialised.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_rows(
+    csr: &SnapshotCsr,
+    selfcoef: &[f32],
+    x: &Mat,
+    w: &Mat,
+    out: &mut [f32],
+    lo: usize,
+    hi: usize,
+    scratch: &mut [f32],
+) {
+    let nc = w.cols;
+    debug_assert_eq!(out.len(), (hi - lo) * nc);
+    debug_assert_eq!(scratch.len(), x.cols);
+    if nc == 0 {
+        return;
+    }
+    for r in lo..hi {
+        aggregate_rows(csr, selfcoef, x, scratch, r, r + 1);
+        let orow = &mut out[(r - lo) * nc..(r - lo + 1) * nc];
+        orow.fill(0.0);
+        for (&av, brow) in scratch.iter().zip(w.data.chunks_exact(nc)) {
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::random_snapshot;
+    use crate::graph::{RenumberTable, Snapshot};
+    use crate::testutil::Pcg32;
+
+    fn random_mat(rng: &mut Pcg32, rows: usize, cols: usize) -> Mat {
+        Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 1.0))
+    }
+
+    #[test]
+    fn pool_broadcast_runs_every_worker() {
+        use std::sync::atomic::AtomicUsize;
+        let pool = WorkerPool::new(4);
+        let hits = AtomicUsize::new(0);
+        pool.broadcast(&|w| {
+            assert!(w < 4);
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
+        // pool is reusable
+        pool.broadcast(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn pool_propagates_worker_panic_and_survives() {
+        let pool = WorkerPool::new(2);
+        let res = panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.broadcast(&|w| {
+                if w == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        // still usable after a task panic
+        let ok = std::sync::atomic::AtomicUsize::new(0);
+        pool.broadcast(&|_| {
+            ok.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(ok.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn parallel_aggregate_bitwise_equals_serial() {
+        let mut rng = Pcg32::seeded(21);
+        let snap = random_snapshot(&mut rng, 97, 500);
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        let x = random_mat(&mut rng, 97, 13);
+        let serial = Engine::serial().aggregate(&csr, &snap.selfcoef, &x);
+        for threads in [2, 3, 4] {
+            let eng = Engine::new(threads);
+            let got = eng.aggregate(&csr, &snap.selfcoef, &x);
+            assert_eq!(
+                got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                serial.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_matmul_bitwise_equals_naive_order() {
+        let mut rng = Pcg32::seeded(22);
+        // sizes straddling the KC/NC block boundaries
+        for (m, k, n) in [(3, 5, 7), (10, 64, 64), (17, 100, 130), (1, 1, 1)] {
+            let a = random_mat(&mut rng, m, k);
+            let b = random_mat(&mut rng, k, n);
+            let mut out = Mat::zeros(m, n);
+            Engine::serial().matmul_into(&a, &b, &mut out);
+            for i in 0..m {
+                for j in 0..n {
+                    let mut want = 0.0f32;
+                    for p in 0..k {
+                        want += a.at(i, p) * b.at(p, j);
+                    }
+                    assert_eq!(out.at(i, j).to_bits(), want.to_bits(), "({i},{j})");
+                }
+            }
+            // parallel rows match too
+            let eng = Engine::new(4);
+            let mut pout = Mat::zeros(m, n);
+            eng.matmul_into(&a, &b, &mut pout);
+            assert_eq!(pout.data, out.data);
+        }
+    }
+
+    #[test]
+    fn fused_bitwise_equals_two_step() {
+        let mut rng = Pcg32::seeded(23);
+        let snap = random_snapshot(&mut rng, 60, 300);
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        let x = random_mat(&mut rng, 60, 32);
+        let w = random_mat(&mut rng, 32, 16);
+        for eng in [Engine::serial(), Engine::new(3)] {
+            let agg = eng.aggregate(&csr, &snap.selfcoef, &x);
+            let mut two_step = Mat::zeros(60, 16);
+            eng.matmul_into(&agg, &w, &mut two_step);
+            let mut fused = Mat::zeros(60, 16);
+            eng.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut fused);
+            assert_eq!(
+                fused.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                two_step.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "threads={}",
+                eng.threads()
+            );
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        let snap = Snapshot {
+            index: 0,
+            src: vec![],
+            dst: vec![],
+            coef: vec![],
+            selfcoef: vec![],
+            renumber: RenumberTable::default(),
+            t_start: 0,
+        };
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        let x = Mat::zeros(0, 4);
+        for eng in [Engine::serial(), Engine::new(2)] {
+            let out = eng.aggregate(&csr, &snap.selfcoef, &x);
+            assert_eq!(out.data.len(), 0);
+            let mut mm = Mat::zeros(0, 3);
+            eng.matmul_into(&x, &Mat::zeros(4, 3), &mut mm);
+            assert_eq!(mm.data.len(), 0);
+        }
+    }
+}

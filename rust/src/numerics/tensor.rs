@@ -51,21 +51,27 @@ impl Mat {
         zeros as f32 / sample as f32
     }
 
-    /// `self @ other` — ikj loop order (row-major friendly).
+    /// `self @ other` — row-major friendly accumulation order.
     ///
     /// The zero-skip in the k-loop only pays off when `self` is actually
     /// sparse; on dense weight matrices the branch mispredicts every
     /// iteration, so it is gated on a sampled density check and the
-    /// dense path runs branch-free.
+    /// dense path runs through the cache-blocked branch-free kernel
+    /// (`numerics::spmm::matmul_rows` — bitwise-equal to the old ikj
+    /// loop, the `KC × NC` panel of `other` held L1-resident).
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Mat::zeros(self.rows, other.cols);
         let use_skip = self.sampled_zero_frac() > 0.25;
+        if !use_skip {
+            super::spmm::matmul_rows(self, other, &mut out.data, 0, self.rows);
+            return out;
+        }
         for i in 0..self.rows {
             let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
             for k in 0..self.cols {
                 let a = self.data[i * self.cols + k];
-                if use_skip && a == 0.0 {
+                if a == 0.0 {
                     continue;
                 }
                 let b_row = &other.data[k * other.cols..(k + 1) * other.cols];
@@ -107,6 +113,13 @@ impl Mat {
 
     pub fn relu(&self) -> Mat {
         self.map(|v| v.max(0.0))
+    }
+
+    /// In-place ReLU (the engine's hot paths avoid the `relu` clone).
+    pub fn relu_inplace(&mut self) {
+        for v in self.data.iter_mut() {
+            *v = v.max(0.0);
+        }
     }
 }
 

@@ -14,6 +14,13 @@
 //! remaining Rust-side allocation is the transient copy `to_vec`
 //! performs inside the XLA readback bridge; the staging side is
 //! allocation-free (asserted by `tests/alloc_hotpath.rs`).
+//!
+//! Staged steps (`run_*_staged`) consume a pipeline [`StagingSlot`]
+//! filled on a producer thread.  The slot also carries the snapshot's
+//! destination-major CSR (`slot.csr`); PJRT execution ignores it — the
+//! HLO gathers over the padded COO arrays — but host-side mirror
+//! cross-checks and CPU baselines feed it to `numerics::spmm` so they
+//! never re-derive the adjacency on the consumer thread.
 
 use crate::error::{Error, Result};
 use crate::graph::Snapshot;

@@ -9,8 +9,10 @@
 //! reallocates — see EXPERIMENTS.md §Perf).
 
 use crate::error::{Error, Result};
-use crate::graph::Snapshot;
+use crate::fpga::incremental::{DeltaPlan, DeltaStats};
+use crate::graph::{Snapshot, SnapshotCsr};
 use crate::runtime::manifest::Manifest;
+use std::collections::HashMap;
 
 /// Reinterpret a `&[u32]` of local node ids as `&[i32]` (same layout;
 /// ids are bounded by the node budget, far below 2³¹).
@@ -91,16 +93,32 @@ impl PaddedGraph {
 }
 
 /// One recyclable staging buffer for the three-stage pipeline: the
-/// padded graph arrays plus the padded feature matrix — everything the
-/// producer-side stage can materialise ahead of inference.
+/// padded graph arrays, the padded feature matrix, and the snapshot's
+/// destination-major CSR — everything the producer-side stage can
+/// materialise ahead of inference.  The CSR is rebuilt in place per
+/// stage (PJRT execution ignores it; the pure-Rust mirror, cross-checks
+/// and CPU baselines consume it through `numerics::spmm`).
 #[derive(Clone, Debug)]
 pub struct StagingSlot {
     pub graph: PaddedGraph,
     /// Padded features, `[max_nodes × in_dim]` row-major.
     pub x: Vec<f32>,
+    /// In-edges grouped by destination, rebuilt in place per stage.
+    pub csr: SnapshotCsr,
     in_dim: usize,
     /// Feature rows possibly nonzero from a previous stage.
     x_hwm: usize,
+    /// Delta-staging bookkeeping: raw id of each currently-staged
+    /// feature row (local order) and the reverse map — empty after a
+    /// non-delta stage, so a following [`Self::stage_delta`] refetches
+    /// everything.
+    x_raws: Vec<u32>,
+    x_map: HashMap<u32, u32>,
+    /// Double buffer for delta layout transitions, and the row count its
+    /// stale contents may extend to.
+    x_scratch: Vec<f32>,
+    scratch_hwm: usize,
+    plan: DeltaPlan,
 }
 
 impl StagingSlot {
@@ -108,20 +126,29 @@ impl StagingSlot {
         StagingSlot {
             graph: PaddedGraph::new(m),
             x: vec![0.0; m.max_nodes * m.in_dim],
+            csr: SnapshotCsr::new(),
             in_dim: m.in_dim,
             x_hwm: 0,
+            x_raws: Vec::new(),
+            x_map: HashMap::new(),
+            x_scratch: vec![0.0; m.max_nodes * m.in_dim],
+            scratch_hwm: 0,
+            plan: DeltaPlan::new(),
         }
     }
 
-    /// Stage one snapshot: pad the graph arrays and materialise features
-    /// row by row via `features(raw_id, row_out)`.  Allocation-free once
-    /// constructed.
+    /// Stage one snapshot: pad the graph arrays, rebuild the CSR, and
+    /// materialise features row by row via `features(raw_id, row_out)`.
+    /// Allocation-free at steady state.
     pub fn stage(
         &mut self,
         snap: &Snapshot,
         mut features: impl FnMut(u32, &mut [f32]),
     ) -> Result<()> {
         self.graph.fill(snap)?;
+        self.csr.rebuild(snap);
+        self.x_raws.clear();
+        self.x_map.clear();
         let d = self.in_dim;
         for (local, raw) in snap.renumber.iter() {
             let i = local as usize * d;
@@ -135,10 +162,65 @@ impl StagingSlot {
         Ok(())
     }
 
+    /// Delta-aware [`Self::stage`] (the feature-side §VI win): rows for
+    /// nodes shared with the previously staged snapshot are moved to
+    /// their new local position instead of re-materialised — `features`
+    /// is only invoked for arriving nodes.  Requires `features` to be a
+    /// pure function of the raw id (true for the DRAM-resident feature
+    /// store this models); guarded by the same [`DeltaPlan`] the
+    /// resident-state path uses.  Returns the overlap stats so callers
+    /// can report the measured reuse fraction.  Allocation-free at
+    /// steady state.
+    ///
+    /// The delta is relative to **this slot's** previous stage.  Pool
+    /// slots recycled round-robin by the staged pipeline see every
+    /// POOL-th snapshot; for true adjacent-snapshot deltas keep one
+    /// dedicated slot as a persistent cache and copy its rows into the
+    /// pool slot via [`Self::stage_from_rows`] (see
+    /// `examples/e2e_serve.rs`).
+    pub fn stage_delta(
+        &mut self,
+        snap: &Snapshot,
+        mut features: impl FnMut(u32, &mut [f32]),
+    ) -> Result<DeltaStats> {
+        self.graph.fill(snap)?;
+        self.csr.rebuild(snap);
+        let d = self.in_dim;
+        let n = snap.num_nodes(); // within max_nodes: graph.fill checked
+        {
+            let (plan, raws, map) = (&mut self.plan, &self.x_raws, &self.x_map);
+            plan.build(raws, |r| map.get(&r).copied(), &snap.renumber);
+        }
+        for &(i, j) in &self.plan.shared {
+            let (dst, src) = (i as usize * d, j as usize * d);
+            self.x_scratch[dst..dst + d].copy_from_slice(&self.x[src..src + d]);
+        }
+        for &(i, raw) in &self.plan.fetch {
+            let dst = i as usize * d;
+            features(raw, &mut self.x_scratch[dst..dst + d]);
+        }
+        if self.scratch_hwm > n {
+            self.x_scratch[n * d..self.scratch_hwm * d].fill(0.0);
+        }
+        std::mem::swap(&mut self.x, &mut self.x_scratch);
+        self.scratch_hwm = self.x_hwm;
+        self.x_hwm = n;
+        self.x_raws.clear();
+        self.x_raws.extend_from_slice(snap.renumber.raws());
+        self.x_map.clear();
+        for (local, raw) in snap.renumber.iter() {
+            self.x_map.insert(raw, local);
+        }
+        Ok(self.plan.stats())
+    }
+
     /// Stage from an already-materialised dense `[n × in_dim]` feature
     /// matrix (e.g. a pipeline payload computed on the prepare thread).
     pub fn stage_from_rows(&mut self, snap: &Snapshot, x: &[f32]) -> Result<()> {
         self.graph.fill(snap)?;
+        self.csr.rebuild(snap);
+        self.x_raws.clear();
+        self.x_map.clear();
         let d = self.in_dim;
         let n = snap.num_nodes();
         debug_assert_eq!(x.len(), n * d, "feature matrix must be [num_nodes × in_dim]");
@@ -235,6 +317,94 @@ mod tests {
         assert!(slot.x[..2 * m.in_dim].iter().all(|&v| v == 0.5));
         assert!(slot.x[2 * m.in_dim..].iter().all(|&v| v == 0.0));
         assert_eq!(slot.graph.num_nodes, 2);
+    }
+
+    #[test]
+    fn staging_slot_caches_destination_csr() {
+        let m = manifest();
+        let mut slot = StagingSlot::new(&m);
+        let s = snap(4, 3); // 3 edges, all into node 3
+        slot.stage(&s, |_raw, row| row.fill(1.0)).unwrap();
+        assert_eq!(slot.csr.num_nodes(), 4);
+        assert_eq!(slot.csr.num_edges(), 3);
+        assert_eq!(slot.csr.row(3).0.len(), 3);
+        assert_eq!(slot.csr.row(0).0.len(), 0);
+    }
+
+    #[test]
+    fn stage_delta_matches_full_stage_bitwise() {
+        use crate::graph::RenumberTable;
+        let m = manifest();
+        let mut full = StagingSlot::new(&m);
+        let mut delta = StagingSlot::new(&m);
+        // deterministic per-raw features, counting invocations
+        let mut calls_full = 0usize;
+        let mut calls_delta = 0usize;
+        let feats = |raw: u32, row: &mut [f32]| {
+            for (k, v) in row.iter_mut().enumerate() {
+                *v = raw as f32 + k as f32 * 0.25 + 1.0;
+            }
+        };
+        // a sequence with heavy overlap, then shrink, then regrow
+        let windows: Vec<Vec<(u32, u32)>> = vec![
+            vec![(1, 2), (2, 3), (3, 4)],
+            vec![(2, 3), (3, 5)],
+            vec![(5, 6)],
+            vec![(1, 2), (5, 6), (6, 7)],
+        ];
+        let (mut shared_total, mut nodes_total) = (0usize, 0usize);
+        for pairs in &windows {
+            let renumber = RenumberTable::build(pairs.iter().copied());
+            let n = renumber.len();
+            let s = Snapshot {
+                index: 0,
+                src: vec![0],
+                dst: vec![(n - 1) as u32],
+                coef: vec![0.25],
+                selfcoef: vec![0.5; n],
+                renumber,
+                t_start: 0,
+            };
+            full.stage(&s, |raw, row| {
+                calls_full += 1;
+                feats(raw, row);
+            })
+            .unwrap();
+            let st = delta
+                .stage_delta(&s, |raw, row| {
+                    calls_delta += 1;
+                    feats(raw, row);
+                })
+                .unwrap();
+            shared_total += st.shared_nodes;
+            nodes_total += st.nodes;
+            assert_eq!(
+                full.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                delta.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "staged features diverged"
+            );
+        }
+        assert!(shared_total > 0 && shared_total < nodes_total);
+        // the delta path must have skipped exactly the shared rows
+        assert_eq!(calls_delta, calls_full - shared_total);
+    }
+
+    #[test]
+    fn stage_after_stage_delta_and_back_is_consistent() {
+        let m = manifest();
+        let mut slot = StagingSlot::new(&m);
+        let feats = |raw: u32, row: &mut [f32]| row.fill(raw as f32 + 1.0);
+        let s1 = snap(4, 3);
+        let s2 = snap(6, 4);
+        slot.stage_delta(&s1, feats).unwrap();
+        slot.stage(&s2, feats).unwrap(); // invalidates delta bookkeeping
+        let st = slot.stage_delta(&s1, feats).unwrap();
+        // after a non-delta stage everything must be refetched
+        assert_eq!(st.shared_nodes, 0);
+        assert_eq!(st.new_nodes, s1.num_nodes());
+        let mut want = StagingSlot::new(&m);
+        want.stage(&s1, feats).unwrap();
+        assert_eq!(slot.x, want.x);
     }
 
     #[test]

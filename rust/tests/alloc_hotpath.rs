@@ -2,9 +2,12 @@
 //!
 //! A counting global allocator wraps `System`; after a warm-up cycle
 //! over the snapshot stream (letting every buffer and map reach its
-//! high-water capacity), a full staging step — `PaddedGraph::fill` via
-//! `StagingSlot::stage`, feature materialisation, a full-gather
-//! `gather_padded_into`, and the delta-aware `ResidentState::advance` —
+//! high-water capacity), a full staging step — `PaddedGraph::fill` plus
+//! the in-place CSR rebuild via `StagingSlot::stage`, delta-aware
+//! feature staging via `StagingSlot::stage_delta`, feature
+//! materialisation, a full-gather `gather_padded_into`, the delta-aware
+//! `ResidentState::advance`, and the serial aggregation kernels (both
+//! the COO reference walk `aggregate_into` and the CSR engine path) —
 //! must perform zero heap allocations.
 //!
 //! This binary intentionally holds a single `#[test]` so no concurrent
@@ -42,6 +45,7 @@ use dgnn_booster::coordinator::preprocess::preprocess_stream;
 use dgnn_booster::coordinator::{NodeStateStore, ResidentState};
 use dgnn_booster::datasets::{synth, BC_ALPHA};
 use dgnn_booster::models::{node_features_into, Dims};
+use dgnn_booster::numerics::{self, Engine, Mat};
 use dgnn_booster::runtime::{Manifest, StagingSlot};
 
 #[test]
@@ -60,23 +64,58 @@ fn staging_path_steady_state_is_allocation_free() {
         out_dim: dims.out_dim,
     };
     let mut slot = StagingSlot::new(&m);
+    let mut delta_slot = StagingSlot::new(&m);
     let mut store = NodeStateStore::zeros(4000, dims.hidden_dim);
     let mut res = ResidentState::new(max_nodes, dims.hidden_dim);
     let mut gathered = Vec::new();
+    let eng = Engine::serial();
+    // per-snapshot feature matrices and aggregation outputs, sized once
+    // up front so the measured loop touches no fresh heap memory
+    let xs: Vec<Mat> = snaps
+        .iter()
+        .map(|s| {
+            let mut x = Mat::zeros(s.num_nodes(), dims.in_dim);
+            for (local, raw) in s.renumber.iter() {
+                node_features_into(raw, 42, x.row_mut(local as usize));
+            }
+            x
+        })
+        .collect();
+    let mut agg_outs: Vec<Mat> = snaps
+        .iter()
+        .map(|s| Mat::zeros(s.num_nodes(), dims.in_dim))
+        .collect();
+    let w_fused = Mat::zeros(dims.in_dim, dims.in_dim);
 
-    // warm-up: two full cycles so every Vec/HashMap reaches its
-    // high-water capacity (including the wrap-around transition)
-    for s in snaps.iter().chain(snaps.iter()) {
+    // warm-up: two full cycles so every Vec/HashMap (and the fused
+    // kernel's thread-local scratch) reaches its high-water capacity
+    // (including the wrap-around transition)
+    for (i, s) in snaps.iter().chain(snaps.iter()).enumerate() {
+        let i = i % snaps.len();
         slot.stage(s, |raw, row| node_features_into(raw, 42, row)).unwrap();
+        delta_slot
+            .stage_delta(s, |raw, row| node_features_into(raw, 42, row))
+            .unwrap();
         store.gather_padded_into(s, max_nodes, &mut gathered);
         res.advance(&mut store, s).unwrap();
+        eng.aggregate_matmul_into(&slot.csr, &s.selfcoef, &xs[i], &w_fused, &mut agg_outs[i]);
     }
 
     let before = ALLOCS.load(Ordering::Relaxed);
-    for s in &snaps {
+    for (i, s) in snaps.iter().enumerate() {
+        // staging: padding + in-place CSR rebuild + feature fill
         slot.stage(s, |raw, row| node_features_into(raw, 42, row)).unwrap();
+        // delta staging: shared feature rows moved, arrivals fetched
+        delta_slot
+            .stage_delta(s, |raw, row| node_features_into(raw, 42, row))
+            .unwrap();
         store.gather_padded_into(s, max_nodes, &mut gathered);
         res.advance(&mut store, s).unwrap();
+        // serial aggregation: COO reference walk, the CSR engine path,
+        // and the fused aggregate-project kernel
+        numerics::aggregate_into(s, &xs[i], &mut agg_outs[i]);
+        eng.aggregate_into(&slot.csr, &s.selfcoef, &xs[i], &mut agg_outs[i]);
+        eng.aggregate_matmul_into(&slot.csr, &s.selfcoef, &xs[i], &w_fused, &mut agg_outs[i]);
     }
     let after = ALLOCS.load(Ordering::Relaxed);
     assert_eq!(
