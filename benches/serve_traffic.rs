@@ -1,0 +1,96 @@
+//! Served-traffic benchmark — closes the ROADMAP item "wire `--delta`
+//! into a served-traffic benchmark once a server frontend exists":
+//! sweep tenant-stream count × §VI delta on/off through
+//! `serve::Scheduler` (mirror GCRN-M2 sessions over one shared sparse
+//! engine and one recycled staging pool) and record per-request
+//! end-to-end latency tails + throughput per sweep point.
+//!
+//! Writes `BENCH_serve.json` (schema in README.md § serve) so the
+//! serving-perf trajectory is machine-tracked across PRs, like
+//! `BENCH_hotpath.json` / `BENCH_kernels.json`.
+//!
+//! `cargo bench --bench serve_traffic` — full sweep (1/2/4 streams).
+//! `cargo bench --bench serve_traffic -- --smoke` — 2 streams, tiny
+//! snapshot budget (the CI gate).
+
+use dgnn_booster::datasets::{synth, BC_ALPHA};
+use dgnn_booster::models::{Dims, ModelKind};
+use dgnn_booster::numerics::Engine;
+use dgnn_booster::serve::{
+    write_serve_json, DgnnSession, Scheduler, ServeRecorder, ServeRow, SessionConfig,
+    StreamSource,
+};
+use std::sync::Arc;
+
+/// Shared-engine worker threads for every sweep point.
+const THREADS: usize = 2;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let model = ModelKind::GcrnM2;
+    let dims = Dims::default();
+    let (stream_counts, limit): (&[usize], usize) =
+        if smoke { (&[2], 8) } else { (&[1, 2, 4], usize::MAX) };
+
+    let mut rows: Vec<ServeRow> = Vec::new();
+    for &k in stream_counts {
+        for delta in [false, true] {
+            let sources: Vec<StreamSource> = (0..k)
+                .map(|i| StreamSource {
+                    name: format!("stream-{i}"),
+                    stream: synth::generate(&BC_ALPHA, 42 + i as u64),
+                    splitter_secs: BC_ALPHA.splitter_secs,
+                })
+                .collect();
+            let engine = Arc::new(Engine::new(THREADS));
+            let manifest = Scheduler::manifest_for(&sources, dims);
+            let sessions: Vec<Box<dyn DgnnSession>> = sources
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    model.build_session(&SessionConfig {
+                        dims,
+                        seed: 42 + i as u64,
+                        total_nodes: s.stream.num_nodes as usize,
+                        max_nodes: manifest.max_nodes,
+                        delta,
+                        engine: Arc::clone(&engine),
+                    })
+                })
+                .collect();
+            let sched = Scheduler::new(engine, (2 * k).clamp(2, 16));
+            let t0 = std::time::Instant::now();
+            let outcomes = sched
+                .run(&manifest, &sources, sessions, limit, |_, _, _, _| Ok(()))
+                .expect("serve sweep point");
+            let wall = t0.elapsed().as_secs_f64();
+
+            let mut rec = ServeRecorder::new(65536);
+            for o in &outcomes {
+                for st in &o.steps {
+                    rec.record_ms(st.e2e_ms);
+                }
+            }
+            let summary = rec.summary(wall);
+            let name = format!(
+                "serve {} streams={k} delta={}",
+                model.name(),
+                if delta { "on" } else { "off" }
+            );
+            println!("bench {name:<44} {}", summary.line());
+            rows.push(ServeRow { name, streams: k, delta, threads: THREADS, summary });
+        }
+    }
+
+    write_serve_json(
+        "BENCH_serve.json",
+        &rows,
+        &[
+            ("smoke", if smoke { 1.0 } else { 0.0 }),
+            ("threads", THREADS as f64),
+            ("streams_max", *stream_counts.last().unwrap() as f64),
+        ],
+    )
+    .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json ({} sweep points)", rows.len());
+}

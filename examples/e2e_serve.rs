@@ -1,45 +1,37 @@
 //! **End-to-end driver** (EXPERIMENTS.md E8): stream every snapshot of
 //! both datasets through the full three-layer stack — host preprocessing
 //! (L3) → AOT-compiled JAX/Pallas model steps (L2/L1) executed on the
-//! PJRT CPU client — for both models, cross-checking the numerics
+//! PJRT CPU client — for all three models, cross-checking the numerics
 //! against the pure-Rust mirror, and reporting latency/throughput plus
 //! the FPGA-projected per-snapshot latency.
 //!
-//! The request path runs the staged hot path: the three-stage pipeline
-//! (preprocess → stage → infer) materialises features on the prepare
-//! thread, then pads graphs and rebuilds each snapshot's
-//! destination-major CSR on the stage thread into recycled
-//! `StagingSlot`s, overlapped with PJRT execution.  With `--delta`,
-//! recurrent state uses delta-aware `ResidentState` gathers (paper §VI)
-//! **and** feature staging goes through `StagingSlot::stage_delta` on a
-//! persistent cache slot (pool slots recycle every POOL snapshots, so
-//! their own bookkeeping would measure overlap at distance POOL, not
-//! 1), which only materialises rows for nodes absent from the previous
-//! snapshot.  The mirror cross-check always uses full gathers and runs
-//! through the sparse engine (`numerics::spmm`) over the slot's cached
-//! CSR — `--threads N` sets its worker count — so it also validates
-//! that the delta and parallel paths match bit-close.
+//! All per-model wiring lives in the `serve` subsystem now: a PJRT
+//! [`dgnn_booster::serve::DgnnSession`] drives the compiled step while a
+//! mirror session (always full gathers, over the shared
+//! `numerics::spmm` engine and the same staged slots) cross-checks every
+//! output — so one generic loop serves EvolveGCN, GCRN-M1 and GCRN-M2.
+//! With `--delta`, the PJRT session runs delta-aware `ResidentState`
+//! gathers and delta feature staging (paper §VI); the mirror stays on
+//! full gathers, so it validates the delta and parallel paths too.
 //!
 //! Requires `make artifacts`.  Usage:
 //! ```
 //! cargo run --release --example e2e_serve              # full streams
 //! cargo run --release --example e2e_serve -- --snapshots 40
 //! cargo run --release --example e2e_serve -- --delta   # §VI delta gathers + delta feature staging
-//! cargo run --release --example e2e_serve -- --threads 4   # parallel mirror engine
+//! cargo run --release --example e2e_serve -- --threads 4   # parallel shared engine
 //! ```
 
-use dgnn_booster::baselines::cpu::features_for;
-use dgnn_booster::coordinator::pipeline::{run_stream_staged, StepResult};
-use dgnn_booster::coordinator::{NodeStateStore, ResidentState};
 use dgnn_booster::datasets::{self, BC_ALPHA, UCI};
 use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
-use dgnn_booster::graph::{CooStream, Snapshot, SnapshotCsr};
 use dgnn_booster::metrics::LatencyStats;
-use dgnn_booster::models::{node_features_into, Dims, EvolveGcnParams, GcrnM1Params, GcrnM2Params, ModelKind};
-use dgnn_booster::numerics::{self, Engine, Mat};
+use dgnn_booster::models::{Dims, ModelKind};
+use dgnn_booster::numerics::Engine;
 use dgnn_booster::report::tables::{snapshots, ReportCtx};
-use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor, Manifest, StagingSlot};
+use dgnn_booster::runtime::Manifest;
+use dgnn_booster::serve::{build_pjrt_session, run_session, SessionConfig};
 use dgnn_booster::testutil::max_abs_diff;
+use std::sync::Arc;
 
 const SEED: u64 = 42;
 /// Staging slots in flight (bounds the pipeline's peak memory).
@@ -62,7 +54,7 @@ fn main() -> dgnn_booster::Result<()> {
 
     let client = xla::PjRtClient::cpu()?;
     println!(
-        "PJRT platform: {} ({} devices), {} mirror-engine thread(s){}\n",
+        "PJRT platform: {} ({} devices), {} shared-engine thread(s){}\n",
         client.platform_name(),
         client.device_count(),
         threads,
@@ -77,136 +69,6 @@ fn main() -> dgnn_booster::Result<()> {
     Ok(())
 }
 
-/// Fill one staging slot for `snap`.  Non-delta mode (`x` is `Some`):
-/// features were already materialised on the prepare thread, so the
-/// stage thread only pads and rebuilds the CSR.  Delta mode (`x` is
-/// `None`): the §VI delta path runs `stage_delta` on the **persistent
-/// cache slot** — pool slots recycle every POOL snapshots, so their own
-/// bookkeeping would measure overlap at distance POOL, not against the
-/// previous snapshot — then copies the staged rows into the pool slot.
-/// Feature-row reuse counts only accumulate for snapshots that will
-/// actually be served (`index < limit`).
-#[allow(clippy::too_many_arguments)]
-fn stage_slot(
-    slot: &mut StagingSlot,
-    cache: &mut StagingSlot,
-    snap: &Snapshot,
-    x: &Option<Mat>,
-    in_dim: usize,
-    limit: usize,
-    x_shared: &mut usize,
-    x_seen: &mut usize,
-) -> dgnn_booster::Result<()> {
-    match x {
-        Some(x) => slot.stage_from_rows(snap, &x.data),
-        None => {
-            let st = cache.stage_delta(snap, |raw, row| node_features_into(raw, SEED, row))?;
-            if snap.index < limit {
-                *x_shared += st.shared_nodes;
-                *x_seen += st.nodes;
-            }
-            let n = snap.num_nodes();
-            slot.stage_from_rows(snap, &cache.x[..n * in_dim])
-        }
-    }
-}
-
-/// Shared serving loop for the recurrent (GCRN) variants: staged
-/// three-stage pipeline, full-gather or delta-aware state handling, and
-/// the mirror cross-check (always on full gathers, through the sparse
-/// engine over the slot's cached CSR — so it validates the delta and
-/// parallel paths too).  `run_staged` executes one PJRT step from a
-/// staged slot; `mirror_step` is the pure-Rust reference.  Returns the
-/// step results plus, when `delta`, the (shared, seen) node counts for
-/// recurrent state and for staged feature rows.
-#[allow(clippy::too_many_arguments, clippy::type_complexity)]
-fn serve_recurrent<FRun, FMirror>(
-    stream: &CooStream,
-    profile: &datasets::DatasetProfile,
-    limit: usize,
-    delta: bool,
-    dims: Dims,
-    manifest: &Manifest,
-    max_err: &mut f32,
-    mut run_staged: FRun,
-    mut mirror_step: FMirror,
-) -> dgnn_booster::Result<(
-    Vec<StepResult<usize>>,
-    Option<(usize, usize)>,
-    Option<(usize, usize)>,
-)>
-where
-    FRun: FnMut(&StagingSlot, &mut Vec<f32>, &mut Vec<f32>) -> dgnn_booster::Result<()>,
-    FMirror: FnMut(&Snapshot, &SnapshotCsr, &Mat, &Mat, &Mat) -> (Mat, Mat),
-{
-    let max_nodes = manifest.max_nodes;
-    let (dh, ind) = (dims.hidden_dim, dims.in_dim);
-    let pool: Vec<StagingSlot> = (0..POOL).map(|_| StagingSlot::new(manifest)).collect();
-    // persistent delta-staging cache (see stage_slot)
-    let mut cache = StagingSlot::new(manifest);
-    let total = stream.num_nodes as usize;
-    let mut h_store = NodeStateStore::zeros(total, dh);
-    let mut c_store = NodeStateStore::zeros(total, dh);
-    // mirror state, always full-gathered
-    let mut h_ref = NodeStateStore::zeros(total, dh);
-    let mut c_ref = NodeStateStore::zeros(total, dh);
-    let mut h_res = ResidentState::new(max_nodes, dh);
-    let mut c_res = ResidentState::new(max_nodes, dh);
-    let mut h_buf = Vec::new();
-    let mut c_buf = Vec::new();
-    let (mut shared, mut seen) = (0usize, 0usize);
-    let (mut x_shared, mut x_seen) = (0usize, 0usize);
-    let results = run_stream_staged(
-        stream,
-        profile.splitter_secs,
-        POOL,
-        pool,
-        |snap| Ok(if delta { None } else { Some(features_for(snap, dims, SEED)) }),
-        |snap, x, slot| stage_slot(slot, &mut cache, snap, x, ind, limit, &mut x_shared, &mut x_seen),
-        |snap, _x, slot| {
-            if snap.index >= limit {
-                return Ok(0usize);
-            }
-            let n = snap.num_nodes();
-            if delta {
-                let st = h_res.advance(&mut h_store, snap)?;
-                c_res.advance(&mut c_store, snap)?;
-                shared += st.shared_nodes;
-                seen += st.nodes;
-                run_staged(slot, h_res.buf_mut(), c_res.buf_mut())?;
-            } else {
-                h_store.gather_padded_into(snap, max_nodes, &mut h_buf);
-                c_store.gather_padded_into(snap, max_nodes, &mut c_buf);
-                run_staged(slot, &mut h_buf, &mut c_buf)?;
-                h_store.scatter(snap, &h_buf);
-                c_store.scatter(snap, &c_buf);
-            }
-            // mirror step over the slot's staged features and cached CSR
-            let x = Mat::from_vec(n, ind, slot.x[..n * ind].to_vec());
-            let hm = Mat::from_vec(n, dh, h_ref.gather_padded(snap, n));
-            let cm = Mat::from_vec(n, dh, c_ref.gather_padded(snap, n));
-            let (hn, cn) = mirror_step(snap, &slot.csr, &x, &hm, &cm);
-            h_ref.scatter(snap, &hn.data);
-            c_ref.scatter(snap, &cn.data);
-            let got = if delta {
-                &h_res.buf()[..n * dh]
-            } else {
-                &h_buf[..n * dh]
-            };
-            *max_err = max_err.max(max_abs_diff(got, &hn.data));
-            Ok(n)
-        },
-    )?;
-    let counts = if delta {
-        h_res.flush(&mut h_store);
-        c_res.flush(&mut c_store);
-        (Some((shared, seen)), Some((x_shared, x_seen)))
-    } else {
-        (None, None)
-    };
-    Ok((results, counts.0, counts.1))
-}
-
 fn serve(
     client: &xla::PjRtClient,
     model: ModelKind,
@@ -216,126 +78,58 @@ fn serve(
     threads: usize,
 ) -> dgnn_booster::Result<()> {
     let dims = Dims::default();
-    let eng = Engine::new(threads);
+    let engine = Arc::new(Engine::new(threads));
     let stream = datasets::load_or_generate(profile, "data", SEED)?;
-    let mut stats = LatencyStats::new();
+    let manifest = Manifest::load("artifacts")?;
+    let cfg = SessionConfig {
+        dims,
+        seed: SEED,
+        total_nodes: stream.num_nodes as usize,
+        max_nodes: manifest.max_nodes,
+        delta,
+        engine: Arc::clone(&engine),
+    };
+    let mut session = build_pjrt_session(model, client, "artifacts", &cfg)?;
+    // mirror cross-check: same staged slots, always full gathers —
+    // validates the PJRT, delta and parallel-engine paths at once
+    let mut mirror = model.build_session(&SessionConfig { delta: false, ..cfg.clone() });
     let mut max_err = 0.0f32;
+    let (results, state_delta, feature_delta) = run_session(
+        session.as_mut(),
+        &stream,
+        profile.splitter_secs,
+        &manifest,
+        POOL,
+        limit,
+        |snap, slot, out| {
+            mirror.infer(snap, slot)?;
+            max_err = max_err.max(max_abs_diff(out, mirror.output()));
+            Ok(())
+        },
+    )?;
+
+    let mut stats = LatencyStats::new();
     let mut count = 0usize;
-    // (shared, seen) node counts when running delta-aware gathers
-    let mut delta_counts: Option<(usize, usize)> = None;
-    let mut feature_counts: Option<(usize, usize)> = None;
-
-    match model {
-        ModelKind::EvolveGcn => {
-            let params = EvolveGcnParams::init(SEED, dims);
-            let mut exec = EvolveGcnExecutor::new(client, "artifacts", &params)?;
-            let manifest = exec.manifest().clone();
-            let pool: Vec<StagingSlot> =
-                (0..POOL).map(|_| StagingSlot::new(&manifest)).collect();
-            // persistent delta-staging cache (see stage_slot)
-            let mut cache = StagingSlot::new(&manifest);
-            // mirror state for cross-check
-            let mut w1 = Mat::from_vec(dims.in_dim, dims.hidden_dim, params.w1.clone());
-            let mut w2 = Mat::from_vec(dims.hidden_dim, dims.out_dim, params.w2.clone());
-            let mut out_buf = Vec::new();
-            let (mut x_shared, mut x_seen) = (0usize, 0usize);
-            let ind = dims.in_dim;
-            let results = run_stream_staged(
-                &stream,
-                profile.splitter_secs,
-                POOL,
-                pool,
-                |snap| Ok(if delta { None } else { Some(features_for(snap, dims, SEED)) }),
-                |snap, x, slot| {
-                    stage_slot(slot, &mut cache, snap, x, ind, limit, &mut x_shared, &mut x_seen)
-                },
-                |snap, _x, slot| {
-                    if snap.index >= limit {
-                        return Ok(0usize);
-                    }
-                    exec.run_step_staged(slot, &mut out_buf)?;
-                    // cross-check vs the pure-Rust mirror on the sparse
-                    // engine (slot CSR, --threads workers)
-                    let n = snap.num_nodes();
-                    let x = Mat::from_vec(n, ind, slot.x[..n * ind].to_vec());
-                    let (ref_out, w1n, w2n) =
-                        numerics::evolvegcn_step_with(&eng, &slot.csr, snap, &x, &w1, &w2, &params);
-                    w1 = w1n;
-                    w2 = w2n;
-                    max_err = max_err.max(max_abs_diff(&out_buf, &ref_out.data));
-                    Ok(out_buf.len())
-                },
-            )?;
-            if delta {
-                feature_counts = Some((x_shared, x_seen));
-            }
-            for r in results.iter().filter(|r| r.index < limit) {
-                stats.record(r.wall);
-                count += 1;
-            }
-        }
-        ModelKind::GcrnM1 => {
-            let params = GcrnM1Params::init(SEED, dims);
-            let mut exec = GcrnM1Executor::new(client, "artifacts", &params)?;
-            let manifest = exec.manifest().clone();
-            let (results, dc, fc) = serve_recurrent(
-                &stream,
-                profile,
-                limit,
-                delta,
-                dims,
-                &manifest,
-                &mut max_err,
-                |slot, h, c| exec.run_step_staged(slot, h, c),
-                |snap, csr, x, hm, cm| numerics::gcrn_m1_step_with(&eng, csr, snap, x, hm, cm, &params),
-            )?;
-            delta_counts = dc;
-            feature_counts = fc;
-            for r in results.iter().filter(|r| r.index < limit) {
-                stats.record(r.wall);
-                count += 1;
-            }
-        }
-        ModelKind::GcrnM2 => {
-            let params = GcrnM2Params::init(SEED, dims);
-            let mut exec = GcrnExecutor::new(client, "artifacts", &params)?;
-            let manifest = exec.manifest().clone();
-            let (results, dc, fc) = serve_recurrent(
-                &stream,
-                profile,
-                limit,
-                delta,
-                dims,
-                &manifest,
-                &mut max_err,
-                |slot, h, c| exec.run_step_staged(slot, h, c),
-                |snap, csr, x, hm, cm| numerics::gcrn_m2_step_with(&eng, csr, snap, x, hm, cm, &params),
-            )?;
-            delta_counts = dc;
-            feature_counts = fc;
-            for r in results.iter().filter(|r| r.index < limit) {
-                stats.record(r.wall);
-                count += 1;
-            }
-        }
+    for r in results.iter().filter(|r| r.index < limit) {
+        stats.record(r.wall);
+        count += 1;
     }
-
     let snaps = snapshots(&ReportCtx::default(), profile)?;
     let fpga_ms = avg_latency_ms(&AcceleratorConfig::paper_default(model), &snaps);
     println!("=== {} on {} ===", model.name(), profile.name);
     println!("  snapshots processed:      {count}");
     println!("  numerics max |Δ| vs mirror: {max_err:.2e}  (tolerance 1e-3)");
     println!("  host PJRT:                {}", stats.summary());
-    if let Some((shared, seen)) = delta_counts {
+    if let Some(d) = state_delta {
         println!(
             "  delta state gathers:      {:.1}% of state rows stayed on-chip",
-            100.0 * shared as f64 / seen.max(1) as f64
+            100.0 * d.fraction()
         );
     }
-    if let Some((shared, seen)) = feature_counts {
+    if let Some(d) = feature_delta {
         println!(
             "  delta feature staging:    {:.1}% of X rows reused in place",
-            100.0 * shared as f64 / seen.max(1) as f64
+            100.0 * d.fraction()
         );
     }
     println!("  FPGA projection:          {fpga_ms:.3} ms/snapshot\n");

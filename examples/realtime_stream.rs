@@ -1,93 +1,89 @@
-//! Real-time streaming demo: the coordinator's three-stage pipeline
-//! (CPU preprocessing ∥ feature staging ∥ inference) with backpressure,
-//! the software analog of DGNN-Booster's "streamed in consecutively and
-//! processed on-the-fly".  Feature buffers are recycled through the
-//! pipeline's pool and recurrent state uses the delta-aware
-//! `ResidentState` gathers (paper §VI).  Uses the pure-Rust mirror so it
-//! runs without artifacts.
+//! Real-time streaming demo: a delta-aware GCRN-M2 mirror session (no
+//! artifacts needed) served through the three-stage pipeline — the
+//! software analog of DGNN-Booster's "streamed in consecutively and
+//! processed on-the-fly".  All model wiring comes from the `serve`
+//! subsystem: `ModelKind::build_session` owns the recurrent state
+//! (delta-aware `ResidentState` gathers, paper §VI) and the session's
+//! stager materialises features into recycled slots on the stage
+//! thread.  For the multi-tenant version of this loop, see
+//! `dgnn-booster serve --streams N`.
 //!
 //! ```
 //! cargo run --release --example realtime_stream
 //! ```
 
-use dgnn_booster::coordinator::pipeline::run_stream_staged;
-use dgnn_booster::coordinator::{NodeStateStore, ResidentState};
 use dgnn_booster::datasets::{self, UCI};
 use dgnn_booster::metrics::LatencyStats;
-use dgnn_booster::models::{node_features_into, Dims, GcrnM2Params};
-use dgnn_booster::numerics::{self, Mat};
+use dgnn_booster::models::{Dims, ModelKind};
+use dgnn_booster::numerics::Engine;
+use dgnn_booster::serve::{run_session, Scheduler, SessionConfig, StreamSource};
+use std::sync::Arc;
 
 fn main() -> dgnn_booster::Result<()> {
     let dims = Dims::default();
     let profile = &UCI;
-    let stream = datasets::load_or_generate(profile, "data", 42)?;
-    let params = GcrnM2Params::init(42, dims);
-    let total = stream.num_nodes as usize;
-    let mut h_store = NodeStateStore::zeros(total, dims.hidden_dim);
-    let mut c_store = NodeStateStore::zeros(total, dims.hidden_dim);
-    // resident padded buffers sized to the stream's widest snapshot
-    let max_nodes = datasets::StreamStats::measure(&stream, profile.splitter_secs).max_nodes;
-    let mut h_res = ResidentState::new(max_nodes, dims.hidden_dim);
-    let mut c_res = ResidentState::new(max_nodes, dims.hidden_dim);
-    let mut stats = LatencyStats::new();
-    let (mut shared, mut seen) = (0usize, 0usize);
+    let source = StreamSource {
+        name: profile.name.into(),
+        stream: datasets::load_or_generate(profile, "data", 42)?,
+        splitter_secs: profile.splitter_secs,
+    };
+    // pad to the stream's widest snapshot (the mirror needs no AOT shapes)
+    let manifest = Scheduler::manifest_for(std::slice::from_ref(&source), dims);
+    let stream = &source.stream;
+    let mut session = ModelKind::GcrnM2.build_session(&SessionConfig {
+        dims,
+        seed: 42,
+        total_nodes: stream.num_nodes as usize,
+        max_nodes: manifest.max_nodes,
+        delta: true,
+        engine: Arc::new(Engine::serial()),
+    });
 
     println!(
-        "streaming {} ({} edges) through preprocess ∥ stage ∥ GCRN-M2 inference...",
+        "streaming {} ({} edges) through preprocess ∥ stage ∥ GCRN-M2 session...",
         profile.name,
         stream.edges.len()
     );
+    let mut act_sum = 0.0f64;
+    let mut act_n = 0usize;
     let t0 = std::time::Instant::now();
-    let results = run_stream_staged(
-        &stream,
+    let (results, state_delta, feature_delta) = run_session(
+        session.as_mut(),
+        stream,
         profile.splitter_secs,
-        8, // staging-queue depth: bounded DRAM prefetch
-        vec![Vec::<f32>::new(); 8],
-        |snap| Ok(snap.num_nodes()),
-        |snap, _n, buf| {
-            // feature materialisation on the stage thread, into a
-            // recycled flat buffer
-            let d = dims.in_dim;
-            buf.clear();
-            buf.resize(snap.num_nodes() * d, 0.0);
-            for (local, raw) in snap.renumber.iter() {
-                node_features_into(raw, 42, &mut buf[local as usize * d..][..d]);
-            }
+        &manifest,
+        8, // staging slots in flight: bounded DRAM prefetch
+        usize::MAX,
+        |_snap, _slot, out| {
+            act_sum += out.iter().map(|v| v.abs() as f64).sum::<f64>();
+            act_n += out.len();
             Ok(())
-        },
-        |snap, n, buf| {
-            let n = *n;
-            let dh = dims.hidden_dim;
-            let st = h_res.advance(&mut h_store, snap)?;
-            c_res.advance(&mut c_store, snap)?;
-            shared += st.shared_nodes;
-            seen += st.nodes;
-            // steal the staged buffer for the Mat view, hand it back after
-            let x = Mat::from_vec(n, dims.in_dim, std::mem::take(buf));
-            let h = Mat::from_vec(n, dh, h_res.buf()[..n * dh].to_vec());
-            let c = Mat::from_vec(n, dh, c_res.buf()[..n * dh].to_vec());
-            let (hn, cn) = numerics::gcrn_m2_step(snap, &x, &h, &c, &params);
-            h_res.buf_mut()[..n * dh].copy_from_slice(&hn.data);
-            c_res.buf_mut()[..n * dh].copy_from_slice(&cn.data);
-            *buf = x.data;
-            Ok(hn.data.iter().map(|v| v.abs()).sum::<f32>() / hn.data.len() as f32)
         },
     )?;
     let wall = t0.elapsed().as_secs_f64();
-    h_res.flush(&mut h_store);
-    c_res.flush(&mut c_store);
+
+    let mut stats = LatencyStats::new();
     for r in &results {
         stats.record(r.wall);
     }
-    let mean_act: f32 =
-        results.iter().map(|r| r.output).sum::<f32>() / results.len() as f32;
     println!("processed {} snapshots in {:.2} s wall", results.len(), wall);
     println!("inference stage: {}", stats.summary());
-    println!("mean |H| activation across stream: {mean_act:.4}");
     println!(
-        "delta gathers: {:.1}% of state rows stayed on-chip",
-        100.0 * shared as f64 / seen.max(1) as f64
+        "mean |H| activation across stream: {:.4}",
+        act_sum / act_n.max(1) as f64
     );
+    if let Some(d) = state_delta {
+        println!(
+            "delta gathers: {:.1}% of state rows stayed on-chip",
+            100.0 * d.fraction()
+        );
+    }
+    if let Some(d) = feature_delta {
+        println!(
+            "delta feature staging: {:.1}% of X rows reused in place",
+            100.0 * d.fraction()
+        );
+    }
     println!(
         "pipeline efficiency: inference busy {:.0}% of wall clock",
         stats.mean() * results.len() as f64 / (wall * 1e3) * 100.0

@@ -6,7 +6,10 @@
 //! commands:
 //!   table2|table3|table4|table5|table6|table7|fig6   regenerate a paper artefact
 //!   all                                              all tables + figure
-//!   serve     stream a dataset through the PJRT runtime (end-to-end)
+//!   serve     multi-stream serving: N independent tenant snapshot
+//!             streams scheduled over one shared sparse engine and one
+//!             recycled staging pool (mirror sessions; no artifacts
+//!             needed); prints p50/p95/p99 latency + throughput
 //!   dse       run a DSP-split sweep
 //!   stats     dataset statistics
 //!   kernels   time the host message-passing kernels (COO vs CSR vs
@@ -16,16 +19,25 @@
 //!   --dataset bc-alpha|uci     (default bc-alpha)
 //!   --seed N                   (default 42)
 //!   --snapshots N              limit processed snapshots
-//!   --artifacts DIR            (default artifacts)
 //!   --data DIR                 (default data)
 //!   --threads N                worker threads for the host sparse
-//!                              engine (kernels; default 1 = serial)
+//!                              engine (serve/kernels; default 1 = serial)
+//!   --streams N                concurrent tenant streams for `serve`
+//!                              (default 1; tenants beyond the first get
+//!                              independent synthetic streams)
+//!   --slots N                  staging slots in flight across tenants
+//!                              (`serve`; default 2×streams, clamped 2..16)
+//!   --delta                    boolean: delta-aware state gathers +
+//!                              feature staging (paper §VI)
 //!   --nodes N / --degree N / --dim N / --iters N
 //!                              synthetic graph shape for `kernels`
 //! ```
 
 use crate::error::{Error, Result};
 use std::collections::HashMap;
+
+/// Flags that take no value: presence means `true`.
+const BOOL_FLAGS: [&str; 1] = ["delta"];
 
 /// Parsed command line.
 #[derive(Clone, Debug)]
@@ -47,6 +59,10 @@ impl Cli {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| Error::Usage(format!("expected --flag, got {a}")))?;
+            if BOOL_FLAGS.contains(&key) {
+                flags.insert(key.to_string(), "true".to_string());
+                continue;
+            }
             let val = it
                 .next()
                 .ok_or_else(|| Error::Usage(format!("--{key} needs a value")))?;
@@ -57,6 +73,11 @@ impl Cli {
 
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag (e.g. `--delta`): present ⇒ true.
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true" | "1" | "on" | "yes"))
     }
 
     pub fn get_or(&self, key: &str, default: &str) -> String {
@@ -141,6 +162,21 @@ mod tests {
         assert_eq!(c.threads().unwrap(), 4);
         let c = Cli::parse(&s(&["kernels", "--threads", "0"])).unwrap();
         assert_eq!(c.threads().unwrap(), 1);
+    }
+
+    #[test]
+    fn boolean_delta_flag_needs_no_value() {
+        // the acceptance invocation: serve --streams 4 --delta --threads 4
+        let c = Cli::parse(&s(&["serve", "--streams", "4", "--delta", "--threads", "4"])).unwrap();
+        assert!(c.flag("delta"));
+        assert_eq!(c.get_usize("streams", 1).unwrap(), 4);
+        assert_eq!(c.threads().unwrap(), 4);
+        // trailing boolean flag parses too
+        let c = Cli::parse(&s(&["serve", "--delta"])).unwrap();
+        assert!(c.flag("delta"));
+        // absent flag is false
+        let c = Cli::parse(&s(&["serve"])).unwrap();
+        assert!(!c.flag("delta"));
     }
 
     #[test]

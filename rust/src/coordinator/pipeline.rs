@@ -30,7 +30,12 @@
 //!
 //! The inference stage is sequential by construction — the temporal
 //! dependency (evolved weights / recurrent state) is exactly why DGNNs
-//! cannot batch across time, which is the premise of the paper.
+//! cannot batch across time, which is the premise of the paper.  That
+//! sequencing is per stream, though: `crate::serve::Scheduler` lifts
+//! this same three-stage topology across N independent tenant streams
+//! (stage of one stream overlapping inference of another), with
+//! `serve::run_session` re-expressing [`run_stream_staged`] as the
+//! single-stream special case over a `serve::DgnnSession`.
 //!
 //! (The offline crate set has no tokio; std threads + mpsc channels
 //! implement the same leader/worker topology.)

@@ -7,8 +7,9 @@
 //! * **Layer 3 (this crate)** — the coordinator: host-side graph
 //!   preprocessing (time-splitting, renumbering, COO→CSR), the V1/V2
 //!   dataflow schedulers, a cycle-approximate ZCU102 model, CPU/GPU
-//!   baseline models, energy accounting, and the PJRT runtime that
-//!   executes the AOT-compiled model steps.
+//!   baseline models, energy accounting, the PJRT runtime that
+//!   executes the AOT-compiled model steps, and the [`serve`]
+//!   subsystem (unified model sessions + the multi-stream scheduler).
 //! * **Layer 2** — JAX per-snapshot model steps (`python/compile/model.py`),
 //!   AOT-lowered to HLO text in `artifacts/`.
 //! * **Layer 1** — Pallas PE kernels (`python/compile/kernels/`).
@@ -32,6 +33,7 @@ pub mod models;
 pub mod numerics;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod testutil;
 
 pub use error::{Error, Result};

@@ -1,21 +1,19 @@
 //! `dgnn-booster` — leader binary: regenerate paper artefacts, run the
-//! end-to-end PJRT serving loop, sweep the design space.
+//! multi-stream serving scheduler, sweep the design space.
 
-use dgnn_booster::baselines::cpu::features_for;
 use dgnn_booster::cli::Cli;
-use dgnn_booster::coordinator::pipeline::{run_stream, Prepared};
-use dgnn_booster::coordinator::NodeStateStore;
 use dgnn_booster::datasets;
 use dgnn_booster::error::{Error, Result};
 use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
 use dgnn_booster::fpga::dse;
 use dgnn_booster::graph::SnapshotCsr;
-use dgnn_booster::metrics::{bench_loop, LatencyStats};
-use dgnn_booster::models::{Dims, EvolveGcnParams, GcrnM1Params, GcrnM2Params, ModelKind};
+use dgnn_booster::metrics::bench_loop;
+use dgnn_booster::models::Dims;
 use dgnn_booster::numerics::{self, Engine, Mat};
 use dgnn_booster::report::tables::{self, ReportCtx};
-use dgnn_booster::runtime::{EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor};
+use dgnn_booster::serve::{DgnnSession, Scheduler, ServeRecorder, SessionConfig, StreamSource};
 use dgnn_booster::testutil::Pcg32;
+use std::sync::Arc;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -150,129 +148,96 @@ fn cmd_dse(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     Ok(())
 }
 
-/// End-to-end serving: stream snapshots through the preprocessing
-/// pipeline into the PJRT-compiled model step; report latency and the
-/// FPGA-projected latency side by side.
+/// Multi-stream serving over mirror sessions (no AOT artifacts needed):
+/// N independent tenant snapshot streams multiplexed by
+/// `serve::Scheduler` over one shared sparse engine and one recycled
+/// staging-slot pool.  Reports per-stream stats plus aggregate
+/// p50/p95/p99 latency and throughput, alongside the FPGA-projected
+/// per-snapshot latency.  (The PJRT-backed single-stream path lives in
+/// `examples/e2e_serve.rs`, which also cross-checks against the same
+/// mirror sessions.)
 fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     let model = cli.model()?;
     let profile = cli.dataset()?;
-    let artifacts = cli.get_or("artifacts", "artifacts");
+    let streams = cli.get_usize("streams", 1)?.max(1);
+    let threads = cli.threads()?;
+    let delta = cli.flag("delta");
     let limit = cli.get_usize("snapshots", usize::MAX)?;
+    let slots = cli.get_usize("slots", (2 * streams).clamp(2, 16))?.max(1);
     let dims = Dims::default();
-    let stream = datasets::load_or_generate(profile, &cli.get_or("data", "data"), ctx.seed)?;
-    let client = xla::PjRtClient::cpu()?;
+
+    // tenant 0 serves the real dataset when present under --data;
+    // additional tenants get independent synthetic streams
+    let mut sources = Vec::with_capacity(streams);
+    for i in 0..streams {
+        let stream = if i == 0 {
+            datasets::load_or_generate(profile, &cli.get_or("data", "data"), ctx.seed)?
+        } else {
+            datasets::synth::generate(profile, ctx.seed.wrapping_add(i as u64))
+        };
+        sources.push(StreamSource {
+            name: format!("stream-{i}"),
+            stream,
+            splitter_secs: profile.splitter_secs,
+        });
+    }
+    let engine = Arc::new(Engine::new(threads));
+    let manifest = Scheduler::manifest_for(&sources, dims);
+    let sessions: Vec<Box<dyn DgnnSession>> = sources
+        .iter()
+        .enumerate()
+        .map(|(i, src)| {
+            model.build_session(&SessionConfig {
+                dims,
+                seed: ctx.seed.wrapping_add(i as u64),
+                total_nodes: src.stream.num_nodes as usize,
+                max_nodes: manifest.max_nodes,
+                delta,
+                engine: Arc::clone(&engine),
+            })
+        })
+        .collect();
+
     println!(
-        "serving {} on {} via PJRT ({} devices); artifacts: {artifacts}/",
+        "serving {} × {streams} stream(s) on {} — engine ×{threads}, {slots} staging slots{}",
         model.name(),
         profile.name,
-        client.device_count()
+        if delta { ", §VI delta state + feature staging" } else { "" }
     );
-    let mut stats = LatencyStats::new();
-    let mut count = 0usize;
+    let scheduler = Scheduler::new(Arc::clone(&engine), slots);
+    let t0 = std::time::Instant::now();
     let mut checksum = 0.0f64;
+    let outcomes = scheduler.run(&manifest, &sources, sessions, limit, |_sid, _snap, _slot, out| {
+        checksum += out.iter().map(|v| *v as f64).sum::<f64>();
+        Ok(())
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
 
-    match model {
-        ModelKind::EvolveGcn => {
-            let params = EvolveGcnParams::init(ctx.seed, dims);
-            let mut exec = EvolveGcnExecutor::new(&client, &artifacts, &params)?;
-            let results = run_stream(
-                &stream,
-                profile.splitter_secs,
-                4,
-                |snap| {
-                    let x = features_for(&snap, dims, ctx.seed);
-                    Ok(Prepared { snapshot: snap, payload: x })
-                },
-                |p| {
-                    if p.snapshot.index >= limit {
-                        return Ok(0.0f32);
-                    }
-                    let out = exec.run_step(&p.snapshot, &p.payload.data)?;
-                    Ok(out.iter().sum::<f32>())
-                },
-            )?;
-            for r in results {
-                if r.index < limit {
-                    stats.record(r.wall);
-                    checksum += r.output as f64;
-                    count += 1;
-                }
-            }
+    let mut rec = ServeRecorder::new(65536);
+    for o in &outcomes {
+        let mut infer_ms = 0.0f64;
+        for st in &o.steps {
+            rec.record_ms(st.e2e_ms);
+            infer_ms += st.infer_ms;
         }
-        ModelKind::GcrnM1 => {
-            let params = GcrnM1Params::init(ctx.seed, dims);
-            let mut exec = GcrnM1Executor::new(&client, &artifacts, &params)?;
-            let max_nodes = exec.manifest().max_nodes;
-            let mut h_store = NodeStateStore::zeros(stream.num_nodes as usize, dims.hidden_dim);
-            let mut c_store = NodeStateStore::zeros(stream.num_nodes as usize, dims.hidden_dim);
-            let results = run_stream(
-                &stream,
-                profile.splitter_secs,
-                4,
-                |snap| {
-                    let x = features_for(&snap, dims, ctx.seed);
-                    Ok(Prepared { snapshot: snap, payload: x })
-                },
-                |p| {
-                    if p.snapshot.index >= limit {
-                        return Ok(0.0f32);
-                    }
-                    let mut h = h_store.gather_padded(&p.snapshot, max_nodes);
-                    let mut c = c_store.gather_padded(&p.snapshot, max_nodes);
-                    exec.run_step(&p.snapshot, &p.payload.data, &mut h, &mut c)?;
-                    h_store.scatter(&p.snapshot, &h);
-                    c_store.scatter(&p.snapshot, &c);
-                    Ok(h[..p.snapshot.num_nodes() * dims.hidden_dim].iter().sum::<f32>())
-                },
-            )?;
-            for r in results {
-                if r.index < limit {
-                    stats.record(r.wall);
-                    checksum += r.output as f64;
-                    count += 1;
-                }
-            }
+        let mut line = format!(
+            "  {}: {} requests, mean infer {:.3} ms",
+            o.name,
+            o.steps.len(),
+            infer_ms / o.steps.len().max(1) as f64
+        );
+        if let Some(d) = o.state_delta {
+            line.push_str(&format!(", {:.1}% state rows resident", 100.0 * d.fraction()));
         }
-        ModelKind::GcrnM2 => {
-            let params = GcrnM2Params::init(ctx.seed, dims);
-            let mut exec = GcrnExecutor::new(&client, &artifacts, &params)?;
-            let max_nodes = exec.manifest().max_nodes;
-            let mut h_store = NodeStateStore::zeros(stream.num_nodes as usize, dims.hidden_dim);
-            let mut c_store = NodeStateStore::zeros(stream.num_nodes as usize, dims.hidden_dim);
-            let results = run_stream(
-                &stream,
-                profile.splitter_secs,
-                4,
-                |snap| {
-                    let x = features_for(&snap, dims, ctx.seed);
-                    Ok(Prepared { snapshot: snap, payload: x })
-                },
-                |p| {
-                    if p.snapshot.index >= limit {
-                        return Ok(0.0f32);
-                    }
-                    let mut h = h_store.gather_padded(&p.snapshot, max_nodes);
-                    let mut c = c_store.gather_padded(&p.snapshot, max_nodes);
-                    exec.run_step(&p.snapshot, &p.payload.data, &mut h, &mut c)?;
-                    h_store.scatter(&p.snapshot, &h);
-                    c_store.scatter(&p.snapshot, &c);
-                    Ok(h[..p.snapshot.num_nodes() * dims.hidden_dim].iter().sum::<f32>())
-                },
-            )?;
-            for r in results {
-                if r.index < limit {
-                    stats.record(r.wall);
-                    checksum += r.output as f64;
-                    count += 1;
-                }
-            }
+        if let Some(d) = o.feature_delta {
+            line.push_str(&format!(", {:.1}% X rows reused", 100.0 * d.fraction()));
         }
+        println!("{line}");
     }
-
+    println!("aggregate: {}", rec.summary(wall).line());
+    println!("output checksum: {checksum:.4}");
     let snaps = tables::snapshots(ctx, profile)?;
     let fpga_ms = avg_latency_ms(&AcceleratorConfig::paper_default(model), &snaps);
-    println!("processed {count} snapshots; output checksum {checksum:.4}");
-    println!("host PJRT latency: {}", stats.summary());
     println!("FPGA-projected latency (paper design): {fpga_ms:.3} ms/snapshot");
     Ok(())
 }

@@ -199,6 +199,48 @@ impl GcrnM2Params {
     }
 }
 
+/// Parameter set for any [`ModelKind`] behind one seeded constructor, so
+/// every serving surface (examples, CLI `serve`, benches, tests)
+/// initialises a model identically.  `serve::session` builds its
+/// [`crate::serve::DgnnSession`] implementations from this.
+#[derive(Clone, Debug)]
+pub enum ModelParams {
+    EvolveGcn(EvolveGcnParams),
+    GcrnM1(GcrnM1Params),
+    GcrnM2(GcrnM2Params),
+}
+
+impl ModelParams {
+    pub fn kind(&self) -> ModelKind {
+        match self {
+            ModelParams::EvolveGcn(_) => ModelKind::EvolveGcn,
+            ModelParams::GcrnM1(_) => ModelKind::GcrnM1,
+            ModelParams::GcrnM2(_) => ModelKind::GcrnM2,
+        }
+    }
+
+    pub fn dims(&self) -> Dims {
+        match self {
+            ModelParams::EvolveGcn(p) => p.dims,
+            ModelParams::GcrnM1(p) => p.dims,
+            ModelParams::GcrnM2(p) => p.dims,
+        }
+    }
+}
+
+impl ModelKind {
+    /// Seeded parameter initialisation for this model (the single path
+    /// every caller goes through; see also
+    /// `serve::session`'s `ModelKind::build_session`).
+    pub fn init_params(self, seed: u64, dims: Dims) -> ModelParams {
+        match self {
+            ModelKind::EvolveGcn => ModelParams::EvolveGcn(EvolveGcnParams::init(seed, dims)),
+            ModelKind::GcrnM1 => ModelParams::GcrnM1(GcrnM1Params::init(seed, dims)),
+            ModelKind::GcrnM2 => ModelParams::GcrnM2(GcrnM2Params::init(seed, dims)),
+        }
+    }
+}
+
 /// Deterministic node features keyed by *raw* (global) node id so a node
 /// keeps its features across snapshots — the paper's host loads node
 /// features from DRAM the same way.
@@ -247,6 +289,25 @@ mod tests {
         assert_eq!(f1, f2);
         let f3 = node_features(43, 32, 9);
         assert_ne!(f1, f3);
+    }
+
+    #[test]
+    fn init_params_matches_per_model_init() {
+        let d = Dims::default();
+        for kind in ModelKind::all() {
+            let p = kind.init_params(7, d);
+            assert_eq!(p.kind(), kind);
+            assert_eq!(p.dims(), d);
+        }
+        // the unified constructor must reuse the per-model seeding scheme
+        match ModelKind::EvolveGcn.init_params(9, d) {
+            ModelParams::EvolveGcn(p) => assert_eq!(p.w1, EvolveGcnParams::init(9, d).w1),
+            _ => panic!("wrong variant"),
+        }
+        match ModelKind::GcrnM2.init_params(9, d) {
+            ModelParams::GcrnM2(p) => assert_eq!(p.wx, GcrnM2Params::init(9, d).wx),
+            _ => panic!("wrong variant"),
+        }
     }
 
     #[test]

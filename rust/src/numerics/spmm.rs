@@ -12,15 +12,18 @@
 //! The offline crate set has no rayon/tokio, so [`WorkerPool`] is a
 //! small persistent `std::thread` pool: the scoped leader/worker
 //! topology of `coordinator::pipeline`, kept alive across calls so the
-//! per-snapshot hot path pays no thread-spawn cost.  Dispatch blocks
-//! until every worker finishes, which is what makes lending the workers
-//! non-`'static` borrows sound.
+//! per-snapshot hot path pays no thread-spawn cost.  Dispatch is a
+//! generation-counter loop — the leader publishes the borrowed task and
+//! bumps a generation under one mutex, workers run it exactly once per
+//! bump — so a broadcast performs **zero heap allocations** (asserted
+//! by `tests/alloc_hotpath.rs`) and blocks until every worker finishes,
+//! which is what makes lending the workers non-`'static` borrows sound.
 
 use super::tensor::Mat;
 use crate::graph::SnapshotCsr;
 use std::panic::{self, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Column-block width for the dense matmul: a `KC × NC` f32 panel of the
 /// right-hand matrix (16 KiB) stays L1-resident while every output row
@@ -29,23 +32,42 @@ const NC: usize = 64;
 /// Depth-block (k) for the dense matmul.
 const KC: usize = 64;
 
-type Job = Box<dyn FnOnce() + Send>;
+/// Broadcast control block: a generation counter plus the borrowed task
+/// for the current broadcast.  Workers run a task exactly once per
+/// generation bump — no per-dispatch job boxes, no channels, so
+/// parallel dispatch is allocation-free at steady state (asserted by
+/// `tests/alloc_hotpath.rs`).
+struct PoolCtrl {
+    /// Bumped once per broadcast; workers compare against their last
+    /// seen value (wrapping — only inequality matters).
+    generation: u64,
+    /// The current broadcast's task, valid for workers that observed the
+    /// matching generation until they decrement `pending`.
+    task: Option<&'static (dyn Fn(usize) + Sync)>,
+    /// Workers still running the current generation's task.
+    pending: usize,
+    quit: bool,
+}
 
 struct PoolState {
-    pending: Mutex<usize>,
+    ctrl: Mutex<PoolCtrl>,
+    /// Workers wait here for the next generation.
+    work: Condvar,
+    /// The dispatcher waits here for `pending == 0`.
     done: Condvar,
     panicked: AtomicBool,
 }
 
-/// A persistent pool of worker threads executing broadcast jobs.
+/// A persistent pool of worker threads executing broadcast jobs via a
+/// generation-counter loop.
 ///
-/// Dispatches are serialized by the `dispatch` mutex: the
-/// borrow-lending in [`Self::broadcast`] requires that two broadcasts
-/// never interleave on the shared completion counter (`mpsc::Sender`
-/// has been `Sync` since Rust 1.72, so a `&WorkerPool` *can* be shared
-/// across threads — the lock is what makes that safe).
+/// Dispatches are serialized by the `dispatch` mutex: the borrow-lending
+/// in [`Self::broadcast`] requires that two broadcasts never interleave
+/// on the shared control block, and the lock is what makes a shared
+/// `&WorkerPool` safe to drive from multiple threads (the serve
+/// scheduler's tenants all aggregate through one engine).
 pub struct WorkerPool {
-    txs: Vec<mpsc::Sender<Job>>,
+    threads: usize,
     state: Arc<PoolState>,
     /// Held for the whole of each broadcast (dispatch + wait).
     dispatch: Mutex<()>,
@@ -57,72 +79,85 @@ impl WorkerPool {
     pub fn new(threads: usize) -> WorkerPool {
         let threads = threads.max(1);
         let state = Arc::new(PoolState {
-            pending: Mutex::new(0),
+            ctrl: Mutex::new(PoolCtrl {
+                generation: 0,
+                task: None,
+                pending: 0,
+                quit: false,
+            }),
+            work: Condvar::new(),
             done: Condvar::new(),
             panicked: AtomicBool::new(false),
         });
-        let mut txs = Vec::with_capacity(threads);
         let mut handles = Vec::with_capacity(threads);
-        for _ in 0..threads {
-            let (tx, rx) = mpsc::channel::<Job>();
-            txs.push(tx);
+        for w in 0..threads {
+            let state = Arc::clone(&state);
             handles.push(std::thread::spawn(move || {
-                while let Ok(job) = rx.recv() {
-                    job();
+                let mut seen = 0u64;
+                loop {
+                    let task = {
+                        let mut ctrl = state.ctrl.lock().unwrap();
+                        loop {
+                            if ctrl.quit {
+                                return;
+                            }
+                            if ctrl.generation != seen {
+                                seen = ctrl.generation;
+                                break;
+                            }
+                            ctrl = state.work.wait(ctrl).unwrap();
+                        }
+                        ctrl.task
+                    };
+                    if let Some(f) = task {
+                        if panic::catch_unwind(AssertUnwindSafe(|| f(w))).is_err() {
+                            state.panicked.store(true, Ordering::SeqCst);
+                        }
+                    }
+                    let mut ctrl = state.ctrl.lock().unwrap();
+                    ctrl.pending -= 1;
+                    if ctrl.pending == 0 {
+                        state.done.notify_one();
+                    }
                 }
             }));
         }
-        WorkerPool { txs, state, dispatch: Mutex::new(()), handles }
+        WorkerPool { threads, state, dispatch: Mutex::new(()), handles }
     }
 
     pub fn threads(&self) -> usize {
-        self.txs.len()
+        self.threads
     }
 
     /// Run `f(worker_index)` once on every worker, blocking until all of
     /// them finish.  Panics (after all workers settle) if any task
     /// panicked.  Concurrent callers serialize on the dispatch lock.
-    ///
-    /// Each dispatch boxes one job per worker (plus an `Arc` clone) —
-    /// a handful of small allocations per broadcast, negligible next to
-    /// the row work it fans out but not zero; see the ROADMAP item on a
-    /// generation-counter dispatcher for the fully allocation-free
-    /// variant.
+    /// Allocation-free: publishing the borrowed task and bumping the
+    /// generation replaces the former per-worker job boxes.
     pub fn broadcast<F: Fn(usize) + Sync>(&self, f: &F) {
         // ignore poisoning: the guard protects no data, only exclusivity,
         // and a panicked broadcast leaves the workers fully settled
         let _dispatch = self.dispatch.lock().unwrap_or_else(|e| e.into_inner());
-        let nw = self.txs.len();
-        {
-            let mut pending = self.state.pending.lock().unwrap();
-            *pending = nw;
-        }
         let f_obj: &(dyn Fn(usize) + Sync) = f;
-        // SAFETY: the jobs borrow `f` for the duration of this call only;
-        // the condvar wait below does not return until every worker has
-        // finished running its job, so the 'static lifetime never
-        // outlives the actual borrow.
+        // SAFETY: workers borrow `f` only between the generation bump
+        // below and their `pending` decrement; the condvar wait below
+        // does not return until every worker has decremented, so the
+        // 'static lifetime never outlives the actual borrow.
         let f_static: &'static (dyn Fn(usize) + Sync) =
             unsafe { std::mem::transmute(f_obj) };
-        for (w, tx) in self.txs.iter().enumerate() {
-            let state = Arc::clone(&self.state);
-            let job: Job = Box::new(move || {
-                if panic::catch_unwind(AssertUnwindSafe(|| f_static(w))).is_err() {
-                    state.panicked.store(true, Ordering::SeqCst);
-                }
-                let mut pending = state.pending.lock().unwrap();
-                *pending -= 1;
-                if *pending == 0 {
-                    state.done.notify_one();
-                }
-            });
-            tx.send(job).expect("worker thread alive");
+        {
+            let mut ctrl = self.state.ctrl.lock().unwrap();
+            ctrl.task = Some(f_static);
+            ctrl.pending = self.threads;
+            ctrl.generation = ctrl.generation.wrapping_add(1);
+            self.state.work.notify_all();
         }
-        let mut pending = self.state.pending.lock().unwrap();
-        while *pending > 0 {
-            pending = self.state.done.wait(pending).unwrap();
+        let mut ctrl = self.state.ctrl.lock().unwrap();
+        while ctrl.pending > 0 {
+            ctrl = self.state.done.wait(ctrl).unwrap();
         }
-        drop(pending);
+        ctrl.task = None; // drop the lent borrow before returning
+        drop(ctrl);
         if self.state.panicked.swap(false, Ordering::SeqCst) {
             panic!("worker pool task panicked");
         }
@@ -131,7 +166,11 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        self.txs.clear(); // closes every channel; workers drain and exit
+        {
+            let mut ctrl = self.state.ctrl.lock().unwrap_or_else(|e| e.into_inner());
+            ctrl.quit = true;
+            self.state.work.notify_all();
+        }
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -277,9 +316,10 @@ impl Engine {
 thread_local! {
     /// Per-thread scratch row for the fused kernel.  Worker threads are
     /// long-lived, so after the first call at a given width the fused
-    /// kernel itself performs no steady-state heap allocation (the
-    /// serial path is fully allocation-free; parallel dispatch still
-    /// pays the per-broadcast job boxes — see [`WorkerPool::broadcast`]).
+    /// kernel performs no steady-state heap allocation on either path —
+    /// parallel dispatch is allocation-free too since
+    /// [`WorkerPool::broadcast`] moved to the generation-counter loop
+    /// (asserted by `tests/alloc_hotpath.rs`).
     static FUSED_SCRATCH: std::cell::RefCell<Vec<f32>> = std::cell::RefCell::new(Vec::new());
 }
 

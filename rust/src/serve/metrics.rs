@@ -1,0 +1,280 @@
+//! Serving-side measurement: a bounded per-request latency ring buffer
+//! with tail percentiles, an aggregate recorder, and the hand-rolled
+//! JSON emitter for `BENCH_serve.json` (no serde in the offline crate
+//! set — same idiom as `metrics::bench_json`).
+//!
+//! The ring is what a production frontend would keep: a fixed-capacity
+//! window over the most recent requests, so tail latency reflects the
+//! current traffic mix rather than the whole history, and memory stays
+//! bounded no matter how long the server runs.
+
+/// Fixed-capacity ring of the most recent per-request latencies (ms).
+///
+/// `push` is O(1) and allocation-free once the ring is full; percentile
+/// queries sort a scratch copy (off the request path by construction).
+#[derive(Clone, Debug)]
+pub struct LatencyRing {
+    buf: Vec<f64>,
+    cap: usize,
+    next: usize,
+    /// Total pushes over the ring's lifetime (>= buf.len()).
+    total: u64,
+}
+
+impl LatencyRing {
+    pub fn new(cap: usize) -> LatencyRing {
+        let cap = cap.max(1);
+        LatencyRing { buf: Vec::with_capacity(cap), cap, next: 0, total: 0 }
+    }
+
+    pub fn push(&mut self, ms: f64) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(ms);
+        } else {
+            self.buf[self.next] = ms;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    /// Requests currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total requests ever pushed (the ring may have evicted older ones).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().sum::<f64>() / self.buf.len() as f64
+    }
+
+    /// Sorted snapshot of the retained window.
+    fn sorted(&self) -> Vec<f64> {
+        let mut s = self.buf.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        s
+    }
+
+    /// `p` in [0,100]; nearest-rank over the retained window (the same
+    /// convention as `metrics::LatencyStats`).
+    pub fn percentile(&self, p: f64) -> f64 {
+        rank(&self.sorted(), p)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn rank(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let r = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[r.min(sorted.len() - 1)]
+}
+
+/// One serving run's aggregate numbers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeSummary {
+    pub requests: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Requests per second over the run's wall clock.
+    pub throughput_per_s: f64,
+    pub wall_s: f64,
+}
+
+impl ServeSummary {
+    pub fn line(&self) -> String {
+        format!(
+            "n={} p50={:.3}ms p95={:.3}ms p99={:.3}ms mean={:.3}ms ({:.1} req/s over {:.2}s)",
+            self.requests,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.mean_ms,
+            self.throughput_per_s,
+            self.wall_s
+        )
+    }
+}
+
+/// Aggregate recorder over one serving run: feed it per-request
+/// latencies, then summarise against the run's wall clock.
+#[derive(Clone, Debug)]
+pub struct ServeRecorder {
+    ring: LatencyRing,
+}
+
+impl ServeRecorder {
+    pub fn new(window: usize) -> ServeRecorder {
+        ServeRecorder { ring: LatencyRing::new(window) }
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.ring.push(ms);
+    }
+
+    pub fn requests(&self) -> u64 {
+        self.ring.total()
+    }
+
+    pub fn summary(&self, wall_s: f64) -> ServeSummary {
+        let requests = self.ring.total();
+        let sorted = self.ring.sorted(); // one sort serves every rank
+        ServeSummary {
+            requests,
+            mean_ms: self.ring.mean(),
+            p50_ms: rank(&sorted, 50.0),
+            p95_ms: rank(&sorted, 95.0),
+            p99_ms: rank(&sorted, 99.0),
+            throughput_per_s: if wall_s > 0.0 { requests as f64 / wall_s } else { 0.0 },
+            wall_s,
+        }
+    }
+}
+
+/// One row of `BENCH_serve.json`: a (streams × delta) sweep point.
+#[derive(Clone, Debug)]
+pub struct ServeRow {
+    pub name: String,
+    pub streams: usize,
+    pub delta: bool,
+    pub threads: usize,
+    pub summary: ServeSummary,
+}
+
+/// Serialise sweep rows plus scalar metadata as JSON (schema documented
+/// in README.md § serve).
+pub fn serve_json(rows: &[ServeRow], extra: &[(&str, f64)]) -> String {
+    let mut s = String::from("{\n  \"benches\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let m = &r.summary;
+        s.push_str(&format!(
+            "    {{\"name\": {:?}, \"streams\": {}, \"delta\": {}, \"threads\": {}, \
+             \"requests\": {}, \"p50_ms\": {:e}, \"p95_ms\": {:e}, \"p99_ms\": {:e}, \
+             \"mean_ms\": {:e}, \"throughput_per_s\": {:e}, \"wall_s\": {:e}}}{}\n",
+            r.name,
+            r.streams,
+            if r.delta { 1 } else { 0 },
+            r.threads,
+            m.requests,
+            m.p50_ms,
+            m.p95_ms,
+            m.p99_ms,
+            m.mean_ms,
+            m.throughput_per_s,
+            m.wall_s,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]");
+    for (k, v) in extra {
+        s.push_str(&format!(",\n  {k:?}: {v:e}"));
+    }
+    s.push_str("\n}\n");
+    s
+}
+
+/// Write [`serve_json`] to `path` (e.g. `BENCH_serve.json`).
+pub fn write_serve_json(
+    path: &str,
+    rows: &[ServeRow],
+    extra: &[(&str, f64)],
+) -> std::io::Result<()> {
+    std::fs::write(path, serve_json(rows, extra))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_wraps_and_counts_total() {
+        let mut r = LatencyRing::new(4);
+        for i in 0..10 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.total(), 10);
+        // only the most recent 4 samples (6..=9) remain
+        assert_eq!(r.percentile(0.0), 6.0);
+        assert_eq!(r.percentile(100.0), 9.0);
+    }
+
+    #[test]
+    fn percentiles_monotone_and_empty_safe() {
+        let mut r = LatencyRing::new(128);
+        assert_eq!(r.p99(), 0.0);
+        for i in 0..100 {
+            r.push(i as f64);
+        }
+        assert!(r.p50() <= r.p95());
+        assert!(r.p95() <= r.p99());
+        assert!(r.p99() <= r.percentile(100.0));
+    }
+
+    #[test]
+    fn recorder_summary_throughput() {
+        let mut rec = ServeRecorder::new(16);
+        for _ in 0..20 {
+            rec.record_ms(2.0);
+        }
+        let s = rec.summary(4.0);
+        assert_eq!(s.requests, 20);
+        assert!((s.throughput_per_s - 5.0).abs() < 1e-12);
+        assert_eq!(s.p50_ms, 2.0);
+        assert!(s.line().contains("req/s"));
+    }
+
+    #[test]
+    fn serve_json_shape() {
+        let mut rec = ServeRecorder::new(8);
+        rec.record_ms(1.0);
+        let rows = vec![
+            ServeRow {
+                name: "serve streams=2 delta=on".into(),
+                streams: 2,
+                delta: true,
+                threads: 2,
+                summary: rec.summary(1.0),
+            },
+            ServeRow {
+                name: "serve streams=4 delta=off".into(),
+                streams: 4,
+                delta: false,
+                threads: 2,
+                summary: rec.summary(1.0),
+            },
+        ];
+        let json = serve_json(&rows, &[("smoke", 1.0)]);
+        assert_eq!(json.matches('{').count(), json.matches('}').count());
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+        assert_eq!(json.matches("\"streams\"").count(), 2);
+        assert!(json.contains("\"p99_ms\""));
+        assert!(json.contains("\"throughput_per_s\""));
+        assert!(json.contains("\"smoke\": 1e0"));
+    }
+}

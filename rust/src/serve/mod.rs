@@ -1,0 +1,33 @@
+//! First-class serving subsystem: the paper's end-to-end claim is
+//! real-time DGNN *inference serving* over streamed snapshots (§VII
+//! measures end-to-end latency), and this module is the layer that
+//! makes it so — a unified model-session abstraction, a multi-tenant
+//! scheduler over the shared sparse engine, and serving-side metrics.
+//!
+//! * [`session`] — the object-safe [`DgnnSession`] trait
+//!   (prepare / stage-half / infer hooks + delta-aware state) with
+//!   mirror and PJRT implementations for EvolveGCN, GCRN-M1 and
+//!   GCRN-M2; built through `ModelKind::build_session` /
+//!   [`build_pjrt_session`].
+//! * [`scheduler`] — [`Scheduler`] multiplexes N tenant streams over one
+//!   `numerics::spmm::Engine` and one recycled `StagingSlot` pool with
+//!   per-stream FIFO ordering and bounded in-flight backpressure;
+//!   [`run_session`] is the single-stream special case on
+//!   `coordinator::pipeline::run_stream_staged`.
+//! * [`metrics`] — per-request latency ring buffer → p50/p95/p99 +
+//!   throughput, and the `BENCH_serve.json` emitter.
+//!
+//! The design follows the dynamic-graph-service shape (Alibaba DGS, see
+//! PAPERS.md): dynamic-graph inference behind a service layer that
+//! shares compute across many independent streams.
+
+pub mod metrics;
+pub mod scheduler;
+pub mod session;
+
+pub use metrics::{serve_json, write_serve_json, LatencyRing, ServeRecorder, ServeRow, ServeSummary};
+pub use scheduler::{run_session, Scheduler, StepRecord, StreamOutcome, StreamSource};
+pub use session::{
+    build_pjrt_session, DeltaCounts, DgnnSession, MirrorSession, PjrtSession, RecurrentState,
+    SessionConfig, SessionStager, StreamStager,
+};

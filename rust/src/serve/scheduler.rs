@@ -1,0 +1,486 @@
+//! Multi-stream serving runtime: N independent tenant snapshot streams
+//! multiplexed over one shared sparse engine and one recycled staging
+//! pool — the paper's coarse-grained preprocess → stage → infer pipeline
+//! (§IV-D / `coordinator::pipeline`) lifted across tenants.
+//!
+//! Topology: each tenant stream gets a **stage thread** (preprocess the
+//! window, pull a free [`StagingSlot`] from the shared pool, run its
+//! [`SessionStager`]), and all tenants funnel staged work through one
+//! `std::sync::mpsc` channel to the **inference thread** (the caller),
+//! which drives each tenant's [`DgnnSession`] in arrival order.  Each
+//! stream's messages traverse the channel in stream order, so per-stream
+//! FIFO holds; the bounded free-slot pool plus the sync channel bound
+//! total in-flight work (backpressure — the software analog of a finite
+//! DRAM staging area shared by tenants).  While tenant A infers, tenants
+//! B..N preprocess and stage — the same overlap `run_stream_staged`
+//! gives one stream, across tenants.
+//!
+//! [`run_session`] is the single-stream special case, expressed directly
+//! on `coordinator::pipeline::run_stream_staged` so a lone stream keeps
+//! the within-stream three-stage overlap; both examples and the
+//! single-stream CLI path go through it.
+
+use super::session::{DeltaCounts, DgnnSession, SessionStager};
+use crate::coordinator::pipeline::{run_stream_staged, StepResult};
+use crate::coordinator::preprocess::preprocess_window;
+use crate::datasets::StreamStats;
+use crate::error::{Error, Result};
+use crate::graph::{CooStream, Snapshot};
+use crate::models::Dims;
+use crate::numerics::Engine;
+use crate::runtime::{Manifest, StagingSlot};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
+
+/// One tenant's input: a COO stream plus its time splitter.
+pub struct StreamSource {
+    pub name: String,
+    pub stream: CooStream,
+    pub splitter_secs: i64,
+}
+
+/// Per-request timing of one served snapshot.
+#[derive(Clone, Copy, Debug)]
+pub struct StepRecord {
+    pub index: usize,
+    /// Staging (pad + CSR + features) on the stream's stage thread.
+    pub stage_ms: f64,
+    /// The inference step itself.
+    pub infer_ms: f64,
+    /// End-to-end: slot acquired → inference done (includes queueing).
+    pub e2e_ms: f64,
+}
+
+/// Everything one tenant produced over a run.
+pub struct StreamOutcome {
+    pub name: String,
+    pub steps: Vec<StepRecord>,
+    /// State-side shared-node counters (`Some` iff delta sessions).
+    pub state_delta: Option<DeltaCounts>,
+    /// Feature-staging reuse counters (`Some` iff delta staging).
+    pub feature_delta: Option<DeltaCounts>,
+}
+
+/// A staged snapshot in flight from a stage thread to the inference
+/// thread.  `staged` carries a staging failure *with* its slot — the
+/// slot must travel back to the collector even on error, or the free
+/// pool drains and every other tenant deadlocks on it.
+struct StagedJob {
+    stream: usize,
+    snap: Snapshot,
+    slot: StagingSlot,
+    stage_ms: f64,
+    t_req: Instant,
+    staged: Result<()>,
+}
+
+/// The multi-tenant scheduler: owns the shared engine and the staging
+/// budget.
+pub struct Scheduler {
+    engine: Arc<Engine>,
+    slots: usize,
+}
+
+impl Scheduler {
+    /// `slots` bounds in-flight staged snapshots across all tenants.
+    pub fn new(engine: Arc<Engine>, slots: usize) -> Scheduler {
+        Scheduler { engine, slots: slots.max(1) }
+    }
+
+    pub fn engine(&self) -> &Arc<Engine> {
+        &self.engine
+    }
+
+    /// Size one padded-shape manifest over every tenant stream (the
+    /// shared staging pool must fit the widest snapshot of any tenant).
+    pub fn manifest_for(sources: &[StreamSource], dims: Dims) -> Manifest {
+        let (mut max_nodes, mut max_edges) = (1usize, 1usize);
+        for s in sources {
+            let st = StreamStats::measure(&s.stream, s.splitter_secs);
+            max_nodes = max_nodes.max(st.max_nodes);
+            max_edges = max_edges.max(st.max_edges);
+        }
+        Manifest {
+            max_nodes,
+            max_edges,
+            in_dim: dims.in_dim,
+            hidden_dim: dims.hidden_dim,
+            out_dim: dims.out_dim,
+        }
+    }
+
+    /// Serve every tenant to completion.  `sessions[i]` serves
+    /// `sources[i]`, truncated at `limit` snapshots (past it, streams
+    /// are neither preprocessed nor staged).  `manifest` is the padded
+    /// shape the sessions were built against — size it with
+    /// [`Self::manifest_for`] (or load the artifacts manifest for PJRT
+    /// sessions).  `on_step(stream, snapshot, slot, output)` runs on
+    /// the inference thread after each step, in per-stream FIFO order.
+    pub fn run<F>(
+        &self,
+        manifest: &Manifest,
+        sources: &[StreamSource],
+        mut sessions: Vec<Box<dyn DgnnSession>>,
+        limit: usize,
+        mut on_step: F,
+    ) -> Result<Vec<StreamOutcome>>
+    where
+        F: FnMut(usize, &Snapshot, &StagingSlot, &[f32]) -> Result<()>,
+    {
+        if sources.is_empty() {
+            return Err(Error::Usage("scheduler needs at least one stream".into()));
+        }
+        if sources.len() != sessions.len() {
+            return Err(Error::Usage(format!(
+                "{} streams but {} sessions",
+                sources.len(),
+                sessions.len()
+            )));
+        }
+        let mut stagers: Vec<Box<dyn SessionStager>> =
+            sessions.iter().map(|s| s.make_stager(manifest)).collect();
+        let mut outcomes: Vec<StreamOutcome> = sources
+            .iter()
+            .map(|s| StreamOutcome {
+                name: s.name.clone(),
+                steps: Vec::new(),
+                state_delta: None,
+                feature_delta: None,
+            })
+            .collect();
+
+        let (tx_ready, rx_ready) = mpsc::sync_channel::<StagedJob>(self.slots);
+        let (tx_free, rx_free) = mpsc::channel::<StagingSlot>();
+        for _ in 0..self.slots {
+            // rx_free alive: cannot fail
+            let _ = tx_free.send(StagingSlot::new(manifest));
+        }
+        // N stage threads share one free-slot queue; mpsc receivers are
+        // single-consumer, so waiting tenants serialize on this lock
+        // (first-come) — the lock is only ever held across one recv.
+        let free = Arc::new(Mutex::new(rx_free));
+
+        std::thread::scope(|scope| -> Result<()> {
+            // rx_ready/tx_free move INTO the closure so they drop —
+            // unblocking stage threads stuck in send/recv — before the
+            // scope joins, on success, error and panic paths alike
+            // (the `coordinator::pipeline` shutdown pattern).
+            let rx_ready = rx_ready;
+            let tx_free = tx_free;
+            let mut handles = Vec::with_capacity(sources.len());
+            for (sid, (src, stager)) in sources.iter().zip(stagers.iter_mut()).enumerate() {
+                let tx = tx_ready.clone();
+                let free = Arc::clone(&free);
+                handles.push(scope.spawn(move || -> Result<()> {
+                    let windows = src.stream.split_windows(src.splitter_secs);
+                    for (i, w) in windows.into_iter().enumerate() {
+                        if i >= limit {
+                            break; // nothing past the limit is ever served
+                        }
+                        let snap = preprocess_window(&src.stream, w, i)?;
+                        let recv = {
+                            let guard = free.lock().unwrap_or_else(|e| e.into_inner());
+                            guard.recv()
+                        };
+                        let mut slot = match recv {
+                            Ok(s) => s,
+                            Err(_) => return Ok(()), // inference thread hung up
+                        };
+                        let t_req = Instant::now();
+                        let staged = stager.stage(&snap, &mut slot);
+                        let failed = staged.is_err();
+                        let stage_ms = t_req.elapsed().as_secs_f64() * 1e3;
+                        let job = StagedJob { stream: sid, snap, slot, stage_ms, t_req, staged };
+                        // the slot rides along even on failure so the
+                        // collector can recycle it (a dropped slot would
+                        // drain the pool and hang the other tenants)
+                        if tx.send(job).is_err() || failed {
+                            return Ok(());
+                        }
+                    }
+                    Ok(())
+                }));
+            }
+            // the clones inside the threads keep the channel open; this
+            // original must go so rx_ready.iter() terminates
+            drop(tx_ready);
+
+            for job in rx_ready.iter() {
+                let StagedJob { stream, snap, slot, stage_ms, t_req, staged } = job;
+                if let Err(e) = staged {
+                    let _ = tx_free.send(slot); // recycle before surfacing
+                    return Err(e);
+                }
+                let session = &mut sessions[stream];
+                session.prepare(&snap)?;
+                if snap.index < limit {
+                    let t0 = Instant::now();
+                    session.infer(&snap, &slot)?;
+                    let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    on_step(stream, &snap, &slot, session.output())?;
+                    outcomes[stream].steps.push(StepRecord {
+                        index: snap.index,
+                        stage_ms,
+                        infer_ms,
+                        e2e_ms: t_req.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
+                let _ = tx_free.send(slot); // recycle; stagers may be done
+            }
+            for h in handles {
+                h.join()
+                    .map_err(|_| Error::Graph("stage thread panicked".into()))??;
+            }
+            Ok(())
+        })?;
+
+        for (sid, (mut session, stager)) in sessions.into_iter().zip(stagers).enumerate() {
+            outcomes[sid].state_delta = session.finish();
+            outcomes[sid].feature_delta = stager.feature_delta();
+        }
+        Ok(outcomes)
+    }
+}
+
+/// Single-stream serving — the scheduler's degenerate case, expressed
+/// directly on [`run_stream_staged`] so a lone tenant keeps the
+/// within-stream three-stage overlap (its stager runs on the pipeline's
+/// stage thread while the session infers earlier snapshots).  Snapshots
+/// past `limit` flow through the pipeline unstaged and uninferred, so
+/// the delta counters cover exactly the served prefix.
+///
+/// Returns the pipeline step results plus the session's state-side and
+/// the stager's feature-side delta counters.
+#[allow(clippy::type_complexity)]
+pub fn run_session<F>(
+    session: &mut dyn DgnnSession,
+    stream: &CooStream,
+    splitter_secs: i64,
+    manifest: &Manifest,
+    slots: usize,
+    limit: usize,
+    mut on_step: F,
+) -> Result<(Vec<StepResult<usize>>, Option<DeltaCounts>, Option<DeltaCounts>)>
+where
+    F: FnMut(&Snapshot, &StagingSlot, &[f32]) -> Result<()>,
+{
+    let slots = slots.max(1);
+    let pool: Vec<StagingSlot> = (0..slots).map(|_| StagingSlot::new(manifest)).collect();
+    let mut stager = session.make_stager(manifest);
+    let results = run_stream_staged(
+        stream,
+        splitter_secs,
+        slots,
+        pool,
+        |_snap| Ok(()),
+        |snap, _p, slot| {
+            if snap.index >= limit {
+                return Ok(()); // never served: skip the staging work
+            }
+            stager.stage(snap, slot)
+        },
+        |snap, _p, slot| {
+            if snap.index >= limit {
+                return Ok(0usize);
+            }
+            session.prepare(snap)?;
+            session.infer(snap, slot)?;
+            on_step(snap, slot, session.output())?;
+            Ok(snap.num_nodes())
+        },
+    )?;
+    Ok((results, session.finish(), stager.feature_delta()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{synth, BC_ALPHA};
+    use crate::models::ModelKind;
+    use crate::serve::session::SessionConfig;
+
+    fn cfg(stream: &CooStream, max_nodes: usize, delta: bool, engine: &Arc<Engine>) -> SessionConfig {
+        SessionConfig {
+            dims: Dims::default(),
+            seed: 42,
+            total_nodes: stream.num_nodes as usize,
+            max_nodes,
+            delta,
+            engine: Arc::clone(engine),
+        }
+    }
+
+    #[test]
+    fn scheduler_single_stream_matches_run_session_bitwise() {
+        let stream = synth::generate(&BC_ALPHA, 5);
+        let sources = vec![StreamSource {
+            name: "t0".into(),
+            stream: stream.clone(),
+            splitter_secs: BC_ALPHA.splitter_secs,
+        }];
+        let engine = Arc::new(Engine::serial());
+        let manifest = Scheduler::manifest_for(&sources, Dims::default());
+        let limit = 12usize;
+
+        let session = ModelKind::GcrnM2.build_session(&cfg(&stream, manifest.max_nodes, false, &engine));
+        let sched = Scheduler::new(Arc::clone(&engine), 3);
+        let mut sched_outs: Vec<(usize, Vec<u32>)> = Vec::new();
+        let outcomes = sched
+            .run(&manifest, &sources, vec![session], limit, |sid, snap, _slot, out| {
+                assert_eq!(sid, 0);
+                sched_outs.push((snap.index, out.iter().map(|v| v.to_bits()).collect()));
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(outcomes.len(), 1);
+        assert_eq!(outcomes[0].steps.len(), limit);
+
+        let mut single = ModelKind::GcrnM2.build_session(&cfg(&stream, manifest.max_nodes, false, &engine));
+        let mut single_outs: Vec<(usize, Vec<u32>)> = Vec::new();
+        run_session(
+            single.as_mut(),
+            &stream,
+            BC_ALPHA.splitter_secs,
+            &manifest,
+            3,
+            limit,
+            |snap, _slot, out| {
+                single_outs.push((snap.index, out.iter().map(|v| v.to_bits()).collect()));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(sched_outs, single_outs);
+    }
+
+    #[test]
+    fn per_stream_fifo_order_holds() {
+        let engine = Arc::new(Engine::serial());
+        let sources: Vec<StreamSource> = (0..3)
+            .map(|i| StreamSource {
+                name: format!("t{i}"),
+                stream: synth::generate(&BC_ALPHA, 20 + i),
+                splitter_secs: BC_ALPHA.splitter_secs,
+            })
+            .collect();
+        let manifest = Scheduler::manifest_for(&sources, Dims::default());
+        let sessions: Vec<_> = sources
+            .iter()
+            .map(|s| ModelKind::EvolveGcn.build_session(&cfg(&s.stream, manifest.max_nodes, false, &engine)))
+            .collect();
+        let sched = Scheduler::new(engine, 4);
+        let outcomes = sched
+            .run(&manifest, &sources, sessions, 10, |_, _, _, _| Ok(()))
+            .unwrap();
+        for o in &outcomes {
+            assert_eq!(o.steps.len(), 10, "{}", o.name);
+            for (i, st) in o.steps.iter().enumerate() {
+                assert_eq!(st.index, i, "{}: out of order", o.name);
+                assert!(st.e2e_ms >= st.infer_ms);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_stream_tenant_yields_no_steps() {
+        let engine = Arc::new(Engine::serial());
+        let live = synth::generate(&BC_ALPHA, 7);
+        let sources = vec![
+            StreamSource {
+                name: "live".into(),
+                stream: live.clone(),
+                splitter_secs: BC_ALPHA.splitter_secs,
+            },
+            StreamSource {
+                name: "empty".into(),
+                stream: CooStream::default(),
+                splitter_secs: BC_ALPHA.splitter_secs,
+            },
+        ];
+        let manifest = Scheduler::manifest_for(&sources, Dims::default());
+        let sessions = vec![
+            ModelKind::GcrnM1.build_session(&cfg(&live, manifest.max_nodes, true, &engine)),
+            ModelKind::GcrnM1.build_session(&cfg(&CooStream::default(), manifest.max_nodes, true, &engine)),
+        ];
+        let sched = Scheduler::new(engine, 2);
+        let outcomes = sched
+            .run(&manifest, &sources, sessions, 6, |_, _, _, _| Ok(()))
+            .unwrap();
+        assert_eq!(outcomes[0].steps.len(), 6);
+        assert!(outcomes[1].steps.is_empty());
+    }
+
+    #[test]
+    fn infer_error_propagates_and_unblocks_stagers() {
+        let engine = Arc::new(Engine::serial());
+        let sources: Vec<StreamSource> = (0..2)
+            .map(|i| StreamSource {
+                name: format!("t{i}"),
+                stream: synth::generate(&BC_ALPHA, 30 + i),
+                splitter_secs: BC_ALPHA.splitter_secs,
+            })
+            .collect();
+        let manifest = Scheduler::manifest_for(&sources, Dims::default());
+        let sessions: Vec<_> = sources
+            .iter()
+            .map(|s| ModelKind::GcrnM2.build_session(&cfg(&s.stream, manifest.max_nodes, false, &engine)))
+            .collect();
+        let sched = Scheduler::new(engine, 2);
+        let mut served = 0usize;
+        let res = sched.run(&manifest, &sources, sessions, usize::MAX, |_, _, _, _| {
+            served += 1;
+            if served == 5 {
+                Err(Error::Graph("tenant misbehaved".into()))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn stage_error_returns_slot_and_propagates_without_hanging() {
+        // a manifest too small for the streams makes every stage call
+        // fail with Budget; with a single shared slot the error path
+        // must recycle it (a leak would deadlock the other tenant)
+        let engine = Arc::new(Engine::serial());
+        let sources: Vec<StreamSource> = (0..2)
+            .map(|i| StreamSource {
+                name: format!("t{i}"),
+                stream: synth::generate(&BC_ALPHA, 40 + i),
+                splitter_secs: BC_ALPHA.splitter_secs,
+            })
+            .collect();
+        let manifest = Manifest {
+            max_nodes: 2,
+            max_edges: 2,
+            in_dim: Dims::default().in_dim,
+            hidden_dim: Dims::default().hidden_dim,
+            out_dim: Dims::default().out_dim,
+        };
+        let sessions: Vec<_> = sources
+            .iter()
+            .map(|s| ModelKind::EvolveGcn.build_session(&cfg(&s.stream, 2, false, &engine)))
+            .collect();
+        let sched = Scheduler::new(engine, 1);
+        let res = sched.run(&manifest, &sources, sessions, usize::MAX, |_, _, _, _| Ok(()));
+        assert!(matches!(res.unwrap_err(), Error::Budget { .. }));
+    }
+
+    #[test]
+    fn stream_session_count_mismatch_is_usage_error() {
+        let engine = Arc::new(Engine::serial());
+        let sched = Scheduler::new(Arc::clone(&engine), 2);
+        let manifest = Scheduler::manifest_for(&[], Dims::default());
+        let res = sched.run(&manifest, &[], Vec::new(), usize::MAX, |_, _, _, _| Ok(()));
+        assert!(matches!(res.unwrap_err(), Error::Usage(_)));
+        let stream = synth::generate(&BC_ALPHA, 3);
+        let sources = vec![StreamSource {
+            name: "t0".into(),
+            stream,
+            splitter_secs: BC_ALPHA.splitter_secs,
+        }];
+        let res = sched.run(&manifest, &sources, Vec::new(), usize::MAX, |_, _, _, _| Ok(()));
+        assert!(matches!(res.unwrap_err(), Error::Usage(_)));
+    }
+}

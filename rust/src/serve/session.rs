@@ -1,0 +1,656 @@
+//! The unified model session: one object-safe trait every serving
+//! surface drives, with mirror (pure-Rust, artifact-free) and PJRT
+//! (AOT-compiled) implementations for all three models.
+//!
+//! A [`DgnnSession`] owns everything that evolves across a tenant's
+//! snapshot stream — evolved GCN weights for EvolveGCN, H/C recurrent
+//! node state for the GCRN variants — behind `prepare`/`infer` hooks,
+//! and hands the pipeline its stage-side half through
+//! [`DgnnSession::make_stager`]: a [`SessionStager`] is the `Send` part
+//! that pads graphs, rebuilds CSRs and materialises node features on a
+//! producer thread (delta-aware per §VI when the session was built with
+//! `delta`), while the session itself stays on the inference thread.
+//! That split is exactly the paper's CPU/accelerator task placement:
+//! staging is CPU-side producer work, the step is the accelerator.
+//!
+//! Construction goes through [`ModelKind::build_session`] (mirror) or
+//! [`build_pjrt_session`] (compiled artifacts), both seeded via
+//! `models::ModelKind::init_params` so every caller — examples, the CLI
+//! `serve` command, benches, tests — initialises identically.
+
+use crate::coordinator::{NodeStateStore, ResidentState};
+use crate::error::{Error, Result};
+use crate::graph::Snapshot;
+use crate::models::{node_features_into, Dims, ModelKind, ModelParams};
+use crate::numerics::{self, Engine, Mat};
+use crate::runtime::{
+    EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor, Manifest, StagingSlot,
+};
+use std::sync::Arc;
+
+/// Shared-node overlap counters from a delta-aware path
+/// (state gathers or feature staging).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DeltaCounts {
+    /// Rows reused in place (shared with the previous snapshot).
+    pub shared: usize,
+    /// Total rows seen.
+    pub seen: usize,
+}
+
+impl DeltaCounts {
+    /// Fraction of rows that stayed resident.
+    pub fn fraction(&self) -> f64 {
+        if self.seen == 0 {
+            0.0
+        } else {
+            self.shared as f64 / self.seen as f64
+        }
+    }
+}
+
+/// Everything needed to build a session for one tenant stream.
+#[derive(Clone)]
+pub struct SessionConfig {
+    pub dims: Dims,
+    /// Seed for parameters *and* the tenant's node-feature store.
+    pub seed: u64,
+    /// Node universe of the tenant's stream (sizes the DRAM state store).
+    pub total_nodes: usize,
+    /// Padded row budget (the manifest's `max_nodes`).
+    pub max_nodes: usize,
+    /// Delta-aware state gathers + feature staging (paper §VI).
+    pub delta: bool,
+    /// Shared sparse compute engine (one per process; sessions share it).
+    pub engine: Arc<Engine>,
+}
+
+/// The stage-side half of a session: runs on a pipeline producer thread,
+/// filling recycled [`StagingSlot`]s (padded graph + CSR + features).
+pub trait SessionStager: Send {
+    /// Stage one snapshot into `slot`.
+    fn stage(&mut self, snap: &Snapshot, slot: &mut StagingSlot) -> Result<()>;
+    /// Feature-row reuse counters (`Some` only on the delta path).
+    fn feature_delta(&self) -> Option<DeltaCounts>;
+}
+
+/// One tenant's model session: the inference-side state machine every
+/// serving surface drives through the same three hooks
+/// (`prepare` → stage via [`Self::make_stager`] → `infer`).
+///
+/// Object-safe on purpose — the scheduler multiplexes
+/// `Box<dyn DgnnSession>` tenants over one shared engine.  Sessions are
+/// *not* required to be `Send` (PJRT executables are pinned to the
+/// inference thread); their stagers are.
+pub trait DgnnSession {
+    fn model(&self) -> ModelKind;
+
+    fn dims(&self) -> Dims;
+
+    /// Build this session's stage-side half, sized to `m`.
+    fn make_stager(&self, m: &Manifest) -> Box<dyn SessionStager>;
+
+    /// Called once per snapshot in stream order, before `infer` (CPU
+    /// metadata hook; default no-op).
+    fn prepare(&mut self, snap: &Snapshot) -> Result<()> {
+        let _ = snap;
+        Ok(())
+    }
+
+    /// One inference step over a staged slot, advancing the session's
+    /// evolving state.  The embedding is readable via [`Self::output`]
+    /// until the next call.
+    fn infer(&mut self, snap: &Snapshot, slot: &StagingSlot) -> Result<()>;
+
+    /// `[num_nodes × out_dim]` embeddings of the last inferred snapshot
+    /// (for the recurrent models the new H rows *are* the embedding).
+    fn output(&self) -> &[f32];
+
+    /// End of stream: write resident state back; returns the state-side
+    /// delta counters when the session ran delta-aware gathers.
+    fn finish(&mut self) -> Option<DeltaCounts>;
+}
+
+/// The model-independent stager: node features are a pure function of
+/// the raw id and the tenant seed (the DRAM feature store), so staging
+/// needs no model state.  With `delta`, adjacent-snapshot reuse runs
+/// through a persistent cache slot — pool slots recycle every
+/// `pool`-size snapshots, so their own bookkeeping would measure overlap
+/// at the wrong distance (see `StagingSlot::stage_delta`).
+pub struct StreamStager {
+    delta: bool,
+    seed: u64,
+    in_dim: usize,
+    cache: StagingSlot,
+    shared: usize,
+    seen: usize,
+}
+
+impl StreamStager {
+    pub fn new(m: &Manifest, delta: bool, seed: u64) -> StreamStager {
+        StreamStager {
+            delta,
+            seed,
+            in_dim: m.in_dim,
+            cache: StagingSlot::new(m),
+            shared: 0,
+            seen: 0,
+        }
+    }
+}
+
+impl SessionStager for StreamStager {
+    fn stage(&mut self, snap: &Snapshot, slot: &mut StagingSlot) -> Result<()> {
+        let seed = self.seed;
+        if self.delta {
+            let st = self
+                .cache
+                .stage_delta(snap, |raw, row| node_features_into(raw, seed, row))?;
+            self.shared += st.shared_nodes;
+            self.seen += st.nodes;
+            let n = snap.num_nodes();
+            slot.stage_from_rows(snap, &self.cache.x[..n * self.in_dim])
+        } else {
+            slot.stage(snap, |raw, row| node_features_into(raw, seed, row))
+        }
+    }
+
+    fn feature_delta(&self) -> Option<DeltaCounts> {
+        if self.delta {
+            Some(DeltaCounts { shared: self.shared, seen: self.seen })
+        } else {
+            None
+        }
+    }
+}
+
+/// Per-tenant recurrent node state (H and C) with either full
+/// gather/scatter through the DRAM store or delta-aware residency
+/// (`coordinator::ResidentState`, paper §VI).  Shared by the mirror and
+/// PJRT sessions — the step backend writes new state into the padded
+/// buffers this struct hands out.
+pub struct RecurrentState {
+    dh: usize,
+    max_nodes: usize,
+    delta: bool,
+    h_store: NodeStateStore,
+    c_store: NodeStateStore,
+    h_res: ResidentState,
+    c_res: ResidentState,
+    h_buf: Vec<f32>,
+    c_buf: Vec<f32>,
+    shared: usize,
+    seen: usize,
+}
+
+impl RecurrentState {
+    pub fn new(cfg: &SessionConfig) -> RecurrentState {
+        let dh = cfg.dims.hidden_dim;
+        RecurrentState {
+            dh,
+            max_nodes: cfg.max_nodes,
+            delta: cfg.delta,
+            h_store: NodeStateStore::zeros(cfg.total_nodes, dh),
+            c_store: NodeStateStore::zeros(cfg.total_nodes, dh),
+            h_res: ResidentState::new(cfg.max_nodes, dh),
+            c_res: ResidentState::new(cfg.max_nodes, dh),
+            h_buf: Vec::new(),
+            c_buf: Vec::new(),
+            shared: 0,
+            seen: 0,
+        }
+    }
+
+    /// Bring the padded buffers into `snap`'s layout (full gather, or
+    /// the §VI delta transition).
+    pub fn advance(&mut self, snap: &Snapshot) -> Result<()> {
+        let n = snap.num_nodes();
+        if n > self.max_nodes {
+            return Err(Error::Budget { what: "nodes", got: n, max: self.max_nodes });
+        }
+        if self.delta {
+            let st = self.h_res.advance(&mut self.h_store, snap)?;
+            self.c_res.advance(&mut self.c_store, snap)?;
+            self.shared += st.shared_nodes;
+            self.seen += st.nodes;
+        } else {
+            self.h_store.gather_padded_into(snap, self.max_nodes, &mut self.h_buf);
+            self.c_store.gather_padded_into(snap, self.max_nodes, &mut self.c_buf);
+        }
+        Ok(())
+    }
+
+    /// Padded `[max_nodes × dh]` state in the last advanced layout.
+    pub fn h(&self) -> &[f32] {
+        if self.delta { self.h_res.buf() } else { &self.h_buf }
+    }
+
+    pub fn c(&self) -> &[f32] {
+        if self.delta { self.c_res.buf() } else { &self.c_buf }
+    }
+
+    /// Both padded buffers, mutably (the step backend overwrites them).
+    pub fn bufs_mut(&mut self) -> (&mut Vec<f32>, &mut Vec<f32>) {
+        if self.delta {
+            (self.h_res.buf_mut(), self.c_res.buf_mut())
+        } else {
+            (&mut self.h_buf, &mut self.c_buf)
+        }
+    }
+
+    /// Copy freshly computed `[n × dh]` state rows into the padded
+    /// buffers (the mirror path; the PJRT path writes in place).
+    pub fn write_rows(&mut self, n: usize, hn: &[f32], cn: &[f32]) {
+        let dh = self.dh;
+        let (h, c) = self.bufs_mut();
+        h[..n * dh].copy_from_slice(&hn[..n * dh]);
+        c[..n * dh].copy_from_slice(&cn[..n * dh]);
+    }
+
+    /// Publish the step's state: full mode scatters back to the DRAM
+    /// store; delta mode keeps rows resident (evictions write back
+    /// lazily inside `advance`).
+    pub fn commit(&mut self, snap: &Snapshot) {
+        if !self.delta {
+            self.h_store.scatter(snap, &self.h_buf);
+            self.c_store.scatter(snap, &self.c_buf);
+        }
+    }
+
+    /// End of stream: flush resident rows; `Some(counters)` iff delta.
+    pub fn finish(&mut self) -> Option<DeltaCounts> {
+        if self.delta {
+            self.h_res.flush(&mut self.h_store);
+            self.c_res.flush(&mut self.c_store);
+            Some(DeltaCounts { shared: self.shared, seen: self.seen })
+        } else {
+            None
+        }
+    }
+}
+
+/// Model-specific evolving state of the mirror session.
+enum MirrorState {
+    Evolve { params: Box<crate::models::EvolveGcnParams>, w1: Mat, w2: Mat },
+    GcrnM1 { params: Box<crate::models::GcrnM1Params>, rec: RecurrentState },
+    GcrnM2 { params: Box<crate::models::GcrnM2Params>, rec: RecurrentState },
+}
+
+/// Pure-Rust session over `numerics` + the shared sparse engine; runs
+/// without AOT artifacts (the CLI `serve` command, benches, tests, and
+/// the e2e example's cross-check all use it).
+pub struct MirrorSession {
+    kind: ModelKind,
+    dims: Dims,
+    seed: u64,
+    delta: bool,
+    engine: Arc<Engine>,
+    state: MirrorState,
+    out: Vec<f32>,
+}
+
+impl ModelKind {
+    /// Build the mirror [`DgnnSession`] for this model — the one
+    /// constructor every serving surface goes through.
+    pub fn build_session(self, cfg: &SessionConfig) -> Box<dyn DgnnSession> {
+        let state = match self.init_params(cfg.seed, cfg.dims) {
+            ModelParams::EvolveGcn(p) => {
+                let w1 = Mat::from_vec(p.dims.in_dim, p.dims.hidden_dim, p.w1.clone());
+                let w2 = Mat::from_vec(p.dims.hidden_dim, p.dims.out_dim, p.w2.clone());
+                MirrorState::Evolve { params: Box::new(p), w1, w2 }
+            }
+            ModelParams::GcrnM1(p) => {
+                MirrorState::GcrnM1 { params: Box::new(p), rec: RecurrentState::new(cfg) }
+            }
+            ModelParams::GcrnM2(p) => {
+                MirrorState::GcrnM2 { params: Box::new(p), rec: RecurrentState::new(cfg) }
+            }
+        };
+        Box::new(MirrorSession {
+            kind: self,
+            dims: cfg.dims,
+            seed: cfg.seed,
+            delta: cfg.delta,
+            engine: Arc::clone(&cfg.engine),
+            state,
+            out: Vec::new(),
+        })
+    }
+}
+
+impl DgnnSession for MirrorSession {
+    fn model(&self) -> ModelKind {
+        self.kind
+    }
+
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn make_stager(&self, m: &Manifest) -> Box<dyn SessionStager> {
+        Box::new(StreamStager::new(m, self.delta, self.seed))
+    }
+
+    fn infer(&mut self, snap: &Snapshot, slot: &StagingSlot) -> Result<()> {
+        let n = snap.num_nodes();
+        let ind = self.dims.in_dim;
+        let dh = self.dims.hidden_dim;
+        let x = Mat::from_vec(n, ind, slot.x[..n * ind].to_vec());
+        let eng: &Engine = &self.engine;
+        match &mut self.state {
+            MirrorState::Evolve { params, w1, w2 } => {
+                let (out, w1n, w2n) =
+                    numerics::evolvegcn_step_with(eng, &slot.csr, snap, &x, w1, w2, params);
+                *w1 = w1n;
+                *w2 = w2n;
+                self.out.clear();
+                self.out.extend_from_slice(&out.data);
+            }
+            MirrorState::GcrnM1 { params, rec } => {
+                rec.advance(snap)?;
+                let h = Mat::from_vec(n, dh, rec.h()[..n * dh].to_vec());
+                let c = Mat::from_vec(n, dh, rec.c()[..n * dh].to_vec());
+                let (hn, cn) =
+                    numerics::gcrn_m1_step_with(eng, &slot.csr, snap, &x, &h, &c, params);
+                rec.write_rows(n, &hn.data, &cn.data);
+                rec.commit(snap);
+                self.out.clear();
+                self.out.extend_from_slice(&hn.data);
+            }
+            MirrorState::GcrnM2 { params, rec } => {
+                rec.advance(snap)?;
+                let h = Mat::from_vec(n, dh, rec.h()[..n * dh].to_vec());
+                let c = Mat::from_vec(n, dh, rec.c()[..n * dh].to_vec());
+                let (hn, cn) =
+                    numerics::gcrn_m2_step_with(eng, &slot.csr, snap, &x, &h, &c, params);
+                rec.write_rows(n, &hn.data, &cn.data);
+                rec.commit(snap);
+                self.out.clear();
+                self.out.extend_from_slice(&hn.data);
+            }
+        }
+        Ok(())
+    }
+
+    fn output(&self) -> &[f32] {
+        &self.out
+    }
+
+    fn finish(&mut self) -> Option<DeltaCounts> {
+        match &mut self.state {
+            MirrorState::Evolve { .. } => None,
+            MirrorState::GcrnM1 { rec, .. } | MirrorState::GcrnM2 { rec, .. } => rec.finish(),
+        }
+    }
+}
+
+/// Which compiled executor a [`PjrtSession`] drives.
+enum PjrtBackend {
+    Evolve(EvolveGcnExecutor),
+    M1(GcrnM1Executor),
+    M2(GcrnExecutor),
+}
+
+/// AOT-artifact-backed session: the PJRT executors behind the same
+/// [`DgnnSession`] hooks the mirror implements.  Not `Send` (PJRT
+/// executables are pinned to the inference thread) — the scheduler and
+/// single-stream runner never move sessions across threads, so it
+/// multiplexes like any other tenant.
+pub struct PjrtSession {
+    kind: ModelKind,
+    dims: Dims,
+    seed: u64,
+    delta: bool,
+    backend: PjrtBackend,
+    rec: Option<RecurrentState>,
+    out: Vec<f32>,
+}
+
+/// Build a [`PjrtSession`] from the compiled artifacts in `dir`.
+pub fn build_pjrt_session(
+    kind: ModelKind,
+    client: &xla::PjRtClient,
+    dir: &str,
+    cfg: &SessionConfig,
+) -> Result<Box<dyn DgnnSession>> {
+    let backend = match kind.init_params(cfg.seed, cfg.dims) {
+        ModelParams::EvolveGcn(p) => {
+            PjrtBackend::Evolve(EvolveGcnExecutor::new(client, dir, &p)?)
+        }
+        ModelParams::GcrnM1(p) => PjrtBackend::M1(GcrnM1Executor::new(client, dir, &p)?),
+        ModelParams::GcrnM2(p) => PjrtBackend::M2(GcrnExecutor::new(client, dir, &p)?),
+    };
+    let rec = match kind {
+        ModelKind::EvolveGcn => None,
+        ModelKind::GcrnM1 | ModelKind::GcrnM2 => Some(RecurrentState::new(cfg)),
+    };
+    Ok(Box::new(PjrtSession {
+        kind,
+        dims: cfg.dims,
+        seed: cfg.seed,
+        delta: cfg.delta,
+        backend,
+        rec,
+        out: Vec::new(),
+    }))
+}
+
+impl PjrtSession {
+    /// Run one recurrent PJRT step over the session's padded state.
+    fn step_recurrent(
+        backend: &mut PjrtBackend,
+        rec: &mut RecurrentState,
+        snap: &Snapshot,
+        slot: &StagingSlot,
+    ) -> Result<()> {
+        rec.advance(snap)?;
+        let (h, c) = rec.bufs_mut();
+        match backend {
+            PjrtBackend::M1(exec) => exec.run_step_staged(slot, h, c)?,
+            PjrtBackend::M2(exec) => exec.run_step_staged(slot, h, c)?,
+            PjrtBackend::Evolve(_) => {
+                return Err(Error::Artifact(
+                    "recurrent step requested on an EvolveGCN session".into(),
+                ))
+            }
+        }
+        rec.commit(snap);
+        Ok(())
+    }
+}
+
+impl DgnnSession for PjrtSession {
+    fn model(&self) -> ModelKind {
+        self.kind
+    }
+
+    fn dims(&self) -> Dims {
+        self.dims
+    }
+
+    fn make_stager(&self, m: &Manifest) -> Box<dyn SessionStager> {
+        Box::new(StreamStager::new(m, self.delta, self.seed))
+    }
+
+    fn infer(&mut self, snap: &Snapshot, slot: &StagingSlot) -> Result<()> {
+        let n = snap.num_nodes();
+        let dh = self.dims.hidden_dim;
+        match &mut self.backend {
+            PjrtBackend::Evolve(exec) => {
+                // run_step_staged truncates `out` to [n × out_dim]
+                exec.run_step_staged(slot, &mut self.out)?;
+            }
+            backend => {
+                let rec = self
+                    .rec
+                    .as_mut()
+                    .expect("recurrent PJRT session carries H/C state");
+                Self::step_recurrent(backend, rec, snap, slot)?;
+                self.out.clear();
+                self.out.extend_from_slice(&rec.h()[..n * dh]);
+            }
+        }
+        Ok(())
+    }
+
+    fn output(&self) -> &[f32] {
+        &self.out
+    }
+
+    fn finish(&mut self) -> Option<DeltaCounts> {
+        self.rec.as_mut().and_then(RecurrentState::finish)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::preprocess::preprocess_stream;
+    use crate::datasets::{synth, BC_ALPHA};
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn small_setup() -> (Vec<Snapshot>, Manifest, usize) {
+        let stream = synth::generate(&BC_ALPHA, 9);
+        let mut snaps = preprocess_stream(&stream, BC_ALPHA.splitter_secs).unwrap();
+        snaps.truncate(8);
+        let d = Dims::default();
+        let m = Manifest {
+            max_nodes: snaps.iter().map(Snapshot::num_nodes).max().unwrap(),
+            max_edges: snaps.iter().map(Snapshot::num_edges).max().unwrap(),
+            in_dim: d.in_dim,
+            hidden_dim: d.hidden_dim,
+            out_dim: d.out_dim,
+        };
+        (snaps, m, stream.num_nodes as usize)
+    }
+
+    fn cfg(total: usize, max_nodes: usize, delta: bool) -> SessionConfig {
+        SessionConfig {
+            dims: Dims::default(),
+            seed: 42,
+            total_nodes: total,
+            max_nodes,
+            delta,
+            engine: Arc::new(Engine::serial()),
+        }
+    }
+
+    /// Drive a session snapshot-by-snapshot through its own stager and
+    /// one staging slot, collecting per-step output bits.
+    fn drive(
+        session: &mut dyn DgnnSession,
+        snaps: &[Snapshot],
+        m: &Manifest,
+    ) -> Vec<Vec<u32>> {
+        let mut stager = session.make_stager(m);
+        let mut slot = StagingSlot::new(m);
+        let mut outs = Vec::new();
+        for s in snaps {
+            session.prepare(s).unwrap();
+            stager.stage(s, &mut slot).unwrap();
+            session.infer(s, &slot).unwrap();
+            outs.push(bits(session.output()));
+        }
+        outs
+    }
+
+    #[test]
+    fn mirror_gcrn_m2_session_matches_direct_numerics() {
+        let (snaps, m, total) = small_setup();
+        let d = Dims::default();
+        let mut session = ModelKind::GcrnM2.build_session(&cfg(total, m.max_nodes, false));
+        let got = drive(session.as_mut(), &snaps, &m);
+
+        // hand loop: full gather/scatter + per-call serial engine
+        let params = match ModelKind::GcrnM2.init_params(42, d) {
+            ModelParams::GcrnM2(p) => p,
+            _ => unreachable!(),
+        };
+        let mut h_store = NodeStateStore::zeros(total, d.hidden_dim);
+        let mut c_store = NodeStateStore::zeros(total, d.hidden_dim);
+        for (i, s) in snaps.iter().enumerate() {
+            let n = s.num_nodes();
+            let x = crate::baselines::cpu::features_for(s, d, 42);
+            let h = Mat::from_vec(n, d.hidden_dim, h_store.gather_padded(s, n));
+            let c = Mat::from_vec(n, d.hidden_dim, c_store.gather_padded(s, n));
+            let (hn, cn) = numerics::gcrn_m2_step(s, &x, &h, &c, &params);
+            h_store.scatter(s, &hn.data);
+            c_store.scatter(s, &cn.data);
+            assert_eq!(got[i], bits(&hn.data), "step {i} diverged");
+        }
+        assert!(session.finish().is_none());
+    }
+
+    #[test]
+    fn mirror_evolvegcn_session_matches_direct_numerics() {
+        let (snaps, m, total) = small_setup();
+        let d = Dims::default();
+        let mut session = ModelKind::EvolveGcn.build_session(&cfg(total, m.max_nodes, false));
+        let got = drive(session.as_mut(), &snaps, &m);
+
+        let params = match ModelKind::EvolveGcn.init_params(42, d) {
+            ModelParams::EvolveGcn(p) => p,
+            _ => unreachable!(),
+        };
+        let mut w1 = Mat::from_vec(d.in_dim, d.hidden_dim, params.w1.clone());
+        let mut w2 = Mat::from_vec(d.hidden_dim, d.out_dim, params.w2.clone());
+        for (i, s) in snaps.iter().enumerate() {
+            let x = crate::baselines::cpu::features_for(s, d, 42);
+            let (out, w1n, w2n) = numerics::evolvegcn_step(s, &x, &w1, &w2, &params);
+            w1 = w1n;
+            w2 = w2n;
+            assert_eq!(got[i], bits(&out.data), "step {i} diverged");
+        }
+    }
+
+    #[test]
+    fn delta_session_bitwise_matches_full_session() {
+        let (snaps, m, total) = small_setup();
+        for kind in ModelKind::all() {
+            let mut full = kind.build_session(&cfg(total, m.max_nodes, false));
+            let mut delta = kind.build_session(&cfg(total, m.max_nodes, true));
+            let a = drive(full.as_mut(), &snaps, &m);
+            let b = drive(delta.as_mut(), &snaps, &m);
+            assert_eq!(a, b, "{}: delta path diverged", kind.name());
+            assert!(full.finish().is_none());
+            let fin = delta.finish();
+            if kind == ModelKind::EvolveGcn {
+                assert!(fin.is_none()); // no per-node state to keep resident
+            } else {
+                let c = fin.expect("delta session reports state counters");
+                assert!(c.seen > 0);
+                assert!(c.shared > 0, "{}: no overlap measured", kind.name());
+                assert!(c.fraction() <= 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn delta_stager_reports_feature_reuse() {
+        let (snaps, m, _total) = small_setup();
+        let mut full = StreamStager::new(&m, false, 42);
+        let mut delta = StreamStager::new(&m, true, 42);
+        let mut slot_a = StagingSlot::new(&m);
+        let mut slot_b = StagingSlot::new(&m);
+        for s in &snaps {
+            full.stage(s, &mut slot_a).unwrap();
+            delta.stage(s, &mut slot_b).unwrap();
+            assert_eq!(bits(&slot_a.x), bits(&slot_b.x), "staged features diverged");
+        }
+        assert!(full.feature_delta().is_none());
+        let c = delta.feature_delta().expect("delta stager counts reuse");
+        assert!(c.shared > 0 && c.shared < c.seen);
+    }
+
+    #[test]
+    fn build_session_reports_model_and_dims() {
+        for kind in ModelKind::all() {
+            let s = kind.build_session(&cfg(10, 8, false));
+            assert_eq!(s.model(), kind);
+            assert_eq!(s.dims(), Dims::default());
+        }
+    }
+}

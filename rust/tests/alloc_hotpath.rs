@@ -6,8 +6,10 @@
 //! the in-place CSR rebuild via `StagingSlot::stage`, delta-aware
 //! feature staging via `StagingSlot::stage_delta`, feature
 //! materialisation, a full-gather `gather_padded_into`, the delta-aware
-//! `ResidentState::advance`, and the serial aggregation kernels (both
-//! the COO reference walk `aggregate_into` and the CSR engine path) —
+//! `ResidentState::advance`, the serial aggregation kernels (both
+//! the COO reference walk `aggregate_into` and the CSR engine path),
+//! **and the parallel engine's generation-counter broadcast dispatch**
+//! (aggregate + fused kernels fanned across a 2-worker pool) —
 //! must perform zero heap allocations.
 //!
 //! This binary intentionally holds a single `#[test]` so no concurrent
@@ -69,6 +71,10 @@ fn staging_path_steady_state_is_allocation_free() {
     let mut res = ResidentState::new(max_nodes, dims.hidden_dim);
     let mut gathered = Vec::new();
     let eng = Engine::serial();
+    // parallel engine: worker threads spawn here (allocates), but each
+    // broadcast must be allocation-free — the generation-counter loop
+    // replaced the boxed-job dispatch
+    let eng_par = Engine::new(2);
     // per-snapshot feature matrices and aggregation outputs, sized once
     // up front so the measured loop touches no fresh heap memory
     let xs: Vec<Mat> = snaps
@@ -99,6 +105,9 @@ fn staging_path_steady_state_is_allocation_free() {
         store.gather_padded_into(s, max_nodes, &mut gathered);
         res.advance(&mut store, s).unwrap();
         eng.aggregate_matmul_into(&slot.csr, &s.selfcoef, &xs[i], &w_fused, &mut agg_outs[i]);
+        // warm every worker's thread-local fused scratch too
+        eng_par.aggregate_into(&slot.csr, &s.selfcoef, &xs[i], &mut agg_outs[i]);
+        eng_par.aggregate_matmul_into(&slot.csr, &s.selfcoef, &xs[i], &w_fused, &mut agg_outs[i]);
     }
 
     let before = ALLOCS.load(Ordering::Relaxed);
@@ -116,6 +125,9 @@ fn staging_path_steady_state_is_allocation_free() {
         numerics::aggregate_into(s, &xs[i], &mut agg_outs[i]);
         eng.aggregate_into(&slot.csr, &s.selfcoef, &xs[i], &mut agg_outs[i]);
         eng.aggregate_matmul_into(&slot.csr, &s.selfcoef, &xs[i], &w_fused, &mut agg_outs[i]);
+        // parallel dispatch: generation-counter broadcast, no job boxes
+        eng_par.aggregate_into(&slot.csr, &s.selfcoef, &xs[i], &mut agg_outs[i]);
+        eng_par.aggregate_matmul_into(&slot.csr, &s.selfcoef, &xs[i], &w_fused, &mut agg_outs[i]);
     }
     let after = ALLOCS.load(Ordering::Relaxed);
     assert_eq!(

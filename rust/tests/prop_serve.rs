@@ -1,0 +1,221 @@
+//! Multi-tenant scheduling must not change the numerics: serving K
+//! streams through `serve::Scheduler` (shared engine, shared staging
+//! pool, interleaved inference) must produce, per stream, **bitwise**
+//! the same outputs in the same order as K independent single-stream
+//! `serve::run_session` runs (which sit directly on
+//! `coordinator::pipeline::run_stream_staged`) — at any engine thread
+//! count, with delta-aware state/features on or off, and including a
+//! tenant whose stream has no snapshots at all.
+
+use dgnn_booster::graph::{CooEdge, CooStream};
+use dgnn_booster::models::{Dims, ModelKind};
+use dgnn_booster::numerics::Engine;
+use dgnn_booster::serve::{run_session, DgnnSession, Scheduler, SessionConfig, StreamSource};
+use dgnn_booster::testutil::{forall, Config, Pcg32};
+use std::sync::Arc;
+
+const SPLITTER: i64 = 100;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Per-stream outputs: (snapshot index, output bits) in serve order.
+type Outs = Vec<(usize, Vec<u32>)>;
+
+/// A small deterministic tenant stream: `snaps` windows on a fixed
+/// splitter grid, each with a random handful of edges over a small node
+/// universe (so adjacent snapshots overlap and the delta paths have
+/// shared rows to exploit).
+fn tenant_stream(seed: u64, universe: usize, snaps: usize, max_epe: usize) -> CooStream {
+    let mut rng = Pcg32::seeded(seed);
+    let mut edges = Vec::new();
+    for s in 0..snaps {
+        let base = s as i64 * SPLITTER;
+        let count = 1 + rng.below(max_epe);
+        for j in 0..count {
+            // the first edge of window 0 anchors the splitter grid at 0
+            let t = if j == 0 { base } else { base + 1 + rng.below(SPLITTER as usize - 2) as i64 };
+            edges.push(CooEdge {
+                src: rng.below(universe) as u32,
+                dst: rng.below(universe) as u32,
+                weight: 1.0 + (rng.below(5) as f32),
+                time: t,
+            });
+        }
+    }
+    CooStream::from_edges("tenant", edges).unwrap()
+}
+
+/// Three live tenants plus one with an empty stream (zero snapshots).
+fn fixed_sources() -> Vec<StreamSource> {
+    let mut v: Vec<StreamSource> = (0..3)
+        .map(|i| StreamSource {
+            name: format!("t{i}"),
+            stream: tenant_stream(1000 + i as u64, 40, 10, 12),
+            splitter_secs: SPLITTER,
+        })
+        .collect();
+    v.push(StreamSource {
+        name: "empty".into(),
+        stream: CooStream::default(),
+        splitter_secs: SPLITTER,
+    });
+    v
+}
+
+fn session_for(
+    model: ModelKind,
+    src: &StreamSource,
+    tenant: usize,
+    max_nodes: usize,
+    delta: bool,
+    engine: &Arc<Engine>,
+) -> Box<dyn DgnnSession> {
+    model.build_session(&SessionConfig {
+        dims: Dims::default(),
+        seed: 7 + tenant as u64,
+        total_nodes: src.stream.num_nodes as usize,
+        max_nodes,
+        delta,
+        engine: Arc::clone(engine),
+    })
+}
+
+fn run_scheduled(
+    model: ModelKind,
+    sources: &[StreamSource],
+    threads: usize,
+    delta: bool,
+    limit: usize,
+) -> Vec<Outs> {
+    let engine = Arc::new(Engine::new(threads));
+    let manifest = Scheduler::manifest_for(sources, Dims::default());
+    let sessions: Vec<Box<dyn DgnnSession>> = sources
+        .iter()
+        .enumerate()
+        .map(|(i, s)| session_for(model, s, i, manifest.max_nodes, delta, &engine))
+        .collect();
+    let sched = Scheduler::new(engine, 3);
+    let mut outs: Vec<Outs> = (0..sources.len()).map(|_| Vec::new()).collect();
+    let outcomes = sched
+        .run(&manifest, sources, sessions, limit, |sid, snap, _slot, out| {
+            outs[sid].push((snap.index, bits(out)));
+            Ok(())
+        })
+        .unwrap();
+    // per-stream FIFO: recorded indices must be sequential from zero
+    for o in &outcomes {
+        for (i, st) in o.steps.iter().enumerate() {
+            assert_eq!(st.index, i, "{}: served out of order", o.name);
+        }
+    }
+    outs
+}
+
+fn run_independent(
+    model: ModelKind,
+    sources: &[StreamSource],
+    threads: usize,
+    delta: bool,
+    limit: usize,
+) -> Vec<Outs> {
+    // same padded shapes as the scheduler sizes for the shared pool
+    let manifest = Scheduler::manifest_for(sources, Dims::default());
+    sources
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let engine = Arc::new(Engine::new(threads));
+            let mut session = session_for(model, s, i, manifest.max_nodes, delta, &engine);
+            let mut outs: Outs = Vec::new();
+            run_session(
+                session.as_mut(),
+                &s.stream,
+                s.splitter_secs,
+                &manifest,
+                2,
+                limit,
+                |snap, _slot, out| {
+                    outs.push((snap.index, bits(out)));
+                    Ok(())
+                },
+            )
+            .unwrap();
+            outs
+        })
+        .collect()
+}
+
+fn assert_paths_equal(
+    model: ModelKind,
+    sources: &[StreamSource],
+    threads: usize,
+    delta: bool,
+    limit: usize,
+) -> Vec<Outs> {
+    let a = run_scheduled(model, sources, threads, delta, limit);
+    let b = run_independent(model, sources, threads, delta, limit);
+    assert_eq!(a.len(), b.len());
+    for (sid, (x, y)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(
+            x,
+            y,
+            "model={} threads={threads} delta={delta} stream={sid}",
+            model.name()
+        );
+    }
+    a
+}
+
+#[test]
+fn k_stream_schedule_bitwise_equals_independent_single_streams() {
+    let sources = fixed_sources();
+    for threads in [1usize, 2, 4] {
+        for delta in [false, true] {
+            for model in ModelKind::all() {
+                let outs = assert_paths_equal(model, &sources, threads, delta, usize::MAX);
+                for (sid, o) in outs.iter().enumerate() {
+                    // live tenants served 10 snapshots; the empty one none
+                    if sid == 3 {
+                        assert!(o.is_empty());
+                    } else {
+                        assert_eq!(o.len(), 10, "stream {sid}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn snapshot_limit_truncates_identically() {
+    let sources = fixed_sources();
+    let outs = assert_paths_equal(ModelKind::GcrnM2, &sources, 2, true, 5);
+    for o in &outs[..3] {
+        assert_eq!(o.len(), 5);
+        assert!(o.iter().all(|(idx, _)| *idx < 5));
+    }
+}
+
+#[test]
+fn prop_random_tenant_sets_schedule_equals_independent() {
+    forall(Config::default().cases(6).max_size(36), |rng, size| {
+        let k = 1 + rng.below(3);
+        let delta = rng.below(2) == 1;
+        let base_seed = 5000 + rng.below(1 << 16) as u64;
+        let sources: Vec<StreamSource> = (0..k)
+            .map(|i| StreamSource {
+                name: format!("t{i}"),
+                stream: tenant_stream(
+                    base_seed + i as u64,
+                    4 + size,
+                    2 + rng.below(6),
+                    1 + rng.below(10),
+                ),
+                splitter_secs: SPLITTER,
+            })
+            .collect();
+        assert_paths_equal(ModelKind::GcrnM2, &sources, 2, delta, usize::MAX);
+    });
+}
