@@ -1,8 +1,9 @@
-//! Served-traffic benchmark — closes the ROADMAP item "wire `--delta`
-//! into a served-traffic benchmark once a server frontend exists":
-//! sweep tenant-stream count × §VI delta on/off through
-//! `serve::Scheduler` (mirror GCRN-M2 sessions over one shared sparse
-//! engine and one recycled staging pool) and record per-request
+//! Served-traffic benchmark: sweep tenant-stream count × §VI delta
+//! on/off through `serve::Scheduler` (mirror GCRN-M2 sessions over one
+//! shared sparse engine and one recycled staging pool), plus two
+//! dynamic points — a **weighted** run (weights 1:2:4 under a tight
+//! slot pool, with the per-tenant fairness summary) and a **churn** run
+//! (one tenant admitted mid-run, one drained) — and record per-request
 //! end-to-end latency tails + throughput per sweep point.
 //!
 //! Writes `BENCH_serve.json` (schema in README.md § serve) so the
@@ -14,16 +15,47 @@
 //! snapshot budget (the CI gate).
 
 use dgnn_booster::datasets::{synth, BC_ALPHA};
+use dgnn_booster::graph::CooStream;
 use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
 use dgnn_booster::serve::{
-    write_serve_json, DgnnSession, Scheduler, ServeRecorder, ServeRow, SessionConfig,
-    StreamSource,
+    fairness_of, write_serve_json, Command, DgnnSession, Scheduler, ServeEvent, ServeRecorder,
+    ServeRow, SessionConfig, StreamOutcome, StreamSource, TenantSpec,
 };
 use std::sync::Arc;
 
 /// Shared-engine worker threads for every sweep point.
 const THREADS: usize = 2;
+
+fn session_cfg(stream: &CooStream, seed: u64, max_nodes: usize, delta: bool, engine: &Arc<Engine>) -> SessionConfig {
+    SessionConfig {
+        dims: Dims::default(),
+        seed,
+        total_nodes: stream.num_nodes as usize,
+        max_nodes,
+        delta,
+        engine: Arc::clone(engine),
+    }
+}
+
+/// Fold one run's outcomes into a row, optionally with fairness.
+fn row_from(
+    name: String,
+    streams: usize,
+    delta: bool,
+    wall: f64,
+    outcomes: &[StreamOutcome],
+    with_fairness: bool,
+) -> ServeRow {
+    let mut rec = ServeRecorder::new(65536);
+    for o in outcomes {
+        for st in &o.steps {
+            rec.record_ms(st.e2e_ms);
+        }
+    }
+    let fairness = with_fairness.then(|| fairness_of(outcomes));
+    ServeRow { name, streams, delta, threads: THREADS, summary: rec.summary(wall), fairness }
+}
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -33,6 +65,8 @@ fn main() {
         if smoke { (&[2], 8) } else { (&[1, 2, 4], usize::MAX) };
 
     let mut rows: Vec<ServeRow> = Vec::new();
+
+    // static sweep: streams × delta, equal weights (the legacy path)
     for &k in stream_counts {
         for delta in [false, true] {
             let sources: Vec<StreamSource> = (0..k)
@@ -48,14 +82,13 @@ fn main() {
                 .iter()
                 .enumerate()
                 .map(|(i, s)| {
-                    model.build_session(&SessionConfig {
-                        dims,
-                        seed: 42 + i as u64,
-                        total_nodes: s.stream.num_nodes as usize,
-                        max_nodes: manifest.max_nodes,
+                    model.build_session(&session_cfg(
+                        &s.stream,
+                        42 + i as u64,
+                        manifest.max_nodes,
                         delta,
-                        engine: Arc::clone(&engine),
-                    })
+                        &engine,
+                    ))
                 })
                 .collect();
             let sched = Scheduler::new(engine, (2 * k).clamp(2, 16));
@@ -64,22 +97,161 @@ fn main() {
                 .run(&manifest, &sources, sessions, limit, |_, _, _, _| Ok(()))
                 .expect("serve sweep point");
             let wall = t0.elapsed().as_secs_f64();
-
-            let mut rec = ServeRecorder::new(65536);
-            for o in &outcomes {
-                for st in &o.steps {
-                    rec.record_ms(st.e2e_ms);
-                }
-            }
-            let summary = rec.summary(wall);
             let name = format!(
                 "serve {} streams={k} delta={}",
                 model.name(),
                 if delta { "on" } else { "off" }
             );
-            println!("bench {name:<44} {}", summary.line());
-            rows.push(ServeRow { name, streams: k, delta, threads: THREADS, summary });
+            let row = row_from(name, k, delta, wall, &outcomes, false);
+            println!("bench {:<44} {}", row.name, row.summary.line());
+            rows.push(row);
         }
+    }
+
+    // weighted point: 3 tenants at 1:2:4 over a tight 2-slot pool —
+    // the fairness summary lands in the JSON
+    {
+        let streams: Vec<Arc<CooStream>> = (0..3)
+            .map(|i| Arc::new(synth::generate(&BC_ALPHA, 142 + i as u64)))
+            .collect();
+        let weights = [1u32, 2, 4];
+        let engine = Arc::new(Engine::new(THREADS));
+        let manifest = Scheduler::manifest_for_streams(
+            streams.iter().map(|s| (s.as_ref(), BC_ALPHA.splitter_secs)),
+            dims,
+        );
+        let tenants: Vec<TenantSpec> = streams
+            .iter()
+            .enumerate()
+            .map(|(i, stream)| {
+                let session = model.build_session(&session_cfg(
+                    stream,
+                    142 + i as u64,
+                    manifest.max_nodes,
+                    true,
+                    &engine,
+                ));
+                TenantSpec::new(
+                    &format!("w{}", weights[i]),
+                    Arc::clone(stream),
+                    BC_ALPHA.splitter_secs,
+                    weights[i],
+                    session,
+                )
+                .with_limit(limit)
+            })
+            .collect();
+        let sched = Scheduler::new(engine, 2);
+        // stop mid-saturation: if every tenant ran its stream dry the
+        // served counts would mirror the (equal) stream lengths and the
+        // jain index would measure nothing about the scheduler
+        let stop_at: u64 = if smoke { 10 } else { 140 };
+        let mut stopped = false;
+        let t0 = std::time::Instant::now();
+        let outcomes = sched
+            .serve(
+                &manifest,
+                tenants,
+                |ev| {
+                    if let ServeEvent::Step { served_total, .. } = ev {
+                        if !stopped && served_total >= stop_at {
+                            stopped = true;
+                            return vec![Command::Stop];
+                        }
+                    }
+                    Vec::new()
+                },
+                |_, _, _, _| Ok(()),
+            )
+            .expect("weighted sweep point");
+        let wall = t0.elapsed().as_secs_f64();
+        let row = row_from("serve weighted 1:2:4".into(), 3, true, wall, &outcomes, true);
+        let jain = row.fairness.as_ref().map(|f| f.jain).unwrap_or(1.0);
+        println!("bench {:<44} {} jain={jain:.3}", row.name, row.summary.line());
+        rows.push(row);
+    }
+
+    // churn point: start with 2 tenants, admit a third mid-run, then
+    // drain tenant 1 — exercises the admission/removal machinery at
+    // bench scale
+    {
+        let streams: Vec<Arc<CooStream>> = (0..3)
+            .map(|i| Arc::new(synth::generate(&BC_ALPHA, 242 + i as u64)))
+            .collect();
+        let engine = Arc::new(Engine::new(THREADS));
+        let manifest = Scheduler::manifest_for_streams(
+            streams.iter().map(|s| (s.as_ref(), BC_ALPHA.splitter_secs)),
+            dims,
+        );
+        let tenants: Vec<TenantSpec> = streams[..2]
+            .iter()
+            .enumerate()
+            .map(|(i, stream)| {
+                let session = model.build_session(&session_cfg(
+                    stream,
+                    242 + i as u64,
+                    manifest.max_nodes,
+                    true,
+                    &engine,
+                ));
+                TenantSpec::new(
+                    &format!("t{i}"),
+                    Arc::clone(stream),
+                    BC_ALPHA.splitter_secs,
+                    1,
+                    session,
+                )
+                .with_limit(limit)
+            })
+            .collect();
+        let sched = Scheduler::new(Arc::clone(&engine), 4);
+        let mut late = Some(Arc::clone(&streams[2]));
+        let mut removed = false;
+        let admit_at = if smoke { 4 } else { 40 };
+        let t0 = std::time::Instant::now();
+        let outcomes = sched
+            .serve(
+                &manifest,
+                tenants,
+                |ev| {
+                    let ServeEvent::Step { served_total, .. } = ev else {
+                        return Vec::new();
+                    };
+                    let mut cmds = Vec::new();
+                    if served_total >= admit_at {
+                        if let Some(stream) = late.take() {
+                            let session = model.build_session(&session_cfg(
+                                &stream,
+                                242 + 2,
+                                manifest.max_nodes,
+                                true,
+                                &engine,
+                            ));
+                            cmds.push(Command::Admit(
+                                TenantSpec::new(
+                                    "late",
+                                    stream,
+                                    BC_ALPHA.splitter_secs,
+                                    2,
+                                    session,
+                                )
+                                .with_limit(limit),
+                            ));
+                        }
+                    }
+                    if !removed && served_total >= 2 * admit_at {
+                        removed = true;
+                        cmds.push(Command::Remove(1));
+                    }
+                    cmds
+                },
+                |_, _, _, _| Ok(()),
+            )
+            .expect("churn sweep point");
+        let wall = t0.elapsed().as_secs_f64();
+        let row = row_from("serve churn admit+drain".into(), 3, true, wall, &outcomes, true);
+        println!("bench {:<44} {}", row.name, row.summary.line());
+        rows.push(row);
     }
 
     write_serve_json(

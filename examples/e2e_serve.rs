@@ -13,6 +13,10 @@
 //! With `--delta`, the PJRT session runs delta-aware `ResidentState`
 //! gathers and delta feature staging (paper §VI); the mirror stays on
 //! full gathers, so it validates the delta and parallel paths too.
+//! (This is the single-stream PJRT surface; the multi-tenant scheduler
+//! with weighted QoS and runtime admission lives behind
+//! `dgnn-booster serve --streams N --weights W1,W2,... [--churn]` and
+//! `examples/realtime_stream.rs`.)
 //!
 //! Requires `make artifacts`.  Usage:
 //! ```

@@ -1,60 +1,100 @@
-//! Real-time streaming demo: a delta-aware GCRN-M2 mirror session (no
-//! artifacts needed) served through the three-stage pipeline — the
-//! software analog of DGNN-Booster's "streamed in consecutively and
-//! processed on-the-fly".  All model wiring comes from the `serve`
-//! subsystem: `ModelKind::build_session` owns the recurrent state
-//! (delta-aware `ResidentState` gathers, paper §VI) and the session's
-//! stager materialises features into recycled slots on the stage
-//! thread.  For the multi-tenant version of this loop, see
-//! `dgnn-booster serve --streams N`.
+//! Real-time streaming demo with **weighted multi-tenant serving** (no
+//! artifacts needed): two delta-aware GCRN-M2 mirror tenants — the UCI
+//! dataset stream at weight 1 and a synthetic "premium" stream at
+//! weight 3 — share one sparse engine and one staging-slot pool, with
+//! slots granted weighted-fair; a third tenant is **admitted while the
+//! scheduler runs** (the paper's "streamed in consecutively and
+//! processed on-the-fly", lifted to a service that tenants join live).
+//! All model wiring comes from the `serve` subsystem:
+//! `ModelKind::build_session` owns the recurrent state (delta-aware
+//! `ResidentState` gathers, paper §VI) and each session's stager
+//! materialises features into recycled slots on its stage thread.  For
+//! the CLI version of this loop, see
+//! `dgnn-booster serve --streams N --weights W1,W2,... [--churn]`.
 //!
 //! ```
 //! cargo run --release --example realtime_stream
 //! ```
 
 use dgnn_booster::datasets::{self, UCI};
-use dgnn_booster::metrics::LatencyStats;
+use dgnn_booster::graph::CooStream;
 use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
-use dgnn_booster::serve::{run_session, Scheduler, SessionConfig, StreamSource};
+use dgnn_booster::serve::{fairness_of, Command, Scheduler, ServeEvent, SessionConfig, TenantSpec};
 use std::sync::Arc;
 
 fn main() -> dgnn_booster::Result<()> {
     let dims = Dims::default();
     let profile = &UCI;
-    let source = StreamSource {
-        name: profile.name.into(),
-        stream: datasets::load_or_generate(profile, "data", 42)?,
-        splitter_secs: profile.splitter_secs,
-    };
-    // pad to the stream's widest snapshot (the mirror needs no AOT shapes)
-    let manifest = Scheduler::manifest_for(std::slice::from_ref(&source), dims);
-    let stream = &source.stream;
-    let mut session = ModelKind::GcrnM2.build_session(&SessionConfig {
+    let uci = Arc::new(datasets::load_or_generate(profile, "data", 42)?);
+    let premium = Arc::new(datasets::synth::generate(profile, 43));
+    let late = Arc::new(datasets::synth::generate(profile, 44));
+
+    // the pool's padded shapes are fixed for the run, so the manifest
+    // must cover every stream — including the tenant admitted later
+    let manifest = Scheduler::manifest_for_streams(
+        [&uci, &premium, &late]
+            .into_iter()
+            .map(|s| (s.as_ref(), profile.splitter_secs)),
         dims,
-        seed: 42,
-        total_nodes: stream.num_nodes as usize,
-        max_nodes: manifest.max_nodes,
-        delta: true,
-        engine: Arc::new(Engine::serial()),
-    });
+    );
+    let engine = Arc::new(Engine::new(2));
+    let session = |stream: &CooStream, seed: u64| {
+        ModelKind::GcrnM2.build_session(&SessionConfig {
+            dims,
+            seed,
+            total_nodes: stream.num_nodes as usize,
+            max_nodes: manifest.max_nodes,
+            delta: true,
+            engine: Arc::clone(&engine),
+        })
+    };
+    let tenants = vec![
+        TenantSpec::new("uci", Arc::clone(&uci), profile.splitter_secs, 1, session(&uci, 42)),
+        TenantSpec::new(
+            "premium",
+            Arc::clone(&premium),
+            profile.splitter_secs,
+            3,
+            session(&premium, 43),
+        ),
+    ];
 
     println!(
-        "streaming {} ({} edges) through preprocess ∥ stage ∥ GCRN-M2 session...",
+        "streaming {} ({} edges, weight 1) ∥ premium synth ({} edges, weight 3) \
+         through the weighted scheduler; a third tenant joins at step 10...",
         profile.name,
-        stream.edges.len()
+        uci.edges.len(),
+        premium.edges.len()
     );
     let mut act_sum = 0.0f64;
     let mut act_n = 0usize;
+    let mut late_stream = Some(Arc::clone(&late));
+    let scheduler = Scheduler::new(Arc::clone(&engine), 4);
     let t0 = std::time::Instant::now();
-    let (results, state_delta, feature_delta) = run_session(
-        session.as_mut(),
-        stream,
-        profile.splitter_secs,
+    let outcomes = scheduler.serve(
         &manifest,
-        8, // staging slots in flight: bounded DRAM prefetch
-        usize::MAX,
-        |_snap, _slot, out| {
+        tenants,
+        |ev| {
+            let ServeEvent::Step { served_total, .. } = ev else {
+                return Vec::new();
+            };
+            if served_total >= 10 {
+                if let Some(stream) = late_stream.take() {
+                    println!("  [admission] tenant `late` joins (weight 2)");
+                    let sess = session(&stream, 44);
+                    return vec![Command::Admit(TenantSpec::new(
+                        "late",
+                        stream,
+                        profile.splitter_secs,
+                        2,
+                        sess,
+                    ))];
+                }
+            }
+            Vec::new()
+        },
+        |_tenant, _snap, _slot, out| {
             act_sum += out.iter().map(|v| v.abs() as f64).sum::<f64>();
             act_n += out.len();
             Ok(())
@@ -62,31 +102,34 @@ fn main() -> dgnn_booster::Result<()> {
     )?;
     let wall = t0.elapsed().as_secs_f64();
 
-    let mut stats = LatencyStats::new();
-    for r in &results {
-        stats.record(r.wall);
+    let total: usize = outcomes.iter().map(|o| o.steps.len()).sum();
+    println!("served {total} snapshots across {} tenants in {wall:.2} s wall", outcomes.len());
+    let fair = fairness_of(&outcomes);
+    for t in &fair.tenants {
+        println!(
+            "  {}: {} requests (weight {}), p50 {:.3} ms, p99 {:.3} ms, share {:.1}%",
+            t.name,
+            t.requests,
+            t.weight,
+            t.p50_ms,
+            t.p99_ms,
+            100.0 * t.share
+        );
     }
-    println!("processed {} snapshots in {:.2} s wall", results.len(), wall);
-    println!("inference stage: {}", stats.summary());
+    println!("fairness (jain over served/weight): {:.3}", fair.jain);
+    for o in &outcomes {
+        if let (Some(sd), Some(fd)) = (o.state_delta, o.feature_delta) {
+            println!(
+                "  {}: {:.1}% state rows stayed on-chip, {:.1}% X rows reused in place",
+                o.name,
+                100.0 * sd.fraction(),
+                100.0 * fd.fraction()
+            );
+        }
+    }
     println!(
-        "mean |H| activation across stream: {:.4}",
+        "mean |H| activation across all tenants: {:.4}",
         act_sum / act_n.max(1) as f64
-    );
-    if let Some(d) = state_delta {
-        println!(
-            "delta gathers: {:.1}% of state rows stayed on-chip",
-            100.0 * d.fraction()
-        );
-    }
-    if let Some(d) = feature_delta {
-        println!(
-            "delta feature staging: {:.1}% of X rows reused in place",
-            100.0 * d.fraction()
-        );
-    }
-    println!(
-        "pipeline efficiency: inference busy {:.0}% of wall clock",
-        stats.mean() * results.len() as f64 / (wall * 1e3) * 100.0
     );
     Ok(())
 }

@@ -29,6 +29,13 @@
 //!                              (`serve`; default 2×streams, clamped 2..16)
 //!   --delta                    boolean: delta-aware state gathers +
 //!                              feature staging (paper §VI)
+//!   --weights W1,W2,...        per-tenant QoS weights for `serve`
+//!                              (staging slots granted weighted-fair;
+//!                              repeated-last-padded to --streams;
+//!                              0 = background; default: all 1)
+//!   --churn                    boolean: `serve` exercises runtime
+//!                              tenant churn (admits one extra tenant
+//!                              mid-run, then drains tenant 1)
 //!   --nodes N / --degree N / --dim N / --iters N
 //!                              synthetic graph shape for `kernels`
 //! ```
@@ -37,7 +44,7 @@ use crate::error::{Error, Result};
 use std::collections::HashMap;
 
 /// Flags that take no value: presence means `true`.
-const BOOL_FLAGS: [&str; 1] = ["delta"];
+const BOOL_FLAGS: [&str; 2] = ["delta", "churn"];
 
 /// Parsed command line.
 #[derive(Clone, Debug)]
@@ -106,6 +113,30 @@ impl Cli {
     /// default 1 = serial; 0 is clamped to 1).
     pub fn threads(&self) -> Result<usize> {
         Ok(self.get_usize("threads", 1)?.max(1))
+    }
+
+    /// Per-tenant QoS weights (`--weights 1,2,4`), normalised to exactly
+    /// `n` entries: shorter lists are padded by repeating the last
+    /// weight, longer lists are truncated.  Absent ⇒ all tenants weigh 1
+    /// (the FIFO-equivalent schedule); 0 marks background traffic.
+    pub fn weights(&self, n: usize) -> Result<Vec<u32>> {
+        let Some(spec) = self.get("weights") else {
+            return Ok(vec![1; n]);
+        };
+        let mut ws = Vec::new();
+        for tok in spec.split(',') {
+            let w: u32 = tok
+                .trim()
+                .parse()
+                .map_err(|e| Error::Usage(format!("--weights {spec}: `{tok}`: {e}")))?;
+            ws.push(w);
+        }
+        while ws.len() < n {
+            let last = *ws.last().expect("split yields at least one token");
+            ws.push(last);
+        }
+        ws.truncate(n);
+        Ok(ws)
     }
 
     pub fn model(&self) -> Result<crate::models::ModelKind> {
@@ -177,6 +208,24 @@ mod tests {
         // absent flag is false
         let c = Cli::parse(&s(&["serve"])).unwrap();
         assert!(!c.flag("delta"));
+    }
+
+    #[test]
+    fn weights_parse_pad_truncate_and_default() {
+        // the acceptance invocation: serve --streams 4 --weights 1,2,4 --churn
+        let c = Cli::parse(&s(&["serve", "--streams", "4", "--weights", "1,2,4", "--churn"])).unwrap();
+        assert!(c.flag("churn"));
+        assert_eq!(c.weights(4).unwrap(), vec![1, 2, 4, 4]); // last repeats
+        assert_eq!(c.weights(2).unwrap(), vec![1, 2]); // truncates
+        let c = Cli::parse(&s(&["serve", "--weights", " 0 , 3 "])).unwrap();
+        assert_eq!(c.weights(3).unwrap(), vec![0, 3, 3]); // whitespace + zero ok
+        let c = Cli::parse(&s(&["serve"])).unwrap();
+        assert_eq!(c.weights(3).unwrap(), vec![1, 1, 1]); // absent ⇒ equal
+        assert!(!c.flag("churn"));
+        let c = Cli::parse(&s(&["serve", "--weights", "1,x"])).unwrap();
+        assert!(matches!(c.weights(2), Err(Error::Usage(_))));
+        let c = Cli::parse(&s(&["serve", "--weights", ""])).unwrap();
+        assert!(c.weights(1).is_err()); // empty list is a usage error
     }
 
     #[test]

@@ -6,12 +6,14 @@ use dgnn_booster::datasets;
 use dgnn_booster::error::{Error, Result};
 use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
 use dgnn_booster::fpga::dse;
-use dgnn_booster::graph::SnapshotCsr;
+use dgnn_booster::graph::{CooStream, SnapshotCsr};
 use dgnn_booster::metrics::bench_loop;
 use dgnn_booster::models::Dims;
 use dgnn_booster::numerics::{self, Engine, Mat};
 use dgnn_booster::report::tables::{self, ReportCtx};
-use dgnn_booster::serve::{DgnnSession, Scheduler, ServeRecorder, SessionConfig, StreamSource};
+use dgnn_booster::serve::{
+    fairness_of, Command, Scheduler, ServeEvent, ServeRecorder, SessionConfig, TenantSpec,
+};
 use dgnn_booster::testutil::Pcg32;
 use std::sync::Arc;
 
@@ -149,68 +151,117 @@ fn cmd_dse(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
 }
 
 /// Multi-stream serving over mirror sessions (no AOT artifacts needed):
-/// N independent tenant snapshot streams multiplexed by
-/// `serve::Scheduler` over one shared sparse engine and one recycled
-/// staging-slot pool.  Reports per-stream stats plus aggregate
-/// p50/p95/p99 latency and throughput, alongside the FPGA-projected
-/// per-snapshot latency.  (The PJRT-backed single-stream path lives in
-/// `examples/e2e_serve.rs`, which also cross-checks against the same
-/// mirror sessions.)
+/// N tenant snapshot streams multiplexed by `serve::Scheduler` over one
+/// shared sparse engine and one recycled staging-slot pool, with
+/// per-tenant QoS weights (`--weights`, staging slots granted
+/// weighted-fair) and optional runtime churn (`--churn` admits an extra
+/// tenant mid-run, then drains tenant 1).  Reports per-tenant stats, a
+/// cross-tenant fairness summary, aggregate p50/p95/p99 latency and
+/// throughput, and the FPGA-projected per-snapshot latency.  (The
+/// PJRT-backed single-stream path lives in `examples/e2e_serve.rs`,
+/// which also cross-checks against the same mirror sessions.)
 fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     let model = cli.model()?;
     let profile = cli.dataset()?;
     let streams = cli.get_usize("streams", 1)?.max(1);
     let threads = cli.threads()?;
     let delta = cli.flag("delta");
+    let churn = cli.flag("churn");
     let limit = cli.get_usize("snapshots", usize::MAX)?;
     let slots = cli.get_usize("slots", (2 * streams).clamp(2, 16))?.max(1);
+    let weights = cli.weights(streams)?;
     let dims = Dims::default();
 
     // tenant 0 serves the real dataset when present under --data;
     // additional tenants get independent synthetic streams
-    let mut sources = Vec::with_capacity(streams);
+    let mut tenant_streams: Vec<Arc<CooStream>> = Vec::with_capacity(streams);
     for i in 0..streams {
         let stream = if i == 0 {
             datasets::load_or_generate(profile, &cli.get_or("data", "data"), ctx.seed)?
         } else {
             datasets::synth::generate(profile, ctx.seed.wrapping_add(i as u64))
         };
-        sources.push(StreamSource {
-            name: format!("stream-{i}"),
-            stream,
-            splitter_secs: profile.splitter_secs,
-        });
+        tenant_streams.push(Arc::new(stream));
     }
+    // the churn tenant's stream is sized into the manifest upfront: the
+    // shared pool's padded shapes are fixed for the whole run
+    let mut churn_stream =
+        churn.then(|| Arc::new(datasets::synth::generate(profile, ctx.seed ^ 0x00C0_FFEE)));
     let engine = Arc::new(Engine::new(threads));
-    let manifest = Scheduler::manifest_for(&sources, dims);
-    let sessions: Vec<Box<dyn DgnnSession>> = sources
+    let manifest = Scheduler::manifest_for_streams(
+        tenant_streams
+            .iter()
+            .chain(churn_stream.iter())
+            .map(|s| (s.as_ref(), profile.splitter_secs)),
+        dims,
+    );
+    let session_cfg = |stream: &CooStream, seed: u64| SessionConfig {
+        dims,
+        seed,
+        total_nodes: stream.num_nodes as usize,
+        max_nodes: manifest.max_nodes,
+        delta,
+        engine: Arc::clone(&engine),
+    };
+    let tenants: Vec<TenantSpec> = tenant_streams
         .iter()
         .enumerate()
-        .map(|(i, src)| {
-            model.build_session(&SessionConfig {
-                dims,
-                seed: ctx.seed.wrapping_add(i as u64),
-                total_nodes: src.stream.num_nodes as usize,
-                max_nodes: manifest.max_nodes,
-                delta,
-                engine: Arc::clone(&engine),
-            })
+        .map(|(i, stream)| {
+            let session =
+                model.build_session(&session_cfg(stream, ctx.seed.wrapping_add(i as u64)));
+            TenantSpec::new(
+                &format!("stream-{i}"),
+                Arc::clone(stream),
+                profile.splitter_secs,
+                weights[i],
+                session,
+            )
+            .with_limit(limit)
         })
         .collect();
 
     println!(
-        "serving {} × {streams} stream(s) on {} — engine ×{threads}, {slots} staging slots{}",
+        "serving {} × {streams} stream(s) on {} — engine ×{threads}, {slots} staging slots, \
+         weights {weights:?}{}{}",
         model.name(),
         profile.name,
-        if delta { ", §VI delta state + feature staging" } else { "" }
+        if delta { ", §VI delta state + feature staging" } else { "" },
+        if churn { ", churn script on" } else { "" }
     );
     let scheduler = Scheduler::new(Arc::clone(&engine), slots);
     let t0 = std::time::Instant::now();
     let mut checksum = 0.0f64;
-    let outcomes = scheduler.run(&manifest, &sources, sessions, limit, |_sid, _snap, _slot, out| {
-        checksum += out.iter().map(|v| *v as f64).sum::<f64>();
-        Ok(())
-    })?;
+    let mut drained_one = false;
+    let outcomes = scheduler.serve(
+        &manifest,
+        tenants,
+        |ev| {
+            let ServeEvent::Step { served_total, .. } = ev else {
+                return Vec::new();
+            };
+            let mut cmds = Vec::new();
+            if served_total >= 6 {
+                if let Some(stream) = churn_stream.take() {
+                    println!("  [churn] admitting tenant churn-0 (weight 2) at step {served_total}");
+                    let session = model.build_session(&session_cfg(&stream, ctx.seed ^ 0x00C0_FFEE));
+                    cmds.push(Command::Admit(
+                        TenantSpec::new("churn-0", stream, profile.splitter_secs, 2, session)
+                            .with_limit(limit),
+                    ));
+                }
+            }
+            if churn && !drained_one && streams > 1 && served_total >= 12 {
+                drained_one = true;
+                println!("  [churn] draining tenant 1 at step {served_total}");
+                cmds.push(Command::Remove(1));
+            }
+            cmds
+        },
+        |_sid, _snap, _slot, out| {
+            checksum += out.iter().map(|v| *v as f64).sum::<f64>();
+            Ok(())
+        },
+    )?;
     let wall = t0.elapsed().as_secs_f64();
 
     let mut rec = ServeRecorder::new(65536);
@@ -221,8 +272,10 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
             infer_ms += st.infer_ms;
         }
         let mut line = format!(
-            "  {}: {} requests, mean infer {:.3} ms",
+            "  {} (weight {}{}): {} requests, mean infer {:.3} ms",
             o.name,
+            o.weight,
+            if o.removed { ", drained early" } else { "" },
             o.steps.len(),
             infer_ms / o.steps.len().max(1) as f64
         );
@@ -235,6 +288,18 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
         println!("{line}");
     }
     println!("aggregate: {}", rec.summary(wall).line());
+    if outcomes.len() > 1 {
+        let fair = fairness_of(&outcomes);
+        println!("fairness: jain={:.3} over weight-normalised throughput", fair.jain);
+        for t in &fair.tenants {
+            println!(
+                "  {}: served share {:.1}% vs weighted fair share {:.1}%",
+                t.name,
+                100.0 * t.share,
+                100.0 * t.fair_share
+            );
+        }
+    }
     println!("output checksum: {checksum:.4}");
     let snaps = tables::snapshots(ctx, profile)?;
     let fpga_ms = avg_latency_ms(&AcceleratorConfig::paper_default(model), &snaps);

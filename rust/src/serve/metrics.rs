@@ -156,7 +156,96 @@ impl ServeRecorder {
     }
 }
 
-/// One row of `BENCH_serve.json`: a (streams × delta) sweep point.
+/// Per-tenant slice of one serving run: latency tails plus how the
+/// tenant's served share compares to its weighted fair share.
+#[derive(Clone, Debug)]
+pub struct TenantSummary {
+    pub name: String,
+    pub weight: u32,
+    pub requests: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Fraction of all served requests that went to this tenant.
+    pub share: f64,
+    /// `weight / Σ weights` — the target share under saturation.
+    pub fair_share: f64,
+}
+
+/// Cross-tenant fairness of one serving run.
+#[derive(Clone, Debug, Default)]
+pub struct FairnessSummary {
+    pub tenants: Vec<TenantSummary>,
+    /// Jain's fairness index over weight-normalized throughput
+    /// `requests_i / weight_i` (positive-weight tenants only): 1.0 when
+    /// every tenant got exactly its weighted share, approaching `1/n`
+    /// as one tenant monopolizes the run.
+    pub jain: f64,
+}
+
+/// Summarize per-tenant serving records into a [`FairnessSummary`].
+/// `tenants` holds `(name, weight, per-request e2e latencies in ms)`.
+pub fn fairness_summary(tenants: &[(&str, u32, &[f64])]) -> FairnessSummary {
+    let total_req: u64 = tenants.iter().map(|(_, _, l)| l.len() as u64).sum();
+    let total_w: u64 = tenants.iter().map(|(_, w, _)| *w as u64).sum();
+    let rows: Vec<TenantSummary> = tenants
+        .iter()
+        .map(|(name, weight, lat)| {
+            let mut sorted: Vec<f64> = lat.to_vec();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let requests = lat.len() as u64;
+            let mean = if sorted.is_empty() {
+                0.0
+            } else {
+                sorted.iter().sum::<f64>() / sorted.len() as f64
+            };
+            TenantSummary {
+                name: name.to_string(),
+                weight: *weight,
+                requests,
+                mean_ms: mean,
+                p50_ms: rank(&sorted, 50.0),
+                p95_ms: rank(&sorted, 95.0),
+                p99_ms: rank(&sorted, 99.0),
+                share: if total_req > 0 { requests as f64 / total_req as f64 } else { 0.0 },
+                fair_share: if total_w > 0 { *weight as f64 / total_w as f64 } else { 0.0 },
+            }
+        })
+        .collect();
+    // Jain over weight-normalized throughput; background (weight-0)
+    // tenants are outside the weighted contract, so they don't count
+    let xs: Vec<f64> = rows
+        .iter()
+        .filter(|t| t.weight > 0)
+        .map(|t| t.requests as f64 / t.weight as f64)
+        .collect();
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    let jain = if xs.is_empty() || sq == 0.0 {
+        1.0
+    } else {
+        (sum * sum) / (xs.len() as f64 * sq)
+    };
+    FairnessSummary { tenants: rows, jain }
+}
+
+/// [`fairness_summary`] over scheduler outcomes — the shape every
+/// serving surface (CLI, bench, examples) already holds.
+pub fn fairness_of(outcomes: &[super::scheduler::StreamOutcome]) -> FairnessSummary {
+    let entries: Vec<(String, u32, Vec<f64>)> = outcomes
+        .iter()
+        .map(|o| (o.name.clone(), o.weight, o.steps.iter().map(|s| s.e2e_ms).collect()))
+        .collect();
+    let refs: Vec<(&str, u32, &[f64])> = entries
+        .iter()
+        .map(|(n, w, l)| (n.as_str(), *w, l.as_slice()))
+        .collect();
+    fairness_summary(&refs)
+}
+
+/// One row of `BENCH_serve.json`: a (streams × delta) sweep point,
+/// optionally with per-tenant fairness (weighted / churn points).
 #[derive(Clone, Debug)]
 pub struct ServeRow {
     pub name: String,
@@ -164,10 +253,12 @@ pub struct ServeRow {
     pub delta: bool,
     pub threads: usize,
     pub summary: ServeSummary,
+    pub fairness: Option<FairnessSummary>,
 }
 
 /// Serialise sweep rows plus scalar metadata as JSON (schema documented
-/// in README.md § serve).
+/// in README.md § serve).  Rows carrying a [`FairnessSummary`] gain a
+/// `"jain"` scalar and a `"tenants"` array.
 pub fn serve_json(rows: &[ServeRow], extra: &[(&str, f64)]) -> String {
     let mut s = String::from("{\n  \"benches\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -175,7 +266,7 @@ pub fn serve_json(rows: &[ServeRow], extra: &[(&str, f64)]) -> String {
         s.push_str(&format!(
             "    {{\"name\": {:?}, \"streams\": {}, \"delta\": {}, \"threads\": {}, \
              \"requests\": {}, \"p50_ms\": {:e}, \"p95_ms\": {:e}, \"p99_ms\": {:e}, \
-             \"mean_ms\": {:e}, \"throughput_per_s\": {:e}, \"wall_s\": {:e}}}{}\n",
+             \"mean_ms\": {:e}, \"throughput_per_s\": {:e}, \"wall_s\": {:e}",
             r.name,
             r.streams,
             if r.delta { 1 } else { 0 },
@@ -187,8 +278,29 @@ pub fn serve_json(rows: &[ServeRow], extra: &[(&str, f64)]) -> String {
             m.mean_ms,
             m.throughput_per_s,
             m.wall_s,
-            if i + 1 < rows.len() { "," } else { "" }
         ));
+        if let Some(f) = &r.fairness {
+            s.push_str(&format!(",\n     \"jain\": {:e},\n     \"tenants\": [", f.jain));
+            for (j, t) in f.tenants.iter().enumerate() {
+                s.push_str(&format!(
+                    "\n       {{\"name\": {:?}, \"weight\": {}, \"requests\": {}, \
+                     \"p50_ms\": {:e}, \"p95_ms\": {:e}, \"p99_ms\": {:e}, \"mean_ms\": {:e}, \
+                     \"share\": {:e}, \"fair_share\": {:e}}}{}",
+                    t.name,
+                    t.weight,
+                    t.requests,
+                    t.p50_ms,
+                    t.p95_ms,
+                    t.p99_ms,
+                    t.mean_ms,
+                    t.share,
+                    t.fair_share,
+                    if j + 1 < f.tenants.len() { "," } else { "" }
+                ));
+            }
+            s.push(']');
+        }
+        s.push_str(&format!("}}{}\n", if i + 1 < rows.len() { "," } else { "" }));
     }
     s.push_str("  ]");
     for (k, v) in extra {
@@ -260,6 +372,7 @@ mod tests {
                 delta: true,
                 threads: 2,
                 summary: rec.summary(1.0),
+                fairness: None,
             },
             ServeRow {
                 name: "serve streams=4 delta=off".into(),
@@ -267,6 +380,10 @@ mod tests {
                 delta: false,
                 threads: 2,
                 summary: rec.summary(1.0),
+                fairness: Some(fairness_summary(&[
+                    ("t0", 1, &[1.0, 2.0]),
+                    ("t1", 3, &[1.0, 1.5, 2.0, 2.5, 3.0, 3.5]),
+                ])),
             },
         ];
         let json = serve_json(&rows, &[("smoke", 1.0)]);
@@ -276,5 +393,103 @@ mod tests {
         assert!(json.contains("\"p99_ms\""));
         assert!(json.contains("\"throughput_per_s\""));
         assert!(json.contains("\"smoke\": 1e0"));
+        // fairness fields only on the row that carries a summary
+        assert_eq!(json.matches("\"jain\"").count(), 1);
+        assert_eq!(json.matches("\"fair_share\"").count(), 2);
+        assert!(json.contains("\"weight\": 3"));
+    }
+
+    /// Nearest-rank reference computed the naive way: sort everything,
+    /// index directly.
+    fn naive_percentile(window: &[f64], p: f64) -> f64 {
+        if window.is_empty() {
+            return 0.0;
+        }
+        let mut s = window.to_vec();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let r = ((p / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[r.min(s.len() - 1)]
+    }
+
+    #[test]
+    fn ring_percentiles_match_naive_sort_reference() {
+        // a deterministic but scrambled sequence, longer than the ring
+        let cap = 64;
+        let mut ring = LatencyRing::new(cap);
+        let mut window: Vec<f64> = Vec::new();
+        let mut x = 7u64;
+        for _ in 0..500 {
+            // xorshift — cheap scrambled values incl. repeats
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = (x % 1000) as f64 / 10.0;
+            ring.push(v);
+            window.push(v);
+            if window.len() > cap {
+                window.remove(0); // the ring retains the most recent cap
+            }
+            for p in [0.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0] {
+                assert_eq!(
+                    ring.percentile(p),
+                    naive_percentile(&window, p),
+                    "p{p} diverged at n={}",
+                    ring.total()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ring_wraparound_overwrites_oldest_in_push_order() {
+        let mut r = LatencyRing::new(3);
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            r.push(v);
+        }
+        // retained window is exactly {3, 4, 5}
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.total(), 5);
+        assert_eq!(r.percentile(0.0), 3.0);
+        assert_eq!(r.p50(), 4.0);
+        assert_eq!(r.percentile(100.0), 5.0);
+        assert_eq!(r.mean(), 4.0);
+        // a single further push evicts exactly the oldest (3)
+        r.push(0.5);
+        assert_eq!(r.percentile(0.0), 0.5);
+        assert_eq!(r.percentile(100.0), 5.0);
+    }
+
+    #[test]
+    fn fairness_summary_fields_and_jain() {
+        // perfectly weighted: requests proportional to weights
+        let f = fairness_summary(&[
+            ("a", 1, &[1.0, 1.0]),
+            ("b", 2, &[1.0, 1.0, 1.0, 1.0]),
+            ("c", 4, &[1.0; 8]),
+        ]);
+        assert_eq!(f.tenants.len(), 3);
+        assert!((f.jain - 1.0).abs() < 1e-12, "jain {}", f.jain);
+        assert!((f.tenants[0].share - 2.0 / 14.0).abs() < 1e-12);
+        assert!((f.tenants[0].fair_share - 1.0 / 7.0).abs() < 1e-12);
+        assert!((f.tenants[2].share - 8.0 / 14.0).abs() < 1e-12);
+        assert!((f.tenants[2].fair_share - 4.0 / 7.0).abs() < 1e-12);
+        assert_eq!(f.tenants[1].requests, 4);
+        assert_eq!(f.tenants[1].p50_ms, 1.0);
+
+        // one tenant monopolizes: jain collapses toward 1/n
+        let skew = fairness_summary(&[("a", 1, &[1.0; 20]), ("b", 1, &[])]);
+        assert!(skew.jain < 0.55, "jain {}", skew.jain);
+        assert_eq!(skew.tenants[1].requests, 0);
+        assert_eq!(skew.tenants[1].p99_ms, 0.0);
+
+        // zero-weight tenants are excluded from the jain contract
+        let bg = fairness_summary(&[("a", 1, &[1.0; 4]), ("bg", 0, &[1.0])]);
+        assert!((bg.jain - 1.0).abs() < 1e-12);
+        assert!((bg.tenants[1].fair_share - 0.0).abs() < 1e-12);
+
+        // empty input is safe
+        let empty = fairness_summary(&[]);
+        assert!(empty.tenants.is_empty());
+        assert_eq!(empty.jain, 1.0);
     }
 }

@@ -8,14 +8,19 @@
 //!   (prepare / stage-half / infer hooks + delta-aware state) with
 //!   mirror and PJRT implementations for EvolveGCN, GCRN-M1 and
 //!   GCRN-M2; built through `ModelKind::build_session` /
-//!   [`build_pjrt_session`].
-//! * [`scheduler`] — [`Scheduler`] multiplexes N tenant streams over one
-//!   `numerics::spmm::Engine` and one recycled `StagingSlot` pool with
-//!   per-stream FIFO ordering and bounded in-flight backpressure;
-//!   [`run_session`] is the single-stream special case on
+//!   [`build_pjrt_session`], and bundled per tenant into a
+//!   [`TenantSpec`] for (runtime) admission.
+//! * [`scheduler`] — [`Scheduler`] multiplexes a **dynamic** tenant set
+//!   over one `numerics::spmm::Engine` and one recycled `StagingSlot`
+//!   pool: tenants can be admitted, drained/removed and reweighted
+//!   while the scheduler runs ([`Command`] / [`ServeEvent`]), staging
+//!   slots are granted by weighted fair queueing ([`wfq_pick`]), and
+//!   per-stream FIFO ordering plus bounded in-flight backpressure hold
+//!   throughout; [`run_session`] is the single-stream special case on
 //!   `coordinator::pipeline::run_stream_staged`.
 //! * [`metrics`] — per-request latency ring buffer → p50/p95/p99 +
-//!   throughput, and the `BENCH_serve.json` emitter.
+//!   throughput, per-tenant fairness accounting ([`fairness_summary`],
+//!   weighted Jain index), and the `BENCH_serve.json` emitter.
 //!
 //! The design follows the dynamic-graph-service shape (Alibaba DGS, see
 //! PAPERS.md): dynamic-graph inference behind a service layer that
@@ -25,9 +30,15 @@ pub mod metrics;
 pub mod scheduler;
 pub mod session;
 
-pub use metrics::{serve_json, write_serve_json, LatencyRing, ServeRecorder, ServeRow, ServeSummary};
-pub use scheduler::{run_session, Scheduler, StepRecord, StreamOutcome, StreamSource};
+pub use metrics::{
+    fairness_of, fairness_summary, serve_json, write_serve_json, FairnessSummary, LatencyRing,
+    ServeRecorder, ServeRow, ServeSummary, TenantSummary,
+};
+pub use scheduler::{
+    run_session, wfq_pick, Command, Scheduler, ServeEvent, StepRecord, StreamOutcome,
+    StreamSource, TenantId,
+};
 pub use session::{
     build_pjrt_session, DeltaCounts, DgnnSession, MirrorSession, PjrtSession, RecurrentState,
-    SessionConfig, SessionStager, StreamStager,
+    SessionConfig, SessionStager, StreamStager, TenantSpec,
 };

@@ -20,7 +20,7 @@
 
 use crate::coordinator::{NodeStateStore, ResidentState};
 use crate::error::{Error, Result};
-use crate::graph::Snapshot;
+use crate::graph::{CooStream, Snapshot};
 use crate::models::{node_features_into, Dims, ModelKind, ModelParams};
 use crate::numerics::{self, Engine, Mat};
 use crate::runtime::{
@@ -63,6 +63,53 @@ pub struct SessionConfig {
     pub delta: bool,
     /// Shared sparse compute engine (one per process; sessions share it).
     pub engine: Arc<Engine>,
+}
+
+/// Everything the scheduler needs to attach one tenant — at start or at
+/// runtime through `Command::Admit`: the tenant's stream (shared so the
+/// admitting side can keep a handle), its time splitter, a QoS weight
+/// for the weighted-fair staging-slot allocation, a per-tenant snapshot
+/// limit, and the session that owns its evolving model state.
+///
+/// The stream must fit the run's padded `Manifest` — the shared slot
+/// pool's shapes are fixed for the whole run, so size the manifest
+/// over every stream the run may ever hold
+/// (`Scheduler::manifest_for_streams`); an oversized snapshot fails
+/// its stage call with a `Budget` error.
+pub struct TenantSpec {
+    pub name: String,
+    pub stream: Arc<CooStream>,
+    pub splitter_secs: i64,
+    /// QoS weight: slots are granted proportionally under saturation;
+    /// 0 marks background traffic (served only when nobody else waits).
+    pub weight: u32,
+    /// Serve at most this many snapshots (`usize::MAX` = whole stream).
+    pub limit: usize,
+    pub session: Box<dyn DgnnSession>,
+}
+
+impl TenantSpec {
+    pub fn new(
+        name: &str,
+        stream: Arc<CooStream>,
+        splitter_secs: i64,
+        weight: u32,
+        session: Box<dyn DgnnSession>,
+    ) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            stream,
+            splitter_secs,
+            weight,
+            limit: usize::MAX,
+            session,
+        }
+    }
+
+    pub fn with_limit(mut self, limit: usize) -> TenantSpec {
+        self.limit = limit;
+        self
+    }
 }
 
 /// The stage-side half of a session: runs on a pipeline producer thread,

@@ -1,0 +1,275 @@
+//! Scheduler chaos suite: seeded random admit / remove / reweight /
+//! stop sequences over tenants with random weights (including zero),
+//! random stream lengths (including empty) and tight staging pools must
+//! never deadlock the scheduler, never leak a `StagingSlot` (the
+//! scheduler verifies the pool is whole before returning — an `Ok` here
+//! *is* the leak check), and never corrupt anyone's numerics: every
+//! tenant's served outputs are a bitwise **prefix** of its standalone
+//! single-stream run, in FIFO order, and tenants that were not cut
+//! short serve exactly their expected snapshot count.  Run at 1/2/4
+//! engine threads with delta-aware staging on and off.
+
+use dgnn_booster::graph::{CooEdge, CooStream};
+use dgnn_booster::models::{Dims, ModelKind};
+use dgnn_booster::numerics::Engine;
+use dgnn_booster::serve::{
+    run_session, Command, Scheduler, ServeEvent, SessionConfig, TenantSpec,
+};
+use dgnn_booster::testutil::{forall, Config, Pcg32};
+use std::sync::Arc;
+
+const SPLITTER: i64 = 100;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+type Outs = Vec<(usize, Vec<u32>)>;
+
+/// A small deterministic tenant stream: `snaps` windows on the splitter
+/// grid, each with a random handful of edges over a small node universe
+/// (adjacent snapshots overlap, so the delta paths have work to do).
+/// `snaps == 0` yields the empty stream.
+fn tenant_stream(seed: u64, universe: usize, snaps: usize, max_epe: usize) -> CooStream {
+    if snaps == 0 {
+        return CooStream::default();
+    }
+    let mut rng = Pcg32::seeded(seed);
+    let mut edges = Vec::new();
+    for s in 0..snaps {
+        let base = s as i64 * SPLITTER;
+        let count = 1 + rng.below(max_epe);
+        for j in 0..count {
+            let t = if j == 0 { base } else { base + 1 + rng.below(SPLITTER as usize - 2) as i64 };
+            edges.push(CooEdge {
+                src: rng.below(universe) as u32,
+                dst: rng.below(universe) as u32,
+                weight: 1.0 + (rng.below(5) as f32),
+                time: t,
+            });
+        }
+    }
+    CooStream::from_edges("tenant", edges).unwrap()
+}
+
+/// One tenant's full identity for a chaos case.
+struct Spec {
+    stream: Arc<CooStream>,
+    weight: u32,
+    limit: usize,
+}
+
+#[derive(Clone, Copy)]
+enum Op {
+    Admit,
+    Remove(usize),
+    SetWeight(usize, u32),
+    Stop,
+}
+
+fn seed_of(tenant: usize) -> u64 {
+    50 + tenant as u64
+}
+
+fn chaos_case(rng: &mut Pcg32, size: usize, threads: usize) {
+    let model = ModelKind::GcrnM2;
+    let dims = Dims::default();
+    let delta = rng.below(2) == 1;
+    let universe = 4 + size.min(24);
+    let weights = [0u32, 1, 1, 2, 4];
+
+    // every tenant the case will ever hold, initial and admitted alike
+    let k0 = 1 + rng.below(2);
+    let n_admit = rng.below(3);
+    let mut specs: Vec<Spec> = Vec::new();
+    for i in 0..k0 + n_admit {
+        // windows 0..=4 (0 = empty stream); occasional per-tenant limit
+        let snaps = rng.below(5);
+        let limit = if rng.below(4) == 0 { 1 + rng.below(3) } else { usize::MAX };
+        specs.push(Spec {
+            stream: Arc::new(tenant_stream(9000 + i as u64, universe, snaps, 6)),
+            weight: weights[rng.below(weights.len())],
+            limit,
+        });
+    }
+
+    // the op script: one Admit per late tenant, plus random removals,
+    // reweights and the occasional full Stop, all on a served-step grid
+    let mut ops: Vec<(u64, Op)> = Vec::new();
+    for _ in k0..specs.len() {
+        ops.push((rng.below(10) as u64, Op::Admit));
+    }
+    for id in 0..specs.len() {
+        if rng.below(10) < 4 {
+            ops.push((rng.below(14) as u64, Op::Remove(id)));
+        }
+        if rng.below(10) < 3 {
+            ops.push((rng.below(14) as u64, Op::SetWeight(id, weights[rng.below(weights.len())])));
+        }
+    }
+    if rng.below(10) < 2 {
+        ops.push((rng.below(16) as u64, Op::Stop));
+    }
+    ops.sort_by_key(|(at, _)| *at);
+
+    let manifest = Scheduler::manifest_for_streams(
+        specs.iter().map(|s| (s.stream.as_ref(), SPLITTER)),
+        dims,
+    );
+    let engine = Arc::new(Engine::new(threads));
+    let slots = 1 + rng.below(3);
+    let sched = Scheduler::new(Arc::clone(&engine), slots);
+
+    let initial: Vec<TenantSpec> = specs[..k0]
+        .iter()
+        .enumerate()
+        .map(|(i, sp)| {
+            let session = model.build_session(&SessionConfig {
+                dims,
+                seed: seed_of(i),
+                total_nodes: sp.stream.num_nodes as usize,
+                max_nodes: manifest.max_nodes,
+                delta,
+                engine: Arc::clone(&engine),
+            });
+            TenantSpec::new(&format!("c{i}"), Arc::clone(&sp.stream), SPLITTER, sp.weight, session)
+                .with_limit(sp.limit)
+        })
+        .collect();
+
+    let mut outs: Vec<Outs> = vec![Vec::new(); specs.len()];
+    let mut next_op = 0usize;
+    let mut next_admit = k0;
+    let engine_ctl = Arc::clone(&engine);
+    let max_nodes = manifest.max_nodes;
+    let specs_ref = &specs;
+    let outcomes = sched
+        .serve(
+            &manifest,
+            initial,
+            |ev| {
+                let served = match ev {
+                    ServeEvent::Step { served_total, .. } => served_total,
+                    // idle: flush the rest of the script so every
+                    // admission eventually happens and the run ends
+                    ServeEvent::Idle => u64::MAX,
+                    ServeEvent::Drained { .. } => return Vec::new(),
+                };
+                let mut cmds = Vec::new();
+                while next_op < ops.len() && ops[next_op].0 <= served {
+                    match ops[next_op].1 {
+                        Op::Admit => {
+                            let sp = &specs_ref[next_admit];
+                            let session = model.build_session(&SessionConfig {
+                                dims,
+                                seed: seed_of(next_admit),
+                                total_nodes: sp.stream.num_nodes as usize,
+                                max_nodes,
+                                delta,
+                                engine: Arc::clone(&engine_ctl),
+                            });
+                            cmds.push(Command::Admit(
+                                TenantSpec::new(
+                                    &format!("c{next_admit}"),
+                                    Arc::clone(&sp.stream),
+                                    SPLITTER,
+                                    sp.weight,
+                                    session,
+                                )
+                                .with_limit(sp.limit),
+                            ));
+                            next_admit += 1;
+                        }
+                        Op::Remove(id) => cmds.push(Command::Remove(id)),
+                        Op::SetWeight(id, w) => cmds.push(Command::SetWeight(id, w)),
+                        Op::Stop => cmds.push(Command::Stop),
+                    }
+                    next_op += 1;
+                }
+                cmds
+            },
+            |sid, snap, _slot, out| {
+                outs[sid].push((snap.index, bits(out)));
+                Ok(())
+            },
+        )
+        // Ok proves liveness AND pool integrity: serve() errors if any
+        // StagingSlot failed to come home
+        .expect("chaos run must finish cleanly");
+
+    // every spec was admitted exactly once, ids in admission order
+    assert_eq!(outcomes.len(), specs.len());
+    for (id, o) in outcomes.iter().enumerate() {
+        assert_eq!(o.id, id);
+    }
+
+    for (id, spec) in specs.iter().enumerate() {
+        let scheduled = &outs[id];
+        // per-tenant FIFO: indices sequential from zero
+        for (i, (idx, _)) in scheduled.iter().enumerate() {
+            assert_eq!(*idx, i, "tenant {id} served out of order");
+        }
+        // bitwise prefix of the standalone single-stream run
+        let mut session = model.build_session(&SessionConfig {
+            dims,
+            seed: seed_of(id),
+            total_nodes: spec.stream.num_nodes as usize,
+            max_nodes: manifest.max_nodes,
+            delta,
+            engine: Arc::clone(&engine),
+        });
+        let mut solo: Outs = Vec::new();
+        run_session(
+            session.as_mut(),
+            &spec.stream,
+            SPLITTER,
+            &manifest,
+            2,
+            usize::MAX,
+            |snap, _slot, out| {
+                solo.push((snap.index, bits(out)));
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert!(
+            scheduled.len() <= solo.len(),
+            "tenant {id} served more than its stream holds"
+        );
+        assert_eq!(
+            scheduled[..],
+            solo[..scheduled.len()],
+            "tenant {id}: scheduled outputs diverge from standalone prefix (threads={threads} delta={delta})"
+        );
+        // tenants that were never cut short served exactly their stream
+        // (truncated at their limit); the scheduler's `removed` flag
+        // must agree
+        let expected = spec.stream.split_windows(SPLITTER).len().min(spec.limit);
+        let o = &outcomes[id];
+        assert_eq!(o.removed, scheduled.len() < expected, "tenant {id} removed flag");
+        if !o.removed {
+            assert_eq!(scheduled.len(), expected, "tenant {id} under-served without removal");
+        }
+    }
+}
+
+fn chaos_at(threads: usize) {
+    forall(Config::default().cases(5).max_size(24).seed(0xC4A05 + threads as u64), |rng, size| {
+        chaos_case(rng, size, threads);
+    });
+}
+
+#[test]
+fn chaos_scheduler_1_thread() {
+    chaos_at(1);
+}
+
+#[test]
+fn chaos_scheduler_2_threads() {
+    chaos_at(2);
+}
+
+#[test]
+fn chaos_scheduler_4_threads() {
+    chaos_at(4);
+}

@@ -10,7 +10,10 @@
 use dgnn_booster::graph::{CooEdge, CooStream};
 use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
-use dgnn_booster::serve::{run_session, DgnnSession, Scheduler, SessionConfig, StreamSource};
+use dgnn_booster::serve::{
+    run_session, Command, DgnnSession, Scheduler, ServeEvent, SessionConfig, StreamSource,
+    TenantSpec,
+};
 use dgnn_booster::testutil::{forall, Config, Pcg32};
 use std::sync::Arc;
 
@@ -195,6 +198,252 @@ fn snapshot_limit_truncates_identically() {
     for o in &outs[..3] {
         assert_eq!(o.len(), 5);
         assert!(o.iter().all(|(idx, _)| *idx < 5));
+    }
+}
+
+/// Standalone single-stream reference run for one tenant spec.
+fn standalone(
+    model: ModelKind,
+    stream: &CooStream,
+    seed: u64,
+    manifest: &dgnn_booster::runtime::Manifest,
+    threads: usize,
+    delta: bool,
+) -> Outs {
+    let engine = Arc::new(Engine::new(threads));
+    let mut session = model.build_session(&SessionConfig {
+        dims: Dims::default(),
+        seed,
+        total_nodes: stream.num_nodes as usize,
+        max_nodes: manifest.max_nodes,
+        delta,
+        engine,
+    });
+    let mut outs: Outs = Vec::new();
+    run_session(
+        session.as_mut(),
+        stream,
+        SPLITTER,
+        manifest,
+        2,
+        usize::MAX,
+        |snap, _slot, out| {
+            outs.push((snap.index, bits(out)));
+            Ok(())
+        },
+    )
+    .unwrap();
+    outs
+}
+
+/// Dynamic admission must not change anyone's numerics: a tenant
+/// admitted at total step k (its stream is the *suffix* of a longer
+/// logical stream — it joined late, so it only has data from then on)
+/// produces bitwise the outputs of a standalone single-stream run over
+/// that same suffix, and the pre-existing tenants' outputs are bitwise
+/// identical to the churn-free run — at 1/2/4 engine threads, delta on
+/// and off.
+#[test]
+fn tenant_admitted_at_step_k_matches_standalone_suffix_run() {
+    let model = ModelKind::GcrnM2;
+    let base: Vec<StreamSource> = (0..2)
+        .map(|i| StreamSource {
+            name: format!("t{i}"),
+            stream: tenant_stream(1000 + i as u64, 40, 10, 12),
+            splitter_secs: SPLITTER,
+        })
+        .collect();
+    // the late tenant's stream is the tail of a longer one: everything
+    // from window 6 of a 12-window stream
+    let full = tenant_stream(777, 40, 12, 10);
+    let suffix: Vec<CooEdge> = full
+        .edges
+        .iter()
+        .copied()
+        .filter(|e| e.time >= 6 * SPLITTER)
+        .collect();
+    let late = Arc::new(CooStream::from_edges("late-suffix", suffix).unwrap());
+
+    for threads in [1usize, 2, 4] {
+        for delta in [false, true] {
+            // manifest sized over everyone the run will ever hold
+            let manifest = Scheduler::manifest_for_streams(
+                base.iter()
+                    .map(|s| (&s.stream, s.splitter_secs))
+                    .chain([(late.as_ref(), SPLITTER)]),
+                Dims::default(),
+            );
+
+            // churn-free baseline for the pre-existing tenants
+            let engine = Arc::new(Engine::new(threads));
+            let baseline: Vec<Outs> = {
+                let sessions: Vec<Box<dyn DgnnSession>> = base
+                    .iter()
+                    .enumerate()
+                    .map(|(i, s)| session_for(model, s, i, manifest.max_nodes, delta, &engine))
+                    .collect();
+                let sched = Scheduler::new(Arc::clone(&engine), 3);
+                let mut outs: Vec<Outs> = vec![Vec::new(); base.len()];
+                sched
+                    .run(&manifest, &base, sessions, usize::MAX, |sid, snap, _slot, out| {
+                        outs[sid].push((snap.index, bits(out)));
+                        Ok(())
+                    })
+                    .unwrap();
+                outs
+            };
+
+            // churn run: admit the late tenant after 4 served steps
+            let sessions: Vec<Box<dyn DgnnSession>> = base
+                .iter()
+                .enumerate()
+                .map(|(i, s)| session_for(model, s, i, manifest.max_nodes, delta, &engine))
+                .collect();
+            let tenants: Vec<TenantSpec> = base
+                .iter()
+                .zip(sessions)
+                .map(|(s, sess)| {
+                    TenantSpec::new(&s.name, Arc::new(s.stream.clone()), SPLITTER, 1, sess)
+                })
+                .collect();
+            let sched = Scheduler::new(Arc::clone(&engine), 3);
+            let mut late_spec = Some(());
+            let mut outs: Vec<Outs> = vec![Vec::new(); 3];
+            let late_for_ctl = Arc::clone(&late);
+            let engine_for_ctl = Arc::clone(&engine);
+            let max_nodes = manifest.max_nodes;
+            let outcomes = sched
+                .serve(
+                    &manifest,
+                    tenants,
+                    |ev| {
+                        let admit_now = match ev {
+                            ServeEvent::Step { served_total, .. } => served_total == 4,
+                            // tiny runs may drain before step 4 arrives
+                            ServeEvent::Idle => true,
+                            _ => false,
+                        };
+                        if admit_now && late_spec.take().is_some() {
+                            let session = model.build_session(&SessionConfig {
+                                dims: Dims::default(),
+                                seed: 7 + 2,
+                                total_nodes: late_for_ctl.num_nodes as usize,
+                                max_nodes,
+                                delta,
+                                engine: Arc::clone(&engine_for_ctl),
+                            });
+                            vec![Command::Admit(TenantSpec::new(
+                                "late",
+                                Arc::clone(&late_for_ctl),
+                                SPLITTER,
+                                2,
+                                session,
+                            ))]
+                        } else {
+                            Vec::new()
+                        }
+                    },
+                    |sid, snap, _slot, out| {
+                        outs[sid].push((snap.index, bits(out)));
+                        Ok(())
+                    },
+                )
+                .unwrap();
+
+            assert_eq!(outcomes.len(), 3, "threads={threads} delta={delta}");
+            assert_eq!(outcomes[2].name, "late");
+            assert!(!outcomes[2].removed);
+            // pre-existing tenants: bitwise identical to the no-churn run
+            for sid in 0..2 {
+                assert_eq!(
+                    outs[sid], baseline[sid],
+                    "threads={threads} delta={delta}: churn disturbed tenant {sid}"
+                );
+            }
+            // the admitted tenant: bitwise identical to a standalone run
+            // of its suffix stream, with the same seed and manifest
+            let solo = standalone(model, &late, 7 + 2, &manifest, threads, delta);
+            assert_eq!(
+                outs[2], solo,
+                "threads={threads} delta={delta}: admitted tenant diverged from standalone"
+            );
+        }
+    }
+}
+
+/// Removal is a clean drain: the removed tenant's outputs are a bitwise
+/// *prefix* of its standalone run (never reordered, never corrupted),
+/// the survivors are bitwise unchanged, and the outcome says whether the
+/// tenant was cut short.
+#[test]
+fn removed_tenant_outputs_are_a_bitwise_prefix_and_others_unchanged() {
+    let model = ModelKind::GcrnM1;
+    let sources: Vec<StreamSource> = (0..2)
+        .map(|i| StreamSource {
+            name: format!("t{i}"),
+            stream: tenant_stream(3000 + i as u64, 40, 10, 12),
+            splitter_secs: SPLITTER,
+        })
+        .collect();
+    for threads in [1usize, 2] {
+        for delta in [false, true] {
+            let manifest = Scheduler::manifest_for(&sources, Dims::default());
+            let engine = Arc::new(Engine::new(threads));
+            let solo: Vec<Outs> = sources
+                .iter()
+                .enumerate()
+                .map(|(i, s)| standalone(model, &s.stream, 7 + i as u64, &manifest, threads, delta))
+                .collect();
+
+            let sessions: Vec<Box<dyn DgnnSession>> = sources
+                .iter()
+                .enumerate()
+                .map(|(i, s)| session_for(model, s, i, manifest.max_nodes, delta, &engine))
+                .collect();
+            let tenants: Vec<TenantSpec> = sources
+                .iter()
+                .zip(sessions)
+                .map(|(s, sess)| {
+                    TenantSpec::new(&s.name, Arc::new(s.stream.clone()), SPLITTER, 1, sess)
+                })
+                .collect();
+            let sched = Scheduler::new(Arc::clone(&engine), 2);
+            let mut outs: Vec<Outs> = vec![Vec::new(); 2];
+            let mut removed = false;
+            let mut t1_steps = 0usize;
+            let outcomes = sched
+                .serve(
+                    &manifest,
+                    tenants,
+                    |ev| {
+                        // cut tenant 1 loose after its second served step
+                        if let ServeEvent::Step { tenant: 1, .. } = ev {
+                            t1_steps += 1;
+                            if !removed && t1_steps >= 2 {
+                                removed = true;
+                                return vec![Command::Remove(1)];
+                            }
+                        }
+                        Vec::new()
+                    },
+                    |sid, snap, _slot, out| {
+                        outs[sid].push((snap.index, bits(out)));
+                        Ok(())
+                    },
+                )
+                .unwrap();
+
+            assert_eq!(outs[0], solo[0], "threads={threads} delta={delta}: survivor disturbed");
+            let k = outs[1].len();
+            assert!(k >= 2, "removal landed before the trigger step");
+            assert_eq!(
+                outs[1],
+                solo[1][..k].to_vec(),
+                "threads={threads} delta={delta}: removed tenant not a prefix"
+            );
+            assert_eq!(outcomes[1].removed, k < solo[1].len());
+            assert!(!outcomes[0].removed);
+        }
     }
 }
 

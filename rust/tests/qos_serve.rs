@@ -1,0 +1,256 @@
+//! Weighted QoS properties of the serve scheduler.
+//!
+//! Layer 1 — the allocation *policy* (`serve::wfq_pick`) is pinned down
+//! deterministically: with every tenant permanently backlogged, grant
+//! counts hit the weight ratio **exactly** at every full scheduling
+//! period (Σ weights grants), for the 1:2:4 case and for randomized
+//! weight vectors.
+//!
+//! Layer 2 — the *system* end to end: under slot saturation with
+//! weights 1:2:4, per-tenant completed-step counts converge to the
+//! weight ratio within a fixed tolerance at 1/2/4 engine threads,
+//! delta on and off; and with equal weights the weighted scheduler
+//! reduces bitwise to the legacy first-come path (`Scheduler::run`).
+
+use dgnn_booster::graph::{CooEdge, CooStream};
+use dgnn_booster::models::{Dims, ModelKind};
+use dgnn_booster::numerics::Engine;
+use dgnn_booster::serve::{
+    wfq_pick, Command, DgnnSession, Scheduler, ServeEvent, SessionConfig, StreamSource,
+    TenantSpec,
+};
+use dgnn_booster::testutil::{forall, Config, Pcg32};
+use std::sync::Arc;
+
+const SPLITTER: i64 = 100;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+type Outs = Vec<(usize, Vec<u32>)>;
+
+/// Deterministic tenant stream: `snaps` windows, each with a few random
+/// edges over a small universe (see prop_serve.rs).
+fn tenant_stream(seed: u64, universe: usize, snaps: usize, max_epe: usize) -> CooStream {
+    let mut rng = Pcg32::seeded(seed);
+    let mut edges = Vec::new();
+    for s in 0..snaps {
+        let base = s as i64 * SPLITTER;
+        let count = 1 + rng.below(max_epe);
+        for j in 0..count {
+            let t = if j == 0 { base } else { base + 1 + rng.below(SPLITTER as usize - 2) as i64 };
+            edges.push(CooEdge {
+                src: rng.below(universe) as u32,
+                dst: rng.below(universe) as u32,
+                weight: 1.0 + (rng.below(5) as f32),
+                time: t,
+            });
+        }
+    }
+    CooStream::from_edges("tenant", edges).unwrap()
+}
+
+/// Simulate the governor's grant loop with every tenant permanently
+/// backlogged: each round, the WFQ policy picks among all tenants.
+fn simulate_backlogged(weights: &[u32], rounds: usize) -> Vec<u64> {
+    let mut granted = vec![0u64; weights.len()];
+    for _ in 0..rounds {
+        let waiting: Vec<(usize, u32, u64)> = weights
+            .iter()
+            .enumerate()
+            .map(|(id, &w)| (id, w, granted[id]))
+            .collect();
+        let winner = wfq_pick(&waiting).expect("non-empty waiter set");
+        granted[winner] += 1;
+    }
+    granted
+}
+
+#[test]
+fn wfq_grants_converge_exactly_to_1_2_4_each_period() {
+    let weights = [1u32, 2, 4];
+    let period: usize = 7; // Σ weights
+    for k in 1..=100usize {
+        let granted = simulate_backlogged(&weights, k * period);
+        assert_eq!(
+            granted,
+            vec![k as u64, 2 * k as u64, 4 * k as u64],
+            "after {k} full periods"
+        );
+    }
+}
+
+#[test]
+fn prop_wfq_grants_exactly_proportional_for_random_weights() {
+    forall(Config::default().cases(40).max_size(64), |rng, _size| {
+        let n = 2 + rng.below(3);
+        let weights: Vec<u32> = (0..n).map(|_| 1 + rng.below(8) as u32).collect();
+        let total: usize = weights.iter().map(|&w| w as usize).sum();
+        let periods = 1 + rng.below(40);
+        let granted = simulate_backlogged(&weights, periods * total);
+        for (id, &w) in weights.iter().enumerate() {
+            assert_eq!(
+                granted[id],
+                (periods as u64) * w as u64,
+                "weights {weights:?}, {periods} periods, tenant {id}"
+            );
+        }
+    });
+}
+
+#[test]
+fn zero_weight_tenant_is_starved_while_others_are_backlogged() {
+    let granted = simulate_backlogged(&[0, 1, 2], 30);
+    assert_eq!(granted[0], 0, "background tenant must not beat weighted ones");
+    assert_eq!(granted[1] + granted[2], 30);
+    // alone, background traffic is still served
+    let solo = simulate_backlogged(&[0, 0], 10);
+    assert_eq!(solo[0] + solo[1], 10);
+    assert_eq!(solo[0], 5, "two background tenants alternate");
+}
+
+/// End-to-end: three identically-shaped tenants at weights 1:2:4 over a
+/// tight two-slot pool, stopped mid-saturation — completed-step counts
+/// must track the weight ratio (weight-normalized counts within ±65% of
+/// their mean), which the old first-come schedule (equal thirds) fails
+/// by a wide margin.
+#[test]
+fn weighted_serve_ratio_converges_under_saturation() {
+    let model = ModelKind::GcrnM2;
+    let dims = Dims::default();
+    let weights = [1u32, 2, 4];
+    let streams: Vec<Arc<CooStream>> = (0..3)
+        .map(|i| Arc::new(tenant_stream(400 + i as u64, 30, 60, 6)))
+        .collect();
+    for threads in [1usize, 2, 4] {
+        for delta in [false, true] {
+            let manifest = Scheduler::manifest_for_streams(
+                streams.iter().map(|s| (s.as_ref(), SPLITTER)),
+                dims,
+            );
+            let engine = Arc::new(Engine::new(threads));
+            let tenants: Vec<TenantSpec> = streams
+                .iter()
+                .enumerate()
+                .map(|(i, stream)| {
+                    let session = model.build_session(&SessionConfig {
+                        dims,
+                        seed: 7 + i as u64,
+                        total_nodes: stream.num_nodes as usize,
+                        max_nodes: manifest.max_nodes,
+                        delta,
+                        engine: Arc::clone(&engine),
+                    });
+                    TenantSpec::new(
+                        &format!("t{i}"),
+                        Arc::clone(stream),
+                        SPLITTER,
+                        weights[i],
+                        session,
+                    )
+                })
+                .collect();
+            let sched = Scheduler::new(Arc::clone(&engine), 2);
+            let mut stopped = false;
+            let outcomes = sched
+                .serve(
+                    &manifest,
+                    tenants,
+                    |ev| {
+                        if let ServeEvent::Step { served_total, .. } = ev {
+                            if !stopped && served_total >= 42 {
+                                stopped = true;
+                                return vec![Command::Stop];
+                            }
+                        }
+                        Vec::new()
+                    },
+                    |_, _, _, _| Ok(()),
+                )
+                .unwrap();
+
+            let counts: Vec<usize> = outcomes.iter().map(|o| o.steps.len()).collect();
+            let total: usize = counts.iter().sum();
+            // stop fired at 42; the drain adds at most the in-flight
+            // slots (and nobody ran their stream dry first)
+            assert!((42..=48).contains(&total), "threads={threads} delta={delta}: total {total}");
+            assert!(counts.iter().all(|&c| c < 60), "a tenant drained before the stop");
+            let xs: Vec<f64> = counts
+                .iter()
+                .zip(weights)
+                .map(|(&c, w)| c as f64 / w as f64)
+                .collect();
+            let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+            for x in &xs {
+                assert!(
+                    (x - mean).abs() <= 0.65 * mean,
+                    "threads={threads} delta={delta}: counts {counts:?} not near 1:2:4 \
+                     (normalized {xs:?})"
+                );
+            }
+        }
+    }
+}
+
+/// Equal weights are the identity: the weighted scheduler serves every
+/// tenant bitwise exactly what the legacy first-come path serves.
+#[test]
+fn equal_weights_reduce_to_legacy_fifo_bitwise() {
+    let model = ModelKind::GcrnM1;
+    let dims = Dims::default();
+    let sources: Vec<StreamSource> = (0..3)
+        .map(|i| StreamSource {
+            name: format!("t{i}"),
+            stream: tenant_stream(800 + i as u64, 30, 8, 8),
+            splitter_secs: SPLITTER,
+        })
+        .collect();
+    for delta in [false, true] {
+        let manifest = Scheduler::manifest_for(&sources, dims);
+        let engine = Arc::new(Engine::new(2));
+        let session_for = |i: usize, s: &StreamSource| {
+            model.build_session(&SessionConfig {
+                dims,
+                seed: 7 + i as u64,
+                total_nodes: s.stream.num_nodes as usize,
+                max_nodes: manifest.max_nodes,
+                delta,
+                engine: Arc::clone(&engine),
+            })
+        };
+
+        // legacy first-come path
+        let sessions: Vec<Box<dyn DgnnSession>> = sources
+            .iter()
+            .enumerate()
+            .map(|(i, s)| session_for(i, s))
+            .collect();
+        let sched = Scheduler::new(Arc::clone(&engine), 3);
+        let mut fifo: Vec<Outs> = vec![Vec::new(); 3];
+        sched
+            .run(&manifest, &sources, sessions, usize::MAX, |sid, snap, _slot, out| {
+                fifo[sid].push((snap.index, bits(out)));
+                Ok(())
+            })
+            .unwrap();
+
+        // weighted path, all weights equal
+        let tenants: Vec<TenantSpec> = sources
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                TenantSpec::new(&s.name, Arc::new(s.stream.clone()), SPLITTER, 1, session_for(i, s))
+            })
+            .collect();
+        let mut weighted: Vec<Outs> = vec![Vec::new(); 3];
+        sched
+            .serve(&manifest, tenants, |_| Vec::new(), |sid, snap, _slot, out| {
+                weighted[sid].push((snap.index, bits(out)));
+                Ok(())
+            })
+            .unwrap();
+
+        assert_eq!(fifo, weighted, "delta={delta}: equal weights changed the numerics");
+    }
+}
