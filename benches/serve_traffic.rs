@@ -1,10 +1,13 @@
 //! Served-traffic benchmark: sweep tenant-stream count × §VI delta
 //! on/off through `serve::Scheduler` (mirror GCRN-M2 sessions over one
-//! shared sparse engine and one recycled staging pool), plus two
-//! dynamic points — a **weighted** run (weights 1:2:4 under a tight
-//! slot pool, with the per-tenant fairness summary) and a **churn** run
-//! (one tenant admitted mid-run, one drained) — and record per-request
-//! end-to-end latency tails + throughput per sweep point.
+//! shared sparse engine and one recycled staging pool), a **streams ×
+//! batch** sweep (all tenants sharing one model, cross-stream batched
+//! projection on vs off — batch occupancy and fused-call counts land
+//! in the JSON), plus two dynamic points — a **weighted** run (weights
+//! 1:2:4 under a tight slot pool, with the per-tenant fairness summary)
+//! and a **churn** run (one tenant admitted mid-run, one drained) —
+//! and record per-request end-to-end latency tails + throughput per
+//! sweep point.
 //!
 //! Writes `BENCH_serve.json` (schema in README.md § serve) so the
 //! serving-perf trajectory is machine-tracked across PRs, like
@@ -19,8 +22,8 @@ use dgnn_booster::graph::CooStream;
 use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
 use dgnn_booster::serve::{
-    fairness_of, write_serve_json, Command, DgnnSession, Scheduler, ServeEvent, ServeRecorder,
-    ServeRow, SessionConfig, StreamOutcome, StreamSource, TenantSpec,
+    fairness_of, write_serve_json, BatchStats, Command, DgnnSession, Scheduler, ServeEvent,
+    ServeRecorder, ServeRow, SessionConfig, StreamOutcome, StreamSource, TenantSpec,
 };
 use std::sync::Arc;
 
@@ -38,7 +41,8 @@ fn session_cfg(stream: &CooStream, seed: u64, max_nodes: usize, delta: bool, eng
     }
 }
 
-/// Fold one run's outcomes into a row, optionally with fairness.
+/// Fold one run's outcomes into a row, optionally with fairness and
+/// batching counters.
 fn row_from(
     name: String,
     streams: usize,
@@ -46,6 +50,7 @@ fn row_from(
     wall: f64,
     outcomes: &[StreamOutcome],
     with_fairness: bool,
+    batch: Option<BatchStats>,
 ) -> ServeRow {
     let mut rec = ServeRecorder::new(65536);
     for o in outcomes {
@@ -54,7 +59,7 @@ fn row_from(
         }
     }
     let fairness = with_fairness.then(|| fairness_of(outcomes));
-    ServeRow { name, streams, delta, threads: THREADS, summary: rec.summary(wall), fairness }
+    ServeRow { name, streams, delta, threads: THREADS, summary: rec.summary(wall), fairness, batch }
 }
 
 fn main() {
@@ -102,8 +107,72 @@ fn main() {
                 model.name(),
                 if delta { "on" } else { "off" }
             );
-            let row = row_from(name, k, delta, wall, &outcomes, false);
+            let row = row_from(name, k, delta, wall, &outcomes, false, None);
             println!("bench {:<44} {}", row.name, row.summary.line());
+            rows.push(row);
+        }
+    }
+
+    // streams × batch sweep: every tenant serves the SAME model (shared
+    // parameter seed — the one-model-many-streams production shape), so
+    // same-shape projections carry identical weights and the batched
+    // runs report real cross-tenant fusion.  The batch-off twins make
+    // the pair a like-for-like comparison.
+    for &k in stream_counts {
+        for batch in [false, true] {
+            let streams: Vec<Arc<CooStream>> = (0..k)
+                .map(|i| Arc::new(synth::generate(&BC_ALPHA, 342 + i as u64)))
+                .collect();
+            let engine = Arc::new(Engine::new(THREADS));
+            let manifest = Scheduler::manifest_for_streams(
+                streams.iter().map(|s| (s.as_ref(), BC_ALPHA.splitter_secs)),
+                dims,
+            );
+            let tenants: Vec<TenantSpec> = streams
+                .iter()
+                .enumerate()
+                .map(|(i, stream)| {
+                    // one shared seed: one model across every tenant
+                    let session = model.build_session(&session_cfg(
+                        stream,
+                        4242,
+                        manifest.max_nodes,
+                        true,
+                        &engine,
+                    ));
+                    TenantSpec::new(
+                        &format!("shared-{i}"),
+                        Arc::clone(stream),
+                        BC_ALPHA.splitter_secs,
+                        1,
+                        session,
+                    )
+                    .with_limit(limit)
+                })
+                .collect();
+            let sched = Scheduler::new(engine, (2 * k).clamp(2, 16)).with_batching(batch);
+            let t0 = std::time::Instant::now();
+            let (outcomes, stats) = sched
+                .serve_report(&manifest, tenants, |_| Vec::new(), |_, _, _, _| Ok(()))
+                .expect("batch sweep point");
+            let wall = t0.elapsed().as_secs_f64();
+            let name = format!(
+                "serve shared {} streams={k} batch={}",
+                model.name(),
+                if batch { "on" } else { "off" }
+            );
+            let row = row_from(name, k, true, wall, &outcomes, false, batch.then_some(stats));
+            if batch {
+                println!(
+                    "bench {:<44} {} occupancy={:.2} rows/call={:.0}",
+                    row.name,
+                    row.summary.line(),
+                    stats.occupancy(),
+                    stats.rows_per_call()
+                );
+            } else {
+                println!("bench {:<44} {}", row.name, row.summary.line());
+            }
             rows.push(row);
         }
     }
@@ -165,7 +234,7 @@ fn main() {
             )
             .expect("weighted sweep point");
         let wall = t0.elapsed().as_secs_f64();
-        let row = row_from("serve weighted 1:2:4".into(), 3, true, wall, &outcomes, true);
+        let row = row_from("serve weighted 1:2:4".into(), 3, true, wall, &outcomes, true, None);
         let jain = row.fairness.as_ref().map(|f| f.jain).unwrap_or(1.0);
         println!("bench {:<44} {} jain={jain:.3}", row.name, row.summary.line());
         rows.push(row);
@@ -249,7 +318,7 @@ fn main() {
             )
             .expect("churn sweep point");
         let wall = t0.elapsed().as_secs_f64();
-        let row = row_from("serve churn admit+drain".into(), 3, true, wall, &outcomes, true);
+        let row = row_from("serve churn admit+drain".into(), 3, true, wall, &outcomes, true, None);
         println!("bench {:<44} {}", row.name, row.summary.line());
         rows.push(row);
     }

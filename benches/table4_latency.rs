@@ -1,7 +1,7 @@
 //! Bench E3 — regenerates **Table IV** (per-snapshot latency, CPU vs GPU
 //! vs FPGA, with speedups) and times each platform model; also reports
 //! the *measured* pure-Rust CPU latency on this machine alongside the
-//! analytic 6226R model (DESIGN.md §4 CPU-baseline substitution).
+//! analytic 6226R model (CPU-baseline substitution, docs/ARCHITECTURE.md).
 
 use dgnn_booster::baselines::cpu;
 use dgnn_booster::datasets::{BC_ALPHA, UCI};

@@ -1,4 +1,4 @@
-//! **End-to-end driver** (EXPERIMENTS.md E8): stream every snapshot of
+//! **End-to-end driver**: stream every snapshot of
 //! both datasets through the full three-layer stack — host preprocessing
 //! (L3) → AOT-compiled JAX/Pallas model steps (L2/L1) executed on the
 //! PJRT CPU client — for all three models, cross-checking the numerics

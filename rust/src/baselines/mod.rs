@@ -2,7 +2,7 @@
 //!
 //! The paper's baselines are PyTorch on a Xeon 6226R and an RTX A6000.
 //! Neither is available here, so each baseline has two modes
-//! (DESIGN.md §4):
+//! (docs/ARCHITECTURE.md):
 //!
 //! * **Analytic** — a mechanistic latency model of PyTorch dispatch on
 //!   tiny dynamic graphs (per-op dispatch overhead dominates; the GPU
@@ -11,7 +11,7 @@
 //!   (GPU slower than CPU).
 //! * **Measured** — `cpu::measure_*` runs the pure-Rust mirror on this
 //!   machine for a ground-truth latency shape (used by the e2e example
-//!   and recorded alongside the analytic numbers in EXPERIMENTS.md).
+//!   and recorded alongside the analytic numbers in the bench JSONs).
 
 pub mod cpu;
 pub mod gpu;

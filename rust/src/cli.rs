@@ -29,6 +29,12 @@
 //!                              (`serve`; default 2×streams, clamped 2..16)
 //!   --delta                    boolean: delta-aware state gathers +
 //!                              feature staging (paper §VI)
+//!   --batch                    boolean: `serve` fuses same-weight
+//!                              projections from different tenants into
+//!                              one engine call per scheduling round
+//!                              (cross-stream batching; all tenants then
+//!                              share one model seed so the fusion is
+//!                              real) — bitwise-equal per tenant
 //!   --weights W1,W2,...        per-tenant QoS weights for `serve`
 //!                              (staging slots granted weighted-fair;
 //!                              repeated-last-padded to --streams;
@@ -44,7 +50,7 @@ use crate::error::{Error, Result};
 use std::collections::HashMap;
 
 /// Flags that take no value: presence means `true`.
-const BOOL_FLAGS: [&str; 2] = ["delta", "churn"];
+const BOOL_FLAGS: [&str; 3] = ["delta", "churn", "batch"];
 
 /// Parsed command line.
 #[derive(Clone, Debug)]
@@ -208,6 +214,17 @@ mod tests {
         // absent flag is false
         let c = Cli::parse(&s(&["serve"])).unwrap();
         assert!(!c.flag("delta"));
+    }
+
+    #[test]
+    fn boolean_batch_flag_needs_no_value() {
+        // the CI smoke invocation: serve --streams 4 --batch --weights 1,2,4
+        let c = Cli::parse(&s(&["serve", "--streams", "4", "--batch", "--weights", "1,2,4"])).unwrap();
+        assert!(c.flag("batch"));
+        assert_eq!(c.get_usize("streams", 1).unwrap(), 4);
+        assert_eq!(c.weights(4).unwrap(), vec![1, 2, 4, 4]);
+        let c = Cli::parse(&s(&["serve"])).unwrap();
+        assert!(!c.flag("batch"));
     }
 
     #[test]

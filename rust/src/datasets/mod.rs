@@ -11,7 +11,7 @@
 //! looks for the real KONECT files under `data/` ([`konect`] parses the
 //! standard `out.*` format) and otherwise falls back to [`synth`], a
 //! seeded generator statistically matched to Table III (documented
-//! substitution — DESIGN.md §4).  Everything downstream (preprocessing,
+//! substitution — see docs/ARCHITECTURE.md).  Everything downstream (preprocessing,
 //! schedulers, timing model) is agnostic to the source.
 
 pub mod catalog;

@@ -1,6 +1,6 @@
 //! Seeded synthetic temporal-graph generator matched to Table III.
 //!
-//! Substitution rationale (DESIGN.md §4): the accelerator's latency and
+//! Substitution rationale (docs/ARCHITECTURE.md): the accelerator's latency and
 //! the schedulers depend only on per-snapshot node/edge counts and degree
 //! structure.  The generator therefore works backwards from the paper's
 //! per-snapshot statistics:

@@ -1,7 +1,7 @@
 //! Cycle-approximate model of the DGNN-Booster FPGA accelerator.
 //!
-//! This module replaces the paper's ZCU102 + Vitis HLS testbed (DESIGN.md
-//! §4 substitutions).  It has two halves:
+//! This module replaces the paper's ZCU102 + Vitis HLS testbed (see
+//! docs/ARCHITECTURE.md on the substitution).  It has two halves:
 //!
 //! * **Timing** — per-unit cycle models ([`units`]) calibrated against the
 //!   paper's Table VII module latencies, composed by the V1 ping-pong

@@ -1,5 +1,5 @@
 //! Activity-based FPGA power model (substitute for the paper's power
-//! meter — DESIGN.md §4).
+//! meter — see docs/ARCHITECTURE.md).
 //!
 //! Calibration: Table VI gives the FPGA runtime (dynamic) energy directly
 //! — e.g. EvolveGCN/BC-Alpha 0.02 J per 100 snapshots over 100 × 0.76 ms

@@ -15,7 +15,10 @@
 //! in-edges keep their COO (time) order, which is what makes CSR
 //! aggregation bitwise-equal to the COO edge-walk reference
 //! (`numerics::gcn::aggregate`) — the floating-point additions happen in
-//! the same sequence per output element.
+//! the same sequence per output element.  That equivalence (at any
+//! engine thread count) is pinned by `rust/tests/prop_kernels.rs`, and
+//! transitively underwrites the serving-layer bitwise guarantees in
+//! `rust/tests/prop_serve.rs`.
 
 use super::snapshot::Snapshot;
 
@@ -52,7 +55,7 @@ impl SnapshotCsr {
 
     /// Re-derive this CSR from `snap`, reusing every buffer.  Two-pass
     /// stable counting sort — the same algorithm as
-    /// [`super::convert::Csr::build`] (kept separate on purpose: the
+    /// [`super::convert::Csr`]'s builder (kept separate on purpose: the
     /// converter is the one-shot functional model with permutation
     /// tracking and id validation, this is the reusable cache;
     /// `prop_rebuild_matches_oneshot_converter` pins their

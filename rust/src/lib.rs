@@ -17,8 +17,11 @@
 //! Python never runs on the request path: after `make artifacts` the
 //! binary is self-contained.
 //!
-//! See `DESIGN.md` for the system inventory, the experiment index
-//! (Tables II–VII, Fig. 6) and the FPGA→simulator substitution rationale.
+//! See `docs/ARCHITECTURE.md` for the system map — the three runtime
+//! layers (coordinator / serve / numerics+graph), the life of a served
+//! request (stage → WFQ grant → batch → infer), and the invariants the
+//! test suites pin (bitwise equivalence, zero-alloc steady state,
+//! slot-leak hard-fail) — and `ROADMAP.md` for the open items.
 
 pub mod baselines;
 pub mod cli;

@@ -154,12 +154,16 @@ fn cmd_dse(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
 /// N tenant snapshot streams multiplexed by `serve::Scheduler` over one
 /// shared sparse engine and one recycled staging-slot pool, with
 /// per-tenant QoS weights (`--weights`, staging slots granted
-/// weighted-fair) and optional runtime churn (`--churn` admits an extra
-/// tenant mid-run, then drains tenant 1).  Reports per-tenant stats, a
-/// cross-tenant fairness summary, aggregate p50/p95/p99 latency and
-/// throughput, and the FPGA-projected per-snapshot latency.  (The
-/// PJRT-backed single-stream path lives in `examples/e2e_serve.rs`,
-/// which also cross-checks against the same mirror sessions.)
+/// weighted-fair), optional runtime churn (`--churn` admits an extra
+/// tenant mid-run, then drains tenant 1), and optional cross-stream
+/// batched projection (`--batch`: every tenant serves the same model —
+/// one shared parameter seed — and the scheduler fuses their same-weight
+/// projections into one engine call per round, bitwise-equal per
+/// tenant).  Reports per-tenant stats, a cross-tenant fairness summary,
+/// batching occupancy, aggregate p50/p95/p99 latency and throughput,
+/// and the FPGA-projected per-snapshot latency.  (The PJRT-backed
+/// single-stream path lives in `examples/e2e_serve.rs`, which also
+/// cross-checks against the same mirror sessions.)
 fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     let model = cli.model()?;
     let profile = cli.dataset()?;
@@ -167,10 +171,16 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     let threads = cli.threads()?;
     let delta = cli.flag("delta");
     let churn = cli.flag("churn");
+    let batch = cli.flag("batch");
     let limit = cli.get_usize("snapshots", usize::MAX)?;
     let slots = cli.get_usize("slots", (2 * streams).clamp(2, 16))?.max(1);
     let weights = cli.weights(streams)?;
     let dims = Dims::default();
+    // with --batch every tenant serves the same model: shared parameter
+    // seed, so same-shape projections carry bitwise-identical weights
+    // and actually fuse (the common production shape — one model, many
+    // streams); without it tenants keep per-tenant seeds
+    let session_seed = |i: u64| if batch { ctx.seed } else { ctx.seed.wrapping_add(i) };
 
     // tenant 0 serves the real dataset when present under --data;
     // additional tenants get independent synthetic streams
@@ -207,8 +217,7 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
         .iter()
         .enumerate()
         .map(|(i, stream)| {
-            let session =
-                model.build_session(&session_cfg(stream, ctx.seed.wrapping_add(i as u64)));
+            let session = model.build_session(&session_cfg(stream, session_seed(i as u64)));
             TenantSpec::new(
                 &format!("stream-{i}"),
                 Arc::clone(stream),
@@ -222,17 +231,18 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
 
     println!(
         "serving {} × {streams} stream(s) on {} — engine ×{threads}, {slots} staging slots, \
-         weights {weights:?}{}{}",
+         weights {weights:?}{}{}{}",
         model.name(),
         profile.name,
         if delta { ", §VI delta state + feature staging" } else { "" },
+        if batch { ", cross-stream batched projection (shared model)" } else { "" },
         if churn { ", churn script on" } else { "" }
     );
-    let scheduler = Scheduler::new(Arc::clone(&engine), slots);
+    let scheduler = Scheduler::new(Arc::clone(&engine), slots).with_batching(batch);
     let t0 = std::time::Instant::now();
     let mut checksum = 0.0f64;
     let mut drained_one = false;
-    let outcomes = scheduler.serve(
+    let (outcomes, batch_stats) = scheduler.serve_report(
         &manifest,
         tenants,
         |ev| {
@@ -243,7 +253,10 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
             if served_total >= 6 {
                 if let Some(stream) = churn_stream.take() {
                     println!("  [churn] admitting tenant churn-0 (weight 2) at step {served_total}");
-                    let session = model.build_session(&session_cfg(&stream, ctx.seed ^ 0x00C0_FFEE));
+                    let session = model.build_session(&session_cfg(
+                        &stream,
+                        if batch { ctx.seed } else { ctx.seed ^ 0x00C0_FFEE },
+                    ));
                     cmds.push(Command::Admit(
                         TenantSpec::new("churn-0", stream, profile.splitter_secs, 2, session)
                             .with_limit(limit),
@@ -288,6 +301,18 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
         println!("{line}");
     }
     println!("aggregate: {}", rec.summary(wall).line());
+    if batch {
+        println!(
+            "batching: {} rounds, {} fused calls over {} requests \
+             (occupancy {:.2} req/call, {:.0} rows/call), {} fallback steps",
+            batch_stats.rounds,
+            batch_stats.fused_calls,
+            batch_stats.fused_requests,
+            batch_stats.occupancy(),
+            batch_stats.rows_per_call(),
+            batch_stats.fallback_steps
+        );
+    }
     if outcomes.len() > 1 {
         let fair = fairness_of(&outcomes);
         println!("fairness: jain={:.3} over weight-normalised throughput", fair.jain);

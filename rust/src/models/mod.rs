@@ -79,7 +79,7 @@ impl ModelKind {
 }
 
 /// Feature dimensions (shared by both models; paper uses one config).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct Dims {
     pub in_dim: usize,
     pub hidden_dim: usize,

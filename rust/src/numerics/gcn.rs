@@ -74,6 +74,39 @@ pub fn gcn_layer_csr(
     out
 }
 
+/// [`gcn_layer_csr`] over borrowed `[n × d]` feature rows into caller
+/// buffers — the allocation-free form the serve sessions run (`out` is
+/// resized to `[n × w.cols]`; `agg` is scratch for the two-step branch).
+/// Bitwise-equal to [`gcn_layer_csr`]: both branches run the same
+/// engine kernels.
+#[allow(clippy::too_many_arguments)]
+pub fn gcn_layer_slice_into(
+    eng: &Engine,
+    csr: &SnapshotCsr,
+    selfcoef: &[f32],
+    x: &[f32],
+    d: usize,
+    w: &Mat,
+    relu: bool,
+    out: &mut Vec<f32>,
+    agg: &mut Vec<f32>,
+) {
+    let n = csr.num_nodes();
+    out.resize(n * w.cols, 0.0);
+    if d >= w.cols {
+        eng.aggregate_matmul_slice_into(csr, selfcoef, x, d, w, out);
+    } else {
+        agg.resize(n * d, 0.0);
+        eng.aggregate_slice_into(csr, selfcoef, x, d, agg);
+        eng.matmul_packed_into(agg, n, d, w, out);
+    }
+    if relu {
+        for v in out.iter_mut() {
+            *v = v.max(0.0);
+        }
+    }
+}
+
 /// One GCN layer from a raw snapshot (builds the CSR on the spot; hot
 /// paths should cache a [`SnapshotCsr`] and call [`gcn_layer_csr`]).
 pub fn gcn_layer(snap: &Snapshot, x: &Mat, w: &Mat, relu: bool) -> Mat {

@@ -22,9 +22,9 @@ pub mod rnn;
 pub mod spmm;
 pub mod tensor;
 
-pub use gcn::{aggregate, aggregate_into, gcn_layer, gcn_layer_csr};
-pub use rnn::{gru_matrix_cell, lstm_gate_stage, lstm_gate_stage_with};
-pub use spmm::Engine;
+pub use gcn::{aggregate, aggregate_into, gcn_layer, gcn_layer_csr, gcn_layer_slice_into};
+pub use rnn::{gru_matrix_cell, lstm_gate_slices_into, lstm_gate_stage, lstm_gate_stage_with};
+pub use spmm::{Engine, MatmulReq};
 pub use tensor::Mat;
 
 use crate::graph::{Snapshot, SnapshotCsr};

@@ -44,29 +44,75 @@ pub fn lstm_gate_stage_with(eng: &Engine, px: &Mat, ph: &Mat, b: &[f32], c: &Mat
     let hdim = px.cols / 4;
     assert_eq!((ph.rows, ph.cols), (px.rows, px.cols));
     assert_eq!((c.rows, c.cols), (px.rows, hdim));
-    assert_eq!(b.len(), 4 * hdim);
     let n = px.rows;
     let mut h_new = Mat::zeros(n, hdim);
     let mut c_new = Mat::zeros(n, hdim);
-    let hp = SendPtr(h_new.data.as_mut_ptr());
-    let cp = SendPtr(c_new.data.as_mut_ptr());
+    lstm_gate_slices_into(
+        eng,
+        &px.data,
+        &ph.data,
+        b,
+        &c.data,
+        hdim,
+        &mut h_new.data,
+        &mut c_new.data,
+    );
+    (h_new, c_new)
+}
+
+/// [`lstm_gate_stage_with`] over borrowed row-major slices into caller
+/// buffers — the allocation-free form the serve sessions run.  `px`/`ph`
+/// are `[n × 4·hdim]`, `c`/`h_out`/`c_out` are `[n × hdim]`.
+#[allow(clippy::too_many_arguments)]
+pub fn lstm_gate_slices_into(
+    eng: &Engine,
+    px: &[f32],
+    ph: &[f32],
+    b: &[f32],
+    c: &[f32],
+    hdim: usize,
+    h_out: &mut [f32],
+    c_out: &mut [f32],
+) {
+    if hdim == 0 {
+        // zero-width state: nothing to gate, but a [n × 0] layout means
+        // every slice must be empty — anything else is a mis-wired call
+        assert!(
+            px.is_empty()
+                && ph.is_empty()
+                && b.is_empty()
+                && c.is_empty()
+                && h_out.is_empty()
+                && c_out.is_empty(),
+            "zero-width gate stage with non-empty slices"
+        );
+        return;
+    }
+    assert_eq!(c.len() % hdim, 0);
+    let n = c.len() / hdim;
+    assert_eq!(px.len(), n * 4 * hdim);
+    assert_eq!(ph.len(), n * 4 * hdim);
+    assert_eq!(b.len(), 4 * hdim);
+    assert_eq!(h_out.len(), n * hdim);
+    assert_eq!(c_out.len(), n * hdim);
+    let hp = SendPtr(h_out.as_mut_ptr());
+    let cp = SendPtr(c_out.as_mut_ptr());
     eng.run_partitioned(n, |lo, hi| {
         // SAFETY: disjoint row ranges — see `spmm::SendPtr`
         let hs = unsafe { std::slice::from_raw_parts_mut(hp.0.add(lo * hdim), (hi - lo) * hdim) };
         let cs = unsafe { std::slice::from_raw_parts_mut(cp.0.add(lo * hdim), (hi - lo) * hdim) };
         lstm_gate_rows(px, ph, b, c, hs, cs, lo, hi, hdim);
     });
-    (h_new, c_new)
 }
 
 /// Serial gate math over node rows `lo..hi`; `h_out`/`c_out` cover
 /// exactly those rows.
 #[allow(clippy::too_many_arguments)]
 fn lstm_gate_rows(
-    px: &Mat,
-    ph: &Mat,
+    px: &[f32],
+    ph: &[f32],
     b: &[f32],
-    c: &Mat,
+    c: &[f32],
     h_out: &mut [f32],
     c_out: &mut [f32],
     lo: usize,
@@ -75,12 +121,13 @@ fn lstm_gate_rows(
 ) {
     for r in lo..hi {
         for j in 0..hdim {
-            let pre = |g: usize| px.at(r, g * hdim + j) + ph.at(r, g * hdim + j) + b[g * hdim + j];
+            let pre =
+                |g: usize| px[r * 4 * hdim + g * hdim + j] + ph[r * 4 * hdim + g * hdim + j] + b[g * hdim + j];
             let i = sigmoid(pre(0));
             let f = sigmoid(pre(1));
             let g = pre(2).tanh();
             let o = sigmoid(pre(3));
-            let cn = f * c.at(r, j) + i * g;
+            let cn = f * c[r * hdim + j] + i * g;
             c_out[(r - lo) * hdim + j] = cn;
             h_out[(r - lo) * hdim + j] = o * cn.tanh();
         }

@@ -9,6 +9,20 @@
 //! path — the result is **bitwise-equal** regardless of thread count
 //! (asserted by `tests/prop_kernels.rs`).
 //!
+//! Every kernel has two public faces: the `Mat`-typed convenience
+//! ([`Engine::aggregate_into`], [`Engine::matmul_into`], …) and a
+//! slice-based form over borrowed row-major rows
+//! ([`Engine::aggregate_slice_into`], [`Engine::matmul_packed_into`])
+//! that the serve sessions run allocation-free.  The row-stacked
+//! multi-request entry point [`Engine::matmul_multi_into`] computes
+//! several same-weight projections — typically one per tenant of the
+//! serve scheduler's batching round (`serve::batch`) — as **one**
+//! partitioned sweep of the pool over the virtual concatenation of
+//! their operand rows; per request the result is bitwise-equal to a
+//! standalone [`Engine::matmul_into`], because each output row's
+//! k-terms accumulate in the same ascending order no matter which rows
+//! surround it.
+//!
 //! The offline crate set has no rayon/tokio, so [`WorkerPool`] is a
 //! small persistent `std::thread` pool: the scoped leader/worker
 //! topology of `coordinator::pipeline`, kept alive across calls so the
@@ -185,6 +199,13 @@ pub(crate) struct SendPtr(pub *mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
+/// Read-only sibling of [`SendPtr`] for operands shared across workers.
+#[derive(Clone, Copy)]
+struct ConstPtr(*const f32);
+// SAFETY: workers only read through it.
+unsafe impl Send for ConstPtr {}
+unsafe impl Sync for ConstPtr {}
+
 /// Balanced contiguous row range of worker `w` out of `nw`.
 #[inline]
 fn chunk(n: usize, w: usize, nw: usize) -> (usize, usize) {
@@ -243,17 +264,32 @@ impl Engine {
     /// in-edges in COO order — bitwise-equal to the COO reference at any
     /// thread count.
     pub fn aggregate_into(&self, csr: &SnapshotCsr, selfcoef: &[f32], x: &Mat, out: &mut Mat) {
-        let n = csr.num_nodes();
-        assert_eq!(x.rows, n, "embedding row count");
-        assert_eq!(selfcoef.len(), n, "selfcoef length");
+        assert_eq!(x.rows, csr.num_nodes(), "embedding row count");
         assert_eq!((out.rows, out.cols), (x.rows, x.cols), "output shape");
-        let d = x.cols;
-        let ptr = SendPtr(out.data.as_mut_ptr());
+        self.aggregate_slice_into(csr, selfcoef, &x.data, x.cols, &mut out.data);
+    }
+
+    /// [`Self::aggregate_into`] over borrowed row-major feature rows
+    /// (`x` is `[num_nodes × d]`, e.g. a `StagingSlot::x` view) — the
+    /// allocation-free form the serve sessions run.
+    pub fn aggregate_slice_into(
+        &self,
+        csr: &SnapshotCsr,
+        selfcoef: &[f32],
+        x: &[f32],
+        d: usize,
+        out: &mut [f32],
+    ) {
+        let n = csr.num_nodes();
+        assert_eq!(x.len(), n * d, "feature slice length");
+        assert_eq!(selfcoef.len(), n, "selfcoef length");
+        assert_eq!(out.len(), n * d, "output slice length");
+        let ptr = SendPtr(out.as_mut_ptr());
         self.run_partitioned(n, |lo, hi| {
             // SAFETY: disjoint row ranges — see SendPtr
             let slice =
                 unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * d), (hi - lo) * d) };
-            aggregate_rows(csr, selfcoef, x, slice, lo, hi);
+            aggregate_rows(csr, selfcoef, x, d, slice, lo, hi);
         });
     }
 
@@ -271,13 +307,81 @@ impl Engine {
     pub fn matmul_into(&self, a: &Mat, b: &Mat, out: &mut Mat) {
         assert_eq!(a.cols, b.rows, "matmul shape mismatch");
         assert_eq!((out.rows, out.cols), (a.rows, b.cols), "output shape");
+        self.matmul_packed_into(&a.data, a.rows, a.cols, b, &mut out.data);
+    }
+
+    /// [`Self::matmul_into`] over packed row-major operand rows: `a` is
+    /// `[rows × k]`, `out` is `[rows × b.cols]`.  The rows may be any
+    /// row-stack — one tenant's operand or several tenants' packed
+    /// together — the per-row result is identical either way.
+    pub fn matmul_packed_into(&self, a: &[f32], rows: usize, k: usize, b: &Mat, out: &mut [f32]) {
+        assert_eq!(k, b.rows, "matmul shape mismatch");
+        assert_eq!(a.len(), rows * k, "operand slice length");
+        assert_eq!(out.len(), rows * b.cols, "output slice length");
         let n = b.cols;
-        let ptr = SendPtr(out.data.as_mut_ptr());
-        self.run_partitioned(a.rows, |lo, hi| {
+        let ptr = SendPtr(out.as_mut_ptr());
+        self.run_partitioned(rows, |lo, hi| {
             // SAFETY: disjoint row ranges — see SendPtr
             let slice =
                 unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * n), (hi - lo) * n) };
-            matmul_rows(a, b, slice, lo, hi);
+            matmul_rows(a, k, b, slice, lo, hi);
+        });
+    }
+
+    /// Row-stacked multi-request projection: every request multiplies
+    /// its own `[rows_i × k]` operand rows by the **same** `b`, and all
+    /// of them are computed in one partitioned sweep of the pool over
+    /// the virtual concatenation (no packing copy).  Per request the
+    /// result is bitwise-equal to a standalone [`Self::matmul_into`] —
+    /// this is the fused engine call behind the serve scheduler's
+    /// cross-stream batching (`serve::batch::BatchPlanner`).
+    pub fn matmul_multi_into(&self, k: usize, b: &Mat, reqs: &mut [MatmulReq<'_>]) {
+        assert_eq!(k, b.rows, "matmul shape mismatch");
+        let n = b.cols;
+        if k == 0 {
+            // a [rows × 0] operand projects to all-zero rows
+            for r in reqs.iter_mut() {
+                r.out.fill(0.0);
+            }
+            return;
+        }
+        struct ReqMeta {
+            start: usize,
+            rows: usize,
+            a: ConstPtr,
+            out: SendPtr,
+        }
+        let mut total = 0usize;
+        let mut meta: Vec<ReqMeta> = Vec::with_capacity(reqs.len());
+        for r in reqs.iter_mut() {
+            let rows = r.a.len() / k;
+            assert_eq!(r.a.len(), rows * k, "operand slice length");
+            assert_eq!(r.out.len(), rows * n, "output slice length");
+            meta.push(ReqMeta {
+                start: total,
+                rows,
+                a: ConstPtr(r.a.as_ptr()),
+                out: SendPtr(r.out.as_mut_ptr()),
+            });
+            total += rows;
+        }
+        self.run_partitioned(total, |lo, hi| {
+            for m in &meta {
+                let s = lo.max(m.start);
+                let e = hi.min(m.start + m.rows);
+                if s >= e {
+                    continue;
+                }
+                let (rlo, rhi) = (s - m.start, e - m.start);
+                // SAFETY: workers own disjoint global row ranges, and the
+                // callers' `&mut out` slices guarantee requests never
+                // alias each other — see SendPtr
+                let a = unsafe { std::slice::from_raw_parts(m.a.0, m.rows * k) };
+                let out = unsafe {
+                    std::slice::from_raw_parts_mut(m.out.0.add(rlo * n), (rhi - rlo) * n)
+                };
+                matmul_rows(a, k, b, out, rlo, rhi);
+            }
         });
     }
 
@@ -293,24 +397,47 @@ impl Engine {
         w: &Mat,
         out: &mut Mat,
     ) {
-        let n = csr.num_nodes();
-        assert_eq!(x.rows, n, "embedding row count");
-        assert_eq!(selfcoef.len(), n, "selfcoef length");
-        assert_eq!(x.cols, w.rows, "matmul shape mismatch");
+        assert_eq!(x.rows, csr.num_nodes(), "embedding row count");
         assert_eq!((out.rows, out.cols), (x.rows, w.cols), "output shape");
+        self.aggregate_matmul_slice_into(csr, selfcoef, &x.data, x.cols, w, &mut out.data);
+    }
+
+    /// [`Self::aggregate_matmul_into`] over borrowed row-major feature
+    /// rows — the allocation-free form the serve sessions run.
+    pub fn aggregate_matmul_slice_into(
+        &self,
+        csr: &SnapshotCsr,
+        selfcoef: &[f32],
+        x: &[f32],
+        d: usize,
+        w: &Mat,
+        out: &mut [f32],
+    ) {
+        let n = csr.num_nodes();
+        assert_eq!(x.len(), n * d, "feature slice length");
+        assert_eq!(selfcoef.len(), n, "selfcoef length");
+        assert_eq!(d, w.rows, "matmul shape mismatch");
+        assert_eq!(out.len(), n * w.cols, "output slice length");
         let nc = w.cols;
-        let ptr = SendPtr(out.data.as_mut_ptr());
+        let ptr = SendPtr(out.as_mut_ptr());
         self.run_partitioned(n, |lo, hi| {
             // SAFETY: disjoint row ranges — see SendPtr
             let slice =
                 unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * nc), (hi - lo) * nc) };
             FUSED_SCRATCH.with(|cell| {
                 let mut scratch = cell.borrow_mut();
-                scratch.resize(x.cols, 0.0);
-                fused_rows(csr, selfcoef, x, w, slice, lo, hi, &mut scratch[..]);
+                scratch.resize(d, 0.0);
+                fused_rows(csr, selfcoef, x, d, w, slice, lo, hi, &mut scratch[..]);
             });
         });
     }
+}
+
+/// One request of a row-stacked [`Engine::matmul_multi_into`] call:
+/// `[rows × k]` operand rows in, `[rows × b.cols]` result rows out.
+pub struct MatmulReq<'a> {
+    pub a: &'a [f32],
+    pub out: &'a mut [f32],
 }
 
 thread_local! {
@@ -323,41 +450,43 @@ thread_local! {
     static FUSED_SCRATCH: std::cell::RefCell<Vec<f32>> = std::cell::RefCell::new(Vec::new());
 }
 
-/// Serial Â·X over destination rows `lo..hi`; `out` covers exactly those
-/// rows.  Accumulation order per row: zero, self-loop term, in-edges in
-/// COO order — the exact addition sequence of the COO reference.
+/// Serial Â·X over destination rows `lo..hi`; `x` is `[num_nodes × d]`
+/// row-major and `out` covers exactly rows `lo..hi`.  Accumulation order
+/// per row: zero, self-loop term, in-edges in COO order — the exact
+/// addition sequence of the COO reference.
 pub(crate) fn aggregate_rows(
     csr: &SnapshotCsr,
     selfcoef: &[f32],
-    x: &Mat,
+    x: &[f32],
+    d: usize,
     out: &mut [f32],
     lo: usize,
     hi: usize,
 ) {
-    let d = x.cols;
     debug_assert_eq!(out.len(), (hi - lo) * d);
     for r in lo..hi {
         let orow = &mut out[(r - lo) * d..(r - lo + 1) * d];
         orow.fill(0.0);
         let sc = selfcoef[r];
-        for (o, &v) in orow.iter_mut().zip(x.row(r)) {
+        for (o, &v) in orow.iter_mut().zip(&x[r * d..(r + 1) * d]) {
             *o += sc * v;
         }
         let (srcs, coefs) = csr.row(r);
         for (&s, &c) in srcs.iter().zip(coefs) {
-            for (o, &v) in orow.iter_mut().zip(x.row(s as usize)) {
+            let srow = &x[s as usize * d..(s as usize + 1) * d];
+            for (o, &v) in orow.iter_mut().zip(srow) {
                 *o += c * v;
             }
         }
     }
 }
 
-/// Cache-blocked serial `a @ b` over rows `lo..hi` of `a`; `out` covers
-/// exactly those rows.  k-terms accumulate in ascending order per output
-/// element (bitwise-equal to the naive ikj loop); the `KC × NC` panel of
-/// `b` stays L1-resident across the row sweep.
-pub(crate) fn matmul_rows(a: &Mat, b: &Mat, out: &mut [f32], lo: usize, hi: usize) {
-    let k_total = a.cols;
+/// Cache-blocked serial `a @ b` over rows `lo..hi` of the packed
+/// `[rows × k_total]` operand `a`; `out` covers exactly those rows.
+/// k-terms accumulate in ascending order per output element
+/// (bitwise-equal to the naive ikj loop); the `KC × NC` panel of `b`
+/// stays L1-resident across the row sweep.
+pub(crate) fn matmul_rows(a: &[f32], k_total: usize, b: &Mat, out: &mut [f32], lo: usize, hi: usize) {
     let n = b.cols;
     debug_assert_eq!(out.len(), (hi - lo) * n);
     out.fill(0.0);
@@ -369,7 +498,7 @@ pub(crate) fn matmul_rows(a: &Mat, b: &Mat, out: &mut [f32], lo: usize, hi: usiz
         for jb in (0..n).step_by(NC) {
             let jend = (jb + NC).min(n);
             for i in lo..hi {
-                let arow = &a.data[i * k_total..(i + 1) * k_total];
+                let arow = &a[i * k_total..(i + 1) * k_total];
                 let orow = &mut out[(i - lo) * n + jb..(i - lo) * n + jend];
                 for (&aik, brow) in arow[kb..kend]
                     .iter()
@@ -385,13 +514,14 @@ pub(crate) fn matmul_rows(a: &Mat, b: &Mat, out: &mut [f32], lo: usize, hi: usiz
 }
 
 /// Fused serial aggregate-project over destination rows `lo..hi`:
-/// aggregate one row into `scratch` (len `x.cols`), then project it
-/// through `w` — Â·X is never materialised.
+/// aggregate one row into `scratch` (len `d`), then project it through
+/// `w` — Â·X is never materialised.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn fused_rows(
     csr: &SnapshotCsr,
     selfcoef: &[f32],
-    x: &Mat,
+    x: &[f32],
+    d: usize,
     w: &Mat,
     out: &mut [f32],
     lo: usize,
@@ -400,12 +530,12 @@ pub(crate) fn fused_rows(
 ) {
     let nc = w.cols;
     debug_assert_eq!(out.len(), (hi - lo) * nc);
-    debug_assert_eq!(scratch.len(), x.cols);
+    debug_assert_eq!(scratch.len(), d);
     if nc == 0 {
         return;
     }
     for r in lo..hi {
-        aggregate_rows(csr, selfcoef, x, scratch, r, r + 1);
+        aggregate_rows(csr, selfcoef, x, d, scratch, r, r + 1);
         let orow = &mut out[(r - lo) * nc..(r - lo + 1) * nc];
         orow.fill(0.0);
         for (&av, brow) in scratch.iter().zip(w.data.chunks_exact(nc)) {
@@ -527,6 +657,68 @@ mod tests {
                 eng.threads()
             );
         }
+    }
+
+    #[test]
+    fn multi_request_matmul_bitwise_equals_standalone_calls() {
+        let mut rng = Pcg32::seeded(31);
+        let k = 24;
+        let b = random_mat(&mut rng, k, 40);
+        // ragged request sizes, including a single-row and an empty one
+        let sizes = [7usize, 1, 0, 13, 30];
+        let mats: Vec<Mat> = sizes.iter().map(|&m| random_mat(&mut rng, m, k)).collect();
+        for eng in [Engine::serial(), Engine::new(3)] {
+            let want: Vec<Mat> = mats
+                .iter()
+                .map(|a| {
+                    let mut out = Mat::zeros(a.rows, b.cols);
+                    eng.matmul_into(a, &b, &mut out);
+                    out
+                })
+                .collect();
+            let mut outs: Vec<Vec<f32>> =
+                sizes.iter().map(|&m| vec![9.0; m * b.cols]).collect();
+            {
+                let mut reqs: Vec<MatmulReq> = mats
+                    .iter()
+                    .zip(outs.iter_mut())
+                    .map(|(a, out)| MatmulReq { a: &a.data, out })
+                    .collect();
+                eng.matmul_multi_into(k, &b, &mut reqs);
+            }
+            for (i, (got, w)) in outs.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    w.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "request {i} threads={}",
+                    eng.threads()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_and_slice_entry_points_match_mat_forms() {
+        let mut rng = Pcg32::seeded(32);
+        let snap = random_snapshot(&mut rng, 41, 160);
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        let x = random_mat(&mut rng, 41, 12);
+        let w = random_mat(&mut rng, 12, 9);
+        let eng = Engine::new(2);
+        let agg = eng.aggregate(&csr, &snap.selfcoef, &x);
+        let mut agg_s = vec![0.0f32; 41 * 12];
+        eng.aggregate_slice_into(&csr, &snap.selfcoef, &x.data, 12, &mut agg_s);
+        assert_eq!(agg.data, agg_s);
+        let mut mm = Mat::zeros(41, 9);
+        eng.matmul_into(&agg, &w, &mut mm);
+        let mut mm_s = vec![0.0f32; 41 * 9];
+        eng.matmul_packed_into(&agg_s, 41, 12, &w, &mut mm_s);
+        assert_eq!(mm.data, mm_s);
+        let mut fused = Mat::zeros(41, 9);
+        eng.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut fused);
+        let mut fused_s = vec![0.0f32; 41 * 9];
+        eng.aggregate_matmul_slice_into(&csr, &snap.selfcoef, &x.data, 12, &w, &mut fused_s);
+        assert_eq!(fused.data, fused_s);
     }
 
     #[test]

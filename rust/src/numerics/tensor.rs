@@ -64,7 +64,7 @@ impl Mat {
         let mut out = Mat::zeros(self.rows, other.cols);
         let use_skip = self.sampled_zero_frac() > 0.25;
         if !use_skip {
-            super::spmm::matmul_rows(self, other, &mut out.data, 0, self.rows);
+            super::spmm::matmul_rows(&self.data, self.cols, other, &mut out.data, 0, self.rows);
             return out;
         }
         for i in 0..self.rows {

@@ -6,7 +6,7 @@
 //! * consumers read back only the first `num_nodes` rows.
 //!
 //! Buffers are reusable across snapshots (the hot path never
-//! reallocates — see EXPERIMENTS.md §Perf).
+//! reallocates — asserted by `rust/tests/alloc_hotpath.rs`).
 
 use crate::error::{Error, Result};
 use crate::fpga::incremental::{DeltaPlan, DeltaStats};

@@ -1,0 +1,451 @@
+//! Cross-stream batched projection: the layer between the scheduler's
+//! inference thread and `numerics::spmm::Engine` that fuses same-weight
+//! dense projections from **different tenants** into one engine call.
+//!
+//! The paper's core complaint is that temporal data dependencies leave
+//! hardware underutilized (§V–§VI); in serving terms, a scheduler that
+//! issues one small GEMM per tenant per step keeps the engine in
+//! exactly that low-utilization regime.  This module implements the
+//! serving-side answer: each scheduling round, every ready tenant runs
+//! the front half of its step ([`BatchableSession::begin_step`] —
+//! aggregation and anything else that precedes the dense projections),
+//! the [`BatchPlanner`] groups the announced [`Projection`]s by
+//! [`BatchKey`] (tenants whose keys are equal are *guaranteed* to hold
+//! bitwise-identical weight matrices), issues **one** row-stacked
+//! cache-blocked call per group (`Engine::matmul_multi_into`), and then
+//! every tenant finishes its step from its own result rows
+//! ([`BatchableSession::finish_step`]).
+//!
+//! Per tenant the batched path is **bitwise-equal** to the unbatched
+//! one: the row-stacked kernel accumulates each output row's k-terms in
+//! the same ascending order regardless of which rows surround it, and
+//! [`step_unbatched`] — the single-tenant resolution `DgnnSession::infer`
+//! is built on for mirror sessions — runs the very same
+//! begin → project → finish sequence.  Pinned by
+//! `rust/tests/prop_serve.rs` (batch-on ≡ batch-off at 1/2/4 threads ×
+//! delta on/off × mixed model kinds) and `rust/tests/chaos_serve.rs`
+//! (batching under random admit/remove/reweight/stop scripts).
+
+use super::session::BatchableSession;
+use crate::error::{Error, Result};
+use crate::models::{Dims, ModelKind};
+use crate::numerics::{Engine, Mat, MatmulReq};
+use std::collections::HashMap;
+
+/// The most projections one session may announce per step (the mirror
+/// sessions emit one or two).
+pub const MAX_PROJ: usize = 4;
+
+/// Fusion fingerprint of one projection: requests with equal keys are
+/// **guaranteed** to multiply by bitwise-identical weight matrices, so
+/// the planner may row-stack them into one GEMM.
+///
+/// The guarantee holds because session parameters are a pure function
+/// of `(kind, seed, dims)` (`ModelKind::init_params`) and weight
+/// evolution is deterministic per step: `version` counts evolution
+/// epochs (always 0 for the static-weight GCRN models, the served-step
+/// count for EvolveGCN), so two same-seed EvolveGCN tenants fuse only
+/// while they are at the same step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub kind: ModelKind,
+    pub seed: u64,
+    pub dims: Dims,
+    /// Weight-evolution epoch (0 forever for static weights).
+    pub version: u64,
+    /// Which of the session's per-step projections this is (its index
+    /// in the `begin_step` output).
+    pub tag: u8,
+}
+
+/// One batchable dense projection announced by a session's
+/// [`BatchableSession::begin_step`]: multiply the `[rows × k]` operand
+/// (readable via [`BatchableSession::operand`]) by the session's weight
+/// matrix ([`BatchableSession::weight`]) into `[rows × n]` result rows.
+#[derive(Clone, Copy, Debug)]
+pub struct Projection {
+    pub key: BatchKey,
+    pub rows: usize,
+    /// Operand width (== weight rows).
+    pub k: usize,
+    /// Result width (== weight cols).
+    pub n: usize,
+}
+
+/// Counters of one batched serving run, reported in `BENCH_serve.json`
+/// (schema in README.md § serve).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BatchStats {
+    /// Scheduling rounds the planner served (≥ 1 batchable step each).
+    pub rounds: u64,
+    /// Session steps served through begin/fuse/finish.
+    pub steps: u64,
+    /// Steps served by plain `infer` because the session does not
+    /// support batching (e.g. PJRT sessions) — counted by the scheduler.
+    pub fallback_steps: u64,
+    /// Fused engine GEMM calls issued (one per key group per round).
+    pub fused_calls: u64,
+    /// Projection requests folded into those calls.
+    pub fused_requests: u64,
+    /// Operand rows pushed through the fused calls.
+    pub fused_rows: u64,
+}
+
+impl BatchStats {
+    /// Mean projection requests per fused engine call — 1.0 means no
+    /// cross-tenant sharing materialized, higher means real fusion.
+    pub fn occupancy(&self) -> f64 {
+        if self.fused_calls == 0 {
+            0.0
+        } else {
+            self.fused_requests as f64 / self.fused_calls as f64
+        }
+    }
+
+    /// Mean operand rows per fused engine call (the GEMM height the
+    /// engine actually saw, vs one tenant's snapshot alone).
+    pub fn rows_per_call(&self) -> f64 {
+        if self.fused_calls == 0 {
+            0.0
+        } else {
+            self.fused_rows as f64 / self.fused_calls as f64
+        }
+    }
+}
+
+/// One tenant's slice of a scheduling round: its session's batchable
+/// half plus the staged snapshot it is serving.
+pub struct RoundMember<'a> {
+    pub session: &'a mut dyn BatchableSession,
+    pub snap: &'a crate::graph::Snapshot,
+    pub slot: &'a crate::runtime::StagingSlot,
+}
+
+/// One projection request's place inside a round: which member emitted
+/// it, under which tag, and how many result values it owns.
+struct Entry {
+    member: usize,
+    tag: usize,
+    rows: usize,
+    len: usize,
+}
+
+/// All same-key projection requests of one round — one fused GEMM.
+struct Group {
+    k: usize,
+    n: usize,
+    entries: Vec<Entry>,
+}
+
+/// The cross-stream batching layer: groups one scheduling round's
+/// projections by [`BatchKey`], issues one row-stacked engine call per
+/// group, scatters the result rows back, and accumulates [`BatchStats`]
+/// across the run.
+///
+/// All round bookkeeping (specs, groups, offsets, the shared result
+/// buffer) lives in persistent scratch reused across rounds, so the
+/// inference thread's steady-state allocator traffic stays bounded —
+/// the same standard the staging path and mirror sessions are held to.
+/// (The one remaining per-call allocation is the tiny request list each
+/// fused GEMM hands the engine — it borrows round-local data and cannot
+/// outlive it.)
+#[derive(Default)]
+pub struct BatchPlanner {
+    pub stats: BatchStats,
+    /// Per-member projection specs (inner Vecs keep their capacity).
+    specs: Vec<Vec<Projection>>,
+    /// Same-key groups of the current round (entry Vecs keep capacity).
+    groups: Vec<Group>,
+    /// Key → index into `groups` for the current round.
+    index: HashMap<BatchKey, usize>,
+    /// Per (member, tag): offset + length into `out_buf`.
+    member_offs: Vec<[(usize, usize); MAX_PROJ]>,
+    /// The round's shared projected-rows buffer.
+    out_buf: Vec<f32>,
+}
+
+impl BatchPlanner {
+    pub fn new() -> BatchPlanner {
+        BatchPlanner::default()
+    }
+
+    /// Serve one round: run every member's `begin_step`, fuse same-key
+    /// projections across members into row-stacked GEMMs, then run
+    /// every member's `finish_step` in round order.  Members must be
+    /// **distinct tenants** (one step each — a recurrent tenant's next
+    /// snapshot depends on this one's state).
+    ///
+    /// On error the round is abandoned mid-step; the scheduler treats
+    /// that as fatal to the run, exactly like an `infer` error.
+    pub fn run_round(&mut self, engine: &Engine, members: &mut [RoundMember<'_>]) -> Result<()> {
+        if members.is_empty() {
+            return Ok(());
+        }
+        // phase A: front half of every step, collecting projection specs
+        if self.specs.len() < members.len() {
+            self.specs.resize_with(members.len(), Vec::new);
+        }
+        for sp in &mut self.specs[..members.len()] {
+            sp.clear();
+        }
+        for (m, sp) in members.iter_mut().zip(&mut self.specs) {
+            m.session.begin_step(m.snap, m.slot, sp)?;
+            if sp.len() > MAX_PROJ {
+                return Err(Error::Usage(format!(
+                    "session announced {} projections (max {MAX_PROJ})",
+                    sp.len()
+                )));
+            }
+        }
+        let specs = &self.specs[..members.len()];
+
+        // phase B: group by key (first-seen order), assign every entry a
+        // contiguous region of one shared result buffer.  Group slots
+        // are recycled so their entry Vecs keep capacity across rounds.
+        let mut ngroups = 0usize;
+        self.index.clear();
+        for (mi, sp) in specs.iter().enumerate() {
+            for (tag, p) in sp.iter().enumerate() {
+                let gi = *self.index.entry(p.key).or_insert_with(|| {
+                    if ngroups == self.groups.len() {
+                        self.groups.push(Group { k: p.k, n: p.n, entries: Vec::new() });
+                    } else {
+                        let g = &mut self.groups[ngroups];
+                        g.k = p.k;
+                        g.n = p.n;
+                        g.entries.clear();
+                    }
+                    ngroups += 1;
+                    ngroups - 1
+                });
+                debug_assert_eq!(
+                    (self.groups[gi].k, self.groups[gi].n),
+                    (p.k, p.n),
+                    "key fixes the shape"
+                );
+                self.groups[gi].entries.push(Entry {
+                    member: mi,
+                    tag,
+                    rows: p.rows,
+                    len: p.rows * p.n,
+                });
+            }
+        }
+        let groups = &self.groups[..ngroups];
+        self.member_offs.clear();
+        self.member_offs.resize(members.len(), [(0usize, 0usize); MAX_PROJ]);
+        let mut total = 0usize;
+        for g in groups {
+            for e in &g.entries {
+                self.member_offs[e.member][e.tag] = (total, e.len);
+                total += e.len;
+            }
+        }
+        self.out_buf.clear();
+        self.out_buf.resize(total, 0.0);
+
+        // phase C: one row-stacked engine call per group — the weight
+        // comes from the first member, which the BatchKey contract makes
+        // representative of every member in the group
+        {
+            let mut rest: &mut [f32] = &mut self.out_buf;
+            for g in groups {
+                let glen: usize = g.entries.iter().map(|e| e.len).sum();
+                let (mut region, tail) = std::mem::take(&mut rest).split_at_mut(glen);
+                rest = tail;
+                let mut reqs: Vec<MatmulReq> = Vec::with_capacity(g.entries.len());
+                for e in &g.entries {
+                    let (o, r2) = std::mem::take(&mut region).split_at_mut(e.len);
+                    region = r2;
+                    reqs.push(MatmulReq {
+                        a: members[e.member].session.operand(e.tag),
+                        out: o,
+                    });
+                }
+                let first = &g.entries[0];
+                let w: &Mat = members[first.member].session.weight(first.tag);
+                engine.matmul_multi_into(g.k, w, &mut reqs);
+                self.stats.fused_calls += 1;
+                self.stats.fused_requests += g.entries.len() as u64;
+                self.stats.fused_rows += g.entries.iter().map(|e| e.rows as u64).sum::<u64>();
+            }
+        }
+
+        // phase D: back half of every step, in round order
+        for (mi, m) in members.iter_mut().enumerate() {
+            let sp = &self.specs[mi];
+            let mut refs: [&[f32]; MAX_PROJ] = [&[]; MAX_PROJ];
+            for (t, r) in refs.iter_mut().enumerate().take(sp.len()) {
+                let (off, len) = self.member_offs[mi][t];
+                *r = &self.out_buf[off..off + len];
+            }
+            m.session.finish_step(m.snap, m.slot, &refs[..sp.len()])?;
+            self.stats.steps += 1;
+        }
+        self.stats.rounds += 1;
+        Ok(())
+    }
+}
+
+/// Resolve one session's step without cross-tenant fusion: the same
+/// begin → project (one [`Engine::matmul_packed_into`] per projection)
+/// → finish sequence the planner runs, specialized to a single member.
+/// `MirrorSession::infer` is this function over per-session scratch, so
+/// batch-off serving and batch-on serving share every arithmetic step
+/// except the (bitwise-neutral) row stacking.
+///
+/// `specs` and `out` are caller scratch so steady-state calls allocate
+/// nothing once their high-water capacity is reached.
+pub fn step_unbatched(
+    eng: &Engine,
+    session: &mut dyn BatchableSession,
+    snap: &crate::graph::Snapshot,
+    slot: &crate::runtime::StagingSlot,
+    specs: &mut Vec<Projection>,
+    out: &mut Vec<f32>,
+) -> Result<()> {
+    specs.clear();
+    session.begin_step(snap, slot, specs)?;
+    if specs.len() > MAX_PROJ {
+        // same recoverable failure mode as the planner's round path
+        return Err(Error::Usage(format!(
+            "session announced {} projections (max {MAX_PROJ})",
+            specs.len()
+        )));
+    }
+    let mut offs = [0usize; MAX_PROJ + 1];
+    for (i, p) in specs.iter().enumerate() {
+        offs[i + 1] = offs[i] + p.rows * p.n;
+    }
+    let total = offs[specs.len()];
+    out.resize(total, 0.0);
+    for (i, p) in specs.iter().enumerate() {
+        eng.matmul_packed_into(
+            session.operand(i),
+            p.rows,
+            p.k,
+            session.weight(i),
+            &mut out[offs[i]..offs[i + 1]],
+        );
+    }
+    let mut refs: [&[f32]; MAX_PROJ] = [&[]; MAX_PROJ];
+    for (i, r) in refs.iter_mut().enumerate().take(specs.len()) {
+        *r = &out[offs[i]..offs[i + 1]];
+    }
+    session.finish_step(snap, slot, &refs[..specs.len()])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::preprocess::preprocess_stream;
+    use crate::datasets::{synth, BC_ALPHA};
+    use crate::graph::Snapshot;
+    use crate::runtime::{Manifest, StagingSlot};
+    use crate::serve::session::{DgnnSession, SessionConfig};
+    use std::sync::Arc;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn setup() -> (Vec<Snapshot>, Manifest, usize) {
+        let stream = synth::generate(&BC_ALPHA, 9);
+        let mut snaps = preprocess_stream(&stream, BC_ALPHA.splitter_secs).unwrap();
+        snaps.truncate(6);
+        let d = Dims::default();
+        let m = Manifest {
+            max_nodes: snaps.iter().map(Snapshot::num_nodes).max().unwrap(),
+            max_edges: snaps.iter().map(Snapshot::num_edges).max().unwrap(),
+            in_dim: d.in_dim,
+            hidden_dim: d.hidden_dim,
+            out_dim: d.out_dim,
+        };
+        (snaps, m, stream.num_nodes as usize)
+    }
+
+    fn cfg(total: usize, max_nodes: usize, seed: u64, engine: &Arc<Engine>) -> SessionConfig {
+        SessionConfig {
+            dims: Dims::default(),
+            seed,
+            total_nodes: total,
+            max_nodes,
+            delta: false,
+            engine: Arc::clone(engine),
+        }
+    }
+
+    /// Two same-seed GCRN-M2 tenants plus one GCRN-M1: planner rounds
+    /// must fuse the M2 pair (occupancy > 1) and stay bitwise-equal to
+    /// three independent `infer` drives over the same staged slots.
+    #[test]
+    fn planner_rounds_fuse_and_match_unbatched_inference() {
+        let (snaps, m, total) = setup();
+        let engine = Arc::new(Engine::new(2));
+        let specs: [(ModelKind, u64); 3] = [
+            (ModelKind::GcrnM2, 7),
+            (ModelKind::GcrnM2, 7), // fuses with the first
+            (ModelKind::GcrnM1, 9), // singleton groups
+        ];
+        let mut batched: Vec<Box<dyn DgnnSession>> = specs
+            .iter()
+            .map(|(k, s)| k.build_session(&cfg(total, m.max_nodes, *s, &engine)))
+            .collect();
+        let mut reference: Vec<Box<dyn DgnnSession>> = specs
+            .iter()
+            .map(|(k, s)| k.build_session(&cfg(total, m.max_nodes, *s, &engine)))
+            .collect();
+        let mut stager = batched[0].make_stager(&m);
+        let mut slot = StagingSlot::new(&m);
+        let mut planner = BatchPlanner::new();
+        for snap in &snaps {
+            // all three tenants share one stream here, so one staged
+            // slot serves the whole round
+            stager.stage(snap, &mut slot).unwrap();
+            for s in batched.iter_mut().chain(reference.iter_mut()) {
+                s.prepare(snap).unwrap();
+            }
+            let mut members: Vec<RoundMember> = batched
+                .iter_mut()
+                .map(|s| RoundMember {
+                    session: s.batchable().expect("mirror sessions batch"),
+                    snap,
+                    slot: &slot,
+                })
+                .collect();
+            planner.run_round(&engine, &mut members).unwrap();
+            drop(members);
+            for (b, r) in batched.iter().zip(reference.iter_mut()) {
+                r.infer(snap, &slot).unwrap();
+                assert_eq!(bits(b.output()), bits(r.output()), "batched step diverged");
+            }
+        }
+        let st = planner.stats;
+        assert_eq!(st.rounds, snaps.len() as u64);
+        assert_eq!(st.steps, 3 * snaps.len() as u64);
+        // per round: M2 pair fuses per tag (2 calls × 2 requests), M1
+        // contributes 2 singleton calls → 4 calls, 6 requests
+        assert_eq!(st.fused_calls, 4 * snaps.len() as u64);
+        assert_eq!(st.fused_requests, 6 * snaps.len() as u64);
+        assert!((st.occupancy() - 1.5).abs() < 1e-12, "occupancy {}", st.occupancy());
+        assert!(st.rows_per_call() >= 1.0);
+    }
+
+    #[test]
+    fn keys_separate_kinds_seeds_and_versions() {
+        let d = Dims::default();
+        let base = BatchKey { kind: ModelKind::GcrnM2, seed: 1, dims: d, version: 0, tag: 0 };
+        assert_eq!(base, base);
+        assert_ne!(base, BatchKey { kind: ModelKind::GcrnM1, ..base });
+        assert_ne!(base, BatchKey { seed: 2, ..base });
+        assert_ne!(base, BatchKey { version: 1, ..base });
+        assert_ne!(base, BatchKey { tag: 1, ..base });
+    }
+
+    #[test]
+    fn stats_ratios_are_safe_on_empty() {
+        let st = BatchStats::default();
+        assert_eq!(st.occupancy(), 0.0);
+        assert_eq!(st.rows_per_call(), 0.0);
+    }
+}

@@ -1,12 +1,18 @@
 //! Serving-side measurement: a bounded per-request latency ring buffer
-//! with tail percentiles, an aggregate recorder, and the hand-rolled
-//! JSON emitter for `BENCH_serve.json` (no serde in the offline crate
-//! set — same idiom as `metrics::bench_json`).
+//! with tail percentiles, an aggregate recorder, per-tenant fairness
+//! accounting ([`fairness_summary`], weighted Jain index), and the
+//! hand-rolled JSON emitter for `BENCH_serve.json` (no serde in the
+//! offline crate set — same idiom as `metrics::bench_json`), including
+//! the cross-stream batching counters ([`super::batch::BatchStats`] —
+//! rounds, fused calls, occupancy) on batch-enabled sweep points.
 //!
 //! The ring is what a production frontend would keep: a fixed-capacity
 //! window over the most recent requests, so tail latency reflects the
 //! current traffic mix rather than the whole history, and memory stays
-//! bounded no matter how long the server runs.
+//! bounded no matter how long the server runs.  The ring's percentile
+//! math is pinned against a naive sort reference, and the fairness /
+//! JSON shapes by the unit tests below; end-to-end field semantics are
+//! documented in README.md § serve.
 
 /// Fixed-capacity ring of the most recent per-request latencies (ms).
 ///
@@ -244,8 +250,9 @@ pub fn fairness_of(outcomes: &[super::scheduler::StreamOutcome]) -> FairnessSumm
     fairness_summary(&refs)
 }
 
-/// One row of `BENCH_serve.json`: a (streams × delta) sweep point,
-/// optionally with per-tenant fairness (weighted / churn points).
+/// One row of `BENCH_serve.json`: a (streams × delta × batch) sweep
+/// point, optionally with per-tenant fairness (weighted / churn points)
+/// and cross-stream batching counters (batched points).
 #[derive(Clone, Debug)]
 pub struct ServeRow {
     pub name: String,
@@ -254,11 +261,16 @@ pub struct ServeRow {
     pub threads: usize,
     pub summary: ServeSummary,
     pub fairness: Option<FairnessSummary>,
+    /// Batching counters of the run (`Scheduler::serve_report`); `Some`
+    /// on batch-enabled sweep points.
+    pub batch: Option<super::batch::BatchStats>,
 }
 
 /// Serialise sweep rows plus scalar metadata as JSON (schema documented
 /// in README.md § serve).  Rows carrying a [`FairnessSummary`] gain a
-/// `"jain"` scalar and a `"tenants"` array.
+/// `"jain"` scalar and a `"tenants"` array; rows carrying
+/// [`super::batch::BatchStats`] gain the `"batch_*"` / `"fused_*"`
+/// counters.
 pub fn serve_json(rows: &[ServeRow], extra: &[(&str, f64)]) -> String {
     let mut s = String::from("{\n  \"benches\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -279,6 +291,21 @@ pub fn serve_json(rows: &[ServeRow], extra: &[(&str, f64)]) -> String {
             m.throughput_per_s,
             m.wall_s,
         ));
+        if let Some(b) = &r.batch {
+            s.push_str(&format!(
+                ",\n     \"batch_rounds\": {}, \"batch_steps\": {}, \"fallback_steps\": {}, \
+                 \"fused_calls\": {}, \"fused_requests\": {}, \"fused_rows\": {}, \
+                 \"batch_occupancy\": {:e}, \"fused_rows_per_call\": {:e}",
+                b.rounds,
+                b.steps,
+                b.fallback_steps,
+                b.fused_calls,
+                b.fused_requests,
+                b.fused_rows,
+                b.occupancy(),
+                b.rows_per_call(),
+            ));
+        }
         if let Some(f) = &r.fairness {
             s.push_str(&format!(",\n     \"jain\": {:e},\n     \"tenants\": [", f.jain));
             for (j, t) in f.tenants.iter().enumerate() {
@@ -365,6 +392,14 @@ mod tests {
     fn serve_json_shape() {
         let mut rec = ServeRecorder::new(8);
         rec.record_ms(1.0);
+        let batch = crate::serve::batch::BatchStats {
+            rounds: 5,
+            steps: 10,
+            fallback_steps: 0,
+            fused_calls: 8,
+            fused_requests: 20,
+            fused_rows: 400,
+        };
         let rows = vec![
             ServeRow {
                 name: "serve streams=2 delta=on".into(),
@@ -373,6 +408,7 @@ mod tests {
                 threads: 2,
                 summary: rec.summary(1.0),
                 fairness: None,
+                batch: Some(batch),
             },
             ServeRow {
                 name: "serve streams=4 delta=off".into(),
@@ -384,6 +420,7 @@ mod tests {
                     ("t0", 1, &[1.0, 2.0]),
                     ("t1", 3, &[1.0, 1.5, 2.0, 2.5, 3.0, 3.5]),
                 ])),
+                batch: None,
             },
         ];
         let json = serve_json(&rows, &[("smoke", 1.0)]);
@@ -397,6 +434,11 @@ mod tests {
         assert_eq!(json.matches("\"jain\"").count(), 1);
         assert_eq!(json.matches("\"fair_share\"").count(), 2);
         assert!(json.contains("\"weight\": 3"));
+        // batching counters only on the row that carries stats
+        assert_eq!(json.matches("\"fused_calls\"").count(), 1);
+        assert!(json.contains("\"fused_calls\": 8"));
+        assert!(json.contains("\"batch_occupancy\": 2.5e0"));
+        assert!(json.contains("\"fused_rows_per_call\": 5e1"));
     }
 
     /// Nearest-rank reference computed the naive way: sort everything,

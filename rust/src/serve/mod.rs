@@ -18,18 +18,29 @@
 //!   per-stream FIFO ordering plus bounded in-flight backpressure hold
 //!   throughout; [`run_session`] is the single-stream special case on
 //!   `coordinator::pipeline::run_stream_staged`.
+//! * [`batch`] — cross-stream batched projection: each scheduling
+//!   round, the [`BatchPlanner`] fuses same-weight dense projections
+//!   from different tenants ([`BatchableSession`] split steps, grouped
+//!   by [`BatchKey`]) into one row-stacked engine call — bitwise-equal
+//!   per tenant to the unbatched path.  Enabled with
+//!   [`Scheduler::with_batching`] / `dgnn-booster serve --batch`.
 //! * [`metrics`] — per-request latency ring buffer → p50/p95/p99 +
 //!   throughput, per-tenant fairness accounting ([`fairness_summary`],
-//!   weighted Jain index), and the `BENCH_serve.json` emitter.
+//!   weighted Jain index), batch-occupancy counters ([`BatchStats`]),
+//!   and the `BENCH_serve.json` emitter.
 //!
 //! The design follows the dynamic-graph-service shape (Alibaba DGS, see
 //! PAPERS.md): dynamic-graph inference behind a service layer that
 //! shares compute across many independent streams.
 
+pub mod batch;
 pub mod metrics;
 pub mod scheduler;
 pub mod session;
 
+pub use batch::{
+    step_unbatched, BatchKey, BatchPlanner, BatchStats, Projection, RoundMember,
+};
 pub use metrics::{
     fairness_of, fairness_summary, serve_json, write_serve_json, FairnessSummary, LatencyRing,
     ServeRecorder, ServeRow, ServeSummary, TenantSummary,
@@ -39,6 +50,6 @@ pub use scheduler::{
     StreamSource, TenantId,
 };
 pub use session::{
-    build_pjrt_session, DeltaCounts, DgnnSession, MirrorSession, PjrtSession, RecurrentState,
-    SessionConfig, SessionStager, StreamStager, TenantSpec,
+    build_pjrt_session, BatchableSession, DeltaCounts, DgnnSession, MirrorSession, PjrtSession,
+    RecurrentState, SessionConfig, SessionStager, StreamStager, TenantSpec,
 };

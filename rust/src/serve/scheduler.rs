@@ -4,7 +4,7 @@
 //! (§IV-D / `coordinator::pipeline`) lifted across tenants.
 //!
 //! Topology: each tenant stream gets a **stage thread** (preprocess the
-//! window, win a [`StagingSlot`] from the shared [`SlotGovernor`], run
+//! window, win a [`StagingSlot`] from the shared slot governor, run
 //! its [`SessionStager`]), and all tenants funnel staged work through
 //! one `std::sync::mpsc` channel to the **inference thread** (the
 //! caller), which drives each tenant's [`DgnnSession`] in arrival
@@ -26,11 +26,27 @@
 //! per-tenant throughput converges to the weight ratio instead of
 //! first-come-first-served.
 //!
+//! With batching enabled ([`Scheduler::with_batching`], CLI
+//! `serve --batch`), the inference thread serves **rounds** instead of
+//! single jobs: it drains every staged snapshot already queued (at most
+//! one per tenant, so recurrent state stays sequential), runs the front
+//! half of each step, and hands the round to
+//! [`super::batch::BatchPlanner`], which fuses same-weight projections
+//! from different tenants into one row-stacked engine call — the
+//! serving-side answer to the paper's under-utilization complaint
+//! (many small per-tenant GEMMs → one large one).  Per tenant the
+//! batched path is bitwise-equal to the unbatched one (pinned by
+//! `rust/tests/prop_serve.rs` and `rust/tests/chaos_serve.rs`); WFQ
+//! grants, drain/removal semantics and per-stream FIFO order are
+//! untouched because batching only regroups work that was already
+//! staged and granted.
+//!
 //! [`run_session`] is the single-stream special case, expressed directly
 //! on `coordinator::pipeline::run_stream_staged` so a lone stream keeps
 //! the within-stream three-stage overlap; both examples and the
 //! single-stream CLI path go through it.
 
+use super::batch::{BatchPlanner, BatchStats, RoundMember};
 use super::session::{DeltaCounts, DgnnSession, SessionStager, TenantSpec};
 use crate::coordinator::pipeline::{run_stream_staged, StepResult};
 use crate::coordinator::preprocess::preprocess_window;
@@ -62,7 +78,9 @@ pub struct StepRecord {
     pub index: usize,
     /// Staging (pad + CSR + features) on the stream's stage thread.
     pub stage_ms: f64,
-    /// The inference step itself.
+    /// The inference step itself.  Under batching a step shares its
+    /// scheduling round's fused engine calls with the other tenants, so
+    /// this is the job's equal share of the round's inference time.
     pub infer_ms: f64,
     /// End-to-end: slot acquired → inference done (includes queueing).
     pub e2e_ms: f64,
@@ -458,12 +476,23 @@ fn spawn_stage<'scope>(
 pub struct Scheduler {
     engine: Arc<Engine>,
     slots: usize,
+    batch: bool,
 }
 
 impl Scheduler {
     /// `slots` bounds in-flight staged snapshots across all tenants.
     pub fn new(engine: Arc<Engine>, slots: usize) -> Scheduler {
-        Scheduler { engine, slots: slots.max(1) }
+        Scheduler { engine, slots: slots.max(1), batch: false }
+    }
+
+    /// Toggle cross-stream batched projection (`serve::batch`): the
+    /// inference thread serves scheduling rounds and fuses same-weight
+    /// projections from different tenants into one engine call.
+    /// Off by default; per-tenant outputs are bitwise identical either
+    /// way.
+    pub fn with_batching(mut self, on: bool) -> Scheduler {
+        self.batch = on;
+        self
     }
 
     pub fn engine(&self) -> &Arc<Engine> {
@@ -560,9 +589,28 @@ impl Scheduler {
         &self,
         manifest: &Manifest,
         tenants: Vec<TenantSpec>,
+        control: C,
+        on_step: F,
+    ) -> Result<Vec<StreamOutcome>>
+    where
+        C: FnMut(ServeEvent) -> Vec<Command>,
+        F: FnMut(TenantId, &Snapshot, &StagingSlot, &[f32]) -> Result<()>,
+    {
+        self.serve_report(manifest, tenants, control, on_step)
+            .map(|(outcomes, _)| outcomes)
+    }
+
+    /// [`Self::serve`] plus the run's cross-stream batching counters
+    /// ([`BatchStats`] — all-zero when batching is off): rounds served,
+    /// fused engine calls, batch occupancy.  The CLI and
+    /// `benches/serve_traffic.rs` report them into `BENCH_serve.json`.
+    pub fn serve_report<C, F>(
+        &self,
+        manifest: &Manifest,
+        tenants: Vec<TenantSpec>,
         mut control: C,
         mut on_step: F,
-    ) -> Result<Vec<StreamOutcome>>
+    ) -> Result<(Vec<StreamOutcome>, BatchStats)>
     where
         C: FnMut(ServeEvent) -> Vec<Command>,
         F: FnMut(TenantId, &Snapshot, &StagingSlot, &[f32]) -> Result<()>,
@@ -575,12 +623,23 @@ impl Scheduler {
         let mut done: Vec<StreamOutcome> = Vec::new();
         let mut next_id: TenantId = 0;
         let mut served_total: u64 = 0;
+        let mut planner = BatchPlanner::new();
 
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
             let mut pending: VecDeque<Command> =
                 tenants.into_iter().map(Command::Admit).collect();
             let mut active_threads = 0usize;
+            // staged work drained from the channel but not yet served
+            // (batching holds a tenant's further snapshots here while
+            // one is in the current round)
+            let mut ready: VecDeque<Msg> = VecDeque::new();
+            // round scratch, hoisted so the steady-state loop reuses
+            // capacity instead of allocating per served step (round and
+            // todo are fully drained every iteration)
+            let mut round: Vec<StagedJob> = Vec::new();
+            let mut seen: Vec<TenantId> = Vec::new();
+            let mut todo: Vec<(StagedJob, bool)> = Vec::new();
 
             let outcome: Result<()> = 'serve: loop {
                 // apply queued lifecycle commands first
@@ -645,7 +704,7 @@ impl Scheduler {
                     }
                 }
 
-                if active_threads == 0 {
+                if active_threads == 0 && ready.is_empty() {
                     let cmds = control(ServeEvent::Idle);
                     if cmds.is_empty() {
                         break 'serve Ok(());
@@ -657,66 +716,198 @@ impl Scheduler {
                 // active stage threads guarantee a message eventually
                 // arrives (every thread's last word is Done, sent from
                 // a drop guard even on unwind)
-                let msg = match rx_ready.recv() {
-                    Ok(m) => m,
-                    Err(_) => break 'serve Ok(()),
-                };
-                match msg {
-                    Msg::Done { tenant, stager, err } => {
-                        active_threads -= 1;
-                        if let Some(e) = err {
-                            break 'serve Err(e);
-                        }
-                        let Some(mut l) = live.remove(&tenant) else { continue };
-                        l.outcome.feature_delta = stager.and_then(|s| s.feature_delta());
-                        l.outcome.state_delta = l.session.finish();
-                        l.outcome.removed = l.outcome.steps.len() < l.expected;
-                        governor.retire(tenant);
-                        done.push(l.outcome);
-                        pending.extend(control(ServeEvent::Drained { tenant }));
+                if ready.is_empty() {
+                    match rx_ready.recv() {
+                        Ok(m) => ready.push_back(m),
+                        Err(_) => break 'serve Ok(()),
                     }
-                    Msg::Job(job) => {
-                        let StagedJob { tenant, snap, slot, stage_ms, t_req, staged } = job;
-                        if let Err(e) = staged {
-                            governor.release(slot); // recycle before surfacing
-                            break 'serve Err(e);
+                }
+                if self.batch {
+                    // round-based ready-set collection: pull in whatever
+                    // else the stage threads already queued (bounded by
+                    // the slot pool) so same-shape projections from
+                    // different tenants can fuse
+                    while let Ok(m) = rx_ready.try_recv() {
+                        ready.push_back(m);
+                    }
+                }
+
+                // build this round: at most one job per tenant (a
+                // recurrent tenant's next snapshot depends on this one),
+                // queue order preserved per tenant.  A tenant's Done is
+                // handled only once none of its jobs are still queued —
+                // per-sender FIFO puts it after all of them.
+                debug_assert!(round.is_empty() && todo.is_empty());
+                seen.clear();
+                let mut i = 0;
+                while i < ready.len() {
+                    let (tenant, is_job) = match &ready[i] {
+                        Msg::Job(j) => (j.tenant, true),
+                        Msg::Done { tenant, .. } => (*tenant, false),
+                    };
+                    if seen.contains(&tenant) {
+                        i += 1; // this tenant already acts this round
+                        continue;
+                    }
+                    if is_job {
+                        seen.push(tenant);
+                        match ready.remove(i) {
+                            Some(Msg::Job(j)) => round.push(j),
+                            _ => unreachable!("probed above"),
                         }
-                        let Some(l) = live.get_mut(&tenant) else {
-                            governor.release(slot); // tenant already finalized
+                        continue;
+                    }
+                    // all of this tenant's staged work is served:
+                    // finalize it now
+                    let Some(Msg::Done { tenant, stager, err }) = ready.remove(i) else {
+                        unreachable!("probed above")
+                    };
+                    active_threads -= 1;
+                    if let Some(e) = err {
+                        // keep the pool whole even on the error path:
+                        // jobs already pulled into this round hold slots
+                        for job in round.drain(..) {
+                            governor.release(job.slot);
+                        }
+                        break 'serve Err(e);
+                    }
+                    let Some(mut l) = live.remove(&tenant) else { continue };
+                    l.outcome.feature_delta = stager.and_then(|s| s.feature_delta());
+                    l.outcome.state_delta = l.session.finish();
+                    l.outcome.removed = l.outcome.steps.len() < l.expected;
+                    governor.retire(tenant);
+                    done.push(l.outcome);
+                    pending.extend(control(ServeEvent::Drained { tenant }));
+                }
+                if round.is_empty() {
+                    continue;
+                }
+
+                // phase 0: validate + prepare each round job; decide
+                // whether it goes through the planner or plain infer
+                let mut fatal: Option<Error> = None;
+                let mut round_iter = round.drain(..);
+                for job in round_iter.by_ref() {
+                    if job.staged.is_err() {
+                        governor.release(job.slot); // recycle before surfacing
+                        fatal = job.staged.err();
+                        break;
+                    }
+                    let Some(l) = live.get_mut(&job.tenant) else {
+                        governor.release(job.slot); // tenant already finalized
+                        continue;
+                    };
+                    if job.snap.index >= l.limit {
+                        governor.release(job.slot);
+                        continue;
+                    }
+                    if let Err(e) = l.session.prepare(&job.snap) {
+                        governor.release(job.slot);
+                        fatal = Some(e);
+                        break;
+                    }
+                    let batched = self.batch && l.session.batchable().is_some();
+                    todo.push((job, batched));
+                }
+                if let Some(e) = fatal {
+                    // keep the pool whole even on the error path
+                    for job in round_iter {
+                        governor.release(job.slot);
+                    }
+                    for (job, _) in todo.drain(..) {
+                        governor.release(job.slot);
+                    }
+                    break 'serve Err(e);
+                }
+                drop(round_iter);
+
+                // phase 1: the batchable steps run through the planner
+                // as one round (begin → fused row-stacked GEMMs →
+                // finish), over disjoint &mut handles into the live set
+                let batch_count = todo.iter().filter(|(_, b)| *b).count();
+                let t_round = Instant::now();
+                if batch_count > 0 {
+                    // per-round by necessity: the map holds `&mut`
+                    // handles into `live`, so it cannot persist across
+                    // rounds like the other scratch
+                    let mut grabbed: HashMap<TenantId, &mut LiveTenant> =
+                        live.iter_mut().map(|(id, l)| (*id, l)).collect();
+                    let mut members: Vec<RoundMember> = Vec::with_capacity(batch_count);
+                    for (job, batched) in &todo {
+                        if !*batched {
                             continue;
-                        };
-                        if let Err(e) = l.session.prepare(&snap) {
-                            governor.release(slot);
-                            break 'serve Err(e);
                         }
-                        if snap.index < l.limit {
-                            let t0 = Instant::now();
-                            if let Err(e) = l.session.infer(&snap, &slot) {
-                                governor.release(slot);
-                                break 'serve Err(e);
-                            }
-                            let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
-                            if let Err(e) = on_step(tenant, &snap, &slot, l.session.output()) {
-                                governor.release(slot);
-                                break 'serve Err(e);
-                            }
-                            l.outcome.steps.push(StepRecord {
-                                index: snap.index,
-                                stage_ms,
-                                infer_ms,
-                                e2e_ms: t_req.elapsed().as_secs_f64() * 1e3,
-                            });
-                            served_total += 1;
-                            governor.release(slot);
-                            pending.extend(control(ServeEvent::Step {
-                                tenant,
-                                index: snap.index,
-                                served_total,
-                            }));
-                        } else {
-                            governor.release(slot);
-                        }
+                        let l = grabbed
+                            .remove(&job.tenant)
+                            .expect("round tenants are live and distinct");
+                        members.push(RoundMember {
+                            session: l.session.batchable().expect("probed in phase 0"),
+                            snap: &job.snap,
+                            slot: &job.slot,
+                        });
                     }
+                    if let Err(e) = planner.run_round(&self.engine, &mut members) {
+                        drop(members);
+                        drop(grabbed);
+                        for (job, _) in todo.drain(..) {
+                            governor.release(job.slot);
+                        }
+                        break 'serve Err(e);
+                    }
+                }
+                let batch_share_ms = if batch_count > 0 {
+                    t_round.elapsed().as_secs_f64() * 1e3 / batch_count as f64
+                } else {
+                    0.0
+                };
+
+                // phase 2: non-batchable steps infer here; then every
+                // served job reports, releases its slot, and fires the
+                // controller — in round order
+                let mut todo_iter = todo.drain(..);
+                let mut step_err: Option<Error> = None;
+                for (job, batched) in todo_iter.by_ref() {
+                    let StagedJob { tenant, snap, slot, stage_ms, t_req, .. } = job;
+                    let l = live.get_mut(&tenant).expect("validated in phase 0");
+                    let infer_ms = if batched {
+                        batch_share_ms
+                    } else {
+                        let t0 = Instant::now();
+                        if let Err(e) = l.session.infer(&snap, &slot) {
+                            governor.release(slot);
+                            step_err = Some(e);
+                            break;
+                        }
+                        if self.batch {
+                            planner.stats.fallback_steps += 1;
+                        }
+                        t0.elapsed().as_secs_f64() * 1e3
+                    };
+                    if let Err(e) = on_step(tenant, &snap, &slot, l.session.output()) {
+                        governor.release(slot);
+                        step_err = Some(e);
+                        break;
+                    }
+                    l.outcome.steps.push(StepRecord {
+                        index: snap.index,
+                        stage_ms,
+                        infer_ms,
+                        e2e_ms: t_req.elapsed().as_secs_f64() * 1e3,
+                    });
+                    served_total += 1;
+                    governor.release(slot);
+                    pending.extend(control(ServeEvent::Step {
+                        tenant,
+                        index: snap.index,
+                        served_total,
+                    }));
+                }
+                if let Some(e) = step_err {
+                    // keep the pool whole even on the error path
+                    for (job, _) in todo_iter {
+                        governor.release(job.slot);
+                    }
+                    break 'serve Err(e);
                 }
             };
 
@@ -747,7 +938,7 @@ impl Scheduler {
         }
 
         done.sort_by_key(|o| o.id);
-        Ok(done)
+        Ok((done, planner.stats))
     }
 }
 

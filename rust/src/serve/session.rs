@@ -17,12 +17,24 @@
 //! [`build_pjrt_session`] (compiled artifacts), both seeded via
 //! `models::ModelKind::init_params` so every caller — examples, the CLI
 //! `serve` command, benches, tests — initialises identically.
+//!
+//! Mirror sessions additionally implement the **split-step**
+//! [`BatchableSession`] API (`begin_step` → announced [`Projection`]s →
+//! `finish_step`) that the scheduler's cross-stream batching layer
+//! (`serve::batch`) fuses across tenants, and they run
+//! **allocation-free at steady state**: feature and recurrent-state
+//! operands are borrowed views (`StagingSlot::x`, the `RecurrentState`
+//! buffers), every intermediate lives in persistent per-session scratch,
+//! and `infer` is [`step_unbatched`] over that scratch — asserted by
+//! `rust/tests/alloc_hotpath.rs` for the recurrent models (EvolveGCN's
+//! matrix-GRU weight evolution still allocates).
 
+use super::batch::{step_unbatched, BatchKey, Projection};
 use crate::coordinator::{NodeStateStore, ResidentState};
 use crate::error::{Error, Result};
 use crate::graph::{CooStream, Snapshot};
 use crate::models::{node_features_into, Dims, ModelKind, ModelParams};
-use crate::numerics::{self, Engine, Mat};
+use crate::numerics::{gcn_layer_slice_into, gru_matrix_cell, lstm_gate_slices_into, Engine, Mat};
 use crate::runtime::{
     EvolveGcnExecutor, GcrnExecutor, GcrnM1Executor, Manifest, StagingSlot,
 };
@@ -156,6 +168,54 @@ pub trait DgnnSession {
     /// End of stream: write resident state back; returns the state-side
     /// delta counters when the session ran delta-aware gathers.
     fn finish(&mut self) -> Option<DeltaCounts>;
+
+    /// The session's split-step half for cross-stream batched
+    /// projection (`serve::batch`), when it supports one.  `None` (the
+    /// default, and the PJRT sessions' answer) makes the scheduler fall
+    /// back to plain [`Self::infer`] for this tenant.
+    fn batchable(&mut self) -> Option<&mut dyn BatchableSession> {
+        None
+    }
+}
+
+/// The split-step face of a session: everything [`DgnnSession::infer`]
+/// does, cut at the step's dense projections so the scheduler's
+/// [`crate::serve::batch::BatchPlanner`] can fuse same-weight GEMMs
+/// across tenants.
+///
+/// Contract: `begin_step` pushes one [`Projection`] per batchable GEMM
+/// (its index is the `tag`); between `begin_step` and `finish_step`,
+/// [`Self::operand`]`(tag)` exposes the `[rows × k]` operand rows and
+/// [`Self::weight`]`(tag)` the weight matrix — and two sessions whose
+/// projections carry equal [`BatchKey`]s **must** hold bitwise-identical
+/// weights (the planner fuses on that contract).  `finish_step` consumes
+/// `projected[tag]` (`[rows × n]` result rows) and completes the step,
+/// after which [`DgnnSession::output`] reads the embedding exactly as if
+/// `infer` had run.
+pub trait BatchableSession {
+    /// Run the step's front half (state advance, sparse aggregation —
+    /// everything before the dense projections) and announce the
+    /// projections.
+    fn begin_step(
+        &mut self,
+        snap: &Snapshot,
+        slot: &StagingSlot,
+        out: &mut Vec<Projection>,
+    ) -> Result<()>;
+
+    /// Operand rows of projection `tag`, `[rows × k]` row-major.
+    fn operand(&self, tag: usize) -> &[f32];
+
+    /// Weight matrix of projection `tag` (`[k × n]`).
+    fn weight(&self, tag: usize) -> &Mat;
+
+    /// Complete the step from the projected rows.
+    fn finish_step(
+        &mut self,
+        snap: &Snapshot,
+        slot: &StagingSlot,
+        projected: &[&[f32]],
+    ) -> Result<()>;
 }
 
 /// The model-independent stager: node features are a pure function of
@@ -316,16 +376,74 @@ impl RecurrentState {
     }
 }
 
-/// Model-specific evolving state of the mirror session.
+/// Model-specific evolving state of the mirror session, plus the
+/// persistent step scratch that keeps the step allocation-free: every
+/// intermediate (`Â·X`, GCN layer outputs, new H/C rows) lives in a
+/// buffer that is resized once to its high-water size and overwritten
+/// per step.
 enum MirrorState {
-    Evolve { params: Box<crate::models::EvolveGcnParams>, w1: Mat, w2: Mat },
-    GcrnM1 { params: Box<crate::models::GcrnM1Params>, rec: RecurrentState },
-    GcrnM2 { params: Box<crate::models::GcrnM2Params>, rec: RecurrentState },
+    Evolve(EvolveState),
+    GcrnM1(M1State),
+    GcrnM2(M2State),
+}
+
+/// EvolveGCN-O: GRU-evolved layer weights; the layer-1 projection
+/// `(Â·X) @ w1` is the batchable GEMM, layer 2 chains on its output and
+/// runs unbatched in `finish_step`.
+struct EvolveState {
+    params: Box<crate::models::EvolveGcnParams>,
+    w1: Mat,
+    w2: Mat,
+    /// Served steps == weight-evolution epochs (the batch-key version:
+    /// same-seed tenants fuse only while in lock-step).
+    steps: u64,
+    /// Â·X, `[n × in_dim]` — the announced operand.
+    agg1: Vec<f32>,
+    /// relu-ed layer-1 rows, `[n × hidden_dim]`.
+    h1: Vec<f32>,
+    /// Two-step scratch of the unbatched second layer.
+    agg2: Vec<f32>,
+    cur_n: usize,
+}
+
+/// GCRN-M1 (stacked): two GCN layers feed a dense LSTM; the LSTM input
+/// projections `x2 @ wx` and `h @ wh` are the batchable GEMMs.
+struct M1State {
+    params: Box<crate::models::GcrnM1Params>,
+    w1: Mat,
+    w2: Mat,
+    wx: Mat,
+    wh: Mat,
+    rec: RecurrentState,
+    x1: Vec<f32>,
+    x2: Vec<f32>,
+    agg: Vec<f32>,
+    hn: Vec<f32>,
+    cn: Vec<f32>,
+    cur_n: usize,
+}
+
+/// GCRN-M2 (integrated): graph-conv LSTM; the projections of the two
+/// aggregations (`(Â·X) @ wx`, `(Â·H) @ wh`) are the batchable GEMMs.
+struct M2State {
+    params: Box<crate::models::GcrnM2Params>,
+    wx: Mat,
+    wh: Mat,
+    rec: RecurrentState,
+    agg_x: Vec<f32>,
+    agg_h: Vec<f32>,
+    hn: Vec<f32>,
+    cn: Vec<f32>,
+    cur_n: usize,
 }
 
 /// Pure-Rust session over `numerics` + the shared sparse engine; runs
 /// without AOT artifacts (the CLI `serve` command, benches, tests, and
 /// the e2e example's cross-check all use it).
+///
+/// Implements [`BatchableSession`]: [`DgnnSession::infer`] is
+/// [`step_unbatched`] over the session's scratch, so the batched and
+/// unbatched serving paths share every arithmetic step.
 pub struct MirrorSession {
     kind: ModelKind,
     dims: Dims,
@@ -334,6 +452,9 @@ pub struct MirrorSession {
     engine: Arc<Engine>,
     state: MirrorState,
     out: Vec<f32>,
+    /// `infer`'s reusable projection scratch (see [`step_unbatched`]).
+    proj_specs: Vec<Projection>,
+    proj_out: Vec<f32>,
 }
 
 impl ModelKind {
@@ -344,13 +465,47 @@ impl ModelKind {
             ModelParams::EvolveGcn(p) => {
                 let w1 = Mat::from_vec(p.dims.in_dim, p.dims.hidden_dim, p.w1.clone());
                 let w2 = Mat::from_vec(p.dims.hidden_dim, p.dims.out_dim, p.w2.clone());
-                MirrorState::Evolve { params: Box::new(p), w1, w2 }
+                MirrorState::Evolve(EvolveState {
+                    params: Box::new(p),
+                    w1,
+                    w2,
+                    steps: 0,
+                    agg1: Vec::new(),
+                    h1: Vec::new(),
+                    agg2: Vec::new(),
+                    cur_n: 0,
+                })
             }
             ModelParams::GcrnM1(p) => {
-                MirrorState::GcrnM1 { params: Box::new(p), rec: RecurrentState::new(cfg) }
+                let d = p.dims;
+                MirrorState::GcrnM1(M1State {
+                    w1: Mat::from_vec(d.in_dim, d.hidden_dim, p.w1.clone()),
+                    w2: Mat::from_vec(d.hidden_dim, d.out_dim, p.w2.clone()),
+                    wx: Mat::from_vec(d.out_dim, 4 * d.hidden_dim, p.wx.clone()),
+                    wh: Mat::from_vec(d.hidden_dim, 4 * d.hidden_dim, p.wh.clone()),
+                    params: Box::new(p),
+                    rec: RecurrentState::new(cfg),
+                    x1: Vec::new(),
+                    x2: Vec::new(),
+                    agg: Vec::new(),
+                    hn: Vec::new(),
+                    cn: Vec::new(),
+                    cur_n: 0,
+                })
             }
             ModelParams::GcrnM2(p) => {
-                MirrorState::GcrnM2 { params: Box::new(p), rec: RecurrentState::new(cfg) }
+                let d = p.dims;
+                MirrorState::GcrnM2(M2State {
+                    wx: Mat::from_vec(d.in_dim, 4 * d.hidden_dim, p.wx.clone()),
+                    wh: Mat::from_vec(d.hidden_dim, 4 * d.hidden_dim, p.wh.clone()),
+                    params: Box::new(p),
+                    rec: RecurrentState::new(cfg),
+                    agg_x: Vec::new(),
+                    agg_h: Vec::new(),
+                    hn: Vec::new(),
+                    cn: Vec::new(),
+                    cur_n: 0,
+                })
             }
         };
         Box::new(MirrorSession {
@@ -361,7 +516,188 @@ impl ModelKind {
             engine: Arc::clone(&cfg.engine),
             state,
             out: Vec::new(),
+            proj_specs: Vec::new(),
+            proj_out: Vec::new(),
         })
+    }
+}
+
+impl BatchableSession for MirrorSession {
+    fn begin_step(
+        &mut self,
+        snap: &Snapshot,
+        slot: &StagingSlot,
+        out: &mut Vec<Projection>,
+    ) -> Result<()> {
+        let n = snap.num_nodes();
+        let d = self.dims;
+        let x = &slot.x[..n * d.in_dim];
+        let eng: &Engine = &self.engine;
+        let (kind, seed) = (self.kind, self.seed);
+        let key = |tag: u8, version: u64| BatchKey { kind, seed, dims: d, version, tag };
+        match &mut self.state {
+            MirrorState::Evolve(s) => {
+                s.cur_n = n;
+                s.w1 = gru_matrix_cell(&s.w1, &s.params.gru1);
+                s.w2 = gru_matrix_cell(&s.w2, &s.params.gru2);
+                s.agg1.resize(n * d.in_dim, 0.0);
+                eng.aggregate_slice_into(&slot.csr, &snap.selfcoef, x, d.in_dim, &mut s.agg1);
+                out.push(Projection {
+                    key: key(0, s.steps),
+                    rows: n,
+                    k: d.in_dim,
+                    n: d.hidden_dim,
+                });
+            }
+            MirrorState::GcrnM1(s) => {
+                s.cur_n = n;
+                s.rec.advance(snap)?;
+                gcn_layer_slice_into(
+                    eng, &slot.csr, &snap.selfcoef, x, d.in_dim, &s.w1, true, &mut s.x1,
+                    &mut s.agg,
+                );
+                gcn_layer_slice_into(
+                    eng, &slot.csr, &snap.selfcoef, &s.x1, d.hidden_dim, &s.w2, false,
+                    &mut s.x2, &mut s.agg,
+                );
+                out.push(Projection {
+                    key: key(0, 0),
+                    rows: n,
+                    k: d.out_dim,
+                    n: 4 * d.hidden_dim,
+                });
+                out.push(Projection {
+                    key: key(1, 0),
+                    rows: n,
+                    k: d.hidden_dim,
+                    n: 4 * d.hidden_dim,
+                });
+            }
+            MirrorState::GcrnM2(s) => {
+                s.cur_n = n;
+                s.rec.advance(snap)?;
+                s.agg_x.resize(n * d.in_dim, 0.0);
+                eng.aggregate_slice_into(&slot.csr, &snap.selfcoef, x, d.in_dim, &mut s.agg_x);
+                s.agg_h.resize(n * d.hidden_dim, 0.0);
+                eng.aggregate_slice_into(
+                    &slot.csr,
+                    &snap.selfcoef,
+                    &s.rec.h()[..n * d.hidden_dim],
+                    d.hidden_dim,
+                    &mut s.agg_h,
+                );
+                out.push(Projection {
+                    key: key(0, 0),
+                    rows: n,
+                    k: d.in_dim,
+                    n: 4 * d.hidden_dim,
+                });
+                out.push(Projection {
+                    key: key(1, 0),
+                    rows: n,
+                    k: d.hidden_dim,
+                    n: 4 * d.hidden_dim,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    fn operand(&self, tag: usize) -> &[f32] {
+        let dh = self.dims.hidden_dim;
+        match (&self.state, tag) {
+            (MirrorState::Evolve(s), 0) => &s.agg1,
+            (MirrorState::GcrnM1(s), 0) => &s.x2,
+            (MirrorState::GcrnM1(s), 1) => &s.rec.h()[..s.cur_n * dh],
+            (MirrorState::GcrnM2(s), 0) => &s.agg_x,
+            (MirrorState::GcrnM2(s), 1) => &s.agg_h,
+            _ => panic!("no projection with tag {tag}"),
+        }
+    }
+
+    fn weight(&self, tag: usize) -> &Mat {
+        match (&self.state, tag) {
+            (MirrorState::Evolve(s), 0) => &s.w1,
+            (MirrorState::GcrnM1(s), 0) => &s.wx,
+            (MirrorState::GcrnM1(s), 1) => &s.wh,
+            (MirrorState::GcrnM2(s), 0) => &s.wx,
+            (MirrorState::GcrnM2(s), 1) => &s.wh,
+            _ => panic!("no projection with tag {tag}"),
+        }
+    }
+
+    fn finish_step(
+        &mut self,
+        snap: &Snapshot,
+        slot: &StagingSlot,
+        projected: &[&[f32]],
+    ) -> Result<()> {
+        let d = self.dims;
+        let dh = d.hidden_dim;
+        let eng: &Engine = &self.engine;
+        match &mut self.state {
+            MirrorState::Evolve(s) => {
+                let n = s.cur_n;
+                // layer 1: relu over the projected rows
+                s.h1.resize(n * dh, 0.0);
+                s.h1.copy_from_slice(projected[0]);
+                for v in s.h1.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                // layer 2 chains on h1, so it stays unbatched
+                gcn_layer_slice_into(
+                    eng,
+                    &slot.csr,
+                    &snap.selfcoef,
+                    &s.h1,
+                    dh,
+                    &s.w2,
+                    false,
+                    &mut self.out,
+                    &mut s.agg2,
+                );
+                s.steps += 1;
+            }
+            MirrorState::GcrnM1(s) => {
+                let n = s.cur_n;
+                s.hn.resize(n * dh, 0.0);
+                s.cn.resize(n * dh, 0.0);
+                lstm_gate_slices_into(
+                    eng,
+                    projected[0],
+                    projected[1],
+                    &s.params.b,
+                    &s.rec.c()[..n * dh],
+                    dh,
+                    &mut s.hn,
+                    &mut s.cn,
+                );
+                s.rec.write_rows(n, &s.hn, &s.cn);
+                s.rec.commit(snap);
+                self.out.clear();
+                self.out.extend_from_slice(&s.hn);
+            }
+            MirrorState::GcrnM2(s) => {
+                let n = s.cur_n;
+                s.hn.resize(n * dh, 0.0);
+                s.cn.resize(n * dh, 0.0);
+                lstm_gate_slices_into(
+                    eng,
+                    projected[0],
+                    projected[1],
+                    &s.params.b,
+                    &s.rec.c()[..n * dh],
+                    dh,
+                    &mut s.hn,
+                    &mut s.cn,
+                );
+                s.rec.write_rows(n, &s.hn, &s.cn);
+                s.rec.commit(snap);
+                self.out.clear();
+                self.out.extend_from_slice(&s.hn);
+            }
+        }
+        Ok(())
     }
 }
 
@@ -379,44 +715,16 @@ impl DgnnSession for MirrorSession {
     }
 
     fn infer(&mut self, snap: &Snapshot, slot: &StagingSlot) -> Result<()> {
-        let n = snap.num_nodes();
-        let ind = self.dims.in_dim;
-        let dh = self.dims.hidden_dim;
-        let x = Mat::from_vec(n, ind, slot.x[..n * ind].to_vec());
-        let eng: &Engine = &self.engine;
-        match &mut self.state {
-            MirrorState::Evolve { params, w1, w2 } => {
-                let (out, w1n, w2n) =
-                    numerics::evolvegcn_step_with(eng, &slot.csr, snap, &x, w1, w2, params);
-                *w1 = w1n;
-                *w2 = w2n;
-                self.out.clear();
-                self.out.extend_from_slice(&out.data);
-            }
-            MirrorState::GcrnM1 { params, rec } => {
-                rec.advance(snap)?;
-                let h = Mat::from_vec(n, dh, rec.h()[..n * dh].to_vec());
-                let c = Mat::from_vec(n, dh, rec.c()[..n * dh].to_vec());
-                let (hn, cn) =
-                    numerics::gcrn_m1_step_with(eng, &slot.csr, snap, &x, &h, &c, params);
-                rec.write_rows(n, &hn.data, &cn.data);
-                rec.commit(snap);
-                self.out.clear();
-                self.out.extend_from_slice(&hn.data);
-            }
-            MirrorState::GcrnM2 { params, rec } => {
-                rec.advance(snap)?;
-                let h = Mat::from_vec(n, dh, rec.h()[..n * dh].to_vec());
-                let c = Mat::from_vec(n, dh, rec.c()[..n * dh].to_vec());
-                let (hn, cn) =
-                    numerics::gcrn_m2_step_with(eng, &slot.csr, snap, &x, &h, &c, params);
-                rec.write_rows(n, &hn.data, &cn.data);
-                rec.commit(snap);
-                self.out.clear();
-                self.out.extend_from_slice(&hn.data);
-            }
-        }
-        Ok(())
+        // the unbatched step is the batched one with a single member —
+        // shared code keeps the two serving paths bitwise-equal by
+        // construction
+        let engine = Arc::clone(&self.engine);
+        let mut specs = std::mem::take(&mut self.proj_specs);
+        let mut buf = std::mem::take(&mut self.proj_out);
+        let res = step_unbatched(&engine, self, snap, slot, &mut specs, &mut buf);
+        self.proj_specs = specs;
+        self.proj_out = buf;
+        res
     }
 
     fn output(&self) -> &[f32] {
@@ -425,9 +733,15 @@ impl DgnnSession for MirrorSession {
 
     fn finish(&mut self) -> Option<DeltaCounts> {
         match &mut self.state {
-            MirrorState::Evolve { .. } => None,
-            MirrorState::GcrnM1 { rec, .. } | MirrorState::GcrnM2 { rec, .. } => rec.finish(),
+            MirrorState::Evolve(_) => None,
+            MirrorState::GcrnM1(M1State { rec, .. }) | MirrorState::GcrnM2(M2State { rec, .. }) => {
+                rec.finish()
+            }
         }
+    }
+
+    fn batchable(&mut self) -> Option<&mut dyn BatchableSession> {
+        Some(self)
     }
 }
 
@@ -554,6 +868,7 @@ mod tests {
     use super::*;
     use crate::coordinator::preprocess::preprocess_stream;
     use crate::datasets::{synth, BC_ALPHA};
+    use crate::numerics;
 
     fn bits(v: &[f32]) -> Vec<u32> {
         v.iter().map(|x| x.to_bits()).collect()

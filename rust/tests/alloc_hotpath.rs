@@ -12,6 +12,14 @@
 //! (aggregate + fused kernels fanned across a 2-worker pool) —
 //! must perform zero heap allocations.
 //!
+//! The serving layer is held to the same bar: a full mirror-session
+//! request — `SessionStager::stage` (delta and full) plus
+//! `DgnnSession::infer` for GCRN-M1 and GCRN-M2 — must be
+//! allocation-free at steady state (borrowed X/H views + persistent
+//! scratch; the ROADMAP "allocation-free mirror sessions" item).
+//! EvolveGCN is exempt: its per-step matrix-GRU weight evolution
+//! allocates by design.
+//!
 //! This binary intentionally holds a single `#[test]` so no concurrent
 //! test thread can perturb the allocation counter.
 
@@ -46,9 +54,11 @@ static A: CountingAlloc = CountingAlloc;
 use dgnn_booster::coordinator::preprocess::preprocess_stream;
 use dgnn_booster::coordinator::{NodeStateStore, ResidentState};
 use dgnn_booster::datasets::{synth, BC_ALPHA};
-use dgnn_booster::models::{node_features_into, Dims};
+use dgnn_booster::models::{node_features_into, Dims, ModelKind};
 use dgnn_booster::numerics::{self, Engine, Mat};
 use dgnn_booster::runtime::{Manifest, StagingSlot};
+use dgnn_booster::serve::SessionConfig;
+use std::sync::Arc;
 
 #[test]
 fn staging_path_steady_state_is_allocation_free() {
@@ -134,6 +144,54 @@ fn staging_path_steady_state_is_allocation_free() {
         after - before,
         0,
         "staging hot path performed {} heap allocations at steady state",
+        after - before
+    );
+
+    // --- mirror sessions: stage + infer must be allocation-free too ---
+    // (serial engine isolates the session's own behavior; the parallel
+    // dispatch path is asserted above)
+    let session_engine = Arc::new(Engine::serial());
+    let cfg = |delta: bool| SessionConfig {
+        dims,
+        seed: 42,
+        total_nodes: stream.num_nodes as usize,
+        max_nodes,
+        delta,
+        engine: Arc::clone(&session_engine),
+    };
+    // one delta and one full-gather session per recurrent model, so both
+    // state paths are measured
+    let mut sessions = vec![
+        ModelKind::GcrnM1.build_session(&cfg(false)),
+        ModelKind::GcrnM1.build_session(&cfg(true)),
+        ModelKind::GcrnM2.build_session(&cfg(false)),
+        ModelKind::GcrnM2.build_session(&cfg(true)),
+    ];
+    let mut stagers: Vec<_> = sessions.iter().map(|s| s.make_stager(&m)).collect();
+    let mut serve_slot = StagingSlot::new(&m);
+    // warm-up: two full cycles bring every per-session scratch buffer
+    // (aggregation operands, projection out-buffers, H/C rows) and the
+    // stagers' delta caches to their high-water capacity
+    for s in snaps.iter().chain(snaps.iter()) {
+        for (session, stager) in sessions.iter_mut().zip(&mut stagers) {
+            stager.stage(s, &mut serve_slot).unwrap();
+            session.prepare(s).unwrap();
+            session.infer(s, &serve_slot).unwrap();
+        }
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for s in snaps.iter() {
+        for (session, stager) in sessions.iter_mut().zip(&mut stagers) {
+            stager.stage(s, &mut serve_slot).unwrap();
+            session.prepare(s).unwrap();
+            session.infer(s, &serve_slot).unwrap();
+        }
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "mirror-session serve path performed {} heap allocations at steady state",
         after - before
     );
 }

@@ -7,7 +7,9 @@
 //! tenant's served outputs are a bitwise **prefix** of its standalone
 //! single-stream run, in FIFO order, and tenants that were not cut
 //! short serve exactly their expected snapshot count.  Run at 1/2/4
-//! engine threads with delta-aware staging on and off.
+//! engine threads with delta-aware staging on and off, and with
+//! cross-stream batched projection randomly enabled — churn under
+//! batching must uphold every one of the same invariants.
 
 use dgnn_booster::graph::{CooEdge, CooStream};
 use dgnn_booster::models::{Dims, ModelKind};
@@ -75,6 +77,7 @@ fn chaos_case(rng: &mut Pcg32, size: usize, threads: usize) {
     let model = ModelKind::GcrnM2;
     let dims = Dims::default();
     let delta = rng.below(2) == 1;
+    let batch = rng.below(2) == 1;
     let universe = 4 + size.min(24);
     let weights = [0u32, 1, 1, 2, 4];
 
@@ -118,7 +121,7 @@ fn chaos_case(rng: &mut Pcg32, size: usize, threads: usize) {
     );
     let engine = Arc::new(Engine::new(threads));
     let slots = 1 + rng.below(3);
-    let sched = Scheduler::new(Arc::clone(&engine), slots);
+    let sched = Scheduler::new(Arc::clone(&engine), slots).with_batching(batch);
 
     let initial: Vec<TenantSpec> = specs[..k0]
         .iter()
@@ -239,7 +242,8 @@ fn chaos_case(rng: &mut Pcg32, size: usize, threads: usize) {
         assert_eq!(
             scheduled[..],
             solo[..scheduled.len()],
-            "tenant {id}: scheduled outputs diverge from standalone prefix (threads={threads} delta={delta})"
+            "tenant {id}: scheduled outputs diverge from standalone prefix \
+             (threads={threads} delta={delta} batch={batch})"
         );
         // tenants that were never cut short served exactly their stream
         // (truncated at their limit); the scheduler's `removed` flag

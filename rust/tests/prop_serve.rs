@@ -5,7 +5,11 @@
 //! `serve::run_session` runs (which sit directly on
 //! `coordinator::pipeline::run_stream_staged`) — at any engine thread
 //! count, with delta-aware state/features on or off, and including a
-//! tenant whose stream has no snapshots at all.
+//! tenant whose stream has no snapshots at all.  Cross-stream batched
+//! projection is held to the same bar: batch-on serving must be
+//! bitwise-equal per tenant to batch-off serving at 1/2/4 threads ×
+//! delta on/off × mixed model kinds (fusing and non-fusing tenants
+//! alike).
 
 use dgnn_booster::graph::{CooEdge, CooStream};
 use dgnn_booster::models::{Dims, ModelKind};
@@ -90,6 +94,7 @@ fn run_scheduled(
     sources: &[StreamSource],
     threads: usize,
     delta: bool,
+    batch: bool,
     limit: usize,
 ) -> Vec<Outs> {
     let engine = Arc::new(Engine::new(threads));
@@ -99,7 +104,7 @@ fn run_scheduled(
         .enumerate()
         .map(|(i, s)| session_for(model, s, i, manifest.max_nodes, delta, &engine))
         .collect();
-    let sched = Scheduler::new(engine, 3);
+    let sched = Scheduler::new(engine, 3).with_batching(batch);
     let mut outs: Vec<Outs> = (0..sources.len()).map(|_| Vec::new()).collect();
     let outcomes = sched
         .run(&manifest, sources, sessions, limit, |sid, snap, _slot, out| {
@@ -155,16 +160,17 @@ fn assert_paths_equal(
     sources: &[StreamSource],
     threads: usize,
     delta: bool,
+    batch: bool,
     limit: usize,
 ) -> Vec<Outs> {
-    let a = run_scheduled(model, sources, threads, delta, limit);
+    let a = run_scheduled(model, sources, threads, delta, batch, limit);
     let b = run_independent(model, sources, threads, delta, limit);
     assert_eq!(a.len(), b.len());
     for (sid, (x, y)) in a.iter().zip(&b).enumerate() {
         assert_eq!(
             x,
             y,
-            "model={} threads={threads} delta={delta} stream={sid}",
+            "model={} threads={threads} delta={delta} batch={batch} stream={sid}",
             model.name()
         );
     }
@@ -177,7 +183,7 @@ fn k_stream_schedule_bitwise_equals_independent_single_streams() {
     for threads in [1usize, 2, 4] {
         for delta in [false, true] {
             for model in ModelKind::all() {
-                let outs = assert_paths_equal(model, &sources, threads, delta, usize::MAX);
+                let outs = assert_paths_equal(model, &sources, threads, delta, false, usize::MAX);
                 for (sid, o) in outs.iter().enumerate() {
                     // live tenants served 10 snapshots; the empty one none
                     if sid == 3 {
@@ -194,7 +200,8 @@ fn k_stream_schedule_bitwise_equals_independent_single_streams() {
 #[test]
 fn snapshot_limit_truncates_identically() {
     let sources = fixed_sources();
-    let outs = assert_paths_equal(ModelKind::GcrnM2, &sources, 2, true, 5);
+    // batched scheduling must respect per-tenant limits identically too
+    let outs = assert_paths_equal(ModelKind::GcrnM2, &sources, 2, true, true, 5);
     for o in &outs[..3] {
         assert_eq!(o.len(), 5);
         assert!(o.iter().all(|(idx, _)| *idx < 5));
@@ -447,11 +454,98 @@ fn removed_tenant_outputs_are_a_bitwise_prefix_and_others_unchanged() {
     }
 }
 
+/// Serve a fixed tenant roster (kind, seed, stream) through the
+/// scheduler with batching on or off, collecting per-tenant outputs.
+fn run_roster(
+    roster: &[(ModelKind, u64, &CooStream)],
+    threads: usize,
+    delta: bool,
+    batch: bool,
+    slots: usize,
+) -> (Vec<Outs>, dgnn_booster::serve::BatchStats) {
+    let engine = Arc::new(Engine::new(threads));
+    let manifest = Scheduler::manifest_for_streams(
+        roster.iter().map(|(_, _, s)| (*s, SPLITTER)),
+        Dims::default(),
+    );
+    let tenants: Vec<TenantSpec> = roster
+        .iter()
+        .enumerate()
+        .map(|(i, (kind, seed, stream))| {
+            let session = kind.build_session(&SessionConfig {
+                dims: Dims::default(),
+                seed: *seed,
+                total_nodes: stream.num_nodes as usize,
+                max_nodes: manifest.max_nodes,
+                delta,
+                engine: Arc::clone(&engine),
+            });
+            TenantSpec::new(&format!("t{i}"), Arc::new((*stream).clone()), SPLITTER, 1, session)
+        })
+        .collect();
+    let sched = Scheduler::new(engine, slots).with_batching(batch);
+    let mut outs: Vec<Outs> = vec![Vec::new(); roster.len()];
+    let (outcomes, stats) = sched
+        .serve_report(
+            &manifest,
+            tenants,
+            |_| Vec::new(),
+            |sid, snap, _slot, out| {
+                outs[sid].push((snap.index, bits(out)));
+                Ok(())
+            },
+        )
+        .unwrap();
+    for o in &outcomes {
+        assert!(!o.removed, "{}: spuriously cut short", o.name);
+    }
+    (outs, stats)
+}
+
+/// Batch-on serving ≡ batch-off serving, bitwise per tenant, across a
+/// roster that mixes model kinds, fusing tenants (same kind + seed) and
+/// non-fusing singletons — at 1/2/4 engine threads, delta on and off.
+#[test]
+fn batched_schedule_bitwise_equals_unbatched_per_tenant() {
+    let streams: Vec<CooStream> = (0..5)
+        .map(|i| tenant_stream(6000 + i as u64, 40, 8, 10))
+        .collect();
+    let roster: Vec<(ModelKind, u64, &CooStream)> = vec![
+        (ModelKind::GcrnM2, 7, &streams[0]),
+        (ModelKind::GcrnM2, 7, &streams[1]), // fuses with tenant 0
+        (ModelKind::GcrnM1, 7, &streams[2]), // same seed, different kind
+        (ModelKind::EvolveGcn, 11, &streams[3]),
+        (ModelKind::GcrnM2, 13, &streams[4]), // same kind, different seed
+    ];
+    for threads in [1usize, 2, 4] {
+        for delta in [false, true] {
+            let (unbatched, st_off) = run_roster(&roster, threads, delta, false, 3);
+            let (batched, st_on) = run_roster(&roster, threads, delta, true, 3);
+            for (sid, (a, b)) in batched.iter().zip(&unbatched).enumerate() {
+                assert_eq!(a.len(), 8, "tenant {sid} under-served");
+                assert_eq!(
+                    a, b,
+                    "threads={threads} delta={delta} tenant={sid}: batching changed the numerics"
+                );
+            }
+            // batch-off runs never touch the planner; batch-on runs
+            // serve every step through it (all-mirror roster)
+            assert_eq!(st_off.rounds, 0);
+            assert_eq!(st_off.fused_calls, 0);
+            assert_eq!(st_on.steps, 5 * 8);
+            assert_eq!(st_on.fallback_steps, 0);
+            assert!(st_on.fused_calls > 0);
+            assert!(st_on.occupancy() >= 1.0);
+        }
+    }
+}
+
 #[test]
 fn prop_random_tenant_sets_schedule_equals_independent() {
     forall(Config::default().cases(6).max_size(36), |rng, size| {
         let k = 1 + rng.below(3);
         let delta = rng.below(2) == 1;
+        let batch = rng.below(2) == 1;
         let base_seed = 5000 + rng.below(1 << 16) as u64;
         let sources: Vec<StreamSource> = (0..k)
             .map(|i| StreamSource {
@@ -465,6 +559,6 @@ fn prop_random_tenant_sets_schedule_equals_independent() {
                 splitter_secs: SPLITTER,
             })
             .collect();
-        assert_paths_equal(ModelKind::GcrnM2, &sources, 2, delta, usize::MAX);
+        assert_paths_equal(ModelKind::GcrnM2, &sources, 2, delta, batch, usize::MAX);
     });
 }
