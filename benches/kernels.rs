@@ -14,16 +14,18 @@
 //! `cargo bench --bench kernels` — full sweep.
 //! `cargo bench --bench kernels -- --smoke` — single-iteration CI gate.
 
-use dgnn_booster::datasets::synth::random_snapshot;
-use dgnn_booster::graph::SnapshotCsr;
+use dgnn_booster::datasets::synth::{edit_stream, random_snapshot};
+use dgnn_booster::graph::{CsrRebuild, EdgeDelta, Snapshot, SnapshotCsr};
 use dgnn_booster::metrics::{bench_loop_record, write_bench_json, BenchRecord};
-use dgnn_booster::numerics::{self, Engine, Mat};
+use dgnn_booster::numerics::{self, lstm_gate_slices_into, Engine, Kernels, Mat};
 use dgnn_booster::testutil::Pcg32;
 
 /// (nodes, avg degree, feature dim); the last entry is the "largest
 /// synthetic graph" the headline speedup is measured on.
 const SIZES: [(usize, usize, usize); 3] = [(256, 8, 32), (1024, 16, 32), (4096, 16, 64)];
 const THREADS: [usize; 3] = [1, 2, 4];
+/// Edit-stream churn fractions for the full-vs-delta rebuild sweep.
+const CHURNS: [f64; 3] = [0.01, 0.05, 0.20];
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
@@ -118,6 +120,158 @@ fn main() {
         records.push(coo_into);
     }
 
+    // --- scalar vs lane kernels on the largest size -----------------
+    // Both kernel sets are always compiled; `Engine::new_with` pins the
+    // set per engine so one binary measures the pair side by side.  The
+    // bitwise gate runs before any timing: the lane kernels must be
+    // indistinguishable from the scalar oracle, not merely close.
+    let (n, deg, d) = SIZES[SIZES.len() - 1];
+    let e = n * deg;
+    let snap = random_snapshot(&mut rng, n, e);
+    let csr = SnapshotCsr::from_snapshot(&snap);
+    let x = Mat::from_vec(n, d, rng.normal_vec(n * d, 1.0));
+    let w = Mat::from_vec(d, d, rng.normal_vec(d * d, 0.5));
+    let hdim = d;
+    let px = rng.normal_vec(n * 4 * hdim, 0.5);
+    let ph = rng.normal_vec(n * 4 * hdim, 0.5);
+    let b = rng.normal_vec(4 * hdim, 0.5);
+    let c = rng.normal_vec(n * hdim, 0.5);
+    let mut out = Mat::zeros(n, d);
+    let mut proj = Mat::zeros(n, d);
+    let (mut h_out, mut c_out) = (vec![0.0f32; n * hdim], vec![0.0f32; n * hdim]);
+    let iters = if smoke { 1 } else { (40_000_000 / (e * d)).clamp(12, 200) };
+    // per-(kernel, thread) medians for the speedup extras, indexed by
+    // THREADS position: [aggregate, matmul, fused, lstm]
+    let mut med = [[[0.0f64; 2]; THREADS.len()]; 4];
+    for (ti, t) in THREADS.into_iter().enumerate() {
+        let engines = [Engine::new_with(t, Kernels::Scalar), Engine::new_with(t, Kernels::Lanes)];
+        // bitwise gate: lanes ≡ scalar on these exact operands
+        let want = engines[0].aggregate(&csr, &snap.selfcoef, &x);
+        let got = engines[1].aggregate(&csr, &snap.selfcoef, &x);
+        assert_eq!(
+            got.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "lane aggregate diverged from scalar at t={t}"
+        );
+        let mut pw = Mat::zeros(n, d);
+        engines[0].matmul_into(&x, &w, &mut proj);
+        engines[1].matmul_into(&x, &w, &mut pw);
+        assert_eq!(
+            pw.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            proj.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "lane matmul diverged from scalar at t={t}"
+        );
+        for (ki, eng) in engines.iter().enumerate() {
+            let kind = if ki == 0 { "scalar" } else { "lanes" };
+            let rec = bench_loop_record(
+                &format!("aggregate {kind} t={t} n={n} d={d}"),
+                iters,
+                || {
+                    eng.aggregate_into(&csr, &snap.selfcoef, &x, &mut out);
+                    out.data[0]
+                },
+            );
+            med[0][ti][ki] = rec.median_s;
+            records.push(rec);
+            let rec = bench_loop_record(&format!("matmul {kind} t={t} n={n} d={d}"), iters, || {
+                eng.matmul_into(&x, &w, &mut proj);
+                proj.data[0]
+            });
+            med[1][ti][ki] = rec.median_s;
+            records.push(rec);
+            let rec = bench_loop_record(&format!("fused {kind} t={t} n={n} d={d}"), iters, || {
+                eng.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut proj);
+                proj.data[0]
+            });
+            med[2][ti][ki] = rec.median_s;
+            records.push(rec);
+            let rec = bench_loop_record(
+                &format!("lstm-gate {kind} t={t} n={n} h={hdim}"),
+                iters,
+                || {
+                    lstm_gate_slices_into(eng, &px, &ph, &b, &c, hdim, &mut h_out, &mut c_out);
+                    h_out[0]
+                },
+            );
+            med[3][ti][ki] = rec.median_s;
+            records.push(rec);
+        }
+    }
+    let simd_speedup = |k: usize, ti: usize| {
+        if med[k][ti][1] > 0.0 { med[k][ti][0] / med[k][ti][1] } else { 0.0 }
+    };
+
+    // --- full vs delta-incremental CSR rebuild across churn ---------
+    // The edit stream's forward deltas plus `EdgeDelta::between`-derived
+    // backward deltas form a closed cycle, so the timed loop is pure
+    // patch work (no full rebuild inside) and ends back at its starting
+    // state every iteration.
+    let (dn, ddeg) = (4096usize, 16usize);
+    let de = dn * ddeg;
+    let dsteps = if smoke { 3 } else { 6 };
+    let diters = if smoke { 1 } else { 30 };
+    let mut delta_speedups = [0.0f64; CHURNS.len()];
+    for (ci, churn) in CHURNS.into_iter().enumerate() {
+        let steps = edit_stream(&mut rng, dn, de, dsteps, churn);
+        let mut cycle: Vec<(&Snapshot, EdgeDelta)> = Vec::new();
+        for st in &steps[1..] {
+            cycle.push((&st.snap, st.delta.clone()));
+        }
+        let mut scratch = SnapshotCsr::default();
+        for i in (0..steps.len() - 1).rev() {
+            scratch.rebuild(&steps[i + 1].snap);
+            let back = EdgeDelta::between(&scratch, &steps[i].snap)
+                .expect("edit stream keeps the node universe fixed");
+            cycle.push((&steps[i].snap, back));
+        }
+        let mut full_csr = SnapshotCsr::default();
+        let full = bench_loop_record(
+            &format!("csr rebuild full churn={churn} n={dn} e={de}"),
+            diters,
+            || {
+                for (snap, _) in &cycle {
+                    full_csr.rebuild(snap);
+                }
+                full_csr.num_edges()
+            },
+        );
+        let mut delta_csr = SnapshotCsr::default();
+        delta_csr.rebuild(&steps[0].snap); // prime at the cycle's start state
+        let mut patched = 0usize;
+        let delta_rec = bench_loop_record(
+            &format!("csr rebuild delta churn={churn} n={dn} e={de}"),
+            diters,
+            || {
+                for (snap, delta) in &cycle {
+                    patched +=
+                        (delta_csr.rebuild_delta(snap, delta, 1.0) == CsrRebuild::Patched) as usize;
+                }
+                delta_csr.num_edges()
+            },
+        );
+        // warmup call + timed iterations, every leg must have patched
+        assert_eq!(
+            patched,
+            (diters.max(1) + 1) * cycle.len(),
+            "delta rebuild fell back to full at churn={churn}"
+        );
+        // and the cycle really is closed: state is back at step 0
+        let reference = SnapshotCsr::from_snapshot(&steps[0].snap);
+        for r in 0..dn {
+            let (gc, gv) = delta_csr.row(r);
+            let (wc, wv) = reference.row(r);
+            assert_eq!(gc, wc, "cycle did not close at row {r}");
+            assert_eq!(
+                gv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                wv.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
+        delta_speedups[ci] =
+            if delta_rec.median_s > 0.0 { full.median_s / delta_rec.median_s } else { 0.0 };
+        records.push(full);
+        records.push(delta_rec);
+    }
+
     let speedup = if csr4_largest > 0.0 { coo_largest / csr4_largest } else { 0.0 };
     let speedup_into =
         if csr4_largest > 0.0 { coo_into_largest / csr4_largest } else { 0.0 };
@@ -127,6 +281,21 @@ fn main() {
         &[
             ("speedup_parallel_csr_vs_coo_largest", speedup),
             ("speedup_parallel_csr_vs_coo_into_largest", speedup_into),
+            ("speedup_simd_matmul_t1", simd_speedup(1, 0)),
+            ("speedup_simd_matmul_t2", simd_speedup(1, 1)),
+            ("speedup_simd_matmul_t4", simd_speedup(1, 2)),
+            ("speedup_simd_aggregate_t1", simd_speedup(0, 0)),
+            ("speedup_simd_aggregate_t4", simd_speedup(0, 2)),
+            ("speedup_simd_fused_t1", simd_speedup(2, 0)),
+            ("speedup_simd_fused_t4", simd_speedup(2, 2)),
+            ("speedup_simd_lstm_t1", simd_speedup(3, 0)),
+            ("speedup_simd_lstm_t4", simd_speedup(3, 2)),
+            ("speedup_delta_rebuild_churn_1pct", delta_speedups[0]),
+            ("speedup_delta_rebuild_churn_5pct", delta_speedups[1]),
+            ("speedup_delta_rebuild_churn_20pct", delta_speedups[2]),
+            ("delta_rebuild_nodes", dn as f64),
+            ("delta_rebuild_edges", de as f64),
+            ("simd_default", if cfg!(feature = "simd") { 1.0 } else { 0.0 }),
             ("threads_max", *THREADS.last().unwrap() as f64),
             ("largest_nodes", n_big as f64),
             ("smoke", if smoke { 1.0 } else { 0.0 }),

@@ -21,7 +21,7 @@
 //!    1.0 for UCI.
 
 use super::catalog::DatasetProfile;
-use crate::graph::{CooEdge, CooStream, RenumberTable, Snapshot};
+use crate::graph::{CooEdge, CooStream, EdgeDelta, RenumberTable, Snapshot};
 use crate::testutil::Pcg32;
 
 /// Sigma of the log-normal snapshot-size law.  Calibrated so that the
@@ -155,6 +155,98 @@ pub fn random_snapshot(rng: &mut Pcg32, n: usize, e: usize) -> Snapshot {
     }
 }
 
+/// One step of an [`edit_stream`]: the graph state after the edit plus
+/// the exact [`EdgeDelta`] taking the previous step's CSR to it.
+#[derive(Clone, Debug)]
+pub struct EditStep {
+    pub snap: Snapshot,
+    pub delta: EdgeDelta,
+}
+
+/// Live-graph edit stream over a fixed `n`-node universe — the serving
+/// model where graph updates arrive as edge insert/delete events rather
+/// than per-window re-slices (DeltaGNN-style), so the node layout is
+/// **identity and stable across steps** and `SnapshotCsr::rebuild_delta`
+/// can patch instead of rebuild.
+///
+/// Starts from `e` random edges; each subsequent step deletes a
+/// `churn/2` fraction of the live edges (uniformly) and appends the same
+/// number of fresh random ones, keeping the live count at `e` while
+/// `churn` sets the per-step structural turnover.  Deltas are exact by
+/// construction: survivors keep their flat (COO) order — which is also
+/// their stable-counting-sort row order — and additions append, so each
+/// step's delta-patched CSR equals a full rebuild of its snapshot
+/// bit-for-bit (pinned by `tests/prop_kernels.rs`).  The first step's
+/// delta lists every edge as an addition; against a freshly constructed
+/// CSR it falls back to a full rebuild (layout mismatch), which is the
+/// intended bootstrap.
+pub fn edit_stream(rng: &mut Pcg32, n: usize, e: usize, steps: usize, churn: f64) -> Vec<EditStep> {
+    assert!(n > 0, "edit stream needs a non-empty node universe");
+    let new_edge =
+        |rng: &mut Pcg32| (rng.below(n) as u32, rng.below(n) as u32, rng.uniform_f32(-1.0, 1.0));
+    let mut live: Vec<(u32, u32, f32)> = (0..e).map(|_| new_edge(rng)).collect();
+    let selfcoef: Vec<f32> = (0..n).map(|_| rng.uniform_f32(0.0, 1.0)).collect();
+    let renumber = RenumberTable::build((0..n as u32).map(|i| (i, i)));
+    let snap_of = |live: &[(u32, u32, f32)], index: usize| Snapshot {
+        index,
+        src: live.iter().map(|&(s, _, _)| s).collect(),
+        dst: live.iter().map(|&(_, d, _)| d).collect(),
+        coef: live.iter().map(|&(_, _, c)| c).collect(),
+        selfcoef: selfcoef.clone(),
+        renumber: renumber.clone(),
+        t_start: index as i64,
+    };
+    let mut out = Vec::with_capacity(steps);
+    let mut delta0 = EdgeDelta::new();
+    for &(s, d, c) in &live {
+        delta0.added.push((s, d, c));
+    }
+    out.push(EditStep { snap: snap_of(&live, 0), delta: delta0 });
+    let per_side = ((churn * e as f64) / 2.0).round() as usize;
+    let mut removed_flags = vec![false; live.len()];
+    let mut per_dst_seen = vec![0u32; n];
+    for t in 1..steps {
+        let mut delta = EdgeDelta::new();
+        // pick distinct flat indices to delete (uniform over live edges)
+        removed_flags.iter_mut().for_each(|f| *f = false);
+        let k = per_side.min(live.len());
+        let mut chosen = 0usize;
+        while chosen < k {
+            let i = rng.below(live.len());
+            if !removed_flags[i] {
+                removed_flags[i] = true;
+                chosen += 1;
+            }
+        }
+        // convert flat deletions to (dst, row-position) pairs: a
+        // destination's row position is its rank among earlier same-dst
+        // edges in flat order — exactly the stable counting sort's
+        // within-row order
+        per_dst_seen.iter_mut().for_each(|c| *c = 0);
+        let mut survivors = Vec::with_capacity(live.len());
+        for (idx, &(s, d, c)) in live.iter().enumerate() {
+            let pos = per_dst_seen[d as usize];
+            per_dst_seen[d as usize] += 1;
+            if removed_flags[idx] {
+                delta.removed.push((d, pos));
+            } else {
+                survivors.push((s, d, c));
+            }
+        }
+        // flat order interleaves destinations; the contract wants
+        // (dst, pos) ascending
+        delta.removed.sort_unstable();
+        for _ in 0..k {
+            let ed = new_edge(rng);
+            delta.added.push(ed);
+            survivors.push(ed);
+        }
+        live = survivors;
+        out.push(EditStep { snap: snap_of(&live, t), delta });
+    }
+    out
+}
+
 /// Linear membership check on the arrival list (bounded by total_nodes;
 /// amortised fine at these sizes thanks to the in_set fast path above).
 fn active_seen(active: &[u32], pick: u32) -> bool {
@@ -286,6 +378,32 @@ mod tests {
         assert!(a.edges.iter().any(|e| e.weight > 1.0));
         let u = generate(&UCI, 3);
         assert!(u.edges.iter().all(|e| e.weight == 1.0));
+    }
+
+    #[test]
+    fn edit_stream_deltas_reconstruct_exactly() {
+        use crate::graph::{CsrRebuild, SnapshotCsr};
+        let mut rng = Pcg32::seeded(9);
+        let steps = edit_stream(&mut rng, 30, 120, 6, 0.2);
+        assert_eq!(steps.len(), 6);
+        let mut csr = SnapshotCsr::new();
+        for (i, st) in steps.iter().enumerate() {
+            st.snap.validate().unwrap();
+            assert_eq!(st.snap.num_edges(), 120, "live edge count is conserved");
+            let kind = csr.rebuild_delta(&st.snap, &st.delta, 1.0);
+            if i == 0 {
+                // bootstrap: fresh CSR has no layout to patch
+                assert_eq!(kind, CsrRebuild::Full);
+            } else {
+                assert_eq!(kind, CsrRebuild::Patched, "step {i}");
+                // churn matches the requested fraction: 12 out + 12 in
+                assert_eq!(st.delta.churn(), 24, "step {i}");
+            }
+            let want = SnapshotCsr::from_snapshot(&st.snap);
+            for d in 0..30 {
+                assert_eq!(csr.row(d), want.row(d), "step {i} row {d}");
+            }
+        }
     }
 
     #[test]

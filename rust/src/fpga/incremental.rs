@@ -93,6 +93,22 @@ impl DeltaPlan {
             new_nodes: self.fetch.len(),
         }
     }
+
+    /// True when every shared node keeps its previous local index and
+    /// nothing arrives or departs — the layout precondition for
+    /// **structure-level** reuse between adjacent steps: under a stable
+    /// layout, resident feature/state rows survive verbatim and the
+    /// cached CSR can be patched by an edge diff
+    /// ([`SnapshotCsr::rebuild_delta`](crate::graph::SnapshotCsr::rebuild_delta))
+    /// instead of moved row-by-row and rebuilt.  Edit-stream serving
+    /// (`datasets::synth::edit_stream`, `StagingSlot::stage_edit`) keeps
+    /// this true every step; window streams with first-seen renumbering
+    /// generally do not.
+    pub fn layout_stable(&self) -> bool {
+        self.fetch.is_empty()
+            && self.evict.is_empty()
+            && self.shared.iter().all(|&(new, prev)| new == prev)
+    }
 }
 
 /// Per-snapshot overlap statistics for a stream.
@@ -207,6 +223,30 @@ mod tests {
                 assert!(n.renumber.to_local(raw).is_none());
             }
         }
+    }
+
+    #[test]
+    fn layout_stability_detected_exactly() {
+        use crate::graph::RenumberTable;
+        // identity layout repeated: stable
+        let id = RenumberTable::build((0..6u32).map(|i| (i, i)));
+        let mut plan = DeltaPlan::new();
+        plan.build(id.raws(), |r| id.to_local(r), &id);
+        assert!(plan.layout_stable());
+        // same node set under a permuted local order: shared, NOT stable
+        let perm = RenumberTable::build(
+            [(3u32, 0u32), (0, 1), (1, 2), (2, 4), (4, 5), (5, 3)].into_iter(),
+        );
+        plan.build(id.raws(), |r| id.to_local(r), &perm);
+        assert_eq!(plan.stats().shared_nodes, 6);
+        assert!(!plan.layout_stable());
+        // arrivals break stability too
+        let bigger = RenumberTable::build((0..7u32).map(|i| (i, i)));
+        plan.build(id.raws(), |r| id.to_local(r), &bigger);
+        assert!(!plan.layout_stable());
+        // first snapshot (everything fetched) is not stable either
+        plan.build(&[], |_| None, &id);
+        assert!(!plan.layout_stable());
     }
 
     #[test]

@@ -7,9 +7,14 @@
 //! node-parallel PEs rely on.  Unlike [`super::convert::Csr`] (the
 //! one-shot functional model of the converter), this struct is built to
 //! be **rebuilt in place** once per snapshot on the pipeline's producer
-//! thread: all arrays are cleared and refilled within their high-water
-//! capacity, so a `SnapshotCsr` reused across a stream performs no
-//! steady-state heap allocation (asserted by `tests/alloc_hotpath.rs`).
+//! thread: all arrays are refilled within their high-water capacity, so
+//! a `SnapshotCsr` reused across a stream performs no steady-state heap
+//! allocation (asserted by `tests/alloc_hotpath.rs`).  When the caller
+//! can describe the step as an edge diff over a stable node layout
+//! (`graph::delta::EdgeDelta` — the edit-stream serving model),
+//! [`SnapshotCsr::rebuild_delta`] patches only the touched rows and
+//! bulk-copies the rest, falling back to the full counting sort past a
+//! churn threshold.
 //!
 //! The counting sort is **stable**: within one destination row the
 //! in-edges keep their COO (time) order, which is what makes CSR
@@ -20,7 +25,37 @@
 //! transitively underwrites the serving-layer bitwise guarantees in
 //! `rust/tests/prop_serve.rs`.
 
+use super::delta::EdgeDelta;
 use super::snapshot::Snapshot;
+
+/// Which path a [`SnapshotCsr::rebuild_delta`] call took.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CsrRebuild {
+    /// The edge delta was applied in place: untouched row spans were
+    /// bulk-copied, only touched rows were re-emitted edge by edge.
+    Patched,
+    /// The delta was inapplicable (layout change, churn over threshold,
+    /// or a contract violation) — a full counting-sort rebuild ran.
+    Full,
+}
+
+/// Default churn threshold for [`SnapshotCsr::rebuild_delta`]: past a
+/// quarter of the edges changing, the patch path's per-row bookkeeping
+/// stops beating the straight-line counting sort.
+pub const DELTA_CHURN_MAX: f64 = 0.25;
+
+/// Resize `v` to `len` for content that is fully overwritten afterwards:
+/// shrink is a truncate, growth zero-fills only the new tail — never the
+/// retained prefix.  The high-water-mark discipline of
+/// `runtime::pad::PaddedGraph::fill`, applied to scratch whose every
+/// live slot the caller provably writes.
+fn resize_for_overwrite<T: Copy + Default>(v: &mut Vec<T>, len: usize) {
+    if v.len() > len {
+        v.truncate(len);
+    } else {
+        v.resize(len, T::default());
+    }
+}
 
 /// Destination-major compressed adjacency of one snapshot.
 #[derive(Clone, Debug, Default)]
@@ -37,6 +72,17 @@ pub struct SnapshotCsr {
     vals: Vec<f32>,
     /// Counting-sort cursor, reused across rebuilds.
     cursor: Vec<u32>,
+    /// Delta-patch double buffers: [`Self::rebuild_delta`] emits the
+    /// next structure here, then swaps.  Reused across rebuilds, so the
+    /// patch path is allocation-free at steady state.
+    row_ptr2: Vec<u32>,
+    cols2: Vec<u32>,
+    vals2: Vec<f32>,
+    /// Additions grouped by destination row (counting-sort scratch of
+    /// the patch path); `add_ptr` is len `num_nodes + 1`.
+    add_ptr: Vec<u32>,
+    add_cols: Vec<u32>,
+    add_vals: Vec<f32>,
 }
 
 impl SnapshotCsr {
@@ -68,18 +114,22 @@ impl SnapshotCsr {
         let n = snap.num_nodes();
         let e = snap.num_edges();
         self.num_nodes = n;
-        self.row_ptr.clear();
-        self.row_ptr.resize(n + 1, 0);
+        // the counting pass genuinely needs n+1 zeros, written exactly
+        // once over the live prefix; cols/vals need none at all — every
+        // slot is overwritten by the scatter below, so sizing them is a
+        // truncate/grow without the former clear()+resize() zero-fill
+        // of all e entries (the high-water discipline of
+        // `PaddedGraph::fill`)
+        resize_for_overwrite(&mut self.row_ptr, n + 1);
+        self.row_ptr.fill(0);
         for &d in &snap.dst {
             self.row_ptr[d as usize + 1] += 1;
         }
         for i in 0..n {
             self.row_ptr[i + 1] += self.row_ptr[i];
         }
-        self.cols.clear();
-        self.cols.resize(e, 0);
-        self.vals.clear();
-        self.vals.resize(e, 0.0);
+        resize_for_overwrite(&mut self.cols, e);
+        resize_for_overwrite(&mut self.vals, e);
         self.cursor.clear();
         self.cursor.extend_from_slice(&self.row_ptr[..n]);
         for ((&s, &d), &c) in snap.src.iter().zip(&snap.dst).zip(&snap.coef) {
@@ -88,6 +138,156 @@ impl SnapshotCsr {
             self.vals[p] = c;
             self.cursor[d as usize] += 1;
         }
+    }
+
+    /// Take this CSR from its current state to `next` by applying the
+    /// edge diff `delta` (see [`EdgeDelta`]'s contract), falling back to
+    /// a full [`Self::rebuild`] whenever the delta is inapplicable:
+    /// layout mismatch, churn above `max_churn · max(edges)`, edge
+    /// counts that don't reconcile, or removals violating the sorted /
+    /// in-range contract.  Returns which path ran.
+    ///
+    /// The patch replaces the counting sort's random-write scatter over
+    /// **all** edges with sequential work proportional to the churn:
+    /// untouched row spans are bulk-copied into the double buffer
+    /// (coalesced `memcpy`s), and only touched rows are re-emitted
+    /// (survivors around the removal positions, then the row's grouped
+    /// additions).  Patched and full paths produce identical structures
+    /// — same `cols`, bitwise-same `vals` — pinned by
+    /// `tests/prop_kernels.rs`; steady-state allocation-freedom by
+    /// `tests/alloc_hotpath.rs`.
+    pub fn rebuild_delta(
+        &mut self,
+        next: &Snapshot,
+        delta: &EdgeDelta,
+        max_churn: f64,
+    ) -> CsrRebuild {
+        let n = next.num_nodes();
+        let e_new = next.num_edges();
+        let e_old = self.cols.len();
+        let budget = (max_churn * e_old.max(e_new).max(1) as f64) as usize;
+        if self.num_nodes != n
+            || delta.churn() > budget
+            || e_old + delta.added.len() != e_new + delta.removed.len()
+            || !self.delta_applicable(delta)
+        {
+            self.rebuild(next);
+            return CsrRebuild::Full;
+        }
+        // group the additions by destination (stable counting sort over
+        // the churn only, not the whole edge set)
+        resize_for_overwrite(&mut self.add_ptr, n + 1);
+        self.add_ptr.fill(0);
+        for &(_, d, _) in &delta.added {
+            self.add_ptr[d as usize + 1] += 1;
+        }
+        for i in 0..n {
+            self.add_ptr[i + 1] += self.add_ptr[i];
+        }
+        resize_for_overwrite(&mut self.add_cols, delta.added.len());
+        resize_for_overwrite(&mut self.add_vals, delta.added.len());
+        self.cursor.clear();
+        self.cursor.extend_from_slice(&self.add_ptr[..n]);
+        for &(s, d, c) in &delta.added {
+            let p = self.cursor[d as usize] as usize;
+            self.add_cols[p] = s;
+            self.add_vals[p] = c;
+            self.cursor[d as usize] += 1;
+        }
+        // emit the next structure into the double buffers, bulk-copying
+        // maximal untouched row spans
+        resize_for_overwrite(&mut self.row_ptr2, n + 1);
+        resize_for_overwrite(&mut self.cols2, e_new);
+        resize_for_overwrite(&mut self.vals2, e_new);
+        self.row_ptr2[0] = 0;
+        let mut rp = 0usize; // cursor into delta.removed
+        let mut out = 0usize; // write position in cols2/vals2
+        let mut span_src = 0usize; // pending untouched span: old offset,
+        let mut span_dst = 0usize; // new offset,
+        let mut span_len = 0usize; // length
+        for d in 0..n {
+            let lo = self.row_ptr[d] as usize;
+            let hi = self.row_ptr[d + 1] as usize;
+            let alo = self.add_ptr[d] as usize;
+            let ahi = self.add_ptr[d + 1] as usize;
+            let r0 = rp;
+            while rp < delta.removed.len() && delta.removed[rp].0 as usize == d {
+                rp += 1;
+            }
+            if r0 == rp && alo == ahi {
+                // untouched row: extend the pending bulk-copy span
+                if span_len == 0 {
+                    span_src = lo;
+                    span_dst = out;
+                }
+                span_len += hi - lo;
+                out += hi - lo;
+                self.row_ptr2[d + 1] = out as u32;
+                continue;
+            }
+            if span_len > 0 {
+                self.cols2[span_dst..span_dst + span_len]
+                    .copy_from_slice(&self.cols[span_src..span_src + span_len]);
+                self.vals2[span_dst..span_dst + span_len]
+                    .copy_from_slice(&self.vals[span_src..span_src + span_len]);
+                span_len = 0;
+            }
+            // survivors: the old row minus the removal positions
+            let mut cur = lo;
+            for &(_, pos) in &delta.removed[r0..rp] {
+                let abs = lo + pos as usize;
+                let len = abs - cur;
+                self.cols2[out..out + len].copy_from_slice(&self.cols[cur..abs]);
+                self.vals2[out..out + len].copy_from_slice(&self.vals[cur..abs]);
+                out += len;
+                cur = abs + 1;
+            }
+            let len = hi - cur;
+            self.cols2[out..out + len].copy_from_slice(&self.cols[cur..hi]);
+            self.vals2[out..out + len].copy_from_slice(&self.vals[cur..hi]);
+            out += len;
+            // the row's additions, in grouped (arrival) order
+            let alen = ahi - alo;
+            self.cols2[out..out + alen].copy_from_slice(&self.add_cols[alo..ahi]);
+            self.vals2[out..out + alen].copy_from_slice(&self.add_vals[alo..ahi]);
+            out += alen;
+            self.row_ptr2[d + 1] = out as u32;
+        }
+        if span_len > 0 {
+            self.cols2[span_dst..span_dst + span_len]
+                .copy_from_slice(&self.cols[span_src..span_src + span_len]);
+            self.vals2[span_dst..span_dst + span_len]
+                .copy_from_slice(&self.vals[span_src..span_src + span_len]);
+        }
+        debug_assert_eq!(out, e_new);
+        std::mem::swap(&mut self.row_ptr, &mut self.row_ptr2);
+        std::mem::swap(&mut self.cols, &mut self.cols2);
+        std::mem::swap(&mut self.vals, &mut self.vals2);
+        CsrRebuild::Patched
+    }
+
+    /// Cheap structural validation of `delta` against the current state:
+    /// removals sorted strictly ascending by `(dst, pos)` with every
+    /// position inside its row, every endpoint in range.  O(churn).
+    fn delta_applicable(&self, delta: &EdgeDelta) -> bool {
+        let n = self.num_nodes as u32;
+        let mut prev: Option<(u32, u32)> = None;
+        for &(d, pos) in &delta.removed {
+            if d >= n {
+                return false;
+            }
+            let degree = self.row_ptr[d as usize + 1] - self.row_ptr[d as usize];
+            if pos >= degree {
+                return false;
+            }
+            if let Some(p) = prev {
+                if (d, pos) <= p {
+                    return false;
+                }
+            }
+            prev = Some((d, pos));
+        }
+        delta.added.iter().all(|&(s, d, _)| s < n && d < n)
     }
 
     pub fn num_nodes(&self) -> usize {
@@ -111,7 +311,7 @@ impl SnapshotCsr {
 mod tests {
     use super::*;
     use crate::datasets::synth::random_snapshot;
-    use crate::graph::{Csr, RenumberTable};
+    use crate::graph::{Csr, EdgeDelta, RenumberTable};
     use crate::testutil::{forall, Config, Pcg32};
 
     #[test]
@@ -176,6 +376,45 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn delta_patch_falls_back_and_stays_correct() {
+        let mut rng = Pcg32::seeded(12);
+        let a = random_snapshot(&mut rng, 20, 60);
+        let mut b = random_snapshot(&mut rng, 20, 60);
+        b.selfcoef = a.selfcoef.clone();
+        let want = SnapshotCsr::from_snapshot(&b);
+        let mut csr = SnapshotCsr::from_snapshot(&a);
+        let delta = EdgeDelta::between(&csr, &b).unwrap();
+        assert!(delta.churn() >= 2, "diff of independent snapshots should churn");
+        // a zero churn budget must fall back to a full rebuild, with an
+        // identical resulting structure
+        let kind = csr.rebuild_delta(&b, &delta, 0.0);
+        assert_eq!(kind, CsrRebuild::Full);
+        for d in 0..20 {
+            assert_eq!(csr.row(d), want.row(d), "full-fallback row {d}");
+        }
+        // malformed removals (descending order) are rejected at run time
+        // (budget 2.0 keeps the churn check out of the way so the
+        // sortedness validation is what actually fires)
+        let mut csr2 = SnapshotCsr::from_snapshot(&a);
+        let mut bad = delta.clone();
+        bad.removed.reverse();
+        let kind = csr2.rebuild_delta(&b, &bad, 2.0);
+        assert_eq!(kind, CsrRebuild::Full);
+        for d in 0..20 {
+            assert_eq!(csr2.row(d), want.row(d), "reject-fallback row {d}");
+        }
+        // an empty delta on an unchanged graph takes the patch path and
+        // reproduces the structure exactly
+        let mut csr3 = SnapshotCsr::from_snapshot(&a);
+        let kind = csr3.rebuild_delta(&a, &EdgeDelta::new(), 1.0);
+        assert_eq!(kind, CsrRebuild::Patched);
+        let wa = SnapshotCsr::from_snapshot(&a);
+        for d in 0..20 {
+            assert_eq!(csr3.row(d), wa.row(d), "no-op patch row {d}");
+        }
     }
 
     #[test]

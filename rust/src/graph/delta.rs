@@ -1,0 +1,201 @@
+//! Edge-level deltas between adjacent graph states: the structural
+//! counterpart of `fpga::incremental`'s node-level [`DeltaPlan`].
+//!
+//! DGNN-Booster reuses work across adjacent snapshots (paper §VI);
+//! PRs 1–2 made **features and node state** delta-aware, and this
+//! module extends the idea to the **graph structure itself**: an
+//! [`EdgeDelta`] describes exactly which in-edges left and which
+//! arrived between two states of a graph over the *same* node layout,
+//! so [`SnapshotCsr::rebuild_delta`](super::SnapshotCsr::rebuild_delta)
+//! can patch the touched rows in place instead of re-running the full
+//! counting sort (the DeltaGNN serving model: a live graph receiving
+//! edge insert/delete events rather than per-window re-slices).
+//!
+//! ## Invariants
+//!
+//! A delta taking CSR state `prev` to snapshot `next` must satisfy:
+//!
+//! - **Stable layout** — `prev` and `next` describe the same node
+//!   universe under the same local numbering (`num_nodes` equal;
+//!   identity or otherwise unchanged renumbering).  Window streams with
+//!   per-snapshot first-seen renumbering do *not* satisfy this; they
+//!   take the full-rebuild path.
+//! - **Removals** — `(dst, pos)` pairs sorted ascending by `(dst,
+//!   pos)`, `pos` indexing the destination's in-edge row *in `prev`'s
+//!   CSR order* (COO order within the row).  Positions are unique.
+//! - **Additions** — `(src, dst, coef)` triples; within one
+//!   destination they appear in the order the edges should take
+//!   **after** the surviving `prev` edges, matching what a full stable
+//!   counting sort of `next`'s COO stream would produce (survivors
+//!   keep their relative order, new edges append in arrival order).
+//!
+//! Under those invariants, patching and full rebuilding produce
+//! **identical** structures — same `cols`, bitwise-same `vals` — which
+//! is what keeps CSR aggregation over a patched structure bitwise-equal
+//! to the COO reference (pinned by `tests/prop_kernels.rs`).
+//! `rebuild_delta` re-checks the cheap structural parts of the contract
+//! at run time and falls back to a full rebuild on any violation.
+
+use super::csr::SnapshotCsr;
+use super::snapshot::Snapshot;
+
+/// An edge diff taking one graph state to the next over a stable node
+/// layout.  See the module docs for the exact contract.
+#[derive(Clone, Debug, Default)]
+pub struct EdgeDelta {
+    /// Departed in-edges as `(dst_local, position_in_prev_row)`, sorted
+    /// ascending by `(dst, pos)`.
+    pub removed: Vec<(u32, u32)>,
+    /// Arrived in-edges as `(src_local, dst_local, coef)`; within one
+    /// destination, in post-survivor row order.
+    pub added: Vec<(u32, u32, f32)>,
+}
+
+impl EdgeDelta {
+    /// An empty delta (graph unchanged).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total number of edge events — the churn the rebuild threshold
+    /// compares against.
+    pub fn churn(&self) -> usize {
+        self.removed.len() + self.added.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.removed.is_empty() && self.added.is_empty()
+    }
+
+    /// Reset without releasing capacity (stream producers reuse one
+    /// delta across steps).
+    pub fn clear(&mut self) {
+        self.removed.clear();
+        self.added.clear();
+    }
+
+    /// Derive the delta taking the graph state cached in `prev` to
+    /// `next`, or `None` when the layouts cannot match (`num_nodes`
+    /// differ).  Producer-side convenience — it costs a full O(n + e)
+    /// grouping pass plus a per-row scan, i.e. as much as a rebuild, so
+    /// serving paths should carry the delta in from the edit stream
+    /// instead; this derivation exists for producers that only have
+    /// materialised snapshots and for tests.
+    ///
+    /// Per row the diff is greedy: `next`'s row is matched as a
+    /// subsequence of `prev`'s row (source and bitwise coefficient); at
+    /// the first unmatched entry, the rest of `next`'s row becomes
+    /// additions and every unmatched `prev` edge a removal.  Not always
+    /// the *minimal* decomposition, but always an exact one.
+    pub fn between(prev: &SnapshotCsr, next: &Snapshot) -> Option<EdgeDelta> {
+        let n = prev.num_nodes();
+        if n != next.num_nodes() {
+            return None;
+        }
+        // group next's COO edges by destination (stable counting sort)
+        let e = next.num_edges();
+        let mut ptr = vec![0u32; n + 1];
+        for &d in &next.dst {
+            ptr[d as usize + 1] += 1;
+        }
+        for i in 0..n {
+            ptr[i + 1] += ptr[i];
+        }
+        let mut cur: Vec<u32> = ptr[..n].to_vec();
+        let mut ncols = vec![0u32; e];
+        let mut nvals = vec![0f32; e];
+        for ((&s, &d), &c) in next.src.iter().zip(&next.dst).zip(&next.coef) {
+            let p = cur[d as usize] as usize;
+            ncols[p] = s;
+            nvals[p] = c;
+            cur[d as usize] += 1;
+        }
+        let mut delta = EdgeDelta::new();
+        for d in 0..n {
+            let (ps, pv) = prev.row(d);
+            let ns = &ncols[ptr[d] as usize..ptr[d + 1] as usize];
+            let nv = &nvals[ptr[d] as usize..ptr[d + 1] as usize];
+            let mut i = 0usize; // cursor into prev's row
+            let mut j = 0usize; // cursor into next's row
+            while j < ns.len() {
+                let mut k = i;
+                while k < ps.len()
+                    && !(ps[k] == ns[j] && pv[k].to_bits() == nv[j].to_bits())
+                {
+                    k += 1;
+                }
+                if k == ps.len() {
+                    break; // ns[j..] are all additions
+                }
+                for r in i..k {
+                    delta.removed.push((d as u32, r as u32));
+                }
+                i = k + 1;
+                j += 1;
+            }
+            for r in i..ps.len() {
+                delta.removed.push((d as u32, r as u32));
+            }
+            for jj in j..ns.len() {
+                delta.added.push((ns[jj], d as u32, nv[jj]));
+            }
+        }
+        Some(delta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::random_snapshot;
+    use crate::testutil::Pcg32;
+
+    #[test]
+    fn between_identical_states_is_empty() {
+        let mut rng = Pcg32::seeded(71);
+        let snap = random_snapshot(&mut rng, 12, 40);
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        let d = EdgeDelta::between(&csr, &snap).unwrap();
+        assert!(d.is_empty());
+        assert_eq!(d.churn(), 0);
+    }
+
+    #[test]
+    fn between_rejects_node_count_mismatch() {
+        let mut rng = Pcg32::seeded(72);
+        let a = random_snapshot(&mut rng, 10, 20);
+        let b = random_snapshot(&mut rng, 11, 20);
+        let csr = SnapshotCsr::from_snapshot(&a);
+        assert!(EdgeDelta::between(&csr, &b).is_none());
+    }
+
+    #[test]
+    fn between_reconstructs_arbitrary_pairs_exactly() {
+        let mut rng = Pcg32::seeded(73);
+        for _ in 0..20 {
+            let a = random_snapshot(&mut rng, 15, 45);
+            let mut b = random_snapshot(&mut rng, 15, 50);
+            b.selfcoef = a.selfcoef.clone();
+            let mut csr = SnapshotCsr::from_snapshot(&a);
+            let delta = EdgeDelta::between(&csr, &b).unwrap();
+            // removals sorted ascending by (dst, pos), as the contract says
+            assert!(delta.removed.windows(2).all(|w| w[0] < w[1]));
+            // independent pairs churn close to e_old + e_new, so the
+            // always-sufficient budget is 2× the larger edge count
+            let kind = csr.rebuild_delta(&b, &delta, 2.0);
+            assert_eq!(kind, crate::graph::CsrRebuild::Patched);
+            let want = SnapshotCsr::from_snapshot(&b);
+            assert_eq!(csr.num_edges(), want.num_edges());
+            for d in 0..15 {
+                let (gs, gv) = csr.row(d);
+                let (ws, wv) = want.row(d);
+                assert_eq!(gs, ws, "row {d} sources");
+                assert_eq!(
+                    gv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    wv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "row {d} coefficients"
+                );
+            }
+        }
+    }
+}

@@ -17,13 +17,15 @@
 pub mod convert;
 pub mod coo;
 pub mod csr;
+pub mod delta;
 pub mod norm;
 pub mod renumber;
 pub mod snapshot;
 
 pub use convert::{Csc, Csr};
 pub use coo::{CooEdge, CooStream};
-pub use csr::SnapshotCsr;
+pub use csr::{CsrRebuild, SnapshotCsr, DELTA_CHURN_MAX};
+pub use delta::EdgeDelta;
 pub use norm::normalize_gcn;
 pub use renumber::RenumberTable;
 pub use snapshot::{Snapshot, SnapshotStats};

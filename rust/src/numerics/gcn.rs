@@ -2,7 +2,9 @@
 //!
 //! [`aggregate`] is the COO edge-walk **reference**: the simplest
 //! correct form, kept as the ground truth the CSR engine
-//! (`numerics::spmm`) is property-tested against bitwise.  The layer
+//! (`numerics::spmm`) — under *either* of its kernel sets, the scalar
+//! oracle or the 8-wide lane twins (`numerics::Kernels`) — is
+//! property-tested against bitwise.  The layer
 //! entry points route through the engine: [`gcn_layer_csr`] for callers
 //! that hold a cached [`SnapshotCsr`] (pipeline staging slots, the CPU
 //! baseline loops), and [`gcn_layer`] as a convenience that builds one

@@ -12,19 +12,24 @@
 //! Message passing runs through the sparse compute engine
 //! ([`spmm::Engine`]): destination-major CSR aggregation, optionally
 //! row-partitioned across a persistent worker pool, cache-blocked
-//! matmul, and a fused aggregate-project kernel.  The `*_step_with`
-//! variants take a caller-cached [`SnapshotCsr`] + [`Engine`] (the hot
-//! path); the original `*_step` functions build a serial engine and a
-//! throwaway CSR per call and remain bitwise-compatible wrappers.
+//! matmul, and a fused aggregate-project kernel.  Each engine runs one
+//! of two bitwise-equal inner-kernel sets ([`spmm::Kernels`]): the
+//! scalar reference in [`spmm`]/[`rnn`] (the oracle) or the 8-wide
+//! lane-unrolled twins in `simd`; the `simd` cargo feature flips the
+//! default.  The `*_step_with` variants take a caller-cached
+//! [`SnapshotCsr`] + [`Engine`] (the hot path); the original `*_step`
+//! functions build a serial engine and a throwaway CSR per call and
+//! remain bitwise-compatible wrappers.
 
 pub mod gcn;
 pub mod rnn;
+pub(crate) mod simd;
 pub mod spmm;
 pub mod tensor;
 
 pub use gcn::{aggregate, aggregate_into, gcn_layer, gcn_layer_csr, gcn_layer_slice_into};
 pub use rnn::{gru_matrix_cell, lstm_gate_slices_into, lstm_gate_stage, lstm_gate_stage_with};
-pub use spmm::{Engine, MatmulReq};
+pub use spmm::{Engine, Kernels, MatmulReq};
 pub use tensor::Mat;
 
 use crate::graph::{Snapshot, SnapshotCsr};

@@ -3,9 +3,14 @@
 //! The LSTM gate stage is elementwise per node row, so it row-partitions
 //! across the sparse engine's worker pool just like aggregation:
 //! [`lstm_gate_stage_with`] writes disjoint row ranges of the new H/C
-//! and is bitwise-equal to the serial path at any thread count.
+//! and is bitwise-equal to the serial path at any thread count.  The
+//! per-range gate loop dispatches on the engine's
+//! [`Kernels`](super::spmm::Kernels) selector — scalar reference or the
+//! lane-unrolled twin in `numerics::simd` — which are bitwise-equal to
+//! each other (same per-element op sequence).
 
-use super::spmm::{Engine, SendPtr};
+use super::simd::lstm_gate_rows_lanes;
+use super::spmm::{Engine, Kernels, SendPtr};
 use super::tensor::{sigmoid, Mat};
 use crate::models::GruParams;
 
@@ -101,7 +106,10 @@ pub fn lstm_gate_slices_into(
         // SAFETY: disjoint row ranges — see `spmm::SendPtr`
         let hs = unsafe { std::slice::from_raw_parts_mut(hp.0.add(lo * hdim), (hi - lo) * hdim) };
         let cs = unsafe { std::slice::from_raw_parts_mut(cp.0.add(lo * hdim), (hi - lo) * hdim) };
-        lstm_gate_rows(px, ph, b, c, hs, cs, lo, hi, hdim);
+        match eng.kernels() {
+            Kernels::Scalar => lstm_gate_rows(px, ph, b, c, hs, cs, lo, hi, hdim),
+            Kernels::Lanes => lstm_gate_rows_lanes(px, ph, b, c, hs, cs, lo, hi, hdim),
+        }
     });
 }
 
@@ -214,6 +222,35 @@ mod tests {
                 cp.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
                 cs.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
             );
+        }
+    }
+
+    #[test]
+    fn lstm_gate_lanes_bitwise_equals_scalar_kernels() {
+        let mut rng = Pcg32::seeded(15);
+        // widths straddling the 8-lane tile boundary, plus pure tails
+        for hdim in [1usize, 7, 8, 9, 16, 19] {
+            let n = 13;
+            let px = Mat::from_vec(n, 4 * hdim, rng.normal_vec(n * 4 * hdim, 1.0));
+            let ph = Mat::from_vec(n, 4 * hdim, rng.normal_vec(n * 4 * hdim, 1.0));
+            let b = rng.normal_vec(4 * hdim, 0.5);
+            let c = Mat::from_vec(n, hdim, rng.normal_vec(n * hdim, 1.0));
+            let sc = Engine::new_with(1, Kernels::Scalar);
+            let (hs, cs) = lstm_gate_stage_with(&sc, &px, &ph, &b, &c);
+            for threads in [1usize, 2, 4] {
+                let ln = Engine::new_with(threads, Kernels::Lanes);
+                let (hl, cl) = lstm_gate_stage_with(&ln, &px, &ph, &b, &c);
+                assert_eq!(
+                    hl.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    hs.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "hdim={hdim} threads={threads} H"
+                );
+                assert_eq!(
+                    cl.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    cs.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "hdim={hdim} threads={threads} C"
+                );
+            }
         }
     }
 

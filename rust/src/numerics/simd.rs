@@ -1,0 +1,335 @@
+//! Lane-unrolled inner kernels: the SIMD face of the sparse compute
+//! engine (`spmm::Engine`).
+//!
+//! DGNN-Booster's PEs win by running many multiply-accumulates per
+//! cycle on the feature axis (paper §V); the host mirror of that is
+//! explicit 8-wide accumulator tiles — `[f32; 8]` register blocks the
+//! autovectoriser lowers to full vector lanes — over the same loop
+//! structure as the scalar reference in `spmm`/`rnn`.  The kernels here
+//! are **bitwise-equal** to their scalar counterparts at every shape
+//! and thread count, because per output element the floating-point
+//! additions happen in the identical ascending order:
+//!
+//! - accumulators start at `0.0` and add with `+=` (never seeded with
+//!   the first term — `0.0 + (-0.0)` is `+0.0` while a seeded `-0.0`
+//!   would survive, breaking bit equality on all-zero rows);
+//! - exactly **one** accumulator chain exists per output element (no
+//!   split-accumulator reassociation — the speedup comes from lane
+//!   width and from touching each output tile once per k-block instead
+//!   of once per k-term, not from reordering the math);
+//! - k-terms accumulate in ascending order (`KC` blocks ascending,
+//!   terms inside a block ascending), matching the scalar path.
+//!
+//! The equivalence is pinned by `tests/prop_kernels.rs` at
+//! non-lane-multiple dims (tail handling), empty rows, and 1/2/4
+//! threads; which set an [`super::spmm::Engine`] runs is chosen by
+//! [`super::spmm::Kernels`], whose default the `simd` cargo feature
+//! flips.  Everything here is plain safe Rust — no std::simd, no
+//! intrinsics — so the scalar build remains the portable oracle.
+
+use super::spmm::{aggregate_rows, KC, NC};
+use super::tensor::{sigmoid, Mat};
+use crate::graph::SnapshotCsr;
+
+/// Accumulator tile width.  Eight f32 lanes = one AVX2 register (or two
+/// NEON quads); wide enough to saturate the FMA ports, small enough
+/// that a handful of tiles fits the register file.
+pub(crate) const LANES: usize = 8;
+
+/// Operand-panel budget for one worker's row block in the matmul: rows
+/// are re-read once per `NC` column block, so keep the active `[MC × k]`
+/// panel L2-resident (256 KiB ≈ half a typical per-core L2).  This is
+/// the PR 5 follow-up: `Engine::matmul_multi_into`'s row-stacked
+/// operand can exceed the working set, so both the multi-sweep splitter
+/// and this kernel block rows to `row_block(k)`.
+const L2_PANEL_BYTES: usize = 256 * 1024;
+
+/// Row-block height for a `[rows × k_total]` operand panel.
+#[inline]
+pub(crate) fn row_block(k_total: usize) -> usize {
+    (L2_PANEL_BYTES / (4 * k_total.max(1))).clamp(LANES, 4096)
+}
+
+/// Lane-unrolled Â·X over destination rows `lo..hi` — the SIMD twin of
+/// [`aggregate_rows`].  The feature axis is tiled into 8-wide register
+/// accumulators; per tile the self-loop term lands first, then the
+/// in-edges in COO order, so every output element sees the scalar
+/// path's exact addition sequence while the edge walk keeps its
+/// partial sums in registers instead of re-loading the output row per
+/// edge.
+pub(crate) fn aggregate_rows_lanes(
+    csr: &SnapshotCsr,
+    selfcoef: &[f32],
+    x: &[f32],
+    d: usize,
+    out: &mut [f32],
+    lo: usize,
+    hi: usize,
+) {
+    debug_assert_eq!(out.len(), (hi - lo) * d);
+    for r in lo..hi {
+        let orow = &mut out[(r - lo) * d..(r - lo + 1) * d];
+        let sc = selfcoef[r];
+        let xrow = &x[r * d..(r + 1) * d];
+        let (srcs, coefs) = csr.row(r);
+        let mut t = 0;
+        while t + LANES <= d {
+            let mut acc = [0.0f32; LANES];
+            for l in 0..LANES {
+                acc[l] += sc * xrow[t + l];
+            }
+            for (&s, &c) in srcs.iter().zip(coefs) {
+                let srow = &x[s as usize * d + t..s as usize * d + t + LANES];
+                for l in 0..LANES {
+                    acc[l] += c * srow[l];
+                }
+            }
+            orow[t..t + LANES].copy_from_slice(&acc);
+            t += LANES;
+        }
+        // scalar tail: same per-element op sequence
+        while t < d {
+            let mut acc = 0.0f32;
+            acc += sc * xrow[t];
+            for (&s, &c) in srcs.iter().zip(coefs) {
+                acc += c * x[s as usize * d + t];
+            }
+            orow[t] = acc;
+            t += 1;
+        }
+    }
+}
+
+/// Lane-unrolled cache-blocked `a @ b` over rows `lo..hi` — the SIMD
+/// twin of [`super::spmm::matmul_rows`], with an extra `MC` row-block
+/// loop (see [`row_block`]) keeping the operand panel L2-resident.
+/// Output tiles are loaded/stored once per `(k-block, tile)` instead of
+/// once per k-term; each element still owns exactly one accumulator
+/// chain with k ascending, so the result is bitwise-equal.
+pub(crate) fn matmul_rows_lanes(
+    a: &[f32],
+    k_total: usize,
+    b: &Mat,
+    out: &mut [f32],
+    lo: usize,
+    hi: usize,
+) {
+    let n = b.cols;
+    debug_assert_eq!(out.len(), (hi - lo) * n);
+    out.fill(0.0);
+    if n == 0 || k_total == 0 {
+        return;
+    }
+    let mc = row_block(k_total);
+    let mut ib = lo;
+    while ib < hi {
+        let iend = (ib + mc).min(hi);
+        for kb in (0..k_total).step_by(KC) {
+            let kend = (kb + KC).min(k_total);
+            let bpan = &b.data[kb * n..kend * n];
+            for jb in (0..n).step_by(NC) {
+                let jend = (jb + NC).min(n);
+                for i in ib..iend {
+                    let arow = &a[i * k_total + kb..i * k_total + kend];
+                    let orow = &mut out[(i - lo) * n..(i - lo + 1) * n];
+                    let mut j = jb;
+                    while j + LANES <= jend {
+                        let mut acc = [0.0f32; LANES];
+                        acc.copy_from_slice(&orow[j..j + LANES]);
+                        for (kk, &aik) in arow.iter().enumerate() {
+                            let brow = &bpan[kk * n + j..kk * n + j + LANES];
+                            for l in 0..LANES {
+                                acc[l] += aik * brow[l];
+                            }
+                        }
+                        orow[j..j + LANES].copy_from_slice(&acc);
+                        j += LANES;
+                    }
+                    // scalar tail columns
+                    while j < jend {
+                        let mut acc = orow[j];
+                        for (kk, &aik) in arow.iter().enumerate() {
+                            acc += aik * bpan[kk * n + j];
+                        }
+                        orow[j] = acc;
+                        j += 1;
+                    }
+                }
+            }
+        }
+        ib = iend;
+    }
+}
+
+/// Lane-unrolled fused aggregate-project over destination rows
+/// `lo..hi` — the SIMD twin of [`super::spmm::fused_rows`].  Each row
+/// aggregates into `scratch` via [`aggregate_rows_lanes`] (bitwise-equal
+/// to the scalar aggregation), then projects through `w` with 8-wide
+/// output tiles, k ascending from a zero accumulator.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fused_rows_lanes(
+    csr: &SnapshotCsr,
+    selfcoef: &[f32],
+    x: &[f32],
+    d: usize,
+    w: &Mat,
+    out: &mut [f32],
+    lo: usize,
+    hi: usize,
+    scratch: &mut [f32],
+) {
+    let nc = w.cols;
+    debug_assert_eq!(out.len(), (hi - lo) * nc);
+    debug_assert_eq!(scratch.len(), d);
+    if nc == 0 {
+        return;
+    }
+    for r in lo..hi {
+        aggregate_rows_lanes(csr, selfcoef, x, d, scratch, r, r + 1);
+        let orow = &mut out[(r - lo) * nc..(r - lo + 1) * nc];
+        let mut j = 0;
+        while j + LANES <= nc {
+            let mut acc = [0.0f32; LANES];
+            for (kk, &av) in scratch.iter().enumerate() {
+                let brow = &w.data[kk * nc + j..kk * nc + j + LANES];
+                for l in 0..LANES {
+                    acc[l] += av * brow[l];
+                }
+            }
+            orow[j..j + LANES].copy_from_slice(&acc);
+            j += LANES;
+        }
+        while j < nc {
+            let mut acc = 0.0f32;
+            for (kk, &av) in scratch.iter().enumerate() {
+                acc += av * w.data[kk * nc + j];
+            }
+            orow[j] = acc;
+            j += 1;
+        }
+    }
+}
+
+/// Lane-unrolled LSTM gate stage over node rows `lo..hi` — the SIMD
+/// twin of the scalar gate loop in `rnn`.  Pre-activations for all four
+/// gates are computed as 8-wide adds (`px + ph + b`, left to right like
+/// the scalar path); the transcendentals stay scalar per lane (libm
+/// calls), and the cell/hidden updates are lane muls.  Per element the
+/// op sequence is identical, so the result is bitwise-equal.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lstm_gate_rows_lanes(
+    px: &[f32],
+    ph: &[f32],
+    b: &[f32],
+    c: &[f32],
+    h_out: &mut [f32],
+    c_out: &mut [f32],
+    lo: usize,
+    hi: usize,
+    hdim: usize,
+) {
+    for r in lo..hi {
+        let base = r * 4 * hdim;
+        let mut j = 0;
+        while j + LANES <= hdim {
+            let mut pre = [[0.0f32; LANES]; 4];
+            for (g, pg) in pre.iter_mut().enumerate() {
+                let off = base + g * hdim + j;
+                let boff = g * hdim + j;
+                for l in 0..LANES {
+                    pg[l] = px[off + l] + ph[off + l] + b[boff + l];
+                }
+            }
+            let mut cv = [0.0f32; LANES];
+            let mut hv = [0.0f32; LANES];
+            for l in 0..LANES {
+                let i = sigmoid(pre[0][l]);
+                let f = sigmoid(pre[1][l]);
+                let g = pre[2][l].tanh();
+                let o = sigmoid(pre[3][l]);
+                let cn = f * c[r * hdim + j + l] + i * g;
+                cv[l] = cn;
+                hv[l] = o * cn.tanh();
+            }
+            c_out[(r - lo) * hdim + j..(r - lo) * hdim + j + LANES].copy_from_slice(&cv);
+            h_out[(r - lo) * hdim + j..(r - lo) * hdim + j + LANES].copy_from_slice(&hv);
+            j += LANES;
+        }
+        // scalar tail: same math per element as the scalar gate loop
+        while j < hdim {
+            let pre = |g: usize| {
+                px[base + g * hdim + j] + ph[base + g * hdim + j] + b[g * hdim + j]
+            };
+            let i = sigmoid(pre(0));
+            let f = sigmoid(pre(1));
+            let g = pre(2).tanh();
+            let o = sigmoid(pre(3));
+            let cn = f * c[r * hdim + j] + i * g;
+            c_out[(r - lo) * hdim + j] = cn;
+            h_out[(r - lo) * hdim + j] = o * cn.tanh();
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::random_snapshot;
+    use crate::testutil::Pcg32;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn lane_aggregate_bitwise_equals_scalar_across_tail_widths() {
+        let mut rng = Pcg32::seeded(91);
+        for d in [1usize, 7, 8, 9, 15, 16, 17, 24] {
+            let snap = random_snapshot(&mut rng, 33, 140);
+            let csr = SnapshotCsr::from_snapshot(&snap);
+            let x: Vec<f32> = rng.normal_vec(33 * d, 1.0);
+            let mut want = vec![0.0f32; 33 * d];
+            let mut got = vec![0.0f32; 33 * d];
+            aggregate_rows(&csr, &snap.selfcoef, &x, d, &mut want, 0, 33);
+            aggregate_rows_lanes(&csr, &snap.selfcoef, &x, d, &mut got, 0, 33);
+            assert_eq!(bits(&got), bits(&want), "d={d}");
+        }
+    }
+
+    #[test]
+    fn lane_matmul_bitwise_equals_scalar_across_block_boundaries() {
+        let mut rng = Pcg32::seeded(92);
+        // shapes straddling LANES, KC/NC, and the MC row-block boundary
+        for (m, k, n) in [(3, 5, 7), (10, 64, 64), (17, 100, 130), (1, 1, 1), (9, 8, 8)] {
+            let a: Vec<f32> = rng.normal_vec(m * k, 1.0);
+            let b = Mat::from_vec(k, n, rng.normal_vec(k * n, 1.0));
+            let mut want = vec![0.0f32; m * n];
+            let mut got = vec![0.0f32; m * n];
+            super::super::spmm::matmul_rows(&a, k, &b, &mut want, 0, m);
+            matmul_rows_lanes(&a, k, &b, &mut got, 0, m);
+            assert_eq!(bits(&got), bits(&want), "({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn negative_zero_rows_stay_bitwise_equal() {
+        // all-zero operand with a -0.0 coefficient: the accumulators
+        // must start at +0.0 and add, never seed with the first term
+        let mut rng = Pcg32::seeded(93);
+        let mut snap = random_snapshot(&mut rng, 8, 20);
+        for c in &mut snap.coef {
+            *c = -0.0;
+        }
+        for s in &mut snap.selfcoef {
+            *s = -0.0;
+        }
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        let x = vec![0.0f32; 8 * 9];
+        let mut want = vec![1.0f32; 8 * 9];
+        let mut got = vec![1.0f32; 8 * 9];
+        aggregate_rows(&csr, &snap.selfcoef, &x, 9, &mut want, 0, 8);
+        aggregate_rows_lanes(&csr, &snap.selfcoef, &x, 9, &mut got, 0, 8);
+        assert_eq!(bits(&got), bits(&want));
+    }
+}

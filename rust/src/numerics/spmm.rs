@@ -32,7 +32,15 @@
 //! bump — so a broadcast performs **zero heap allocations** (asserted
 //! by `tests/alloc_hotpath.rs`) and blocks until every worker finishes,
 //! which is what makes lending the workers non-`'static` borrows sound.
+//!
+//! Each engine carries a [`Kernels`] selector: the scalar reference
+//! kernels in this module (the bitwise oracle) or the 8-wide
+//! lane-unrolled twins in [`super::simd`].  Both sets are always
+//! compiled and bitwise-equal to each other; the `simd` cargo feature
+//! only flips which one [`Kernels::default`] — and therefore
+//! [`Engine::new`]/[`Engine::serial`] — picks.
 
+use super::simd;
 use super::tensor::Mat;
 use crate::graph::SnapshotCsr;
 use std::panic::{self, AssertUnwindSafe};
@@ -42,9 +50,97 @@ use std::sync::{Arc, Condvar, Mutex};
 /// Column-block width for the dense matmul: a `KC × NC` f32 panel of the
 /// right-hand matrix (16 KiB) stays L1-resident while every output row
 /// streams past it.
-const NC: usize = 64;
+pub(crate) const NC: usize = 64;
 /// Depth-block (k) for the dense matmul.
-const KC: usize = 64;
+pub(crate) const KC: usize = 64;
+
+/// Which inner-kernel set an [`Engine`] runs.
+///
+/// `Scalar` is the reference implementation in this module and `rnn` —
+/// the bitwise oracle every other path is tested against.  `Lanes` is
+/// the 8-wide lane-unrolled set in [`super::simd`], bitwise-equal to
+/// `Scalar` by construction (one accumulator chain per output element,
+/// k-terms ascending; pinned by `tests/prop_kernels.rs`).  The default
+/// follows the `simd` cargo feature, so a `--features simd` build runs
+/// the vector kernels everywhere without any call-site change while
+/// the scalar set stays compiled and selectable for comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kernels {
+    /// Scalar reference kernels (the bitwise oracle).
+    Scalar,
+    /// 8-wide lane-unrolled kernels (`numerics::simd`).
+    Lanes,
+}
+
+impl Default for Kernels {
+    fn default() -> Self {
+        if cfg!(feature = "simd") {
+            Kernels::Lanes
+        } else {
+            Kernels::Scalar
+        }
+    }
+}
+
+impl Kernels {
+    /// Dispatch the per-range Â·X aggregation kernel.
+    #[inline]
+    pub(crate) fn aggregate_rows(
+        self,
+        csr: &SnapshotCsr,
+        selfcoef: &[f32],
+        x: &[f32],
+        d: usize,
+        out: &mut [f32],
+        lo: usize,
+        hi: usize,
+    ) {
+        match self {
+            Kernels::Scalar => aggregate_rows(csr, selfcoef, x, d, out, lo, hi),
+            Kernels::Lanes => simd::aggregate_rows_lanes(csr, selfcoef, x, d, out, lo, hi),
+        }
+    }
+
+    /// Dispatch the per-range cache-blocked matmul kernel.
+    #[inline]
+    pub(crate) fn matmul_rows(
+        self,
+        a: &[f32],
+        k_total: usize,
+        b: &Mat,
+        out: &mut [f32],
+        lo: usize,
+        hi: usize,
+    ) {
+        match self {
+            Kernels::Scalar => matmul_rows(a, k_total, b, out, lo, hi),
+            Kernels::Lanes => simd::matmul_rows_lanes(a, k_total, b, out, lo, hi),
+        }
+    }
+
+    /// Dispatch the per-range fused aggregate-project kernel.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn fused_rows(
+        self,
+        csr: &SnapshotCsr,
+        selfcoef: &[f32],
+        x: &[f32],
+        d: usize,
+        w: &Mat,
+        out: &mut [f32],
+        lo: usize,
+        hi: usize,
+        scratch: &mut [f32],
+    ) {
+        match self {
+            Kernels::Scalar => fused_rows(csr, selfcoef, x, d, w, out, lo, hi, scratch),
+            Kernels::Lanes => {
+                simd::fused_rows_lanes(csr, selfcoef, x, d, w, out, lo, hi, scratch)
+            }
+        }
+    }
+}
 
 /// Broadcast control block: a generation counter plus the borrowed task
 /// for the current broadcast.  Workers run a task exactly once per
@@ -212,35 +308,52 @@ fn chunk(n: usize, w: usize, nw: usize) -> (usize, usize) {
     (n * w / nw, n * (w + 1) / nw)
 }
 
-/// The sparse compute engine: a thread count plus (for `threads > 1`)
-/// a persistent [`WorkerPool`].
+/// The sparse compute engine: a thread count, a [`Kernels`] selector,
+/// and (for `threads > 1`) a persistent [`WorkerPool`].
 ///
 /// Every kernel is deterministic: the parallel paths produce bitwise the
 /// same output as [`Engine::serial`], which in turn is bitwise-equal to
-/// the COO edge-walk reference `numerics::gcn::aggregate`.
+/// the COO edge-walk reference `numerics::gcn::aggregate` — with either
+/// kernel set, since the lane kernels replicate the scalar addition
+/// order exactly.
 pub struct Engine {
     threads: usize,
+    kernels: Kernels,
     pool: Option<WorkerPool>,
 }
 
 impl Engine {
-    /// Single-threaded engine (no pool, no spawn cost).
+    /// Single-threaded engine (no pool, no spawn cost) running the
+    /// build's default kernel set.
     pub fn serial() -> Engine {
-        Engine { threads: 1, pool: None }
+        Engine { threads: 1, kernels: Kernels::default(), pool: None }
     }
 
-    /// Engine with `threads` workers; `threads <= 1` degenerates to the
-    /// serial engine.
+    /// Engine with `threads` workers running the build's default kernel
+    /// set; `threads <= 1` degenerates to the serial engine.
     pub fn new(threads: usize) -> Engine {
+        Engine::new_with(threads, Kernels::default())
+    }
+
+    /// Engine with an explicit [`Kernels`] selection — how the property
+    /// tests and benches compare scalar and lane kernels within one
+    /// build regardless of the `simd` feature.
+    pub fn new_with(threads: usize, kernels: Kernels) -> Engine {
         let threads = threads.max(1);
         Engine {
             threads,
+            kernels,
             pool: if threads > 1 { Some(WorkerPool::new(threads)) } else { None },
         }
     }
 
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// The inner-kernel set this engine dispatches to.
+    pub fn kernels(&self) -> Kernels {
+        self.kernels
     }
 
     /// Run `f(lo, hi)` over disjoint row ranges covering `0..n` — on the
@@ -256,6 +369,36 @@ impl Engine {
                     }
                 });
             }
+            _ => f(0, n),
+        }
+    }
+
+    /// Like [`Self::run_partitioned`], but caps each worker's contiguous
+    /// range at `max_chunk` rows and deals the chunks round-robin.  The
+    /// operand-aware splitter behind [`Self::matmul_multi_into`]: when a
+    /// row-stacked batch operand exceeds one worker's L2 panel budget,
+    /// smaller interleaved chunks keep every worker's active panel
+    /// resident (and incidentally balance ragged request sizes).
+    /// Bitwise-neutral: the kernels are row-independent, so chunk
+    /// boundaries never change any output element's addition order.
+    pub(crate) fn run_chunked(&self, n: usize, max_chunk: usize, f: impl Fn(usize, usize) + Sync) {
+        match &self.pool {
+            Some(pool) if n > 1 => {
+                let nw = self.threads;
+                let nchunks = n.div_ceil(max_chunk.max(1)).max(nw);
+                pool.broadcast(&|w| {
+                    let mut ci = w;
+                    while ci < nchunks {
+                        let (lo, hi) = chunk(n, ci, nchunks);
+                        if lo < hi {
+                            f(lo, hi);
+                        }
+                        ci += nw;
+                    }
+                });
+            }
+            // serial: one sweep — the lane matmul's own MC row blocking
+            // (simd::row_block) already bounds the resident panel
             _ => f(0, n),
         }
     }
@@ -289,7 +432,7 @@ impl Engine {
             // SAFETY: disjoint row ranges — see SendPtr
             let slice =
                 unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * d), (hi - lo) * d) };
-            aggregate_rows(csr, selfcoef, x, d, slice, lo, hi);
+            self.kernels.aggregate_rows(csr, selfcoef, x, d, slice, lo, hi);
         });
     }
 
@@ -324,7 +467,7 @@ impl Engine {
             // SAFETY: disjoint row ranges — see SendPtr
             let slice =
                 unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * n), (hi - lo) * n) };
-            matmul_rows(a, k, b, slice, lo, hi);
+            self.kernels.matmul_rows(a, k, b, slice, lo, hi);
         });
     }
 
@@ -365,7 +508,10 @@ impl Engine {
             });
             total += rows;
         }
-        self.run_partitioned(total, |lo, hi| {
+        // operand-aware split (the PR 5 follow-up): a row-stacked batch
+        // operand can exceed one worker's L2 working set, so cap each
+        // dispatch chunk at the panel height the kernel itself blocks to
+        self.run_chunked(total, simd::row_block(k), |lo, hi| {
             for m in &meta {
                 let s = lo.max(m.start);
                 let e = hi.min(m.start + m.rows);
@@ -380,7 +526,7 @@ impl Engine {
                 let out = unsafe {
                     std::slice::from_raw_parts_mut(m.out.0.add(rlo * n), (rhi - rlo) * n)
                 };
-                matmul_rows(a, k, b, out, rlo, rhi);
+                self.kernels.matmul_rows(a, k, b, out, rlo, rhi);
             }
         });
     }
@@ -427,7 +573,7 @@ impl Engine {
             FUSED_SCRATCH.with(|cell| {
                 let mut scratch = cell.borrow_mut();
                 scratch.resize(d, 0.0);
-                fused_rows(csr, selfcoef, x, d, w, slice, lo, hi, &mut scratch[..]);
+                self.kernels.fused_rows(csr, selfcoef, x, d, w, slice, lo, hi, &mut scratch[..]);
             });
         });
     }
@@ -719,6 +865,62 @@ mod tests {
         let mut fused_s = vec![0.0f32; 41 * 9];
         eng.aggregate_matmul_slice_into(&csr, &snap.selfcoef, &x.data, 12, &w, &mut fused_s);
         assert_eq!(fused.data, fused_s);
+    }
+
+    #[test]
+    fn lane_engine_bitwise_equals_scalar_engine() {
+        let mut rng = Pcg32::seeded(41);
+        let snap = random_snapshot(&mut rng, 73, 400);
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        let x = random_mat(&mut rng, 73, 19);
+        let w = random_mat(&mut rng, 19, 11);
+        for threads in [1usize, 3] {
+            let sc = Engine::new_with(threads, Kernels::Scalar);
+            let ln = Engine::new_with(threads, Kernels::Lanes);
+            assert_eq!(sc.kernels(), Kernels::Scalar);
+            assert_eq!(ln.kernels(), Kernels::Lanes);
+            let a_s = sc.aggregate(&csr, &snap.selfcoef, &x);
+            let a_l = ln.aggregate(&csr, &snap.selfcoef, &x);
+            assert_eq!(
+                a_l.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                a_s.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "aggregate threads={threads}"
+            );
+            let (mut m_s, mut m_l) = (Mat::zeros(73, 11), Mat::zeros(73, 11));
+            sc.matmul_into(&a_s, &w, &mut m_s);
+            ln.matmul_into(&a_l, &w, &mut m_l);
+            assert_eq!(
+                m_l.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                m_s.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "matmul threads={threads}"
+            );
+            let (mut f_s, mut f_l) = (Mat::zeros(73, 11), Mat::zeros(73, 11));
+            sc.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut f_s);
+            ln.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut f_l);
+            assert_eq!(
+                f_l.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                f_s.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "fused threads={threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn run_chunked_covers_rows_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        for eng in [Engine::serial(), Engine::new(3)] {
+            let hits: Vec<AtomicUsize> = (0..100).map(|_| AtomicUsize::new(0)).collect();
+            // max_chunk far below n/threads forces several chunks per worker
+            eng.run_chunked(100, 7, |lo, hi| {
+                assert!(lo < hi && hi <= 100);
+                for h in &hits[lo..hi] {
+                    h.fetch_add(1, Ordering::SeqCst);
+                }
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "row {i} threads={}", eng.threads());
+            }
+        }
     }
 
     #[test]

@@ -10,7 +10,7 @@
 
 use crate::error::{Error, Result};
 use crate::fpga::incremental::{DeltaPlan, DeltaStats};
-use crate::graph::{Snapshot, SnapshotCsr};
+use crate::graph::{CsrRebuild, EdgeDelta, Snapshot, SnapshotCsr, DELTA_CHURN_MAX};
 use crate::runtime::manifest::Manifest;
 use std::collections::HashMap;
 
@@ -181,10 +181,47 @@ impl StagingSlot {
     pub fn stage_delta(
         &mut self,
         snap: &Snapshot,
-        mut features: impl FnMut(u32, &mut [f32]),
+        features: impl FnMut(u32, &mut [f32]),
     ) -> Result<DeltaStats> {
         self.graph.fill(snap)?;
         self.csr.rebuild(snap);
+        Ok(self.stage_features_delta(snap, features))
+    }
+
+    /// Edit-stream [`Self::stage`]: the graph step arrives as an edge
+    /// diff over a stable node layout (`EdgeDelta` — see
+    /// `datasets::synth::edit_stream`), so the cached CSR is **patched**
+    /// via [`SnapshotCsr::rebuild_delta`] (full counting-sort fallback
+    /// past [`DELTA_CHURN_MAX`] or on any contract violation — the
+    /// returned [`CsrRebuild`] reports which path ran), and when the
+    /// raw-id layout is unchanged the staged feature rows are already
+    /// current and all feature movement is skipped (the
+    /// `DeltaPlan::layout_stable` condition, checked directly against
+    /// this slot's bookkeeping).  Falls back to delta feature staging on
+    /// any layout change.  Allocation-free at steady state (asserted by
+    /// `tests/alloc_hotpath.rs`).
+    pub fn stage_edit(
+        &mut self,
+        snap: &Snapshot,
+        delta: &EdgeDelta,
+        features: impl FnMut(u32, &mut [f32]),
+    ) -> Result<CsrRebuild> {
+        self.graph.fill(snap)?;
+        let kind = self.csr.rebuild_delta(snap, delta, DELTA_CHURN_MAX);
+        if self.x_raws.as_slice() != snap.renumber.raws() {
+            self.stage_features_delta(snap, features);
+        }
+        Ok(kind)
+    }
+
+    /// Shared feature tail of [`Self::stage_delta`]/[`Self::stage_edit`]:
+    /// move shared rows into the double buffer, fetch arrivals, swap,
+    /// and refresh the raw-id bookkeeping.
+    fn stage_features_delta(
+        &mut self,
+        snap: &Snapshot,
+        mut features: impl FnMut(u32, &mut [f32]),
+    ) -> DeltaStats {
         let d = self.in_dim;
         let n = snap.num_nodes(); // within max_nodes: graph.fill checked
         {
@@ -211,7 +248,7 @@ impl StagingSlot {
         for (local, raw) in snap.renumber.iter() {
             self.x_map.insert(raw, local);
         }
-        Ok(self.plan.stats())
+        self.plan.stats()
     }
 
     /// Stage from an already-materialised dense `[n × in_dim]` feature
@@ -405,6 +442,45 @@ mod tests {
         let mut want = StagingSlot::new(&m);
         want.stage(&s1, feats).unwrap();
         assert_eq!(slot.x, want.x);
+    }
+
+    #[test]
+    fn stage_edit_matches_full_stage_and_skips_feature_work() {
+        use crate::datasets::synth::edit_stream;
+        use crate::graph::CsrRebuild;
+        use crate::testutil::Pcg32;
+        let m = Manifest { max_nodes: 16, max_edges: 64, in_dim: 3, hidden_dim: 4, out_dim: 4 };
+        let mut rng = Pcg32::seeded(44);
+        let steps = edit_stream(&mut rng, 16, 48, 5, 0.25);
+        let feats = |raw: u32, row: &mut [f32]| row.fill(raw as f32 + 1.0);
+        let mut edit = StagingSlot::new(&m);
+        let mut full = StagingSlot::new(&m);
+        let mut fetches = 0usize;
+        for (i, st) in steps.iter().enumerate() {
+            full.stage(&st.snap, feats).unwrap();
+            let kind = edit
+                .stage_edit(&st.snap, &st.delta, |raw, row| {
+                    fetches += 1;
+                    feats(raw, row);
+                })
+                .unwrap();
+            if i == 0 {
+                assert_eq!(kind, CsrRebuild::Full, "bootstrap step is a full rebuild");
+            } else {
+                assert_eq!(kind, CsrRebuild::Patched, "step {i}");
+            }
+            assert_eq!(
+                full.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                edit.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "step {i} staged X"
+            );
+            for r in 0..16 {
+                assert_eq!(full.csr.row(r), edit.csr.row(r), "step {i} csr row {r}");
+            }
+        }
+        // the stable layout means feature rows were materialised exactly
+        // once, at the bootstrap step
+        assert_eq!(fetches, 16);
     }
 
     #[test]

@@ -14,7 +14,11 @@
 //! bitwise-identical weight matrices), issues **one** row-stacked
 //! cache-blocked call per group (`Engine::matmul_multi_into`), and then
 //! every tenant finishes its step from its own result rows
-//! ([`BatchableSession::finish_step`]).
+//! ([`BatchableSession::finish_step`]).  The engine splits that
+//! row-stacked call operand-aware: row blocks sized to the L2 working
+//! set (`Engine::run_chunked`) are dealt round-robin across the pool,
+//! so one oversized fused group no longer serializes on a single
+//! worker while the rest idle.
 //!
 //! Per tenant the batched path is **bitwise-equal** to the unbatched
 //! one: the row-stacked kernel accumulates each output row's k-terms in

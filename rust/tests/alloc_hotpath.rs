@@ -55,9 +55,10 @@ use dgnn_booster::coordinator::preprocess::preprocess_stream;
 use dgnn_booster::coordinator::{NodeStateStore, ResidentState};
 use dgnn_booster::datasets::{synth, BC_ALPHA};
 use dgnn_booster::models::{node_features_into, Dims, ModelKind};
-use dgnn_booster::numerics::{self, Engine, Mat};
+use dgnn_booster::numerics::{self, Engine, Kernels, Mat};
 use dgnn_booster::runtime::{Manifest, StagingSlot};
 use dgnn_booster::serve::SessionConfig;
+use dgnn_booster::testutil::Pcg32;
 use std::sync::Arc;
 
 #[test]
@@ -85,6 +86,9 @@ fn staging_path_steady_state_is_allocation_free() {
     // broadcast must be allocation-free — the generation-counter loop
     // replaced the boxed-job dispatch
     let eng_par = Engine::new(2);
+    // lane-kernel engine: same broadcast machinery, 8-wide inner
+    // kernels — held to the same zero-allocation bar as the scalar set
+    let eng_lanes = Engine::new_with(2, Kernels::Lanes);
     // per-snapshot feature matrices and aggregation outputs, sized once
     // up front so the measured loop touches no fresh heap memory
     let xs: Vec<Mat> = snaps
@@ -118,6 +122,9 @@ fn staging_path_steady_state_is_allocation_free() {
         // warm every worker's thread-local fused scratch too
         eng_par.aggregate_into(&slot.csr, &s.selfcoef, &xs[i], &mut agg_outs[i]);
         eng_par.aggregate_matmul_into(&slot.csr, &s.selfcoef, &xs[i], &w_fused, &mut agg_outs[i]);
+        eng_lanes.aggregate_into(&slot.csr, &s.selfcoef, &xs[i], &mut agg_outs[i]);
+        eng_lanes.matmul_into(&xs[i], &w_fused, &mut agg_outs[i]);
+        eng_lanes.aggregate_matmul_into(&slot.csr, &s.selfcoef, &xs[i], &w_fused, &mut agg_outs[i]);
     }
 
     let before = ALLOCS.load(Ordering::Relaxed);
@@ -138,12 +145,51 @@ fn staging_path_steady_state_is_allocation_free() {
         // parallel dispatch: generation-counter broadcast, no job boxes
         eng_par.aggregate_into(&slot.csr, &s.selfcoef, &xs[i], &mut agg_outs[i]);
         eng_par.aggregate_matmul_into(&slot.csr, &s.selfcoef, &xs[i], &w_fused, &mut agg_outs[i]);
+        // lane kernels: register tiles only, no per-call heap scratch
+        eng_lanes.aggregate_into(&slot.csr, &s.selfcoef, &xs[i], &mut agg_outs[i]);
+        eng_lanes.matmul_into(&xs[i], &w_fused, &mut agg_outs[i]);
+        eng_lanes.aggregate_matmul_into(&slot.csr, &s.selfcoef, &xs[i], &w_fused, &mut agg_outs[i]);
     }
     let after = ALLOCS.load(Ordering::Relaxed);
     assert_eq!(
         after - before,
         0,
         "staging hot path performed {} heap allocations at steady state",
+        after - before
+    );
+
+    // --- edit-stream staging: the delta CSR patch path -----------------
+    // `stage_edit` patches the cached CSR from an edge diff and, under
+    // the edit stream's stable layout, skips feature movement entirely.
+    // When the measured loop wraps around, step 0's bootstrap delta is
+    // inconsistent with the final state, so the full-rebuild fallback is
+    // exercised too — it must be just as allocation-free.
+    let mut erng = Pcg32::seeded(7);
+    let esteps = synth::edit_stream(&mut erng, 200, 800, 6, 0.1);
+    let em = Manifest {
+        max_nodes: 200,
+        max_edges: 800,
+        in_dim: dims.in_dim,
+        hidden_dim: dims.hidden_dim,
+        out_dim: dims.out_dim,
+    };
+    let mut edit_slot = StagingSlot::new(&em);
+    for st in esteps.iter().chain(esteps.iter()) {
+        edit_slot
+            .stage_edit(&st.snap, &st.delta, |raw, row| node_features_into(raw, 42, row))
+            .unwrap();
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for st in esteps.iter() {
+        edit_slot
+            .stage_edit(&st.snap, &st.delta, |raw, row| node_features_into(raw, 42, row))
+            .unwrap();
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "edit-stream staging performed {} heap allocations at steady state",
         after - before
     );
 

@@ -7,10 +7,10 @@
 //! ascending-k accumulation; and delta-aware feature staging must
 //! reproduce full staging bit-for-bit across snapshot sequences.
 
-use dgnn_booster::datasets::synth::random_snapshot;
-use dgnn_booster::graph::{RenumberTable, Snapshot, SnapshotCsr};
+use dgnn_booster::datasets::synth::{edit_stream, random_snapshot};
+use dgnn_booster::graph::{CsrRebuild, EdgeDelta, RenumberTable, Snapshot, SnapshotCsr};
 use dgnn_booster::models::node_features_into;
-use dgnn_booster::numerics::{self, Engine, Mat};
+use dgnn_booster::numerics::{self, lstm_gate_slices_into, Engine, Kernels, Mat};
 use dgnn_booster::runtime::{Manifest, StagingSlot};
 use dgnn_booster::testutil::{forall, Config, Pcg32};
 
@@ -149,6 +149,162 @@ fn prop_delta_feature_staging_bitwise_matches_full() {
             }
         }
         assert!(shared <= nodes);
+    });
+}
+
+#[test]
+fn prop_lanes_kernels_bitwise_equal_scalar() {
+    // the tentpole contract: the 8-wide lane kernels are bitwise-equal
+    // to the scalar oracle for every kernel, at every thread count, at
+    // dims that straddle the lane boundary (1..21 covers below / at /
+    // above 8 and 16, so tails of every width are exercised)
+    forall(Config::default().cases(30), |rng, size| {
+        let n = rng.range(0, size.max(2));
+        let e = if n == 0 { 0 } else { rng.range(0, 3 * size.max(1)) };
+        let d = rng.range(1, 21);
+        let d_out = rng.range(1, 21);
+        let snap = random_snapshot(rng, n, e);
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        let x = random_mat(rng, n, d);
+        let w = random_mat(rng, d, d_out);
+        let oracle = Engine::new_with(1, Kernels::Scalar);
+        let want_agg = oracle.aggregate(&csr, &snap.selfcoef, &x);
+        let mut want_mm = Mat::zeros(n, d_out);
+        oracle.matmul_into(&x, &w, &mut want_mm);
+        let mut want_fused = Mat::zeros(n, d_out);
+        oracle.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut want_fused);
+        for threads in [1usize, 2, 4] {
+            let eng = Engine::new_with(threads, Kernels::Lanes);
+            let got = eng.aggregate(&csr, &snap.selfcoef, &x);
+            assert_eq!(
+                bits(&got.data),
+                bits(&want_agg.data),
+                "aggregate t={threads} n={n} e={e} d={d}"
+            );
+            let mut mm = Mat::zeros(n, d_out);
+            eng.matmul_into(&x, &w, &mut mm);
+            assert_eq!(
+                bits(&mm.data),
+                bits(&want_mm.data),
+                "matmul t={threads} n={n} {d}->{d_out}"
+            );
+            let mut fused = Mat::zeros(n, d_out);
+            eng.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut fused);
+            assert_eq!(
+                bits(&fused.data),
+                bits(&want_fused.data),
+                "fused t={threads} n={n} e={e} {d}->{d_out}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_lstm_gate_lanes_bitwise_equal_scalar() {
+    forall(Config::default().cases(25), |rng, size| {
+        let n = rng.range(1, size.max(2));
+        // hdim straddles the 8-lane boundary, including exact multiples
+        let hdim = rng.range(1, 21);
+        let px = rng.normal_vec(n * 4 * hdim, 0.7);
+        let ph = rng.normal_vec(n * 4 * hdim, 0.7);
+        let b = rng.normal_vec(4 * hdim, 0.5);
+        let c = rng.normal_vec(n * hdim, 0.8);
+        let oracle = Engine::new_with(1, Kernels::Scalar);
+        let (mut want_h, mut want_c) = (vec![0.0f32; n * hdim], vec![0.0f32; n * hdim]);
+        lstm_gate_slices_into(&oracle, &px, &ph, &b, &c, hdim, &mut want_h, &mut want_c);
+        for threads in [1usize, 2, 4] {
+            let eng = Engine::new_with(threads, Kernels::Lanes);
+            let (mut h, mut cc) = (vec![0.0f32; n * hdim], vec![0.0f32; n * hdim]);
+            lstm_gate_slices_into(&eng, &px, &ph, &b, &c, hdim, &mut h, &mut cc);
+            assert_eq!(bits(&h), bits(&want_h), "H t={threads} n={n} h={hdim}");
+            assert_eq!(bits(&cc), bits(&want_c), "C t={threads} n={n} h={hdim}");
+        }
+    });
+}
+
+#[test]
+fn lane_tails_and_empty_rows_are_exact() {
+    // deterministic cross of tail widths: dims around the 8-lane
+    // boundary, with an edgeless graph (every CSR row empty) and a
+    // dense-ish one
+    let mut rng = Pcg32::seeded(9);
+    for e in [0usize, 200] {
+        let n = 23;
+        let snap = random_snapshot(&mut rng, n, e);
+        let csr = SnapshotCsr::from_snapshot(&snap);
+        for d in [1usize, 7, 8, 9, 15, 16, 17] {
+            let x = random_mat(&mut rng, n, d);
+            let w = random_mat(&mut rng, d, d);
+            let scalar = Engine::new_with(1, Kernels::Scalar);
+            let lanes = Engine::new_with(1, Kernels::Lanes);
+            let want = scalar.aggregate(&csr, &snap.selfcoef, &x);
+            let got = lanes.aggregate(&csr, &snap.selfcoef, &x);
+            assert_eq!(bits(&got.data), bits(&want.data), "aggregate e={e} d={d}");
+            let mut wm = Mat::zeros(n, d);
+            let mut gm = Mat::zeros(n, d);
+            scalar.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut wm);
+            lanes.aggregate_matmul_into(&csr, &snap.selfcoef, &x, &w, &mut gm);
+            assert_eq!(bits(&gm.data), bits(&wm.data), "fused e={e} d={d}");
+        }
+    }
+}
+
+#[test]
+fn prop_delta_csr_rebuild_matches_full() {
+    // delta-patched CSR ≡ full rebuild, bitwise, over randomized edit
+    // streams: random universe size, edge count, churn, and length
+    forall(Config::default().cases(25), |rng, size| {
+        let n = rng.range(2, size.max(3));
+        let e = rng.range(1, 4 * n);
+        let steps = rng.range(2, 7);
+        let churn = rng.uniform_f32(0.05, 0.5) as f64;
+        let stream = edit_stream(rng, n, e, steps, churn);
+        let mut patched = SnapshotCsr::default();
+        for (t, st) in stream.iter().enumerate() {
+            // max_churn 1.0: only structural violations may force Full
+            let kind = patched.rebuild_delta(&st.snap, &st.delta, 1.0);
+            if t == 0 {
+                assert_eq!(kind, CsrRebuild::Full, "bootstrap patches an empty CSR");
+            } else {
+                assert_eq!(kind, CsrRebuild::Patched, "step {t} n={n} e={e} churn={churn}");
+            }
+            let full = SnapshotCsr::from_snapshot(&st.snap);
+            assert_eq!(patched.num_edges(), full.num_edges(), "step {t}");
+            for r in 0..n {
+                let (gc, gv) = patched.row(r);
+                let (wc, wv) = full.row(r);
+                assert_eq!(gc, wc, "step {t} row {r} sources");
+                assert_eq!(bits(gv), bits(wv), "step {t} row {r} coefs");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_between_derived_deltas_patch_arbitrary_transitions() {
+    // `EdgeDelta::between` + `rebuild_delta` must reproduce a full
+    // rebuild for ANY pair of snapshots over the same node universe —
+    // not just the incremental edits `edit_stream` generates
+    forall(Config::default().cases(25), |rng, size| {
+        let n = rng.range(1, size.max(2));
+        let mut csr = SnapshotCsr::default();
+        let first = random_snapshot(rng, n, rng.range(0, 3 * n));
+        csr.rebuild(&first);
+        for step in 0..4 {
+            let next = random_snapshot(rng, n, rng.range(0, 3 * n));
+            let delta = EdgeDelta::between(&csr, &next).expect("same node count");
+            // unrelated snapshots churn close to e_old + e_new; 2× the
+            // larger edge count always covers that
+            let kind = csr.rebuild_delta(&next, &delta, 2.0);
+            assert_eq!(kind, CsrRebuild::Patched, "step {step} n={n}");
+            let full = SnapshotCsr::from_snapshot(&next);
+            for r in 0..n {
+                let (gc, gv) = csr.row(r);
+                let (wc, wv) = full.row(r);
+                assert_eq!(gc, wc, "step {step} row {r}");
+                assert_eq!(bits(gv), bits(wv), "step {step} row {r}");
+            }
+        }
     });
 }
 
