@@ -22,8 +22,9 @@ use dgnn_booster::graph::CooStream;
 use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
 use dgnn_booster::serve::{
-    fairness_of, write_serve_json, BatchStats, Command, DgnnSession, Scheduler, ServeEvent,
-    ServeRecorder, ServeRow, SessionConfig, StreamOutcome, StreamSource, TenantSpec,
+    fairness_of, write_serve_json, BatchStats, Command, DgnnSession, FaultPlan, FaultPoint,
+    FaultSpec, HealthStats, Scheduler, ServeEvent, ServePolicy, ServeRecorder, ServeRow,
+    SessionConfig, StreamOutcome, StreamSource, TenantSpec,
 };
 use std::sync::Arc;
 
@@ -41,8 +42,9 @@ fn session_cfg(stream: &CooStream, seed: u64, max_nodes: usize, delta: bool, eng
     }
 }
 
-/// Fold one run's outcomes into a row, optionally with fairness and
-/// batching counters.
+/// Fold one run's outcomes into a row, optionally with fairness,
+/// batching and health counters.
+#[allow(clippy::too_many_arguments)]
 fn row_from(
     name: String,
     streams: usize,
@@ -51,6 +53,7 @@ fn row_from(
     outcomes: &[StreamOutcome],
     with_fairness: bool,
     batch: Option<BatchStats>,
+    health: Option<HealthStats>,
 ) -> ServeRow {
     let mut rec = ServeRecorder::new(65536);
     for o in outcomes {
@@ -59,7 +62,16 @@ fn row_from(
         }
     }
     let fairness = with_fairness.then(|| fairness_of(outcomes));
-    ServeRow { name, streams, delta, threads: THREADS, summary: rec.summary(wall), fairness, batch }
+    ServeRow {
+        name,
+        streams,
+        delta,
+        threads: THREADS,
+        summary: rec.summary(wall),
+        fairness,
+        batch,
+        health,
+    }
 }
 
 fn main() {
@@ -107,7 +119,7 @@ fn main() {
                 model.name(),
                 if delta { "on" } else { "off" }
             );
-            let row = row_from(name, k, delta, wall, &outcomes, false, None);
+            let row = row_from(name, k, delta, wall, &outcomes, false, None, None);
             println!("bench {:<44} {}", row.name, row.summary.line());
             rows.push(row);
         }
@@ -152,16 +164,18 @@ fn main() {
                 .collect();
             let sched = Scheduler::new(engine, (2 * k).clamp(2, 16)).with_batching(batch);
             let t0 = std::time::Instant::now();
-            let (outcomes, stats) = sched
+            let report = sched
                 .serve_report(&manifest, tenants, |_| Vec::new(), |_, _, _, _| Ok(()))
                 .expect("batch sweep point");
+            let (outcomes, stats) = (report.outcomes, report.batch);
             let wall = t0.elapsed().as_secs_f64();
             let name = format!(
                 "serve shared {} streams={k} batch={}",
                 model.name(),
                 if batch { "on" } else { "off" }
             );
-            let row = row_from(name, k, true, wall, &outcomes, false, batch.then_some(stats));
+            let row =
+                row_from(name, k, true, wall, &outcomes, false, batch.then_some(stats), None);
             if batch {
                 println!(
                     "bench {:<44} {} occupancy={:.2} rows/call={:.0}",
@@ -234,7 +248,8 @@ fn main() {
             )
             .expect("weighted sweep point");
         let wall = t0.elapsed().as_secs_f64();
-        let row = row_from("serve weighted 1:2:4".into(), 3, true, wall, &outcomes, true, None);
+        let row =
+            row_from("serve weighted 1:2:4".into(), 3, true, wall, &outcomes, true, None, None);
         let jain = row.fairness.as_ref().map(|f| f.jain).unwrap_or(1.0);
         println!("bench {:<44} {} jain={jain:.3}", row.name, row.summary.line());
         rows.push(row);
@@ -318,8 +333,151 @@ fn main() {
             )
             .expect("churn sweep point");
         let wall = t0.elapsed().as_secs_f64();
-        let row = row_from("serve churn admit+drain".into(), 3, true, wall, &outcomes, true, None);
+        let row = row_from(
+            "serve churn admit+drain".into(),
+            3,
+            true,
+            wall,
+            &outcomes,
+            true,
+            None,
+            None,
+        );
         println!("bench {:<44} {}", row.name, row.summary.line());
+        rows.push(row);
+    }
+
+    // overload point A: sub-microsecond deadlines under contention with
+    // stale-window shedding disabled — every served window misses its
+    // target, so the JSON carries a pure deadline-miss signal
+    {
+        let streams: Vec<Arc<CooStream>> = (0..3)
+            .map(|i| Arc::new(synth::generate(&BC_ALPHA, 442 + i as u64)))
+            .collect();
+        let engine = Arc::new(Engine::new(THREADS));
+        let manifest = Scheduler::manifest_for_streams(
+            streams.iter().map(|s| (s.as_ref(), BC_ALPHA.splitter_secs)),
+            dims,
+        );
+        let dl_limit = if smoke { 6 } else { 24 };
+        let tenants: Vec<TenantSpec> = streams
+            .iter()
+            .enumerate()
+            .map(|(i, stream)| {
+                let session = model.build_session(&session_cfg(
+                    stream,
+                    442 + i as u64,
+                    manifest.max_nodes,
+                    true,
+                    &engine,
+                ));
+                TenantSpec::new(
+                    &format!("dl{i}"),
+                    Arc::clone(stream),
+                    BC_ALPHA.splitter_secs,
+                    1,
+                    session,
+                )
+                .with_limit(dl_limit)
+                .with_deadline_ms(0.001)
+            })
+            .collect();
+        let sched = Scheduler::new(engine, 2).with_policy(ServePolicy {
+            stale_factor: f64::INFINITY,
+            ..Default::default()
+        });
+        let t0 = std::time::Instant::now();
+        let report = sched
+            .serve_report(&manifest, tenants, |_| Vec::new(), |_, _, _, _| Ok(()))
+            .expect("deadline sweep point");
+        let wall = t0.elapsed().as_secs_f64();
+        let row = row_from(
+            "serve overload deadline-miss".into(),
+            3,
+            true,
+            wall,
+            &report.outcomes,
+            false,
+            None,
+            Some(report.health),
+        );
+        println!(
+            "bench {:<44} {} misses={}",
+            row.name,
+            row.summary.line(),
+            report.health.deadline_misses
+        );
+        rows.push(row);
+    }
+
+    // overload point B: the same impossible deadlines with shedding on
+    // (default stale factor) plus one scripted transient stage fault —
+    // queued windows go stale, consecutive sheds trip the per-tenant
+    // breaker, and the retried fault lands nonzero retry counters
+    {
+        let streams: Vec<Arc<CooStream>> = (0..3)
+            .map(|i| Arc::new(synth::generate(&BC_ALPHA, 542 + i as u64)))
+            .collect();
+        let engine = Arc::new(Engine::new(THREADS));
+        let manifest = Scheduler::manifest_for_streams(
+            streams.iter().map(|s| (s.as_ref(), BC_ALPHA.splitter_secs)),
+            dims,
+        );
+        let dl_limit = if smoke { 6 } else { 24 };
+        let tenants: Vec<TenantSpec> = streams
+            .iter()
+            .enumerate()
+            .map(|(i, stream)| {
+                let session = model.build_session(&session_cfg(
+                    stream,
+                    542 + i as u64,
+                    manifest.max_nodes,
+                    true,
+                    &engine,
+                ));
+                TenantSpec::new(
+                    &format!("sb{i}"),
+                    Arc::clone(stream),
+                    BC_ALPHA.splitter_secs,
+                    1,
+                    session,
+                )
+                .with_limit(dl_limit)
+                .with_deadline_ms(0.001)
+            })
+            .collect();
+        let plan = FaultPlan::new().with(FaultSpec {
+            tenant: 0,
+            point: FaultPoint::Stage,
+            index: 0,
+            transient: true,
+            fires: 1,
+        });
+        let sched = Scheduler::new(engine, 2).with_faults(Arc::new(plan));
+        let t0 = std::time::Instant::now();
+        let report = sched
+            .serve_report(&manifest, tenants, |_| Vec::new(), |_, _, _, _| Ok(()))
+            .expect("shed sweep point");
+        let wall = t0.elapsed().as_secs_f64();
+        let h = report.health;
+        let row = row_from(
+            "serve overload shed+breaker".into(),
+            3,
+            true,
+            wall,
+            &report.outcomes,
+            false,
+            None,
+            Some(h),
+        );
+        println!(
+            "bench {:<44} {} shed={} breaker_trips={} retries={}",
+            row.name,
+            row.summary.line(),
+            h.shed + h.deadline_shed,
+            h.breaker_trips,
+            h.retries
+        );
         rows.push(row);
     }
 

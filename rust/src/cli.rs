@@ -42,6 +42,16 @@
 //!   --churn                    boolean: `serve` exercises runtime
 //!                              tenant churn (admits one extra tenant
 //!                              mid-run, then drains tenant 1)
+//!   --faults SEED              `serve` threads a deterministic seeded
+//!                              FaultPlan through the scheduler
+//!                              (transient + fatal faults at the
+//!                              stage/prepare/infer points; same seed ⇒
+//!                              same failure sequence at any --threads)
+//!   --deadline-ms N            per-window latency target for `serve`
+//!                              tenants: misses are counted, stale
+//!                              queued windows are shed, and the
+//!                              deadline controller reweights laggards
+//!                              (fractional values accepted)
 //!   --nodes N / --degree N / --dim N / --iters N
 //!                              synthetic graph shape for `kernels`
 //! ```
@@ -107,6 +117,15 @@ impl Cli {
     }
 
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::Usage(format!("--{key} {v}: {e}"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
             Some(v) => v
@@ -243,6 +262,33 @@ mod tests {
         assert!(matches!(c.weights(2), Err(Error::Usage(_))));
         let c = Cli::parse(&s(&["serve", "--weights", ""])).unwrap();
         assert!(c.weights(1).is_err()); // empty list is a usage error
+    }
+
+    #[test]
+    fn faults_and_deadline_are_valued_flags() {
+        // the CI smoke invocation: serve --streams 4 --faults 7 --deadline-ms 50
+        let c = Cli::parse(&s(&[
+            "serve",
+            "--streams",
+            "4",
+            "--faults",
+            "7",
+            "--deadline-ms",
+            "50",
+        ]))
+        .unwrap();
+        assert_eq!(c.get_usize("streams", 1).unwrap(), 4);
+        assert!(c.get("faults").is_some());
+        assert_eq!(c.get_u64("faults", 0).unwrap(), 7);
+        assert_eq!(c.get_f64("deadline-ms", 0.0).unwrap(), 50.0);
+        // fractional deadlines and absent flags
+        let c = Cli::parse(&s(&["serve", "--deadline-ms", "0.25"])).unwrap();
+        assert_eq!(c.get_f64("deadline-ms", 0.0).unwrap(), 0.25);
+        let c = Cli::parse(&s(&["serve"])).unwrap();
+        assert!(c.get("faults").is_none());
+        assert_eq!(c.get_f64("deadline-ms", 50.0).unwrap(), 50.0);
+        let c = Cli::parse(&s(&["serve", "--deadline-ms", "soon"])).unwrap();
+        assert!(matches!(c.get_f64("deadline-ms", 0.0), Err(Error::Usage(_))));
     }
 
     #[test]

@@ -37,8 +37,59 @@ pub enum Error {
     #[error("usage: {0}")]
     Usage(String),
 
+    /// A tenant failed during one serving step (stage / prepare / infer).
+    ///
+    /// Carries the tenant id and the pipeline step so a quarantined
+    /// tenant's `StreamOutcome` records *where* it died, and wraps the
+    /// underlying cause.  The tenant id is a plain `usize` here (this
+    /// module sits below `serve`); `serve::TenantId` is the same type.
+    #[error("tenant {tenant} failed during {step}: {source}")]
+    Stage {
+        tenant: usize,
+        step: &'static str,
+        #[source]
+        source: Box<Error>,
+    },
+
+    /// A tenant blew its latency target (deadline-aware overload
+    /// control): either a served step exceeded the target or a staged
+    /// window went stale in the queue and was shed.
+    #[error("tenant {tenant} blew its {target_ms:.3} ms deadline (observed {observed_ms:.3} ms)")]
+    Deadline {
+        tenant: usize,
+        target_ms: f64,
+        observed_ms: f64,
+    },
+
+    /// A deterministic injected fault (`serve::faults::FaultPlan`)
+    /// fired.  `transient` faults clear after a bounded number of
+    /// retries; fatal ones quarantine the tenant.
+    #[error("injected fault (transient={transient}): tenant {tenant} at {point}[{index}]")]
+    Faulted {
+        tenant: usize,
+        point: &'static str,
+        index: usize,
+        transient: bool,
+    },
+
     #[error("i/o error: {0}")]
     Io(#[from] std::io::Error),
+}
+
+impl Error {
+    /// Whether a bounded retry may clear this error.
+    ///
+    /// Only an injected fault marked transient qualifies; every real
+    /// runtime error is treated as fatal for the failing tenant.
+    /// Recurses through [`Error::Stage`] wrappers so a wrapped transient
+    /// fault keeps its retryability.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            Error::Faulted { transient, .. } => *transient,
+            Error::Stage { source, .. } => source.is_transient(),
+            _ => false,
+        }
+    }
 }
 
 impl From<xla::Error> for Error {
@@ -48,3 +99,75 @@ impl From<xla::Error> for Error {
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::Error;
+
+    #[test]
+    fn structured_variant_display_is_stable() {
+        let e = Error::Stage {
+            tenant: 3,
+            step: "infer",
+            source: Box::new(Error::Graph("bad row".into())),
+        };
+        assert_eq!(
+            e.to_string(),
+            "tenant 3 failed during infer: graph invariant violated: bad row"
+        );
+
+        let e = Error::Deadline {
+            tenant: 1,
+            target_ms: 50.0,
+            observed_ms: 75.125,
+        };
+        assert_eq!(
+            e.to_string(),
+            "tenant 1 blew its 50.000 ms deadline (observed 75.125 ms)"
+        );
+
+        let e = Error::Faulted {
+            tenant: 2,
+            point: "stage",
+            index: 4,
+            transient: true,
+        };
+        assert_eq!(
+            e.to_string(),
+            "injected fault (transient=true): tenant 2 at stage[4]"
+        );
+    }
+
+    #[test]
+    fn transience_recurses_through_stage_wrappers() {
+        let transient = Error::Faulted {
+            tenant: 0,
+            point: "prepare",
+            index: 0,
+            transient: true,
+        };
+        assert!(transient.is_transient());
+
+        let wrapped = Error::Stage {
+            tenant: 0,
+            step: "prepare",
+            source: Box::new(transient),
+        };
+        assert!(wrapped.is_transient());
+
+        let fatal = Error::Faulted {
+            tenant: 0,
+            point: "infer",
+            index: 1,
+            transient: false,
+        };
+        assert!(!fatal.is_transient());
+        assert!(!Error::Graph("x".into()).is_transient());
+        assert!(!Error::Deadline {
+            tenant: 0,
+            target_ms: 1.0,
+            observed_ms: 2.0
+        }
+        .is_transient());
+    }
+}

@@ -12,7 +12,8 @@ use dgnn_booster::models::Dims;
 use dgnn_booster::numerics::{self, Engine, Mat};
 use dgnn_booster::report::tables::{self, ReportCtx};
 use dgnn_booster::serve::{
-    fairness_of, Command, Scheduler, ServeEvent, ServeRecorder, SessionConfig, TenantSpec,
+    fairness_of, Command, DeadlineController, FaultPlan, Scheduler, ServeEvent, ServeRecorder,
+    SessionConfig, TenantSpec,
 };
 use dgnn_booster::testutil::Pcg32;
 use std::sync::Arc;
@@ -175,6 +176,12 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     let limit = cli.get_usize("snapshots", usize::MAX)?;
     let slots = cli.get_usize("slots", (2 * streams).clamp(2, 16))?.max(1);
     let weights = cli.weights(streams)?;
+    let faults_on = cli.get("faults").is_some();
+    let fault_seed = cli.get_u64("faults", 0)?;
+    let deadline_ms = match cli.get("deadline-ms") {
+        Some(_) => Some(cli.get_f64("deadline-ms", 0.0)?),
+        None => None,
+    };
     let dims = Dims::default();
     // with --batch every tenant serves the same model: shared parameter
     // seed, so same-shape projections carry bitwise-identical weights
@@ -218,38 +225,61 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
         .enumerate()
         .map(|(i, stream)| {
             let session = model.build_session(&session_cfg(stream, session_seed(i as u64)));
-            TenantSpec::new(
+            let mut spec = TenantSpec::new(
                 &format!("stream-{i}"),
                 Arc::clone(stream),
                 profile.splitter_secs,
                 weights[i],
                 session,
             )
-            .with_limit(limit)
+            .with_limit(limit);
+            if let Some(dl) = deadline_ms {
+                spec = spec.with_deadline_ms(dl);
+            }
+            spec
         })
         .collect();
 
     println!(
         "serving {} × {streams} stream(s) on {} — engine ×{threads}, {slots} staging slots, \
-         weights {weights:?}{}{}{}",
+         weights {weights:?}{}{}{}{}{}",
         model.name(),
         profile.name,
         if delta { ", §VI delta state + feature staging" } else { "" },
         if batch { ", cross-stream batched projection (shared model)" } else { "" },
-        if churn { ", churn script on" } else { "" }
+        if churn { ", churn script on" } else { "" },
+        if faults_on { ", fault plan seeded" } else { "" },
+        if deadline_ms.is_some() { ", deadline control on" } else { "" }
     );
-    let scheduler = Scheduler::new(Arc::clone(&engine), slots).with_batching(batch);
+    let mut scheduler = Scheduler::new(Arc::clone(&engine), slots).with_batching(batch);
+    if faults_on {
+        let plan = FaultPlan::seeded(fault_seed, streams + churn as usize, limit.min(24));
+        println!("  [faults] seed {fault_seed}: {} scripted fault(s)", plan.len());
+        scheduler = scheduler.with_faults(Arc::new(plan));
+    }
+    // the deadline controller closes the loop: per-tenant e2e latency
+    // rings → SetWeight boosts for tenants missing their target
+    let mut dlc = deadline_ms.map(|dl| {
+        let mut c = DeadlineController::new(8);
+        for (i, w) in weights.iter().enumerate() {
+            c.track(i, dl, *w);
+        }
+        c
+    });
     let t0 = std::time::Instant::now();
     let mut checksum = 0.0f64;
     let mut drained_one = false;
-    let (outcomes, batch_stats) = scheduler.serve_report(
+    let report = scheduler.serve_report(
         &manifest,
         tenants,
         |ev| {
-            let ServeEvent::Step { served_total, .. } = ev else {
-                return Vec::new();
-            };
             let mut cmds = Vec::new();
+            if let Some(c) = dlc.as_mut() {
+                cmds.extend(c.on_event(&ev));
+            }
+            let ServeEvent::Step { served_total, .. } = ev else {
+                return cmds;
+            };
             if served_total >= 6 {
                 if let Some(stream) = churn_stream.take() {
                     println!("  [churn] admitting tenant churn-0 (weight 2) at step {served_total}");
@@ -257,10 +287,17 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
                         &stream,
                         if batch { ctx.seed } else { ctx.seed ^ 0x00C0_FFEE },
                     ));
-                    cmds.push(Command::Admit(
+                    let mut spec =
                         TenantSpec::new("churn-0", stream, profile.splitter_secs, 2, session)
-                            .with_limit(limit),
-                    ));
+                            .with_limit(limit);
+                    if let Some(dl) = deadline_ms {
+                        spec = spec.with_deadline_ms(dl);
+                    }
+                    // admitted tenants take the next sequential id
+                    if let (Some(c), Some(dl)) = (dlc.as_mut(), deadline_ms) {
+                        c.track(streams, dl, 2);
+                    }
+                    cmds.push(Command::Admit(spec));
                 }
             }
             if churn && !drained_one && streams > 1 && served_total >= 12 {
@@ -276,6 +313,7 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
         },
     )?;
     let wall = t0.elapsed().as_secs_f64();
+    let (outcomes, batch_stats, health) = (report.outcomes, report.batch, report.health);
 
     let mut rec = ServeRecorder::new(65536);
     for o in &outcomes {
@@ -298,9 +336,29 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
         if let Some(d) = o.feature_delta {
             line.push_str(&format!(", {:.1}% X rows reused", 100.0 * d.fraction()));
         }
+        if o.health.retries > 0 {
+            line.push_str(&format!(", {} retries", o.health.retries));
+        }
+        if let Some(e) = &o.fault {
+            line.push_str(&format!(", FAULTED: {e}"));
+        }
         println!("{line}");
     }
     println!("aggregate: {}", rec.summary(wall).line());
+    if faults_on || deadline_ms.is_some() || health != Default::default() {
+        println!(
+            "health: {} faults injected, {} retries, {} shed (+{} stale), {} deadline misses, \
+             {} breaker trips, {} quarantined, {} admits rejected",
+            health.faults_injected,
+            health.retries,
+            health.shed,
+            health.deadline_shed,
+            health.deadline_misses,
+            health.breaker_trips,
+            health.quarantined,
+            health.admits_rejected
+        );
+    }
     if batch {
         println!(
             "batching: {} rounds, {} fused calls over {} requests \

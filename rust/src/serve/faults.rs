@@ -1,0 +1,209 @@
+//! Deterministic fault injection for the serve layer.
+//!
+//! A [`FaultPlan`] is a seeded, fully explicit script of per-tenant
+//! fault points: *this* tenant fails at *this* pipeline point
+//! ([`FaultPoint::Stage`] / [`Prepare`](FaultPoint::Prepare) /
+//! [`Infer`](FaultPoint::Infer)) on *this* window index, either
+//! transiently (clears after a bounded number of retries) or fatally
+//! (quarantines the tenant).  The plan is threaded through the
+//! scheduler's stage threads and inference loop, and every check is a
+//! pure function of `(tenant, point, index, attempt)` — no clocks, no
+//! global state — so a chaos run with the same plan reproduces the same
+//! fault sequence bit-for-bit at any thread count.
+//!
+//! Injected faults fire **before** the corresponding real session call:
+//! a faulted window never half-executes `stage`/`prepare`/`infer`, so a
+//! retry replays the call from scratch and a shed window leaves the
+//! session's recurrent state untouched.
+
+use crate::error::{Error, Result};
+use crate::serve::scheduler::TenantId;
+use crate::testutil::Pcg32;
+
+/// Where in the per-window pipeline an injected fault fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// In the tenant's stage thread, before `SessionStager::stage`.
+    Stage,
+    /// On the inference thread, before `DgnnSession::prepare`.
+    Prepare,
+    /// On the inference thread, before the step executes (batched or
+    /// plain `infer`).
+    Infer,
+}
+
+impl FaultPoint {
+    /// Stable lowercase label used in [`Error::Faulted`] messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultPoint::Stage => "stage",
+            FaultPoint::Prepare => "prepare",
+            FaultPoint::Infer => "infer",
+        }
+    }
+}
+
+/// One scripted fault: tenant × point × window index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Tenant the fault targets.
+    pub tenant: TenantId,
+    /// Pipeline point at which it fires.
+    pub point: FaultPoint,
+    /// Zero-based window index it fires on.
+    pub index: usize,
+    /// Transient faults clear once `attempt >= fires`; fatal faults
+    /// fire on every attempt.
+    pub transient: bool,
+    /// How many consecutive attempts a transient fault poisons.
+    pub fires: u32,
+}
+
+/// A deterministic script of injected faults (see module docs).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: Vec<FaultSpec>,
+}
+
+impl FaultPlan {
+    /// An empty plan: injects nothing, costs nothing.
+    pub fn new() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Builder: add one scripted fault.
+    pub fn with(mut self, spec: FaultSpec) -> Self {
+        self.faults.push(spec);
+        self
+    }
+
+    /// Number of scripted faults.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Whether the plan injects anything at all.
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Seed a reproducible plan over `tenants` tenants and `horizon`
+    /// window indices: roughly half the tenants get one fault each, at
+    /// a random point and index, transient with probability 3/4
+    /// (firing once or twice), fatal otherwise.  The same
+    /// `(seed, tenants, horizon)` always yields the same plan.
+    pub fn seeded(seed: u64, tenants: usize, horizon: usize) -> Self {
+        let mut rng = Pcg32::seeded(seed ^ 0xFA17);
+        let mut plan = FaultPlan::new();
+        for tenant in 0..tenants {
+            if rng.below(2) == 0 {
+                continue;
+            }
+            let point = match rng.below(3) {
+                0 => FaultPoint::Stage,
+                1 => FaultPoint::Prepare,
+                _ => FaultPoint::Infer,
+            };
+            let transient = rng.below(4) < 3;
+            plan.faults.push(FaultSpec {
+                tenant,
+                point,
+                index: rng.below(horizon.max(1)),
+                transient,
+                fires: 1 + rng.below(2) as u32,
+            });
+        }
+        plan
+    }
+
+    /// Check whether an injected fault fires for this
+    /// `(tenant, point, index)` on retry `attempt` (0 = first try).
+    ///
+    /// Transient faults fire while `attempt < fires`, then clear; fatal
+    /// faults fire on every attempt.  Pure and stateless, so the
+    /// scheduler can call it from any thread.
+    pub fn check(
+        &self,
+        tenant: TenantId,
+        point: FaultPoint,
+        index: usize,
+        attempt: u32,
+    ) -> Result<()> {
+        for f in &self.faults {
+            if f.tenant != tenant || f.point != point || f.index != index {
+                continue;
+            }
+            if !f.transient || attempt < f.fires {
+                return Err(Error::Faulted {
+                    tenant,
+                    point: point.name(),
+                    index,
+                    transient: f.transient,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeded_plans_are_deterministic_and_targeted() {
+        let a = FaultPlan::seeded(7, 6, 24);
+        let b = FaultPlan::seeded(7, 6, 24);
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "half of 6 tenants should yield faults");
+        let c = FaultPlan::seeded(8, 6, 24);
+        assert_ne!(a, c, "different seeds should differ");
+        for f in &a.faults {
+            assert!(f.tenant < 6);
+            assert!(f.index < 24);
+            assert!(f.fires >= 1);
+        }
+    }
+
+    #[test]
+    fn transient_fault_clears_after_fires_attempts() {
+        let plan = FaultPlan::new().with(FaultSpec {
+            tenant: 1,
+            point: FaultPoint::Infer,
+            index: 3,
+            transient: true,
+            fires: 2,
+        });
+        let err = plan.check(1, FaultPoint::Infer, 3, 0).unwrap_err();
+        assert!(err.is_transient());
+        assert!(plan.check(1, FaultPoint::Infer, 3, 1).is_err());
+        assert!(plan.check(1, FaultPoint::Infer, 3, 2).is_ok());
+        // Other tenants / points / indices never see it.
+        assert!(plan.check(0, FaultPoint::Infer, 3, 0).is_ok());
+        assert!(plan.check(1, FaultPoint::Stage, 3, 0).is_ok());
+        assert!(plan.check(1, FaultPoint::Infer, 2, 0).is_ok());
+    }
+
+    #[test]
+    fn fatal_fault_fires_on_every_attempt() {
+        let plan = FaultPlan::new().with(FaultSpec {
+            tenant: 0,
+            point: FaultPoint::Stage,
+            index: 0,
+            transient: false,
+            fires: 1,
+        });
+        for attempt in 0..5 {
+            let err = plan.check(0, FaultPoint::Stage, 0, attempt).unwrap_err();
+            assert!(!err.is_transient());
+        }
+    }
+
+    #[test]
+    fn empty_plan_never_fires() {
+        let plan = FaultPlan::new();
+        assert!(plan.is_empty());
+        assert_eq!(plan.len(), 0);
+        assert!(plan.check(0, FaultPoint::Infer, 0, 0).is_ok());
+    }
+}

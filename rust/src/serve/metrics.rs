@@ -1,10 +1,15 @@
 //! Serving-side measurement: a bounded per-request latency ring buffer
 //! with tail percentiles, an aggregate recorder, per-tenant fairness
-//! accounting ([`fairness_summary`], weighted Jain index), and the
-//! hand-rolled JSON emitter for `BENCH_serve.json` (no serde in the
-//! offline crate set — same idiom as `metrics::bench_json`), including
-//! the cross-stream batching counters ([`super::batch::BatchStats`] —
-//! rounds, fused calls, occupancy) on batch-enabled sweep points.
+//! accounting ([`fairness_summary`], weighted Jain index), the
+//! deadline-aware reweighting controller ([`DeadlineController`] —
+//! closes the loop from the ring's p95 back into
+//! `Command::SetWeight`), and the hand-rolled JSON emitter for
+//! `BENCH_serve.json` (no serde in the offline crate set — same idiom
+//! as `metrics::bench_json`), including the cross-stream batching
+//! counters ([`super::batch::BatchStats`] — rounds, fused calls,
+//! occupancy) and the robustness counters
+//! ([`super::scheduler::HealthStats`] — sheds, deadline misses,
+//! breaker trips) on the sweep points that carry them.
 //!
 //! The ring is what a production frontend would keep: a fixed-capacity
 //! window over the most recent requests, so tail latency reflects the
@@ -13,6 +18,8 @@
 //! math is pinned against a naive sort reference, and the fairness /
 //! JSON shapes by the unit tests below; end-to-end field semantics are
 //! documented in README.md § serve.
+
+use super::scheduler::{Command, HealthStats, ServeEvent, TenantId};
 
 /// Fixed-capacity ring of the most recent per-request latencies (ms).
 ///
@@ -177,6 +184,11 @@ pub struct TenantSummary {
     pub share: f64,
     /// `weight / Σ weights` — the target share under saturation.
     pub fair_share: f64,
+    /// Served steps that missed the tenant's deadline (0 without one).
+    pub deadline_misses: u64,
+    /// Windows shed for this tenant (transient-failure sheds + stale
+    /// deadline sheds).
+    pub shed: u64,
 }
 
 /// Cross-tenant fairness of one serving run.
@@ -216,6 +228,8 @@ pub fn fairness_summary(tenants: &[(&str, u32, &[f64])]) -> FairnessSummary {
                 p99_ms: rank(&sorted, 99.0),
                 share: if total_req > 0 { requests as f64 / total_req as f64 } else { 0.0 },
                 fair_share: if total_w > 0 { *weight as f64 / total_w as f64 } else { 0.0 },
+                deadline_misses: 0,
+                shed: 0,
             }
         })
         .collect();
@@ -237,7 +251,9 @@ pub fn fairness_summary(tenants: &[(&str, u32, &[f64])]) -> FairnessSummary {
 }
 
 /// [`fairness_summary`] over scheduler outcomes — the shape every
-/// serving surface (CLI, bench, examples) already holds.
+/// serving surface (CLI, bench, examples) already holds.  Each
+/// tenant's robustness counters (deadline misses, shed windows) ride
+/// along from its [`StreamOutcome`] health.
 pub fn fairness_of(outcomes: &[super::scheduler::StreamOutcome]) -> FairnessSummary {
     let entries: Vec<(String, u32, Vec<f64>)> = outcomes
         .iter()
@@ -247,7 +263,130 @@ pub fn fairness_of(outcomes: &[super::scheduler::StreamOutcome]) -> FairnessSumm
         .iter()
         .map(|(n, w, l)| (n.as_str(), *w, l.as_slice()))
         .collect();
-    fairness_summary(&refs)
+    let mut f = fairness_summary(&refs);
+    for (t, o) in f.tenants.iter_mut().zip(outcomes) {
+        t.deadline_misses = o.health.deadline_misses;
+        t.shed = o.health.shed + o.health.deadline_shed;
+    }
+    f
+}
+
+/// Closed-loop deadline control: feed it every [`ServeEvent`] and it
+/// answers with [`Command::SetWeight`] reweights — doubling a tracked
+/// tenant's weight (up to `boost_cap ×` its base) while its recent p95
+/// misses its latency target, and decaying back toward the base weight
+/// once the tail recovers.  Pure bookkeeping over the scheduler's own
+/// event stream, so any serving surface (CLI, bench, tests) can chain
+/// it in front of its controller callback:
+///
+/// ```ignore
+/// let mut ctl = DeadlineController::new(8);
+/// ctl.track(0, 50.0, 1);
+/// scheduler.serve(&manifest, tenants, |ev| ctl.on_event(&ev), on_step)
+/// ```
+///
+/// Reweighting only changes *scheduling* (slot-grant order), never
+/// numerics — the bitwise per-tenant invariants hold under any weight
+/// schedule.
+pub struct DeadlineController {
+    /// Re-evaluate targets every this many served steps.
+    check_every: u64,
+    /// Max boost as a multiple of each tenant's base weight.
+    boost_cap: u32,
+    seen: u64,
+    tenants: std::collections::HashMap<TenantId, DlState>,
+}
+
+struct DlState {
+    target_ms: f64,
+    base_weight: u32,
+    weight: u32,
+    ring: LatencyRing,
+}
+
+impl DeadlineController {
+    /// `check_every` bounds how often weights move (hysteresis): the
+    /// controller re-evaluates every that many served steps, over each
+    /// tenant's recent-latency ring.
+    pub fn new(check_every: u64) -> DeadlineController {
+        DeadlineController {
+            check_every: check_every.max(1),
+            boost_cap: 8,
+            seen: 0,
+            tenants: std::collections::HashMap::new(),
+        }
+    }
+
+    /// Cap the boost at `cap ×` each tenant's base weight (default 8).
+    pub fn with_boost_cap(mut self, cap: u32) -> DeadlineController {
+        self.boost_cap = cap.max(1);
+        self
+    }
+
+    /// Start steering `tenant` toward `target_ms` from `weight` (its
+    /// base).  Zero base weights are clamped to 1 — a background tenant
+    /// with a deadline must be boostable.
+    pub fn track(&mut self, tenant: TenantId, target_ms: f64, weight: u32) {
+        let base = weight.max(1);
+        self.tenants.insert(
+            tenant,
+            DlState {
+                target_ms,
+                base_weight: base,
+                weight: base,
+                ring: LatencyRing::new((self.check_every as usize).max(8)),
+            },
+        );
+    }
+
+    /// Tenants currently under deadline control.
+    pub fn tracked(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Feed one scheduler event; returns the reweight commands to push
+    /// back into the run (empty between evaluation points).
+    pub fn on_event(&mut self, ev: &ServeEvent) -> Vec<Command> {
+        match *ev {
+            ServeEvent::Step { tenant, e2e_ms, .. } => {
+                if let Some(t) = self.tenants.get_mut(&tenant) {
+                    t.ring.push(e2e_ms);
+                }
+                self.seen += 1;
+                if self.seen % self.check_every != 0 {
+                    return Vec::new();
+                }
+                let mut ids: Vec<TenantId> = self.tenants.keys().copied().collect();
+                ids.sort_unstable(); // deterministic command order
+                let mut cmds = Vec::new();
+                for id in ids {
+                    let Some(t) = self.tenants.get_mut(&id) else { continue };
+                    if t.ring.is_empty() {
+                        continue; // no signal yet — don't move blind
+                    }
+                    let p95 = t.ring.p95();
+                    if p95 > t.target_ms {
+                        let cap = t.base_weight.saturating_mul(self.boost_cap);
+                        let boosted = t.weight.saturating_mul(2).min(cap);
+                        if boosted != t.weight {
+                            t.weight = boosted;
+                            cmds.push(Command::SetWeight(id, boosted));
+                        }
+                    } else if p95 < t.target_ms / 2.0 && t.weight > t.base_weight {
+                        let relaxed = (t.weight / 2).max(t.base_weight);
+                        t.weight = relaxed;
+                        cmds.push(Command::SetWeight(id, relaxed));
+                    }
+                }
+                cmds
+            }
+            ServeEvent::Drained { tenant } | ServeEvent::Quarantined { tenant } => {
+                self.tenants.remove(&tenant);
+                Vec::new()
+            }
+            ServeEvent::Idle => Vec::new(),
+        }
+    }
 }
 
 /// One row of `BENCH_serve.json`: a (streams × delta × batch) sweep
@@ -264,13 +403,17 @@ pub struct ServeRow {
     /// Batching counters of the run (`Scheduler::serve_report`); `Some`
     /// on batch-enabled sweep points.
     pub batch: Option<super::batch::BatchStats>,
+    /// Robustness counters of the run (`Scheduler::serve_report`);
+    /// `Some` on fault-injection / overload sweep points.
+    pub health: Option<HealthStats>,
 }
 
 /// Serialise sweep rows plus scalar metadata as JSON (schema documented
 /// in README.md § serve).  Rows carrying a [`FairnessSummary`] gain a
 /// `"jain"` scalar and a `"tenants"` array; rows carrying
 /// [`super::batch::BatchStats`] gain the `"batch_*"` / `"fused_*"`
-/// counters.
+/// counters; rows carrying [`HealthStats`] gain the robustness
+/// counters (`"shed"` merges transient and stale-deadline sheds).
 pub fn serve_json(rows: &[ServeRow], extra: &[(&str, f64)]) -> String {
     let mut s = String::from("{\n  \"benches\": [\n");
     for (i, r) in rows.iter().enumerate() {
@@ -306,13 +449,28 @@ pub fn serve_json(rows: &[ServeRow], extra: &[(&str, f64)]) -> String {
                 b.rows_per_call(),
             ));
         }
+        if let Some(h) = &r.health {
+            s.push_str(&format!(
+                ",\n     \"faults_injected\": {}, \"retries\": {}, \"shed\": {}, \
+                 \"deadline_misses\": {}, \"breaker_trips\": {}, \"quarantined\": {}, \
+                 \"admits_rejected\": {}",
+                h.faults_injected,
+                h.retries,
+                h.shed + h.deadline_shed,
+                h.deadline_misses,
+                h.breaker_trips,
+                h.quarantined,
+                h.admits_rejected,
+            ));
+        }
         if let Some(f) = &r.fairness {
             s.push_str(&format!(",\n     \"jain\": {:e},\n     \"tenants\": [", f.jain));
             for (j, t) in f.tenants.iter().enumerate() {
                 s.push_str(&format!(
                     "\n       {{\"name\": {:?}, \"weight\": {}, \"requests\": {}, \
                      \"p50_ms\": {:e}, \"p95_ms\": {:e}, \"p99_ms\": {:e}, \"mean_ms\": {:e}, \
-                     \"share\": {:e}, \"fair_share\": {:e}}}{}",
+                     \"share\": {:e}, \"fair_share\": {:e}, \
+                     \"deadline_misses\": {}, \"shed\": {}}}{}",
                     t.name,
                     t.weight,
                     t.requests,
@@ -322,6 +480,8 @@ pub fn serve_json(rows: &[ServeRow], extra: &[(&str, f64)]) -> String {
                     t.mean_ms,
                     t.share,
                     t.fair_share,
+                    t.deadline_misses,
+                    t.shed,
                     if j + 1 < f.tenants.len() { "," } else { "" }
                 ));
             }
@@ -400,6 +560,16 @@ mod tests {
             fused_requests: 20,
             fused_rows: 400,
         };
+        let health = HealthStats {
+            faults_injected: 4,
+            retries: 3,
+            shed: 1,
+            deadline_shed: 2,
+            deadline_misses: 5,
+            breaker_trips: 1,
+            quarantined: 1,
+            admits_rejected: 0,
+        };
         let rows = vec![
             ServeRow {
                 name: "serve streams=2 delta=on".into(),
@@ -409,6 +579,7 @@ mod tests {
                 summary: rec.summary(1.0),
                 fairness: None,
                 batch: Some(batch),
+                health: Some(health),
             },
             ServeRow {
                 name: "serve streams=4 delta=off".into(),
@@ -421,6 +592,7 @@ mod tests {
                     ("t1", 3, &[1.0, 1.5, 2.0, 2.5, 3.0, 3.5]),
                 ])),
                 batch: None,
+                health: None,
             },
         ];
         let json = serve_json(&rows, &[("smoke", 1.0)]);
@@ -439,6 +611,60 @@ mod tests {
         assert!(json.contains("\"fused_calls\": 8"));
         assert!(json.contains("\"batch_occupancy\": 2.5e0"));
         assert!(json.contains("\"fused_rows_per_call\": 5e1"));
+        // robustness counters only on the row that carries health; the
+        // row-level "shed" merges transient + stale-deadline sheds, and
+        // every tenant row carries its own misses + sheds
+        assert!(json.contains("\"faults_injected\": 4"));
+        assert!(json.contains("\"shed\": 3"));
+        assert!(json.contains("\"breaker_trips\": 1"));
+        assert_eq!(json.matches("\"quarantined\"").count(), 1);
+        assert_eq!(json.matches("\"admits_rejected\"").count(), 1);
+        assert_eq!(json.matches("\"deadline_misses\"").count(), 1 + 2);
+        assert_eq!(json.matches("\"shed\"").count(), 1 + 2);
+    }
+
+    #[test]
+    fn deadline_controller_boosts_on_miss_and_decays_on_recovery() {
+        let step = |tenant, e2e_ms| ServeEvent::Step {
+            tenant,
+            index: 0,
+            served_total: 0,
+            e2e_ms,
+        };
+        let mut ctl = DeadlineController::new(4).with_boost_cap(4);
+        ctl.track(0, 10.0, 1);
+        assert_eq!(ctl.tracked(), 1);
+        // four missing steps: the evaluation point doubles the weight
+        let mut boosts: Vec<Command> = Vec::new();
+        for _ in 0..4 {
+            boosts.extend(ctl.on_event(&step(0, 50.0)));
+        }
+        assert_eq!(boosts.len(), 1);
+        assert!(matches!(boosts[0], Command::SetWeight(0, 2)));
+        // keep missing: 2 → 4, then the boost cap (4 × base 1) pins it
+        for _ in 0..4 {
+            boosts.extend(ctl.on_event(&step(0, 50.0)));
+        }
+        assert!(matches!(boosts[1], Command::SetWeight(0, 4)));
+        for _ in 0..8 {
+            boosts.extend(ctl.on_event(&step(0, 50.0)));
+        }
+        assert_eq!(boosts.len(), 2, "capped: no further boost commands");
+        // recovery far under target/2 decays back toward the base
+        // (16 fast steps: the ring must fully flush the slow window,
+        // then two evaluation points step the weight 4 → 2 → 1)
+        let mut relaxed: Vec<Command> = Vec::new();
+        for _ in 0..16 {
+            relaxed.extend(ctl.on_event(&step(0, 1.0)));
+        }
+        assert_eq!(relaxed.len(), 2);
+        assert!(matches!(relaxed[0], Command::SetWeight(0, 2)));
+        assert!(matches!(relaxed[1], Command::SetWeight(0, 1)));
+        // untracked tenants and non-step events are inert
+        assert!(ctl.on_event(&step(7, 999.0)).is_empty());
+        assert!(ctl.on_event(&ServeEvent::Idle).is_empty());
+        ctl.on_event(&ServeEvent::Drained { tenant: 0 });
+        assert_eq!(ctl.tracked(), 0);
     }
 
     /// Nearest-rank reference computed the naive way: sort everything,

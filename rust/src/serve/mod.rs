@@ -26,14 +26,25 @@
 //!   [`Scheduler::with_batching`] / `dgnn-booster serve --batch`.
 //! * [`metrics`] — per-request latency ring buffer → p50/p95/p99 +
 //!   throughput, per-tenant fairness accounting ([`fairness_summary`],
-//!   weighted Jain index), batch-occupancy counters ([`BatchStats`]),
-//!   and the `BENCH_serve.json` emitter.
+//!   weighted Jain index), the deadline-reweighting loop
+//!   ([`DeadlineController`]), batch-occupancy counters
+//!   ([`BatchStats`]), and the `BENCH_serve.json` emitter.
+//! * [`faults`] — deterministic fault injection: a seeded [`FaultPlan`]
+//!   scripts per-tenant transient/fatal faults at the stage / prepare /
+//!   infer points, threaded through the scheduler so chaos tests
+//!   reproduce the same failure sequence at any thread count.  Every
+//!   tenant is a failure domain: faults quarantine one tenant (bitwise
+//!   prefix kept, slot recycled, [`Command::Remove`] eviction) while
+//!   the rest serve on; [`ServePolicy`] tunes retries, the circuit
+//!   breaker, stale-window shedding and the admission cap, and
+//!   [`HealthStats`] / [`TenantHealth`] report what happened.
 //!
 //! The design follows the dynamic-graph-service shape (Alibaba DGS, see
 //! PAPERS.md): dynamic-graph inference behind a service layer that
 //! shares compute across many independent streams.
 
 pub mod batch;
+pub mod faults;
 pub mod metrics;
 pub mod scheduler;
 pub mod session;
@@ -41,13 +52,14 @@ pub mod session;
 pub use batch::{
     step_unbatched, BatchKey, BatchPlanner, BatchStats, Projection, RoundMember,
 };
+pub use faults::{FaultPlan, FaultPoint, FaultSpec};
 pub use metrics::{
-    fairness_of, fairness_summary, serve_json, write_serve_json, FairnessSummary, LatencyRing,
-    ServeRecorder, ServeRow, ServeSummary, TenantSummary,
+    fairness_of, fairness_summary, serve_json, write_serve_json, DeadlineController,
+    FairnessSummary, LatencyRing, ServeRecorder, ServeRow, ServeSummary, TenantSummary,
 };
 pub use scheduler::{
-    run_session, wfq_pick, Command, Scheduler, ServeEvent, StepRecord, StreamOutcome,
-    StreamSource, TenantId,
+    run_session, wfq_pick, Command, HealthStats, Scheduler, ServeEvent, ServePolicy,
+    ServeReport, StepRecord, StreamOutcome, StreamSource, TenantHealth, TenantId,
 };
 pub use session::{
     build_pjrt_session, BatchableSession, DeltaCounts, DgnnSession, MirrorSession, PjrtSession,

@@ -41,12 +41,28 @@
 //! untouched because batching only regroups work that was already
 //! staged and granted.
 //!
+//! Every tenant is a **failure domain**: a stage / prepare / infer
+//! error (real or injected through a [`FaultPlan`]) quarantines only
+//! that tenant — its slot returns to the pool, its [`StreamOutcome`]
+//! records the fault and keeps the bitwise prefix already served, and
+//! eviction rides the regular [`Command::Remove`] drain path while
+//! every other tenant continues untouched.  Transient faults get a
+//! bounded retry-with-backoff budget and then shed the window;
+//! [`ServePolicy::breaker_k`] consecutive failures trip a per-tenant
+//! circuit breaker.  With a [`TenantSpec::deadline_ms`] target set,
+//! staged windows whose queue wait went stale are shed and served
+//! steps that miss the target are counted — the overload-control
+//! inputs ([`HealthStats`] / [`TenantHealth`]) that
+//! `serve::metrics::DeadlineController` and `BENCH_serve.json`
+//! consume.
+//!
 //! [`run_session`] is the single-stream special case, expressed directly
 //! on `coordinator::pipeline::run_stream_staged` so a lone stream keeps
 //! the within-stream three-stage overlap; both examples and the
 //! single-stream CLI path go through it.
 
 use super::batch::{BatchPlanner, BatchStats, RoundMember};
+use super::faults::{FaultPlan, FaultPoint};
 use super::session::{DeltaCounts, DgnnSession, SessionStager, TenantSpec};
 use crate::coordinator::pipeline::{run_stream_staged, StepResult};
 use crate::coordinator::preprocess::preprocess_window;
@@ -58,7 +74,7 @@ use crate::numerics::Engine;
 use crate::runtime::{Manifest, StagingSlot};
 use std::collections::{HashMap, VecDeque};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Identifies one tenant within a scheduler run: assigned at admission,
 /// monotonically increasing, never reused.  Initial tenants get
@@ -86,6 +102,81 @@ pub struct StepRecord {
     pub e2e_ms: f64,
 }
 
+/// Per-tenant robustness counters, accumulated into the tenant's
+/// [`StreamOutcome`] as the run serves it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantHealth {
+    /// Retry attempts spent clearing transient faults (stage + gate).
+    pub retries: u64,
+    /// Windows shed after a transient failure exhausted its retries.
+    pub shed: u64,
+    /// Windows shed because their queue wait went stale against the
+    /// tenant's deadline ([`ServePolicy::stale_factor`]).
+    pub deadline_shed: u64,
+    /// Served steps whose end-to-end latency missed the deadline.
+    pub deadline_misses: u64,
+    /// Whether [`ServePolicy::breaker_k`] consecutive failures tripped
+    /// this tenant's circuit breaker (it was then quarantined).
+    pub breaker_tripped: bool,
+}
+
+/// Run-wide robustness counters (the sum over tenants, plus the counts
+/// only the scheduler sees), reported through [`ServeReport`] and into
+/// `BENCH_serve.json`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthStats {
+    /// Injected faults that actually fired ([`FaultPlan`]).
+    pub faults_injected: u64,
+    /// Retry attempts spent clearing transient faults.
+    pub retries: u64,
+    /// Windows shed after transient-failure retry exhaustion.
+    pub shed: u64,
+    /// Windows shed as stale against their tenant's deadline.
+    pub deadline_shed: u64,
+    /// Served steps that missed their tenant's deadline.
+    pub deadline_misses: u64,
+    /// Per-tenant circuit breakers tripped.
+    pub breaker_trips: u64,
+    /// Tenants quarantined (fatal fault, breaker trip, or stage-thread
+    /// death) and evicted through the [`Command::Remove`] drain path.
+    pub quarantined: u64,
+    /// [`Command::Admit`]s rejected because the live-tenant set already
+    /// saturated [`ServePolicy::admit_cap`].
+    pub admits_rejected: u64,
+}
+
+/// Failure-domain and overload policy knobs for one scheduler run
+/// ([`Scheduler::with_policy`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ServePolicy {
+    /// Retry budget per window for transient faults (0 = fail fast).
+    pub retries: u32,
+    /// Base stage-side backoff between retries, doubled per attempt.
+    pub backoff_us: u64,
+    /// Consecutive per-tenant failures (shed windows, stale sheds) that
+    /// trip the circuit breaker and quarantine the tenant.
+    pub breaker_k: u32,
+    /// A staged window is shed as stale once its queue wait exceeds
+    /// `stale_factor × deadline_ms` (only for tenants with a deadline;
+    /// `f64::INFINITY` disables shedding while keeping miss counts).
+    pub stale_factor: f64,
+    /// Reject [`Command::Admit`] while this many tenants are live
+    /// (`usize::MAX` = never reject).
+    pub admit_cap: usize,
+}
+
+impl Default for ServePolicy {
+    fn default() -> Self {
+        ServePolicy {
+            retries: 3,
+            backoff_us: 50,
+            breaker_k: 3,
+            stale_factor: 1.0,
+            admit_cap: usize::MAX,
+        }
+    }
+}
+
 /// Everything one tenant produced over a run.
 pub struct StreamOutcome {
     /// The tenant's scheduler id (admission order).
@@ -94,14 +185,31 @@ pub struct StreamOutcome {
     /// QoS weight the tenant last held.
     pub weight: u32,
     pub steps: Vec<StepRecord>,
-    /// True when the tenant detached (removal or [`Command::Stop`])
-    /// before serving its whole stream — `steps` is then a strict
-    /// prefix of what a standalone run would produce.
+    /// True when the tenant detached (removal, [`Command::Stop`], or
+    /// quarantine) before serving its whole stream — `steps` is then a
+    /// strict prefix of what a standalone run would produce.
     pub removed: bool,
+    /// The error that quarantined this tenant (`None` = healthy run).
+    /// The prefix in `steps` was served *before* the fault and is
+    /// bitwise-identical to a fault-free run's prefix.
+    pub fault: Option<Error>,
+    /// Robustness counters for this tenant.
+    pub health: TenantHealth,
     /// State-side shared-node counters (`Some` iff delta sessions).
     pub state_delta: Option<DeltaCounts>,
     /// Feature-staging reuse counters (`Some` iff delta staging).
     pub feature_delta: Option<DeltaCounts>,
+}
+
+/// What [`Scheduler::serve_report`] returns: per-tenant outcomes plus
+/// the run's batching and robustness counters.
+pub struct ServeReport {
+    /// One outcome per tenant ever admitted, in admission (id) order.
+    pub outcomes: Vec<StreamOutcome>,
+    /// Cross-stream batching counters (all-zero when batching is off).
+    pub batch: BatchStats,
+    /// Run-wide robustness counters.
+    pub health: HealthStats,
 }
 
 /// Lifecycle commands a controller can issue into a running scheduler.
@@ -133,7 +241,15 @@ pub enum ServeEvent {
         index: usize,
         /// Total steps served across all tenants so far this run.
         served_total: u64,
+        /// End-to-end latency of this step (slot acquired → inference
+        /// done) — the signal deadline controllers reweight from.
+        e2e_ms: f64,
     },
+    /// A tenant was quarantined (fatal fault, breaker trip, or stage
+    /// thread death); a [`Command::Remove`] eviction is already queued,
+    /// and its [`ServeEvent::Drained`] will follow once it finishes
+    /// draining.
+    Quarantined { tenant: TenantId },
     /// A tenant's stream finished (exhausted, limit hit, or drained
     /// after removal); its outcome is finalized.
     Drained { tenant: TenantId },
@@ -238,12 +354,41 @@ impl GovState {
     }
 }
 
+/// What [`SlotGovernor::acquire`] resolves to.  `Broken` surfaces an
+/// internal invariant breach as a propagated error (quarantining the
+/// one tenant whose acquire hit it) instead of a cross-thread panic
+/// that would poison the governor lock for everyone.
+enum Acquire {
+    /// The WFQ policy granted a free slot.
+    Granted(StagingSlot),
+    /// The tenant was removed or the scheduler shut down — wind down.
+    Detached,
+    /// Governor state inconsistent (should be unreachable).
+    Broken(Error),
+}
+
+impl Acquire {
+    #[cfg(test)]
+    fn granted(self) -> Option<StagingSlot> {
+        match self {
+            Acquire::Granted(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    #[cfg(test)]
+    fn is_detached(&self) -> bool {
+        matches!(self, Acquire::Detached)
+    }
+}
+
 /// The shared staging-slot pool behind a weighted-fair allocator: stage
 /// threads block in [`SlotGovernor::acquire`] until the WFQ policy
 /// grants them a free slot; the inference thread returns slots through
 /// [`SlotGovernor::release`].  Deactivating a tenant (removal) or
-/// closing the governor (shutdown) wakes its waiter with `None`, so no
-/// stage thread can hang on a detached tenant.
+/// closing the governor (shutdown) wakes its waiter with
+/// [`Acquire::Detached`], so no stage thread can hang on a detached
+/// tenant.
 struct SlotGovernor {
     state: Mutex<GovState>,
     cv: Condvar,
@@ -312,9 +457,12 @@ impl SlotGovernor {
         self.cv.notify_all();
     }
 
-    /// Block until the WFQ policy hands `id` a slot; `None` means the
-    /// tenant was removed or the scheduler shut down.
-    fn acquire(&self, id: TenantId) -> Option<StagingSlot> {
+    /// Block until the WFQ policy hands `id` a slot;
+    /// [`Acquire::Detached`] means the tenant was removed or the
+    /// scheduler shut down, [`Acquire::Broken`] that governor state
+    /// went inconsistent (propagated, never panicked — a panic here
+    /// would poison the lock under every other tenant).
+    fn acquire(&self, id: TenantId) -> Acquire {
         let mut st = self.lock();
         let vtime = st.vtime;
         match st.tenants.get_mut(&id) {
@@ -328,7 +476,7 @@ impl SlotGovernor {
                 }
                 t.waiting = true;
             }
-            None => return None,
+            None => return Acquire::Detached,
         }
         loop {
             let live = !st.closed && st.tenants.get(&id).map(|t| t.active).unwrap_or(false);
@@ -336,11 +484,20 @@ impl SlotGovernor {
                 if let Some(t) = st.tenants.get_mut(&id) {
                     t.waiting = false;
                 }
-                return None;
+                return Acquire::Detached;
             }
             if !st.free.is_empty() && st.pick() == Some(id) {
-                let slot = st.free.pop().expect("free pool non-empty");
-                let t = st.tenants.get_mut(&id).expect("tenant registered");
+                let Some(slot) = st.free.pop() else {
+                    return Acquire::Broken(Error::Graph(
+                        "slot governor: free pool emptied under the lock".into(),
+                    ));
+                };
+                let Some(t) = st.tenants.get_mut(&id) else {
+                    st.free.push(slot); // keep the pool whole
+                    return Acquire::Broken(Error::Graph(format!(
+                        "slot governor: tenant {id} vanished while waiting"
+                    )));
+                };
                 let start = if t.weight > 0 {
                     t.granted as f64 / t.weight as f64
                 } else {
@@ -351,7 +508,7 @@ impl SlotGovernor {
                 st.vtime = st.vtime.max(start);
                 // further free slots may belong to other waiters
                 self.cv.notify_all();
-                return Some(slot);
+                return Acquire::Granted(slot);
             }
             st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
@@ -379,6 +536,11 @@ struct StagedJob {
     stage_ms: f64,
     t_req: Instant,
     staged: Result<()>,
+    /// Retry attempts this window burned clearing transient faults on
+    /// the stage thread.
+    retries: u32,
+    /// Injected faults that fired against this window's stage call.
+    injected: u32,
 }
 
 /// Stage-thread → inference-thread traffic.  Every stage thread's last
@@ -422,6 +584,69 @@ struct LiveTenant {
     limit: usize,
     /// Snapshots a full run would serve (min of stream windows, limit).
     expected: usize,
+    /// End-to-end latency target ([`TenantSpec::deadline_ms`]).
+    deadline_ms: Option<f64>,
+    /// Consecutive failed windows (shed or stale); reset on a served
+    /// step, trips the breaker at [`ServePolicy::breaker_k`].
+    consec_fails: u32,
+    /// Quarantined: eviction queued, staged leftovers recycled unserved.
+    quarantined: bool,
+}
+
+/// Quarantine a live tenant: record its fault (first error wins), count
+/// it, and push the eviction through the regular [`Command::Remove`]
+/// drain path — its stage thread detaches on its next acquire, its
+/// in-flight slots recycle through the normal removal machinery, and
+/// every other tenant is untouched.
+fn quarantine<C: FnMut(ServeEvent) -> Vec<Command>>(
+    l: &mut LiveTenant,
+    e: Error,
+    health: &mut HealthStats,
+    pending: &mut VecDeque<Command>,
+    control: &mut C,
+) {
+    if l.quarantined {
+        return;
+    }
+    l.quarantined = true;
+    health.quarantined += 1;
+    if l.outcome.fault.is_none() {
+        l.outcome.fault = Some(e);
+    }
+    let tenant = l.outcome.id;
+    pending.push_back(Command::Remove(tenant));
+    pending.extend(control(ServeEvent::Quarantined { tenant }));
+}
+
+/// One failed window for a live tenant: transient failures shed the
+/// window (the tenant keeps serving) until [`ServePolicy::breaker_k`]
+/// consecutive failures trip the circuit breaker; fatal failures
+/// quarantine immediately.  Either way the window's slot is already
+/// back in the pool — failure handling never holds storage.
+fn fail_step<C: FnMut(ServeEvent) -> Vec<Command>>(
+    l: &mut LiveTenant,
+    e: Error,
+    step: &'static str,
+    policy: &ServePolicy,
+    health: &mut HealthStats,
+    pending: &mut VecDeque<Command>,
+    control: &mut C,
+) {
+    let tenant = l.outcome.id;
+    l.consec_fails += 1;
+    let wrapped = Error::Stage { tenant, step, source: Box::new(e) };
+    if wrapped.is_transient() && l.consec_fails < policy.breaker_k {
+        health.shed += 1;
+        l.outcome.health.shed += 1;
+        return;
+    }
+    if wrapped.is_transient() {
+        // K consecutive transient failures: the breaker trips and the
+        // tenant is evicted rather than shedding forever
+        health.breaker_trips += 1;
+        l.outcome.health.breaker_tripped = true;
+    }
+    quarantine(l, wrapped, health, pending, control);
 }
 
 /// The work a stage thread owns for one tenant.
@@ -438,6 +663,9 @@ fn spawn_stage<'scope>(
     stager: Box<dyn SessionStager>,
     governor: Arc<SlotGovernor>,
     tx: mpsc::SyncSender<Msg>,
+    faults: Arc<FaultPlan>,
+    retry_budget: u32,
+    backoff_us: u64,
 ) -> std::thread::ScopedJoinHandle<'scope, ()> {
     scope.spawn(move || {
         let mut guard = DoneGuard { tenant: task.id, tx, stager: Some(stager), err: None };
@@ -453,17 +681,62 @@ fn spawn_stage<'scope>(
                     break;
                 }
             };
-            // None: removed / stopped / shut down — wind down cleanly
-            let Some(mut slot) = governor.acquire(task.id) else { break };
+            let mut slot = match governor.acquire(task.id) {
+                Acquire::Granted(s) => s,
+                // removed / stopped / shut down — wind down cleanly
+                Acquire::Detached => break,
+                Acquire::Broken(e) => {
+                    guard.err = Some(e);
+                    break;
+                }
+            };
             let t_req = Instant::now();
-            let staged = guard.stager.as_mut().expect("stager held until Done").stage(&snap, &mut slot);
-            let failed = staged.is_err();
+            // injected faults fire *before* the real stage call, so a
+            // retried window replays `stage` from scratch and a failed
+            // one never leaves the slot half-filled
+            let (mut attempt, mut retries, mut injected) = (0u32, 0u32, 0u32);
+            let staged = loop {
+                let res = faults
+                    .check(task.id, FaultPoint::Stage, i, attempt)
+                    .and_then(|()| match guard.stager.as_mut() {
+                        Some(s) => s.stage(&snap, &mut slot),
+                        None => Err(Error::Graph("stage thread lost its stager".into())),
+                    });
+                match res {
+                    Ok(()) => break Ok(()),
+                    Err(e) => {
+                        if matches!(e, Error::Faulted { .. }) {
+                            injected += 1;
+                        }
+                        if e.is_transient() && attempt < retry_budget {
+                            attempt += 1;
+                            retries += 1;
+                            std::thread::sleep(Duration::from_micros(
+                                backoff_us << attempt.min(6),
+                            ));
+                            continue;
+                        }
+                        break Err(e);
+                    }
+                }
+            };
             let stage_ms = t_req.elapsed().as_secs_f64() * 1e3;
-            let job = StagedJob { tenant: task.id, snap, slot, stage_ms, t_req, staged };
+            let job = StagedJob {
+                tenant: task.id,
+                snap,
+                slot,
+                stage_ms,
+                t_req,
+                staged,
+                retries,
+                injected,
+            };
             // the slot rides along even on failure so the collector can
             // recycle it (a dropped slot would drain the pool and hang
-            // the other tenants)
-            if guard.tx.send(Msg::Job(job)).is_err() || failed {
+            // the other tenants).  A failed window does NOT end the
+            // thread: the collector sheds or quarantines the tenant —
+            // quarantine deactivates it, so the next acquire detaches.
+            if guard.tx.send(Msg::Job(job)).is_err() {
                 break;
             }
         }
@@ -477,12 +750,20 @@ pub struct Scheduler {
     engine: Arc<Engine>,
     slots: usize,
     batch: bool,
+    faults: Arc<FaultPlan>,
+    policy: ServePolicy,
 }
 
 impl Scheduler {
     /// `slots` bounds in-flight staged snapshots across all tenants.
     pub fn new(engine: Arc<Engine>, slots: usize) -> Scheduler {
-        Scheduler { engine, slots: slots.max(1), batch: false }
+        Scheduler {
+            engine,
+            slots: slots.max(1),
+            batch: false,
+            faults: Arc::new(FaultPlan::new()),
+            policy: ServePolicy::default(),
+        }
     }
 
     /// Toggle cross-stream batched projection (`serve::batch`): the
@@ -492,6 +773,23 @@ impl Scheduler {
     /// way.
     pub fn with_batching(mut self, on: bool) -> Scheduler {
         self.batch = on;
+        self
+    }
+
+    /// Thread a deterministic [`FaultPlan`] through the run: scripted
+    /// faults fire before the corresponding stage / prepare / infer
+    /// call, so chaos runs reproduce the same failure sequence at any
+    /// thread count.  Default: an empty plan (injects nothing).
+    pub fn with_faults(mut self, plan: Arc<FaultPlan>) -> Scheduler {
+        self.faults = plan;
+        self
+    }
+
+    /// Override the failure-domain and overload policy
+    /// ([`ServePolicy`]): retry budget, breaker threshold, stale-shed
+    /// factor, admission cap.
+    pub fn with_policy(mut self, policy: ServePolicy) -> Scheduler {
+        self.policy = policy;
         self
     }
 
@@ -597,20 +895,22 @@ impl Scheduler {
         F: FnMut(TenantId, &Snapshot, &StagingSlot, &[f32]) -> Result<()>,
     {
         self.serve_report(manifest, tenants, control, on_step)
-            .map(|(outcomes, _)| outcomes)
+            .map(|report| report.outcomes)
     }
 
     /// [`Self::serve`] plus the run's cross-stream batching counters
-    /// ([`BatchStats`] — all-zero when batching is off): rounds served,
-    /// fused engine calls, batch occupancy.  The CLI and
-    /// `benches/serve_traffic.rs` report them into `BENCH_serve.json`.
+    /// ([`BatchStats`] — all-zero when batching is off) and the
+    /// robustness counters ([`HealthStats`]: injected faults, retries,
+    /// sheds, deadline misses, breaker trips, rejected admissions).
+    /// The CLI and `benches/serve_traffic.rs` report both into
+    /// `BENCH_serve.json`.
     pub fn serve_report<C, F>(
         &self,
         manifest: &Manifest,
         tenants: Vec<TenantSpec>,
         mut control: C,
         mut on_step: F,
-    ) -> Result<(Vec<StreamOutcome>, BatchStats)>
+    ) -> Result<ServeReport>
     where
         C: FnMut(ServeEvent) -> Vec<Command>,
         F: FnMut(TenantId, &Snapshot, &StagingSlot, &[f32]) -> Result<()>,
@@ -624,6 +924,7 @@ impl Scheduler {
         let mut next_id: TenantId = 0;
         let mut served_total: u64 = 0;
         let mut planner = BatchPlanner::new();
+        let mut health = HealthStats::default();
 
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
@@ -646,6 +947,14 @@ impl Scheduler {
                 while let Some(cmd) = pending.pop_front() {
                     match cmd {
                         Command::Admit(spec) => {
+                            // overload control: a saturated live set
+                            // rejects the admission outright (counted,
+                            // never queued) instead of letting one more
+                            // tenant stretch everyone's deadline
+                            if live.len() >= self.policy.admit_cap {
+                                health.admits_rejected += 1;
+                                continue;
+                            }
                             // one cheap O(edges) pass for the expected
                             // snapshot count; fitting the manifest is
                             // *not* pre-validated here (that would scan
@@ -668,11 +977,16 @@ impl Scheduler {
                                         weight: spec.weight,
                                         steps: Vec::new(),
                                         removed: false,
+                                        fault: None,
+                                        health: TenantHealth::default(),
                                         state_delta: None,
                                         feature_delta: None,
                                     },
                                     limit: spec.limit,
                                     expected: windows.min(spec.limit),
+                                    deadline_ms: spec.deadline_ms,
+                                    consec_fails: 0,
+                                    quarantined: false,
                                 },
                             );
                             handles.push(spawn_stage(
@@ -686,6 +1000,9 @@ impl Scheduler {
                                 stager,
                                 Arc::clone(&governor),
                                 tx_ready.clone(),
+                                Arc::clone(&self.faults),
+                                self.policy.retries,
+                                self.policy.backoff_us,
                             ));
                             active_threads += 1;
                         }
@@ -763,15 +1080,20 @@ impl Scheduler {
                         unreachable!("probed above")
                     };
                     active_threads -= 1;
-                    if let Some(e) = err {
-                        // keep the pool whole even on the error path:
-                        // jobs already pulled into this round hold slots
-                        for job in round.drain(..) {
-                            governor.release(job.slot);
-                        }
-                        break 'serve Err(e);
-                    }
                     let Some(mut l) = live.remove(&tenant) else { continue };
+                    if let Some(e) = err {
+                        // the stage thread died outside a staged window
+                        // (preprocess error or governor breach): that
+                        // quarantines this tenant, not the run — every
+                        // other tenant keeps serving
+                        quarantine(
+                            &mut l,
+                            Error::Stage { tenant, step: "stage", source: Box::new(e) },
+                            &mut health,
+                            &mut pending,
+                            &mut control,
+                        );
+                    }
                     l.outcome.feature_delta = stager.and_then(|s| s.feature_delta());
                     l.outcome.state_delta = l.session.finish();
                     l.outcome.removed = l.outcome.steps.len() < l.expected;
@@ -784,69 +1106,141 @@ impl Scheduler {
                 }
 
                 // phase 0: validate + prepare each round job; decide
-                // whether it goes through the planner or plain infer
-                let mut fatal: Option<Error> = None;
-                let mut round_iter = round.drain(..);
-                for job in round_iter.by_ref() {
-                    if job.staged.is_err() {
-                        governor.release(job.slot); // recycle before surfacing
-                        fatal = job.staged.err();
-                        break;
-                    }
+                // whether it goes through the planner or plain infer.
+                // Failures here are *tenant-scoped*: the window's slot
+                // goes straight back to the pool, then the tenant is
+                // shed (transient) or quarantined (fatal / breaker) —
+                // the round and every other tenant proceed.  Injected
+                // prepare/infer faults gate *before* the session call
+                // and before the round forms, so a faulted window never
+                // half-executes and never tears a fused round.
+                for mut job in round.drain(..) {
+                    health.faults_injected += job.injected as u64;
+                    health.retries += job.retries as u64;
                     let Some(l) = live.get_mut(&job.tenant) else {
                         governor.release(job.slot); // tenant already finalized
                         continue;
                     };
-                    if job.snap.index >= l.limit {
+                    l.outcome.health.retries += job.retries as u64;
+                    if l.quarantined || job.snap.index >= l.limit {
                         governor.release(job.slot);
+                        continue;
+                    }
+                    if let Err(e) = std::mem::replace(&mut job.staged, Ok(())) {
+                        governor.release(job.slot); // recycle before handling
+                        fail_step(
+                            l, e, "stage", &self.policy, &mut health, &mut pending, &mut control,
+                        );
+                        continue;
+                    }
+                    // overload control: a staged window whose queue wait
+                    // already blew the deadline is stale — serving it
+                    // cannot meet the SLA, so shed it and recycle
+                    if let Some(dl) = l.deadline_ms {
+                        let waited_ms = job.t_req.elapsed().as_secs_f64() * 1e3;
+                        if waited_ms > self.policy.stale_factor * dl {
+                            governor.release(job.slot);
+                            health.deadline_shed += 1;
+                            l.outcome.health.deadline_shed += 1;
+                            l.consec_fails += 1;
+                            if l.consec_fails >= self.policy.breaker_k {
+                                health.breaker_trips += 1;
+                                l.outcome.health.breaker_tripped = true;
+                                quarantine(
+                                    l,
+                                    Error::Deadline {
+                                        tenant: job.tenant,
+                                        target_ms: dl,
+                                        observed_ms: waited_ms,
+                                    },
+                                    &mut health,
+                                    &mut pending,
+                                    &mut control,
+                                );
+                            }
+                            continue;
+                        }
+                    }
+                    // injected prepare/infer faults, with the same
+                    // bounded retry budget the stage side gets
+                    let mut gate: Option<(Error, &'static str)> = None;
+                    'points: for point in [FaultPoint::Prepare, FaultPoint::Infer] {
+                        let mut attempt = 0u32;
+                        loop {
+                            match self.faults.check(job.tenant, point, job.snap.index, attempt) {
+                                Ok(()) => break,
+                                Err(e) => {
+                                    health.faults_injected += 1;
+                                    if e.is_transient() && attempt < self.policy.retries {
+                                        attempt += 1;
+                                        health.retries += 1;
+                                        l.outcome.health.retries += 1;
+                                        continue;
+                                    }
+                                    gate = Some((e, point.name()));
+                                    break 'points;
+                                }
+                            }
+                        }
+                    }
+                    if let Some((e, step)) = gate {
+                        governor.release(job.slot);
+                        fail_step(
+                            l, e, step, &self.policy, &mut health, &mut pending, &mut control,
+                        );
                         continue;
                     }
                     if let Err(e) = l.session.prepare(&job.snap) {
                         governor.release(job.slot);
-                        fatal = Some(e);
-                        break;
+                        fail_step(
+                            l, e, "prepare", &self.policy, &mut health, &mut pending,
+                            &mut control,
+                        );
+                        continue;
                     }
                     let batched = self.batch && l.session.batchable().is_some();
                     todo.push((job, batched));
                 }
-                if let Some(e) = fatal {
-                    // keep the pool whole even on the error path
-                    for job in round_iter {
-                        governor.release(job.slot);
-                    }
-                    for (job, _) in todo.drain(..) {
-                        governor.release(job.slot);
-                    }
-                    break 'serve Err(e);
-                }
-                drop(round_iter);
 
                 // phase 1: the batchable steps run through the planner
                 // as one round (begin → fused row-stacked GEMMs →
                 // finish), over disjoint &mut handles into the live set
-                let batch_count = todo.iter().filter(|(_, b)| *b).count();
                 let t_round = Instant::now();
-                if batch_count > 0 {
+                if todo.iter().any(|(_, b)| *b) {
                     // per-round by necessity: the map holds `&mut`
                     // handles into `live`, so it cannot persist across
                     // rounds like the other scratch
                     let mut grabbed: HashMap<TenantId, &mut LiveTenant> =
                         live.iter_mut().map(|(id, l)| (*id, l)).collect();
-                    let mut members: Vec<RoundMember> = Vec::with_capacity(batch_count);
-                    for (job, batched) in &todo {
+                    let mut members: Vec<RoundMember> = Vec::with_capacity(todo.len());
+                    for (job, batched) in todo.iter_mut() {
                         if !*batched {
                             continue;
                         }
-                        let l = grabbed
-                            .remove(&job.tenant)
-                            .expect("round tenants are live and distinct");
+                        // an invariant breach (round tenant vanished or
+                        // stopped announcing batchable) demotes the step
+                        // to the plain-infer path instead of panicking
+                        // the inference thread under every tenant
+                        let Some(l) = grabbed.remove(&job.tenant) else {
+                            *batched = false;
+                            continue;
+                        };
+                        let Some(session) = l.session.batchable() else {
+                            *batched = false;
+                            continue;
+                        };
                         members.push(RoundMember {
-                            session: l.session.batchable().expect("probed in phase 0"),
+                            session,
                             snap: &job.snap,
                             slot: &job.slot,
                         });
                     }
                     if let Err(e) = planner.run_round(&self.engine, &mut members) {
+                        // a torn fused round cannot be attributed to one
+                        // tenant (the row-stacked call served several),
+                        // so this stays run-fatal; injected infer faults
+                        // gate in phase 0, before the round forms, and
+                        // so never tear one
                         drop(members);
                         drop(grabbed);
                         for (job, _) in todo.drain(..) {
@@ -855,6 +1249,7 @@ impl Scheduler {
                         break 'serve Err(e);
                     }
                 }
+                let batch_count = todo.iter().filter(|(_, b)| *b).count();
                 let batch_share_ms = if batch_count > 0 {
                     t_round.elapsed().as_secs_f64() * 1e3 / batch_count as f64
                 } else {
@@ -863,20 +1258,29 @@ impl Scheduler {
 
                 // phase 2: non-batchable steps infer here; then every
                 // served job reports, releases its slot, and fires the
-                // controller — in round order
+                // controller — in round order.  A session's own infer
+                // error is tenant-scoped (shed / quarantine, like phase
+                // 0); an `on_step` error is the *caller* failing and
+                // stays run-fatal.
                 let mut todo_iter = todo.drain(..);
-                let mut step_err: Option<Error> = None;
+                let mut ctl_err: Option<Error> = None;
                 for (job, batched) in todo_iter.by_ref() {
                     let StagedJob { tenant, snap, slot, stage_ms, t_req, .. } = job;
-                    let l = live.get_mut(&tenant).expect("validated in phase 0");
+                    let Some(l) = live.get_mut(&tenant) else {
+                        governor.release(slot); // finalized mid-round
+                        continue;
+                    };
                     let infer_ms = if batched {
                         batch_share_ms
                     } else {
                         let t0 = Instant::now();
                         if let Err(e) = l.session.infer(&snap, &slot) {
                             governor.release(slot);
-                            step_err = Some(e);
-                            break;
+                            fail_step(
+                                l, e, "infer", &self.policy, &mut health, &mut pending,
+                                &mut control,
+                            );
+                            continue;
                         }
                         if self.batch {
                             planner.stats.fallback_steps += 1;
@@ -885,24 +1289,28 @@ impl Scheduler {
                     };
                     if let Err(e) = on_step(tenant, &snap, &slot, l.session.output()) {
                         governor.release(slot);
-                        step_err = Some(e);
+                        ctl_err = Some(e);
                         break;
                     }
-                    l.outcome.steps.push(StepRecord {
-                        index: snap.index,
-                        stage_ms,
-                        infer_ms,
-                        e2e_ms: t_req.elapsed().as_secs_f64() * 1e3,
-                    });
+                    l.consec_fails = 0; // a served step closes the breaker window
+                    let e2e_ms = t_req.elapsed().as_secs_f64() * 1e3;
+                    if let Some(dl) = l.deadline_ms {
+                        if e2e_ms > dl {
+                            health.deadline_misses += 1;
+                            l.outcome.health.deadline_misses += 1;
+                        }
+                    }
+                    l.outcome.steps.push(StepRecord { index: snap.index, stage_ms, infer_ms, e2e_ms });
                     served_total += 1;
                     governor.release(slot);
                     pending.extend(control(ServeEvent::Step {
                         tenant,
                         index: snap.index,
                         served_total,
+                        e2e_ms,
                     }));
                 }
-                if let Some(e) = step_err {
+                if let Some(e) = ctl_err {
                     // keep the pool whole even on the error path
                     for (job, _) in todo_iter {
                         governor.release(job.slot);
@@ -938,7 +1346,7 @@ impl Scheduler {
         }
 
         done.sort_by_key(|o| o.id);
-        Ok((done, planner.stats))
+        Ok(ServeReport { outcomes: done, batch: planner.stats, health })
     }
 }
 
@@ -1143,9 +1551,11 @@ mod tests {
     }
 
     #[test]
-    fn stage_error_returns_slot_and_propagates_without_hanging() {
-        // a manifest too small for the streams makes admission (and any
-        // stage call) fail with Budget; the error path must not hang
+    fn stage_error_quarantines_tenant_and_returns_slot_without_hanging() {
+        // a manifest too small for the streams makes every stage call
+        // fail with Budget; each tenant quarantines (fault recorded,
+        // Remove-drained) while the run itself completes cleanly with
+        // every slot back in the pool
         let engine = Arc::new(Engine::serial());
         let sources: Vec<StreamSource> = (0..2)
             .map(|i| StreamSource {
@@ -1166,8 +1576,20 @@ mod tests {
             .map(|s| ModelKind::EvolveGcn.build_session(&cfg(&s.stream, 2, false, &engine)))
             .collect();
         let sched = Scheduler::new(engine, 1);
-        let res = sched.run(&manifest, &sources, sessions, usize::MAX, |_, _, _, _| Ok(()));
-        assert!(matches!(res.unwrap_err(), Error::Budget { .. }));
+        let outcomes = sched
+            .run(&manifest, &sources, sessions, usize::MAX, |_, _, _, _| Ok(()))
+            .unwrap();
+        assert_eq!(outcomes.len(), 2);
+        for o in &outcomes {
+            assert!(o.steps.is_empty(), "{}: nothing can stage", o.name);
+            assert!(o.removed, "{}: quarantine cut the stream short", o.name);
+            match &o.fault {
+                Some(Error::Stage { step: "stage", source, .. }) => {
+                    assert!(matches!(**source, Error::Budget { .. }))
+                }
+                other => panic!("{}: expected a stage Budget fault, got {other:?}", o.name),
+            }
+        }
     }
 
     #[test]
@@ -1232,13 +1654,13 @@ mod tests {
     }
 
     #[test]
-    fn oversized_admission_surfaces_budget_error_from_staging() {
+    fn oversized_admission_quarantines_with_budget_fault() {
         let engine = Arc::new(Engine::serial());
         let small = Arc::new(CooStream::default());
         let big = Arc::new(synth::generate(&BC_ALPHA, 13));
         // manifest sized for the empty stream only: the big tenant's
         // first stage call must fail Budget, recycle its slot, and
-        // tear the run down without hanging
+        // quarantine the tenant without hanging the run
         let manifest = Scheduler::manifest_for_streams(
             [(small.as_ref(), BC_ALPHA.splitter_secs)],
             Dims::default(),
@@ -1246,13 +1668,64 @@ mod tests {
         let session = ModelKind::EvolveGcn.build_session(&cfg(&big, manifest.max_nodes, false, &engine));
         let sched = Scheduler::new(engine, 2);
         let spec = TenantSpec::new("big", big, BC_ALPHA.splitter_secs, 1, session);
-        let res = sched.serve(
-            &manifest,
-            vec![spec],
-            |_| Vec::new(),
-            |_, _, _, _| Ok(()),
+        let mut quarantined = Vec::new();
+        let outs = sched
+            .serve(
+                &manifest,
+                vec![spec],
+                |ev| {
+                    if let ServeEvent::Quarantined { tenant } = ev {
+                        quarantined.push(tenant);
+                    }
+                    Vec::new()
+                },
+                |_, _, _, _| Ok(()),
+            )
+            .unwrap();
+        assert_eq!(quarantined, vec![0]);
+        assert_eq!(outs.len(), 1);
+        assert!(outs[0].steps.is_empty());
+        assert!(outs[0].removed);
+        match &outs[0].fault {
+            Some(Error::Stage { source, .. }) => {
+                assert!(matches!(**source, Error::Budget { .. }))
+            }
+            other => panic!("expected a Budget fault, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn admit_cap_rejects_admissions_under_saturation() {
+        let engine = Arc::new(Engine::serial());
+        let streams: Vec<Arc<CooStream>> = (0..3)
+            .map(|i| Arc::new(synth::generate(&BC_ALPHA, 60 + i)))
+            .collect();
+        let manifest = Scheduler::manifest_for_streams(
+            streams.iter().map(|s| (s.as_ref(), BC_ALPHA.splitter_secs)),
+            Dims::default(),
         );
-        assert!(matches!(res.unwrap_err(), Error::Budget { .. }));
+        let specs: Vec<TenantSpec> = streams
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let session =
+                    ModelKind::GcrnM2.build_session(&cfg(s, manifest.max_nodes, false, &engine));
+                TenantSpec::new(&format!("t{i}"), Arc::clone(s), BC_ALPHA.splitter_secs, 1, session)
+                    .with_limit(3)
+            })
+            .collect();
+        let sched = Scheduler::new(engine, 2)
+            .with_policy(ServePolicy { admit_cap: 2, ..ServePolicy::default() });
+        let report = sched
+            .serve_report(&manifest, specs, |_| Vec::new(), |_, _, _, _| Ok(()))
+            .unwrap();
+        // the third initial tenant is over the cap: rejected, counted
+        assert_eq!(report.outcomes.len(), 2);
+        assert_eq!(report.health.admits_rejected, 1);
+        for o in &report.outcomes {
+            assert_eq!(o.steps.len(), 3);
+            assert!(o.fault.is_none());
+        }
     }
 
     #[test]
@@ -1278,12 +1751,12 @@ mod tests {
         // t0 contends alone for 8 grants: its last start tag 7/4 sets
         // the pool's virtual time to 1.75
         for _ in 0..8 {
-            let s = gov.acquire(0).expect("free slot");
+            let s = gov.acquire(0).granted().expect("free slot");
             gov.release(s);
         }
         // t1 was absent the whole time: it rejoins at the frontier
         // (clamped to 1 grant-equivalent), not with 8 banked grants
-        let s = gov.acquire(1).expect("free slot");
+        let s = gov.acquire(1).granted().expect("free slot");
         gov.release(s);
         assert_eq!(gov.lock().tenants[&1].granted, 2, "clamp to floor(1.75) + the grant");
         gov.set_weight(0, 4); // no-op reweight keeps earned progress
@@ -1301,14 +1774,14 @@ mod tests {
         let gov = Arc::new(SlotGovernor::new(vec![StagingSlot::new(&m)]));
         gov.admit(0, 1);
         gov.admit(1, 1);
-        let s0 = gov.acquire(0).expect("slot free");
+        let s0 = gov.acquire(0).granted().expect("slot free");
         assert_eq!(gov.free_slots(), 0);
-        // tenant 1 would block; deactivate must wake it with None
+        // tenant 1 would block; deactivate must wake it with Detached
         let g = Arc::clone(&gov);
-        let waiter = std::thread::spawn(move || g.acquire(1).is_none());
+        let waiter = std::thread::spawn(move || g.acquire(1).is_detached());
         std::thread::sleep(std::time::Duration::from_millis(20));
         gov.deactivate(1);
-        assert!(waiter.join().unwrap(), "deactivated waiter must get None");
+        assert!(waiter.join().unwrap(), "deactivated waiter must detach");
         gov.release(s0);
         assert_eq!(gov.free_slots(), 1);
     }

@@ -97,6 +97,13 @@ pub struct TenantSpec {
     pub weight: u32,
     /// Serve at most this many snapshots (`usize::MAX` = whole stream).
     pub limit: usize,
+    /// End-to-end latency target per served window (`None` = no SLA).
+    ///
+    /// With a target set, the scheduler sheds staged windows whose
+    /// queue wait already exceeds the target (times the policy's stale
+    /// factor) and counts served steps that miss it — the inputs to
+    /// deadline-aware reweighting and overload control.
+    pub deadline_ms: Option<f64>,
     pub session: Box<dyn DgnnSession>,
 }
 
@@ -114,12 +121,19 @@ impl TenantSpec {
             splitter_secs,
             weight,
             limit: usize::MAX,
+            deadline_ms: None,
             session,
         }
     }
 
     pub fn with_limit(mut self, limit: usize) -> TenantSpec {
         self.limit = limit;
+        self
+    }
+
+    /// Set a per-window end-to-end latency target (see `deadline_ms`).
+    pub fn with_deadline_ms(mut self, ms: f64) -> TenantSpec {
+        self.deadline_ms = Some(ms);
         self
     }
 }

@@ -10,12 +10,20 @@
 //! engine threads with delta-aware staging on and off, and with
 //! cross-stream batched projection randomly enabled — churn under
 //! batching must uphold every one of the same invariants.
+//!
+//! The seeded [`FaultPlan`] scripts then pin the failure-domain story:
+//! transient faults recover bitwise-identical to a fault-free run,
+//! fatal faults quarantine exactly one tenant (its prefix intact,
+//! everyone else untouched), and repeated transient failures trip the
+//! per-tenant circuit breaker — each at 1/2/4 engine threads.
 
+use dgnn_booster::error::Error;
 use dgnn_booster::graph::{CooEdge, CooStream};
 use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
 use dgnn_booster::serve::{
-    run_session, Command, Scheduler, ServeEvent, SessionConfig, TenantSpec,
+    run_session, Command, FaultPlan, FaultPoint, FaultSpec, Scheduler, ServeEvent, ServePolicy,
+    ServeReport, SessionConfig, TenantSpec,
 };
 use dgnn_booster::testutil::{forall, Config, Pcg32};
 use std::sync::Arc;
@@ -156,7 +164,9 @@ fn chaos_case(rng: &mut Pcg32, size: usize, threads: usize) {
                     // idle: flush the rest of the script so every
                     // admission eventually happens and the run ends
                     ServeEvent::Idle => u64::MAX,
-                    ServeEvent::Drained { .. } => return Vec::new(),
+                    ServeEvent::Drained { .. } | ServeEvent::Quarantined { .. } => {
+                        return Vec::new()
+                    }
                 };
                 let mut cmds = Vec::new();
                 while next_op < ops.len() && ops[next_op].0 <= served {
@@ -261,6 +271,161 @@ fn chaos_at(threads: usize) {
     forall(Config::default().cases(5).max_size(24).seed(0xC4A05 + threads as u64), |rng, size| {
         chaos_case(rng, size, threads);
     });
+}
+
+/// One deterministic fault-scripted run: `n` equal-weight GCRN-M2
+/// tenants over fixed streams, a [`FaultPlan`] and optional
+/// [`ServePolicy`] threaded through the scheduler, outputs collected
+/// per tenant.  An `Ok` from `serve_report` is also the slot-leak
+/// check.
+struct FaultRun {
+    report: ServeReport,
+    outs: Vec<Outs>,
+}
+
+fn fault_run(threads: usize, n: usize, snaps: usize, plan: FaultPlan, policy: Option<ServePolicy>) -> FaultRun {
+    let model = ModelKind::GcrnM2;
+    let dims = Dims::default();
+    let streams: Vec<Arc<CooStream>> = (0..n)
+        .map(|i| Arc::new(tenant_stream(7000 + i as u64, 12, snaps, 5)))
+        .collect();
+    let manifest = Scheduler::manifest_for_streams(
+        streams.iter().map(|s| (s.as_ref(), SPLITTER)),
+        dims,
+    );
+    let engine = Arc::new(Engine::new(threads));
+    let tenants: Vec<TenantSpec> = streams
+        .iter()
+        .enumerate()
+        .map(|(i, stream)| {
+            let session = model.build_session(&SessionConfig {
+                dims,
+                seed: seed_of(i),
+                total_nodes: stream.num_nodes as usize,
+                max_nodes: manifest.max_nodes,
+                delta: false,
+                engine: Arc::clone(&engine),
+            });
+            TenantSpec::new(&format!("f{i}"), Arc::clone(stream), SPLITTER, 1, session)
+        })
+        .collect();
+    let mut sched = Scheduler::new(engine, 2).with_faults(Arc::new(plan));
+    if let Some(p) = policy {
+        sched = sched.with_policy(p);
+    }
+    let mut outs: Vec<Outs> = vec![Vec::new(); n];
+    let report = sched
+        .serve_report(
+            &manifest,
+            tenants,
+            |_| Vec::new(),
+            |sid, snap, _slot, out| {
+                outs[sid].push((snap.index, bits(out)));
+                Ok(())
+            },
+        )
+        .expect("fault run must finish cleanly (slot pool whole)");
+    FaultRun { report, outs }
+}
+
+#[test]
+fn transient_faults_recover_bitwise_identical() {
+    for threads in [1, 2, 4] {
+        let clean = fault_run(threads, 3, 4, FaultPlan::new(), None);
+        // a stage fault that clears on the 3rd attempt and a prepare
+        // fault that clears on the 2nd — both inside the default retry
+        // budget, so nothing is shed and nothing diverges
+        let plan = FaultPlan::new()
+            .with(FaultSpec { tenant: 1, point: FaultPoint::Stage, index: 1, transient: true, fires: 2 })
+            .with(FaultSpec { tenant: 2, point: FaultPoint::Prepare, index: 0, transient: true, fires: 1 });
+        let faulted = fault_run(threads, 3, 4, plan, None);
+        assert_eq!(
+            faulted.outs, clean.outs,
+            "transient recovery must be bitwise (threads={threads})"
+        );
+        let h = faulted.report.health;
+        assert_eq!(h.faults_injected, 3, "threads={threads}");
+        assert_eq!(h.retries, 3, "threads={threads}");
+        assert_eq!(h.shed, 0);
+        assert_eq!(h.quarantined, 0);
+        assert_eq!(h.breaker_trips, 0);
+        for o in &faulted.report.outcomes {
+            assert!(o.fault.is_none(), "tenant {} faulted: {:?}", o.id, o.fault);
+            assert!(!o.removed);
+        }
+        assert_eq!(faulted.report.outcomes[1].health.retries, 2);
+        assert_eq!(faulted.report.outcomes[2].health.retries, 1);
+    }
+}
+
+#[test]
+fn fatal_fault_quarantines_only_its_tenant() {
+    for threads in [1, 2, 4] {
+        let clean = fault_run(threads, 3, 4, FaultPlan::new(), None);
+        let plan = FaultPlan::new().with(FaultSpec {
+            tenant: 1,
+            point: FaultPoint::Infer,
+            index: 2,
+            transient: false,
+            fires: 1,
+        });
+        let run = fault_run(threads, 3, 4, plan, None);
+        // the faulted tenant keeps the bitwise prefix it served before
+        // the fatal window, and the outcome records the wrapped error
+        assert_eq!(run.outs[1][..], clean.outs[1][..2], "threads={threads}");
+        let o1 = &run.report.outcomes[1];
+        assert!(o1.removed, "quarantined tenant must finalize as removed");
+        match &o1.fault {
+            Some(Error::Stage { tenant, step, source }) => {
+                assert_eq!(*tenant, 1);
+                assert_eq!(*step, "infer");
+                assert!(matches!(**source, Error::Faulted { transient: false, .. }));
+            }
+            other => panic!("expected a Stage-wrapped fault, got {other:?}"),
+        }
+        // the other tenants are bitwise untouched and run to completion
+        for id in [0, 2] {
+            assert_eq!(
+                run.outs[id], clean.outs[id],
+                "healthy tenant {id} diverged (threads={threads})"
+            );
+            assert!(run.report.outcomes[id].fault.is_none());
+            assert!(!run.report.outcomes[id].removed);
+        }
+        let h = run.report.health;
+        assert_eq!(h.quarantined, 1);
+        assert_eq!(h.breaker_trips, 0);
+        assert_eq!(h.shed, 0);
+    }
+}
+
+#[test]
+fn repeated_transient_failures_trip_the_breaker() {
+    for threads in [1, 2, 4] {
+        let clean = fault_run(threads, 2, 4, FaultPlan::new(), None);
+        // two back-to-back windows whose transient infer fault outlives
+        // the tightened retry budget: the first is shed, the second
+        // trips the breaker_k=2 circuit breaker
+        let plan = FaultPlan::new()
+            .with(FaultSpec { tenant: 0, point: FaultPoint::Infer, index: 0, transient: true, fires: 10 })
+            .with(FaultSpec { tenant: 0, point: FaultPoint::Infer, index: 1, transient: true, fires: 10 });
+        let policy = ServePolicy { retries: 2, breaker_k: 2, ..Default::default() };
+        let run = fault_run(threads, 2, 4, plan, Some(policy));
+        let o0 = &run.report.outcomes[0];
+        assert!(run.outs[0].is_empty(), "both faulted windows must be shed (threads={threads})");
+        assert!(o0.removed);
+        assert!(o0.health.breaker_tripped);
+        assert_eq!(o0.health.shed, 1, "the window at the trip quarantines, not sheds");
+        assert!(o0.fault.is_some());
+        let h = run.report.health;
+        assert_eq!(h.breaker_trips, 1);
+        assert_eq!(h.quarantined, 1);
+        assert_eq!(h.shed, 1);
+        // the survivor is bitwise identical to the fault-free run
+        assert_eq!(run.outs[1], clean.outs[1], "threads={threads}");
+        assert!(run.report.outcomes[1].fault.is_none());
+        assert!(!run.report.outcomes[1].removed);
+    }
 }
 
 #[test]

@@ -485,7 +485,7 @@ fn run_roster(
         .collect();
     let sched = Scheduler::new(engine, slots).with_batching(batch);
     let mut outs: Vec<Outs> = vec![Vec::new(); roster.len()];
-    let (outcomes, stats) = sched
+    let report = sched
         .serve_report(
             &manifest,
             tenants,
@@ -496,10 +496,11 @@ fn run_roster(
             },
         )
         .unwrap();
-    for o in &outcomes {
+    for o in &report.outcomes {
         assert!(!o.removed, "{}: spuriously cut short", o.name);
+        assert!(o.fault.is_none(), "{}: spurious fault", o.name);
     }
-    (outs, stats)
+    (outs, report.batch)
 }
 
 /// Batch-on serving ≡ batch-off serving, bitwise per tenant, across a

@@ -11,13 +11,18 @@
 //! weight ratio within a fixed tolerance at 1/2/4 engine threads,
 //! delta on and off; and with equal weights the weighted scheduler
 //! reduces bitwise to the legacy first-come path (`Scheduler::run`).
+//!
+//! Layer 3 — overload control: a tenant that misses its deadline on
+//! every served step is boosted by the `DeadlineController` within a
+//! bounded number of steps, its misses land in the health counters,
+//! and aggregate throughput stays bounded.
 
 use dgnn_booster::graph::{CooEdge, CooStream};
 use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
 use dgnn_booster::serve::{
-    wfq_pick, Command, DgnnSession, Scheduler, ServeEvent, SessionConfig, StreamSource,
-    TenantSpec,
+    wfq_pick, Command, DeadlineController, DgnnSession, Scheduler, ServeEvent, ServePolicy,
+    SessionConfig, StreamSource, TenantSpec,
 };
 use dgnn_booster::testutil::{forall, Config, Pcg32};
 use std::sync::Arc;
@@ -191,6 +196,102 @@ fn weighted_serve_ratio_converges_under_saturation() {
             }
         }
     }
+}
+
+/// Overload-control property: tenant 0 (weight 1, an unmeetable
+/// sub-microsecond deadline, stale shedding off so it keeps serving
+/// and missing) must be reweighted upward by the `DeadlineController`
+/// within the run's 40-step budget, every one of its served steps must
+/// count as a deadline miss, and the aggregate served total stays
+/// bounded by the stop command plus in-flight drain.
+#[test]
+fn deadline_missing_tenant_is_reweighted_within_bound() {
+    let model = ModelKind::GcrnM2;
+    let dims = Dims::default();
+    let weights = [1u32, 4, 4];
+    let streams: Vec<Arc<CooStream>> = (0..3)
+        .map(|i| Arc::new(tenant_stream(600 + i as u64, 24, 40, 6)))
+        .collect();
+    let manifest = Scheduler::manifest_for_streams(
+        streams.iter().map(|s| (s.as_ref(), SPLITTER)),
+        dims,
+    );
+    let engine = Arc::new(Engine::new(2));
+    let tenants: Vec<TenantSpec> = streams
+        .iter()
+        .enumerate()
+        .map(|(i, stream)| {
+            let session = model.build_session(&SessionConfig {
+                dims,
+                seed: 7 + i as u64,
+                total_nodes: stream.num_nodes as usize,
+                max_nodes: manifest.max_nodes,
+                delta: false,
+                engine: Arc::clone(&engine),
+            });
+            let mut spec = TenantSpec::new(
+                &format!("t{i}"),
+                Arc::clone(stream),
+                SPLITTER,
+                weights[i],
+                session,
+            );
+            if i == 0 {
+                spec = spec.with_deadline_ms(1e-6); // every step misses
+            }
+            spec
+        })
+        .collect();
+    // stale shedding off: the controller must see a stream of misses,
+    // not sheds
+    let sched = Scheduler::new(Arc::clone(&engine), 2)
+        .with_policy(ServePolicy { stale_factor: f64::INFINITY, ..Default::default() });
+    let mut ctl = DeadlineController::new(4);
+    ctl.track(0, 1e-6, weights[0]);
+    let mut boosts: Vec<(usize, u32)> = Vec::new();
+    let mut stopped = false;
+    let report = sched
+        .serve_report(
+            &manifest,
+            tenants,
+            |ev| {
+                let mut cmds = ctl.on_event(&ev);
+                for c in &cmds {
+                    if let Command::SetWeight(id, w) = c {
+                        boosts.push((*id, *w));
+                    }
+                }
+                if let ServeEvent::Step { served_total, .. } = ev {
+                    if !stopped && served_total >= 40 {
+                        stopped = true;
+                        cmds.push(Command::Stop);
+                    }
+                }
+                cmds
+            },
+            |_, _, _, _| Ok(()),
+        )
+        .unwrap();
+
+    // the controller boosted tenant 0 (and only tenant 0) within bound
+    assert!(!boosts.is_empty(), "no SetWeight within the 40-step budget");
+    assert!(boosts.iter().all(|(id, _)| *id == 0), "boosts {boosts:?}");
+    assert!(boosts[0].1 >= 2, "first boost must raise the weight: {boosts:?}");
+    let o0 = &report.outcomes[0];
+    assert!(o0.weight > 1, "outcome must record the boosted weight, got {}", o0.weight);
+    assert!(!o0.steps.is_empty(), "tenant 0 must keep serving under misses");
+    assert_eq!(
+        o0.health.deadline_misses,
+        o0.steps.len() as u64,
+        "every served step misses a 1ns deadline"
+    );
+    assert_eq!(o0.health.deadline_shed, 0, "stale shedding was disabled");
+    assert_eq!(report.health.deadline_misses, o0.health.deadline_misses);
+    assert_eq!(report.health.quarantined, 0);
+    // aggregate throughput stays bounded: the stop fired at 40 and the
+    // drain adds at most the two in-flight slots
+    let total: usize = report.outcomes.iter().map(|o| o.steps.len()).sum();
+    assert!((40..=48).contains(&total), "aggregate total {total} out of bounds");
 }
 
 /// Equal weights are the identity: the weighted scheduler serves every
