@@ -15,7 +15,7 @@
 //! `cargo bench --bench kernels -- --smoke` — single-iteration CI gate.
 
 use dgnn_booster::datasets::synth::{edit_stream, random_snapshot};
-use dgnn_booster::graph::{CsrRebuild, EdgeDelta, Snapshot, SnapshotCsr};
+use dgnn_booster::graph::{CsrRebuild, EdgeDelta, Snapshot, SnapshotCsr, DELTA_CHURN_ALL};
 use dgnn_booster::metrics::{bench_loop_record, write_bench_json, BenchRecord};
 use dgnn_booster::numerics::{self, lstm_gate_slices_into, Engine, Kernels, Mat};
 use dgnn_booster::testutil::Pcg32;
@@ -243,8 +243,8 @@ fn main() {
             diters,
             || {
                 for (snap, delta) in &cycle {
-                    patched +=
-                        (delta_csr.rebuild_delta(snap, delta, 1.0) == CsrRebuild::Patched) as usize;
+                    patched += (delta_csr.rebuild_delta(snap, delta, DELTA_CHURN_ALL)
+                        == CsrRebuild::Patched) as usize;
                 }
                 delta_csr.num_edges()
             },

@@ -7,7 +7,15 @@
 //! 1:2:4 under a tight slot pool, with the per-tenant fairness summary)
 //! and a **churn** run (one tenant admitted mid-run, one drained) —
 //! and record per-request end-to-end latency tails + throughput per
-//! sweep point.
+//! sweep point.  Edit-stream serving gets its own sweeps: an
+//! **edits-vs-snapshot** pair (the same per-step snapshots staged via
+//! the CSR patch path vs force-restaged from scratch through
+//! [`FullRestageSession`]), a **pool-vs-thread-per-tenant** pair
+//! (`Scheduler::with_stage_pool`), a 64-tenant/4-worker density point
+//! that asserts the thread-count probe, and a lane-backend marker row
+//! whose name records `cfg!(feature = "simd")` so the `--features simd`
+//! bench run lands distinguishable rows (`simd_default` extra in the
+//! JSON).
 //!
 //! Writes `BENCH_serve.json` (schema in README.md § serve) so the
 //! serving-perf trajectory is machine-tracked across PRs, like
@@ -23,9 +31,10 @@ use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
 use dgnn_booster::serve::{
     fairness_of, write_serve_json, BatchStats, Command, DgnnSession, FaultPlan, FaultPoint,
-    FaultSpec, HealthStats, Scheduler, ServeEvent, ServePolicy, ServeRecorder, ServeRow,
-    SessionConfig, StreamOutcome, StreamSource, TenantSpec,
+    FaultSpec, FullRestageSession, HealthStats, Scheduler, ServeEvent, ServePolicy,
+    ServeRecorder, ServeRow, SessionConfig, StreamOutcome, StreamSource, TenantSpec,
 };
+use dgnn_booster::testutil::Pcg32;
 use std::sync::Arc;
 
 /// Shared-engine worker threads for every sweep point.
@@ -42,6 +51,36 @@ fn session_cfg(stream: &CooStream, seed: u64, max_nodes: usize, delta: bool, eng
     }
 }
 
+/// Session config for an edit-stream tenant: the node universe is the
+/// stream's fixed identity-renumbered `total_nodes`, not a COO stream.
+fn edit_cfg(total_nodes: usize, seed: u64, max_nodes: usize, engine: &Arc<Engine>) -> SessionConfig {
+    SessionConfig {
+        dims: Dims::default(),
+        seed,
+        total_nodes,
+        max_nodes,
+        delta: false,
+        engine: Arc::clone(engine),
+    }
+}
+
+/// One profile-shaped synthetic edit stream per tenant (fixed node
+/// universe, exact per-step deltas), deterministic in `seed`.
+fn edit_streams(n_tenants: usize, seed: u64, steps: usize) -> Vec<Arc<Vec<synth::EditStep>>> {
+    (0..n_tenants)
+        .map(|i| {
+            let mut rng = Pcg32::seeded(seed + i as u64);
+            Arc::new(synth::edit_stream(
+                &mut rng,
+                BC_ALPHA.avg_nodes.max(1),
+                BC_ALPHA.avg_edges,
+                steps,
+                0.15,
+            ))
+        })
+        .collect()
+}
+
 /// Fold one run's outcomes into a row, optionally with fairness,
 /// batching and health counters.
 #[allow(clippy::too_many_arguments)]
@@ -49,6 +88,8 @@ fn row_from(
     name: String,
     streams: usize,
     delta: bool,
+    edits: bool,
+    stage_pool: usize,
     wall: f64,
     outcomes: &[StreamOutcome],
     with_fairness: bool,
@@ -66,7 +107,9 @@ fn row_from(
         name,
         streams,
         delta,
+        edits,
         threads: THREADS,
+        stage_pool,
         summary: rec.summary(wall),
         fairness,
         batch,
@@ -119,7 +162,7 @@ fn main() {
                 model.name(),
                 if delta { "on" } else { "off" }
             );
-            let row = row_from(name, k, delta, wall, &outcomes, false, None, None);
+            let row = row_from(name, k, delta, false, 0, wall, &outcomes, false, None, None);
             println!("bench {:<44} {}", row.name, row.summary.line());
             rows.push(row);
         }
@@ -174,8 +217,18 @@ fn main() {
                 model.name(),
                 if batch { "on" } else { "off" }
             );
-            let row =
-                row_from(name, k, true, wall, &outcomes, false, batch.then_some(stats), None);
+            let row = row_from(
+                name,
+                k,
+                true,
+                false,
+                0,
+                wall,
+                &outcomes,
+                false,
+                batch.then_some(stats),
+                None,
+            );
             if batch {
                 println!(
                     "bench {:<44} {} occupancy={:.2} rows/call={:.0}",
@@ -248,8 +301,18 @@ fn main() {
             )
             .expect("weighted sweep point");
         let wall = t0.elapsed().as_secs_f64();
-        let row =
-            row_from("serve weighted 1:2:4".into(), 3, true, wall, &outcomes, true, None, None);
+        let row = row_from(
+            "serve weighted 1:2:4".into(),
+            3,
+            true,
+            false,
+            0,
+            wall,
+            &outcomes,
+            true,
+            None,
+            None,
+        );
         let jain = row.fairness.as_ref().map(|f| f.jain).unwrap_or(1.0);
         println!("bench {:<44} {} jain={jain:.3}", row.name, row.summary.line());
         rows.push(row);
@@ -337,6 +400,8 @@ fn main() {
             "serve churn admit+drain".into(),
             3,
             true,
+            false,
+            0,
             wall,
             &outcomes,
             true,
@@ -395,6 +460,8 @@ fn main() {
             "serve overload deadline-miss".into(),
             3,
             true,
+            false,
+            0,
             wall,
             &report.outcomes,
             false,
@@ -464,6 +531,8 @@ fn main() {
             "serve overload shed+breaker".into(),
             3,
             true,
+            false,
+            0,
             wall,
             &report.outcomes,
             false,
@@ -481,6 +550,200 @@ fn main() {
         rows.push(row);
     }
 
+    // edits-vs-snapshot sweep: the same per-step snapshots staged twice
+    // — once through the CSR patch path (`TenantSpec::new_edits`) and
+    // once force-restaged from scratch (`FullRestageSession` strips the
+    // stage_edit override, so the trait default rebuilds every step) —
+    // isolating what in-place patching is worth at serve scale
+    let edit_len = if smoke { 8 } else { 48 };
+    for &k in stream_counts {
+        for patch in [false, true] {
+            let steps = edit_streams(k, 642, edit_len);
+            let engine = Arc::new(Engine::new(THREADS));
+            let manifest =
+                Scheduler::manifest_for_edits(steps.iter().map(|s| s.as_slice()), dims);
+            let tenants: Vec<TenantSpec> = steps
+                .iter()
+                .enumerate()
+                .map(|(i, st)| {
+                    let mut session = model.build_session(&edit_cfg(
+                        BC_ALPHA.avg_nodes.max(1),
+                        642 + i as u64,
+                        manifest.max_nodes,
+                        &engine,
+                    ));
+                    if !patch {
+                        session = FullRestageSession::new(session);
+                    }
+                    TenantSpec::new_edits(&format!("edit-{i}"), Arc::clone(st), 1, session)
+                })
+                .collect();
+            let sched = Scheduler::new(engine, (2 * k).clamp(2, 16));
+            let t0 = std::time::Instant::now();
+            let report = sched
+                .serve_report(&manifest, tenants, |_| Vec::new(), |_, _, _, _| Ok(()))
+                .expect("edits sweep point");
+            let wall = t0.elapsed().as_secs_f64();
+            let (mut patched, mut seen) = (0usize, 0usize);
+            for o in &report.outcomes {
+                if let Some(d) = o.csr_delta {
+                    patched += d.shared;
+                    seen += d.seen;
+                }
+            }
+            let name = format!(
+                "serve edits {} streams={k} patch={}",
+                model.name(),
+                if patch { "on" } else { "off" }
+            );
+            let row =
+                row_from(name, k, false, true, 0, wall, &report.outcomes, false, None, None);
+            println!(
+                "bench {:<44} {} patched={patched}/{seen}",
+                row.name,
+                row.summary.line()
+            );
+            rows.push(row);
+        }
+    }
+
+    // pool-vs-thread-per-tenant pair: identical edit-stream tenant sets,
+    // staged once thread-per-tenant (stage_pool=0) and once on a fixed
+    // 4-worker work-stealing pool
+    {
+        let k = *stream_counts.last().unwrap();
+        for pool in [0usize, 4] {
+            let steps = edit_streams(k, 742, edit_len);
+            let engine = Arc::new(Engine::new(THREADS));
+            let manifest =
+                Scheduler::manifest_for_edits(steps.iter().map(|s| s.as_slice()), dims);
+            let tenants: Vec<TenantSpec> = steps
+                .iter()
+                .enumerate()
+                .map(|(i, st)| {
+                    let session = model.build_session(&edit_cfg(
+                        BC_ALPHA.avg_nodes.max(1),
+                        742 + i as u64,
+                        manifest.max_nodes,
+                        &engine,
+                    ));
+                    TenantSpec::new_edits(&format!("pool-{i}"), Arc::clone(st), 1, session)
+                })
+                .collect();
+            let sched = Scheduler::new(engine, (2 * k).clamp(2, 16)).with_stage_pool(pool);
+            let t0 = std::time::Instant::now();
+            let report = sched
+                .serve_report(&manifest, tenants, |_| Vec::new(), |_, _, _, _| Ok(()))
+                .expect("pool sweep point");
+            let wall = t0.elapsed().as_secs_f64();
+            let name = format!("serve pool {} streams={k} stage_pool={pool}", model.name());
+            let row =
+                row_from(name, k, false, true, pool, wall, &report.outcomes, false, None, None);
+            println!(
+                "bench {:<44} {} stage_threads={}",
+                row.name,
+                row.summary.line(),
+                report.stage_threads
+            );
+            rows.push(row);
+        }
+    }
+
+    // tenant-density point: 64 edit-stream tenants multiplexed over a
+    // 4-worker stage pool — idle/parked tenants cost zero threads, so
+    // the probe must stay at pool size (+2 for collector/inference slack
+    // in the acceptance bound), independent of tenant count
+    {
+        let tenant_n = 64;
+        let pool = 4;
+        let steps = edit_streams(tenant_n, 842, if smoke { 2 } else { 4 });
+        let engine = Arc::new(Engine::new(THREADS));
+        let manifest = Scheduler::manifest_for_edits(steps.iter().map(|s| s.as_slice()), dims);
+        let tenants: Vec<TenantSpec> = steps
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                let session = model.build_session(&edit_cfg(
+                    BC_ALPHA.avg_nodes.max(1),
+                    842 + i as u64,
+                    manifest.max_nodes,
+                    &engine,
+                ));
+                TenantSpec::new_edits(&format!("hd-{i}"), Arc::clone(st), 1, session)
+            })
+            .collect();
+        let sched = Scheduler::new(engine, 8).with_stage_pool(pool);
+        let t0 = std::time::Instant::now();
+        let report = sched
+            .serve_report(&manifest, tenants, |_| Vec::new(), |_, _, _, _| Ok(()))
+            .expect("density sweep point");
+        let wall = t0.elapsed().as_secs_f64();
+        assert!(
+            report.stage_threads <= pool + 2,
+            "stage pool leaked threads: {} spawned for {} tenants on a {pool}-worker pool",
+            report.stage_threads,
+            tenant_n
+        );
+        let row = row_from(
+            format!("serve density streams={tenant_n} stage_pool={pool}"),
+            tenant_n,
+            false,
+            true,
+            pool,
+            wall,
+            &report.outcomes,
+            false,
+            None,
+            None,
+        );
+        println!(
+            "bench {:<44} {} stage_threads={}",
+            row.name,
+            row.summary.line(),
+            report.stage_threads
+        );
+        rows.push(row);
+    }
+
+    // lane-backend marker point: the row name records whether the SIMD
+    // feature was compiled in, so the tier1-simd bench run
+    // (`cargo bench --features simd`) lands distinguishable rows next to
+    // the scalar ones
+    {
+        let simd = if cfg!(feature = "simd") { "on" } else { "off" };
+        let steps = edit_streams(1, 942, edit_len);
+        let engine = Arc::new(Engine::new(THREADS));
+        let manifest = Scheduler::manifest_for_edits(steps.iter().map(|s| s.as_slice()), dims);
+        let session = model.build_session(&edit_cfg(
+            BC_ALPHA.avg_nodes.max(1),
+            942,
+            manifest.max_nodes,
+            &engine,
+        ));
+        let tenants =
+            vec![TenantSpec::new_edits("simd-0", Arc::clone(&steps[0]), 1, session)];
+        let sched = Scheduler::new(engine, 2).with_stage_pool(2);
+        let t0 = std::time::Instant::now();
+        let report = sched
+            .serve_report(&manifest, tenants, |_| Vec::new(), |_, _, _, _| Ok(()))
+            .expect("simd sweep point");
+        let wall = t0.elapsed().as_secs_f64();
+        let row = row_from(
+            format!("serve edits simd={simd} stage_pool=2"),
+            1,
+            false,
+            true,
+            2,
+            wall,
+            &report.outcomes,
+            false,
+            None,
+            None,
+        );
+        println!("bench {:<44} {}", row.name, row.summary.line());
+        rows.push(row);
+    }
+
     write_serve_json(
         "BENCH_serve.json",
         &rows,
@@ -488,6 +751,7 @@ fn main() {
             ("smoke", if smoke { 1.0 } else { 0.0 }),
             ("threads", THREADS as f64),
             ("streams_max", *stream_counts.last().unwrap() as f64),
+            ("simd_default", if cfg!(feature = "simd") { 1.0 } else { 0.0 }),
         ],
     )
     .expect("write BENCH_serve.json");

@@ -42,6 +42,16 @@
 //!   --churn                    boolean: `serve` exercises runtime
 //!                              tenant churn (admits one extra tenant
 //!                              mid-run, then drains tenant 1)
+//!   --edits                    boolean: tenants carry synthetic *edit
+//!                              streams* (snapshot + exact edge delta
+//!                              per step) and `serve` stages them by
+//!                              patching each tenant's CSR in place
+//!                              instead of rebuilding from scratch
+//!   --stage-pool N             run staging on a fixed pool of N
+//!                              work-stealing workers instead of one
+//!                              thread per tenant (`serve`; default 0 =
+//!                              thread-per-tenant; tenant count then
+//!                              decouples from thread count)
 //!   --faults SEED              `serve` threads a deterministic seeded
 //!                              FaultPlan through the scheduler
 //!                              (transient + fatal faults at the
@@ -60,7 +70,7 @@ use crate::error::{Error, Result};
 use std::collections::HashMap;
 
 /// Flags that take no value: presence means `true`.
-const BOOL_FLAGS: [&str; 3] = ["delta", "churn", "batch"];
+const BOOL_FLAGS: [&str; 4] = ["delta", "churn", "batch", "edits"];
 
 /// Parsed command line.
 #[derive(Clone, Debug)]
@@ -244,6 +254,24 @@ mod tests {
         assert_eq!(c.weights(4).unwrap(), vec![1, 2, 4, 4]);
         let c = Cli::parse(&s(&["serve"])).unwrap();
         assert!(!c.flag("batch"));
+    }
+
+    #[test]
+    fn edits_and_stage_pool_flags_parse() {
+        // the CI smoke invocation: serve --streams 4 --edits --stage-pool 2
+        let c = Cli::parse(&s(&["serve", "--streams", "4", "--edits", "--stage-pool", "2"]))
+            .unwrap();
+        assert!(c.flag("edits"));
+        assert_eq!(c.get_usize("streams", 1).unwrap(), 4);
+        assert_eq!(c.get_usize("stage-pool", 0).unwrap(), 2);
+        // boolean --edits composes with a trailing valued flag
+        let c = Cli::parse(&s(&["serve", "--edits", "--threads", "4"])).unwrap();
+        assert!(c.flag("edits"));
+        assert_eq!(c.threads().unwrap(), 4);
+        // defaults: snapshot windows on per-tenant threads
+        let c = Cli::parse(&s(&["serve"])).unwrap();
+        assert!(!c.flag("edits"));
+        assert_eq!(c.get_usize("stage-pool", 0).unwrap(), 0);
     }
 
     #[test]

@@ -390,7 +390,7 @@ mod tests {
         for (i, st) in steps.iter().enumerate() {
             st.snap.validate().unwrap();
             assert_eq!(st.snap.num_edges(), 120, "live edge count is conserved");
-            let kind = csr.rebuild_delta(&st.snap, &st.delta, 1.0);
+            let kind = csr.rebuild_delta(&st.snap, &st.delta, crate::graph::DELTA_CHURN_ALL);
             if i == 0 {
                 // bootstrap: fresh CSR has no layout to patch
                 assert_eq!(kind, CsrRebuild::Full);

@@ -44,6 +44,18 @@ pub enum CsrRebuild {
 /// stops beating the straight-line counting sort.
 pub const DELTA_CHURN_MAX: f64 = 0.25;
 
+/// Churn budget equal to the whole edge set: take the patch path unless
+/// more edges churn than the larger snapshot holds.  The budget callers
+/// use when they want patching for correctness testing / benchmarking
+/// rather than as a performance heuristic.
+pub const DELTA_CHURN_ALL: f64 = 1.0;
+
+/// Churn budget strictly above any reachable churn ratio (a full edge
+/// swap churns at most `2 × max(edges)`), so the churn check can never
+/// trigger the fallback — only layout changes and contract violations
+/// do.  Used by callers probing the structural-validation path.
+pub const DELTA_CHURN_UNLIMITED: f64 = 2.0;
+
 /// Resize `v` to `len` for content that is fully overwritten afterwards:
 /// shrink is a truncate, growth zero-fills only the new tail — never the
 /// retained prefix.  The high-water-mark discipline of
@@ -305,6 +317,24 @@ impl SnapshotCsr {
         let hi = self.row_ptr[d + 1] as usize;
         (&self.cols[lo..hi], &self.vals[lo..hi])
     }
+
+    /// Adopt `other`'s structure wholesale: three bulk copies
+    /// (`row_ptr` / `cols` / `vals`), allocation-free once this
+    /// instance's buffers have reached the stream's high-water sizes.
+    /// The serve-side edit path uses this to move a patched CSR from a
+    /// tenant's persistent cache slot into a recycled pool slot — a
+    /// `memcpy` beats re-running the counting sort, and the scratch
+    /// buffers (`cursor`, double buffers, addition groups) stay local
+    /// to whichever instance does the patching.
+    pub fn copy_from(&mut self, other: &SnapshotCsr) {
+        self.num_nodes = other.num_nodes;
+        resize_for_overwrite(&mut self.row_ptr, other.row_ptr.len());
+        self.row_ptr.copy_from_slice(&other.row_ptr);
+        resize_for_overwrite(&mut self.cols, other.cols.len());
+        self.cols.copy_from_slice(&other.cols);
+        resize_for_overwrite(&mut self.vals, other.vals.len());
+        self.vals.copy_from_slice(&other.vals);
+    }
 }
 
 #[cfg(test)]
@@ -396,12 +426,12 @@ mod tests {
             assert_eq!(csr.row(d), want.row(d), "full-fallback row {d}");
         }
         // malformed removals (descending order) are rejected at run time
-        // (budget 2.0 keeps the churn check out of the way so the
-        // sortedness validation is what actually fires)
+        // (an unlimited budget keeps the churn check out of the way so
+        // the sortedness validation is what actually fires)
         let mut csr2 = SnapshotCsr::from_snapshot(&a);
         let mut bad = delta.clone();
         bad.removed.reverse();
-        let kind = csr2.rebuild_delta(&b, &bad, 2.0);
+        let kind = csr2.rebuild_delta(&b, &bad, DELTA_CHURN_UNLIMITED);
         assert_eq!(kind, CsrRebuild::Full);
         for d in 0..20 {
             assert_eq!(csr2.row(d), want.row(d), "reject-fallback row {d}");
@@ -409,11 +439,35 @@ mod tests {
         // an empty delta on an unchanged graph takes the patch path and
         // reproduces the structure exactly
         let mut csr3 = SnapshotCsr::from_snapshot(&a);
-        let kind = csr3.rebuild_delta(&a, &EdgeDelta::new(), 1.0);
+        let kind = csr3.rebuild_delta(&a, &EdgeDelta::new(), DELTA_CHURN_ALL);
         assert_eq!(kind, CsrRebuild::Patched);
         let wa = SnapshotCsr::from_snapshot(&a);
         for d in 0..20 {
             assert_eq!(csr3.row(d), wa.row(d), "no-op patch row {d}");
+        }
+    }
+
+    #[test]
+    fn copy_from_adopts_structure_exactly() {
+        let mut rng = Pcg32::seeded(13);
+        let a = random_snapshot(&mut rng, 30, 90);
+        let src = SnapshotCsr::from_snapshot(&a);
+        // a dirty destination (different size, stale content) must end
+        // up row-for-row identical, values bitwise
+        let b = random_snapshot(&mut rng, 7, 5);
+        let mut dst = SnapshotCsr::from_snapshot(&b);
+        dst.copy_from(&src);
+        assert_eq!(dst.num_nodes(), src.num_nodes());
+        assert_eq!(dst.num_edges(), src.num_edges());
+        for d in 0..src.num_nodes() {
+            let (gs, gv) = dst.row(d);
+            let (ws, wv) = src.row(d);
+            assert_eq!(gs, ws, "row {d} sources");
+            assert_eq!(
+                gv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                wv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "row {d} coefficients"
+            );
         }
     }
 

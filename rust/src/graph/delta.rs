@@ -180,9 +180,9 @@ mod tests {
             let delta = EdgeDelta::between(&csr, &b).unwrap();
             // removals sorted ascending by (dst, pos), as the contract says
             assert!(delta.removed.windows(2).all(|w| w[0] < w[1]));
-            // independent pairs churn close to e_old + e_new, so the
-            // always-sufficient budget is 2× the larger edge count
-            let kind = csr.rebuild_delta(&b, &delta, 2.0);
+            // independent pairs churn close to e_old + e_new, so only
+            // the unlimited budget is always sufficient
+            let kind = csr.rebuild_delta(&b, &delta, crate::graph::DELTA_CHURN_UNLIMITED);
             assert_eq!(kind, crate::graph::CsrRebuild::Patched);
             let want = SnapshotCsr::from_snapshot(&b);
             assert_eq!(csr.num_edges(), want.num_edges());

@@ -24,7 +24,7 @@ pub mod snapshot;
 
 pub use convert::{Csc, Csr};
 pub use coo::{CooEdge, CooStream};
-pub use csr::{CsrRebuild, SnapshotCsr, DELTA_CHURN_MAX};
+pub use csr::{CsrRebuild, SnapshotCsr, DELTA_CHURN_ALL, DELTA_CHURN_MAX, DELTA_CHURN_UNLIMITED};
 pub use delta::EdgeDelta;
 pub use norm::normalize_gcn;
 pub use renumber::RenumberTable;

@@ -3,6 +3,7 @@
 
 use dgnn_booster::cli::Cli;
 use dgnn_booster::datasets;
+use dgnn_booster::datasets::synth::EditStep;
 use dgnn_booster::error::{Error, Result};
 use dgnn_booster::fpga::designs::{avg_latency_ms, AcceleratorConfig};
 use dgnn_booster::fpga::dse;
@@ -173,6 +174,8 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     let delta = cli.flag("delta");
     let churn = cli.flag("churn");
     let batch = cli.flag("batch");
+    let edits = cli.flag("edits");
+    let stage_pool = cli.get_usize("stage-pool", 0)?;
     let limit = cli.get_usize("snapshots", usize::MAX)?;
     let slots = cli.get_usize("slots", (2 * streams).clamp(2, 16))?.max(1);
     let weights = cli.weights(streams)?;
@@ -190,68 +193,132 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     let session_seed = |i: u64| if batch { ctx.seed } else { ctx.seed.wrapping_add(i) };
 
     // tenant 0 serves the real dataset when present under --data;
-    // additional tenants get independent synthetic streams
-    let mut tenant_streams: Vec<Arc<CooStream>> = Vec::with_capacity(streams);
-    for i in 0..streams {
-        let stream = if i == 0 {
-            datasets::load_or_generate(profile, &cli.get_or("data", "data"), ctx.seed)?
-        } else {
-            datasets::synth::generate(profile, ctx.seed.wrapping_add(i as u64))
-        };
-        tenant_streams.push(Arc::new(stream));
+    // additional tenants get independent synthetic streams.  With
+    // --edits every tenant instead carries a synthetic edit stream
+    // (profile-shaped node universe, fixed live-edge count, exact
+    // per-step deltas) staged through the CSR patch path.
+    let edit_len = limit.min(profile.snapshots).max(1);
+    let edit_stream_for = |seed: u64| {
+        let mut rng = Pcg32::seeded(seed);
+        Arc::new(datasets::synth::edit_stream(
+            &mut rng,
+            profile.avg_nodes.max(1),
+            profile.avg_edges,
+            edit_len,
+            0.15,
+        ))
+    };
+    let mut tenant_streams: Vec<Arc<CooStream>> = Vec::new();
+    let mut edit_streams: Vec<Arc<Vec<EditStep>>> = Vec::new();
+    if edits {
+        for i in 0..streams {
+            edit_streams.push(edit_stream_for(ctx.seed.wrapping_add(i as u64)));
+        }
+    } else {
+        for i in 0..streams {
+            let stream = if i == 0 {
+                datasets::load_or_generate(profile, &cli.get_or("data", "data"), ctx.seed)?
+            } else {
+                datasets::synth::generate(profile, ctx.seed.wrapping_add(i as u64))
+            };
+            tenant_streams.push(Arc::new(stream));
+        }
     }
     // the churn tenant's stream is sized into the manifest upfront: the
     // shared pool's padded shapes are fixed for the whole run
-    let mut churn_stream =
-        churn.then(|| Arc::new(datasets::synth::generate(profile, ctx.seed ^ 0x00C0_FFEE)));
+    let mut churn_stream = (churn && !edits)
+        .then(|| Arc::new(datasets::synth::generate(profile, ctx.seed ^ 0x00C0_FFEE)));
+    let mut churn_edits = (churn && edits).then(|| edit_stream_for(ctx.seed ^ 0x00C0_FFEE));
     let engine = Arc::new(Engine::new(threads));
-    let manifest = Scheduler::manifest_for_streams(
-        tenant_streams
-            .iter()
-            .chain(churn_stream.iter())
-            .map(|s| (s.as_ref(), profile.splitter_secs)),
-        dims,
-    );
-    let session_cfg = |stream: &CooStream, seed: u64| SessionConfig {
+    let manifest = if edits {
+        Scheduler::manifest_for_edits(
+            edit_streams.iter().chain(churn_edits.iter()).map(|s| s.as_slice()),
+            dims,
+        )
+    } else {
+        Scheduler::manifest_for_streams(
+            tenant_streams
+                .iter()
+                .chain(churn_stream.iter())
+                .map(|s| (s.as_ref(), profile.splitter_secs)),
+            dims,
+        )
+    };
+    let cfg_for = |total_nodes: usize, seed: u64| SessionConfig {
         dims,
         seed,
-        total_nodes: stream.num_nodes as usize,
+        total_nodes,
         max_nodes: manifest.max_nodes,
         delta,
         engine: Arc::clone(&engine),
     };
-    let tenants: Vec<TenantSpec> = tenant_streams
-        .iter()
-        .enumerate()
-        .map(|(i, stream)| {
-            let session = model.build_session(&session_cfg(stream, session_seed(i as u64)));
-            let mut spec = TenantSpec::new(
-                &format!("stream-{i}"),
-                Arc::clone(stream),
-                profile.splitter_secs,
-                weights[i],
-                session,
-            )
-            .with_limit(limit);
-            if let Some(dl) = deadline_ms {
-                spec = spec.with_deadline_ms(dl);
-            }
-            spec
-        })
-        .collect();
+    let session_cfg =
+        |stream: &CooStream, seed: u64| cfg_for(stream.num_nodes as usize, seed);
+    // edit streams live on a fixed identity-renumbered universe
+    let edit_nodes = profile.avg_nodes.max(1);
+    let finish_spec = |mut spec: TenantSpec| {
+        if let Some(dl) = deadline_ms {
+            spec = spec.with_deadline_ms(dl);
+        }
+        spec
+    };
+    let tenants: Vec<TenantSpec> = if edits {
+        edit_streams
+            .iter()
+            .enumerate()
+            .map(|(i, steps)| {
+                let session = model.build_session(&cfg_for(edit_nodes, session_seed(i as u64)));
+                finish_spec(
+                    TenantSpec::new_edits(
+                        &format!("stream-{i}"),
+                        Arc::clone(steps),
+                        weights[i],
+                        session,
+                    )
+                    .with_limit(limit),
+                )
+            })
+            .collect()
+    } else {
+        tenant_streams
+            .iter()
+            .enumerate()
+            .map(|(i, stream)| {
+                let session = model.build_session(&session_cfg(stream, session_seed(i as u64)));
+                finish_spec(
+                    TenantSpec::new(
+                        &format!("stream-{i}"),
+                        Arc::clone(stream),
+                        profile.splitter_secs,
+                        weights[i],
+                        session,
+                    )
+                    .with_limit(limit),
+                )
+            })
+            .collect()
+    };
 
     println!(
         "serving {} × {streams} stream(s) on {} — engine ×{threads}, {slots} staging slots, \
-         weights {weights:?}{}{}{}{}{}",
+         weights {weights:?}{}{}{}{}{}{}{}",
         model.name(),
         profile.name,
         if delta { ", §VI delta state + feature staging" } else { "" },
+        if edits { ", edit streams (CSR patched in place)" } else { "" },
         if batch { ", cross-stream batched projection (shared model)" } else { "" },
         if churn { ", churn script on" } else { "" },
         if faults_on { ", fault plan seeded" } else { "" },
-        if deadline_ms.is_some() { ", deadline control on" } else { "" }
+        if deadline_ms.is_some() { ", deadline control on" } else { "" },
+        if stage_pool > 0 {
+            format!(", stage pool ×{stage_pool}")
+        } else {
+            String::new()
+        }
     );
-    let mut scheduler = Scheduler::new(Arc::clone(&engine), slots).with_batching(batch);
+    let mut scheduler = Scheduler::new(Arc::clone(&engine), slots)
+        .with_batching(batch)
+        .with_stage_pool(stage_pool);
     if faults_on {
         let plan = FaultPlan::seeded(fault_seed, streams + churn as usize, limit.min(24));
         println!("  [faults] seed {fault_seed}: {} scripted fault(s)", plan.len());
@@ -281,19 +348,26 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
                 return cmds;
             };
             if served_total >= 6 {
+                let churn_seed = if batch { ctx.seed } else { ctx.seed ^ 0x00C0_FFEE };
                 if let Some(stream) = churn_stream.take() {
                     println!("  [churn] admitting tenant churn-0 (weight 2) at step {served_total}");
-                    let session = model.build_session(&session_cfg(
-                        &stream,
-                        if batch { ctx.seed } else { ctx.seed ^ 0x00C0_FFEE },
-                    ));
-                    let mut spec =
+                    let session = model.build_session(&session_cfg(&stream, churn_seed));
+                    let spec = finish_spec(
                         TenantSpec::new("churn-0", stream, profile.splitter_secs, 2, session)
-                            .with_limit(limit);
-                    if let Some(dl) = deadline_ms {
-                        spec = spec.with_deadline_ms(dl);
-                    }
+                            .with_limit(limit),
+                    );
                     // admitted tenants take the next sequential id
+                    if let (Some(c), Some(dl)) = (dlc.as_mut(), deadline_ms) {
+                        c.track(streams, dl, 2);
+                    }
+                    cmds.push(Command::Admit(spec));
+                }
+                if let Some(steps) = churn_edits.take() {
+                    println!("  [churn] admitting tenant churn-0 (weight 2) at step {served_total}");
+                    let session = model.build_session(&cfg_for(edit_nodes, churn_seed));
+                    let spec = finish_spec(
+                        TenantSpec::new_edits("churn-0", steps, 2, session).with_limit(limit),
+                    );
                     if let (Some(c), Some(dl)) = (dlc.as_mut(), deadline_ms) {
                         c.track(streams, dl, 2);
                     }
@@ -313,6 +387,7 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
         },
     )?;
     let wall = t0.elapsed().as_secs_f64();
+    let stage_threads = report.stage_threads;
     let (outcomes, batch_stats, health) = (report.outcomes, report.batch, report.health);
 
     let mut rec = ServeRecorder::new(65536);
@@ -336,6 +411,9 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
         if let Some(d) = o.feature_delta {
             line.push_str(&format!(", {:.1}% X rows reused", 100.0 * d.fraction()));
         }
+        if let Some(d) = o.csr_delta {
+            line.push_str(&format!(", {:.1}% CSR windows patched", 100.0 * d.fraction()));
+        }
         if o.health.retries > 0 {
             line.push_str(&format!(", {} retries", o.health.retries));
         }
@@ -344,7 +422,12 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
         }
         println!("{line}");
     }
-    println!("aggregate: {}", rec.summary(wall).line());
+    println!(
+        "aggregate: {} [{} stage thread(s) for {} tenant(s)]",
+        rec.summary(wall).line(),
+        stage_threads,
+        outcomes.len()
+    );
     if faults_on || deadline_ms.is_some() || health != Default::default() {
         println!(
             "health: {} faults injected, {} retries, {} shed (+{} stale), {} deadline misses, \

@@ -268,6 +268,30 @@ impl StagingSlot {
         self.x_hwm = n;
         Ok(())
     }
+
+    /// Adopt everything another slot already staged for `snap`: pad the
+    /// graph arrays, **copy** the donor's CSR (three `memcpy`s via
+    /// [`SnapshotCsr::copy_from`] — no counting sort), and copy its
+    /// staged feature rows.  This is how the serve-side edit path keeps
+    /// round-robin-recycled pool slots current: the tenant's persistent
+    /// cache slot sees every step in order (so its CSR can take the
+    /// adjacent-step patch), then the pool slot adopts the result
+    /// wholesale.  Allocation-free at steady state.
+    pub fn adopt_staged(&mut self, snap: &Snapshot, from: &StagingSlot) -> Result<()> {
+        self.graph.fill(snap)?;
+        self.csr.copy_from(&from.csr);
+        self.x_raws.clear();
+        self.x_map.clear();
+        let d = self.in_dim;
+        let n = snap.num_nodes();
+        debug_assert_eq!(d, from.in_dim, "adopting across manifests");
+        self.x[..n * d].copy_from_slice(&from.x[..n * d]);
+        if self.x_hwm > n {
+            self.x[n * d..self.x_hwm * d].fill(0.0);
+        }
+        self.x_hwm = n;
+        Ok(())
+    }
 }
 
 /// Pad a dense [n × dim] row-major buffer to [max_nodes × dim], reusing
@@ -481,6 +505,35 @@ mod tests {
         // the stable layout means feature rows were materialised exactly
         // once, at the bootstrap step
         assert_eq!(fetches, 16);
+    }
+
+    #[test]
+    fn adopt_staged_matches_direct_stage_bitwise() {
+        use crate::datasets::synth::edit_stream;
+        use crate::testutil::Pcg32;
+        let m = Manifest { max_nodes: 16, max_edges: 64, in_dim: 3, hidden_dim: 4, out_dim: 4 };
+        let mut rng = Pcg32::seeded(45);
+        let steps = edit_stream(&mut rng, 16, 48, 4, 0.25);
+        let feats = |raw: u32, row: &mut [f32]| row.fill(raw as f32 + 1.0);
+        let mut cache = StagingSlot::new(&m);
+        // a dirty pool slot (staged with something unrelated first)
+        let mut pool = StagingSlot::new(&m);
+        pool.stage(&steps[2].snap, feats).unwrap();
+        for st in &steps {
+            cache.stage_edit(&st.snap, &st.delta, feats).unwrap();
+            pool.adopt_staged(&st.snap, &cache).unwrap();
+            let mut want = StagingSlot::new(&m);
+            want.stage(&st.snap, feats).unwrap();
+            assert_eq!(
+                pool.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.x.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            );
+            for r in 0..16 {
+                assert_eq!(pool.csr.row(r), want.csr.row(r), "csr row {r}");
+            }
+            assert_eq!(pool.graph.num_edges, want.graph.num_edges);
+            assert_eq!(pool.graph.selfcoef, want.graph.selfcoef);
+        }
     }
 
     #[test]

@@ -397,7 +397,12 @@ pub struct ServeRow {
     pub name: String,
     pub streams: usize,
     pub delta: bool,
+    /// Edit-stream serving (`serve --edits`): tenants carry
+    /// snapshot + exact-delta steps and CSRs are patched, not rebuilt.
+    pub edits: bool,
     pub threads: usize,
+    /// Work-stealing stage-pool worker count; 0 = thread-per-tenant.
+    pub stage_pool: usize,
     pub summary: ServeSummary,
     pub fairness: Option<FairnessSummary>,
     /// Batching counters of the run (`Scheduler::serve_report`); `Some`
@@ -419,13 +424,16 @@ pub fn serve_json(rows: &[ServeRow], extra: &[(&str, f64)]) -> String {
     for (i, r) in rows.iter().enumerate() {
         let m = &r.summary;
         s.push_str(&format!(
-            "    {{\"name\": {:?}, \"streams\": {}, \"delta\": {}, \"threads\": {}, \
+            "    {{\"name\": {:?}, \"streams\": {}, \"delta\": {}, \"edits\": {}, \
+             \"threads\": {}, \"stage_pool\": {}, \
              \"requests\": {}, \"p50_ms\": {:e}, \"p95_ms\": {:e}, \"p99_ms\": {:e}, \
              \"mean_ms\": {:e}, \"throughput_per_s\": {:e}, \"wall_s\": {:e}",
             r.name,
             r.streams,
             if r.delta { 1 } else { 0 },
+            if r.edits { 1 } else { 0 },
             r.threads,
+            r.stage_pool,
             m.requests,
             m.p50_ms,
             m.p95_ms,
@@ -575,7 +583,9 @@ mod tests {
                 name: "serve streams=2 delta=on".into(),
                 streams: 2,
                 delta: true,
+                edits: true,
                 threads: 2,
+                stage_pool: 4,
                 summary: rec.summary(1.0),
                 fairness: None,
                 batch: Some(batch),
@@ -585,7 +595,9 @@ mod tests {
                 name: "serve streams=4 delta=off".into(),
                 streams: 4,
                 delta: false,
+                edits: false,
                 threads: 2,
+                stage_pool: 0,
                 summary: rec.summary(1.0),
                 fairness: Some(fairness_summary(&[
                     ("t0", 1, &[1.0, 2.0]),
@@ -599,6 +611,12 @@ mod tests {
         assert_eq!(json.matches('{').count(), json.matches('}').count());
         assert_eq!(json.matches('[').count(), json.matches(']').count());
         assert_eq!(json.matches("\"streams\"").count(), 2);
+        // every row carries the edits + stage-pool axes
+        assert_eq!(json.matches("\"edits\"").count(), 2);
+        assert_eq!(json.matches("\"stage_pool\"").count(), 2);
+        assert!(json.contains("\"edits\": 1"));
+        assert!(json.contains("\"stage_pool\": 4"));
+        assert!(json.contains("\"stage_pool\": 0"));
         assert!(json.contains("\"p99_ms\""));
         assert!(json.contains("\"throughput_per_s\""));
         assert!(json.contains("\"smoke\": 1e0"));

@@ -16,7 +16,12 @@
 //!   while the scheduler runs ([`Command`] / [`ServeEvent`]), staging
 //!   slots are granted by weighted fair queueing ([`wfq_pick`]), and
 //!   per-stream FIFO ordering plus bounded in-flight backpressure hold
-//!   throughout; [`run_session`] is the single-stream special case on
+//!   throughout.  Staging runs thread-per-tenant or on a fixed
+//!   work-stealing stage pool ([`Scheduler::with_stage_pool`] /
+//!   `serve --stage-pool N`), and tenants can carry either windowed COO
+//!   streams or edit streams ([`TenantSpec::new_edits`], CLI
+//!   `serve --edits`) whose CSRs are patched in place per step;
+//!   [`run_session`] is the single-stream special case on
 //!   `coordinator::pipeline::run_stream_staged`.
 //! * [`batch`] — cross-stream batched projection: each scheduling
 //!   round, the [`BatchPlanner`] fuses same-weight dense projections
@@ -62,6 +67,7 @@ pub use scheduler::{
     ServeReport, StepRecord, StreamOutcome, StreamSource, TenantHealth, TenantId,
 };
 pub use session::{
-    build_pjrt_session, BatchableSession, DeltaCounts, DgnnSession, MirrorSession, PjrtSession,
-    RecurrentState, SessionConfig, SessionStager, StreamStager, TenantSpec,
+    build_pjrt_session, BatchableSession, DeltaCounts, DgnnSession, FullRestageSession,
+    MirrorSession, PjrtSession, RecurrentState, SessionConfig, SessionStager, StreamStager,
+    TenantSpec,
 };

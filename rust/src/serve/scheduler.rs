@@ -3,16 +3,37 @@
 //! pool — the paper's coarse-grained preprocess → stage → infer pipeline
 //! (§IV-D / `coordinator::pipeline`) lifted across tenants.
 //!
-//! Topology: each tenant stream gets a **stage thread** (preprocess the
-//! window, win a [`StagingSlot`] from the shared slot governor, run
-//! its [`SessionStager`]), and all tenants funnel staged work through
-//! one `std::sync::mpsc` channel to the **inference thread** (the
-//! caller), which drives each tenant's [`DgnnSession`] in arrival
-//! order.  Each stream's messages traverse the channel in stream order,
-//! so per-stream FIFO holds; the bounded slot pool plus the sync
-//! channel bound total in-flight work (backpressure — the software
-//! analog of a finite DRAM staging area shared by tenants).  While
-//! tenant A infers, tenants B..N preprocess and stage.
+//! Topology: each tenant's staging work is a resumable [`StageDriver`]
+//! state machine (preprocess the window — or take the next
+//! [`EditStep`] of an edits-mode tenant — win a [`StagingSlot`] from
+//! the shared slot governor, run its [`SessionStager`]), and all
+//! tenants funnel staged work through one `std::sync::mpsc` channel to
+//! the **inference thread** (the caller), which drives each tenant's
+//! [`DgnnSession`] in arrival order.  Drivers execute on one of two
+//! backends:
+//!
+//! * **Thread-per-tenant** (default, `stage_pool == 0`): each driver
+//!   gets a dedicated scope thread that loops it to exhaustion — the
+//!   original topology, thread count grows with tenant count.
+//! * **Work-stealing stage pool** ([`Scheduler::with_stage_pool`], CLI
+//!   `serve --stage-pool N`): a fixed set of N workers with per-worker
+//!   deques.  A driver lives on its home deque (tenant id mod N),
+//!   stages one window per turn, and is re-enqueued at the back, so
+//!   the pool round-robins across tenants; a dry worker steals from
+//!   the back of the most-loaded sibling.  An idle or parked tenant
+//!   costs zero threads, decoupling tenant count from thread count
+//!   (64 tenants serve on 4 workers — [`ServeReport::stage_threads`]
+//!   proves it).
+//!
+//! Either way a driver is owned by exactly one thread at a time and
+//! sends through its own channel handle, so each stream's messages
+//! traverse the channel in stream order and per-stream FIFO holds; the
+//! bounded slot pool plus the sync channel bound total in-flight work
+//! (backpressure — the software analog of a finite DRAM staging area
+//! shared by tenants).  While tenant A infers, tenants B..N preprocess
+//! and stage.  WFQ slot grants still arbitrate at the governor's
+//! acquire point in both modes — the pool only changes *where* a
+//! granted tenant's staging runs, never who is granted next.
 //!
 //! The tenant set is **dynamic**: [`Scheduler::serve`] consults a
 //! controller callback after every served step (and whenever the
@@ -66,13 +87,15 @@ use super::faults::{FaultPlan, FaultPoint};
 use super::session::{DeltaCounts, DgnnSession, SessionStager, TenantSpec};
 use crate::coordinator::pipeline::{run_stream_staged, StepResult};
 use crate::coordinator::preprocess::preprocess_window;
+use crate::datasets::synth::EditStep;
 use crate::datasets::StreamStats;
 use crate::error::{Error, Result};
-use crate::graph::{CooStream, Snapshot};
+use crate::graph::{CooStream, EdgeDelta, Snapshot};
 use crate::models::Dims;
 use crate::numerics::Engine;
 use crate::runtime::{Manifest, StagingSlot};
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
@@ -199,6 +222,11 @@ pub struct StreamOutcome {
     pub state_delta: Option<DeltaCounts>,
     /// Feature-staging reuse counters (`Some` iff delta staging).
     pub feature_delta: Option<DeltaCounts>,
+    /// CSR patch-vs-rebuild counters (`Some` iff the tenant served an
+    /// edit stream): `shared` counts windows whose CSR was patched in
+    /// place from the step's [`EdgeDelta`], `seen` counts all staged
+    /// windows.
+    pub csr_delta: Option<DeltaCounts>,
 }
 
 /// What [`Scheduler::serve_report`] returns: per-tenant outcomes plus
@@ -210,6 +238,12 @@ pub struct ServeReport {
     pub batch: BatchStats,
     /// Run-wide robustness counters.
     pub health: HealthStats,
+    /// OS stage threads the run spawned: one per admitted tenant in
+    /// thread-per-tenant mode, exactly the worker count in pool mode —
+    /// the no-stranded-threads probe
+    /// (`rust/tests/prop_serve.rs` pins `≤ stage_pool` for a
+    /// 64-tenant/4-worker run).
+    pub stage_threads: usize,
 }
 
 /// Lifecycle commands a controller can issue into a running scheduler.
@@ -543,11 +577,12 @@ struct StagedJob {
     injected: u32,
 }
 
-/// Stage-thread → inference-thread traffic.  Every stage thread's last
-/// message is `Done` (sent from a drop guard, so it goes out even if
-/// the thread unwinds), which returns the stager for its delta counters
-/// and lets the collector finalize the tenant — per-sender FIFO
-/// guarantees all of the tenant's jobs precede it.
+/// Staging-side → inference-thread traffic.  Every tenant driver's last
+/// message is `Done` (sent from its `Drop` impl, so it goes out even if
+/// the driver is abandoned by an unwind or a pool shutdown), which
+/// returns the stager for its delta counters and lets the collector
+/// finalize the tenant — per-sender FIFO guarantees all of the tenant's
+/// jobs precede it.
 enum Msg {
     Job(StagedJob),
     Done {
@@ -555,25 +590,6 @@ enum Msg {
         stager: Option<Box<dyn SessionStager>>,
         err: Option<Error>,
     },
-}
-
-/// Sends `Msg::Done` on drop so the collector always learns the stage
-/// thread ended — on clean exit, stream error, and unwind alike.
-struct DoneGuard {
-    tenant: TenantId,
-    tx: mpsc::SyncSender<Msg>,
-    stager: Option<Box<dyn SessionStager>>,
-    err: Option<Error>,
-}
-
-impl Drop for DoneGuard {
-    fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Done {
-            tenant: self.tenant,
-            stager: self.stager.take(),
-            err: self.err.take(),
-        });
-    }
 }
 
 /// What the collector tracks per live tenant (sessions stay on the
@@ -649,99 +665,282 @@ fn fail_step<C: FnMut(ServeEvent) -> Vec<Command>>(
     quarantine(l, wrapped, health, pending, control);
 }
 
-/// The work a stage thread owns for one tenant.
-struct StageTask {
-    id: TenantId,
-    stream: Arc<CooStream>,
-    splitter_secs: i64,
-    limit: usize,
+/// One tenant's input, fixed at admission: time windows over a COO
+/// stream (preprocessed on the staging side, the snapshot-per-window
+/// model) or a precomputed edit stream (snapshot + exact [`EdgeDelta`]
+/// per step, the edits model — staged through
+/// [`SessionStager::stage_edit`] so the CSR is patched, not rebuilt).
+enum StageInput {
+    Windows {
+        stream: Arc<CooStream>,
+        windows: Vec<std::ops::Range<usize>>,
+    },
+    Edits(Arc<Vec<EditStep>>),
 }
 
-fn spawn_stage<'scope>(
-    scope: &'scope std::thread::Scope<'scope, '_>,
-    task: StageTask,
-    stager: Box<dyn SessionStager>,
-    governor: Arc<SlotGovernor>,
+impl StageInput {
+    /// Snapshots a full run of this input would stage.
+    fn len(&self) -> usize {
+        match self {
+            StageInput::Windows { windows, .. } => windows.len(),
+            StageInput::Edits(steps) => steps.len(),
+        }
+    }
+}
+
+/// What one call to [`StageDriver::step`] reports back to its executor.
+enum StageStep {
+    /// A window was staged (or shed into its job): run me again.
+    Continue,
+    /// Stream exhausted, limit hit, tenant detached, or a stream-level
+    /// error was recorded — drop me (my `Drop` sends [`Msg::Done`]).
+    Finished,
+}
+
+/// One tenant's staging state machine: stages exactly one window per
+/// [`StageDriver::step`] call, so the same driver runs to exhaustion on
+/// a dedicated thread (thread-per-tenant mode) or takes turns with
+/// other tenants on a fixed worker pool (stage-pool mode).  The driver
+/// owns its channel handle; because exactly one thread holds the driver
+/// at a time (handoffs synchronize through the pool's lock), its sends
+/// — all jobs, then the `Drop`-sent `Done` — keep per-tenant FIFO
+/// order in both modes.
+struct StageDriver {
+    id: TenantId,
+    input: StageInput,
+    /// Next window index to stage.
+    cursor: usize,
+    limit: usize,
+    stager: Option<Box<dyn SessionStager>>,
     tx: mpsc::SyncSender<Msg>,
+    governor: Arc<SlotGovernor>,
     faults: Arc<FaultPlan>,
     retry_budget: u32,
     backoff_us: u64,
-) -> std::thread::ScopedJoinHandle<'scope, ()> {
-    scope.spawn(move || {
-        let mut guard = DoneGuard { tenant: task.id, tx, stager: Some(stager), err: None };
-        let windows = task.stream.split_windows(task.splitter_secs);
-        for (i, w) in windows.into_iter().enumerate() {
-            if i >= task.limit {
-                break; // nothing past the limit is ever served
-            }
-            let snap = match preprocess_window(&task.stream, w, i) {
-                Ok(s) => s,
-                Err(e) => {
-                    guard.err = Some(e);
-                    break;
-                }
-            };
-            let mut slot = match governor.acquire(task.id) {
-                Acquire::Granted(s) => s,
-                // removed / stopped / shut down — wind down cleanly
-                Acquire::Detached => break,
-                Acquire::Broken(e) => {
-                    guard.err = Some(e);
-                    break;
-                }
-            };
-            let t_req = Instant::now();
-            // injected faults fire *before* the real stage call, so a
-            // retried window replays `stage` from scratch and a failed
-            // one never leaves the slot half-filled
-            let (mut attempt, mut retries, mut injected) = (0u32, 0u32, 0u32);
-            let staged = loop {
-                let res = faults
-                    .check(task.id, FaultPoint::Stage, i, attempt)
-                    .and_then(|()| match guard.stager.as_mut() {
-                        Some(s) => s.stage(&snap, &mut slot),
-                        None => Err(Error::Graph("stage thread lost its stager".into())),
-                    });
-                match res {
-                    Ok(()) => break Ok(()),
+    /// Stream-level error (preprocess failure, governor breach, worker
+    /// panic) delivered to the collector through `Done`.
+    err: Option<Error>,
+}
+
+/// The driver's `Done` travels from `Drop` so the collector always
+/// learns the tenant's staging ended — clean exit, stream error, pool
+/// shutdown, and unwind alike (post-shutdown sends fail harmlessly:
+/// the receiver is already gone).
+impl Drop for StageDriver {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Done {
+            tenant: self.id,
+            stager: self.stager.take(),
+            err: self.err.take(),
+        });
+    }
+}
+
+impl StageDriver {
+    /// Stage the cursor's window: materialize its snapshot, win a slot,
+    /// run the stager (fault-gated, with the bounded retry budget), and
+    /// ship the [`StagedJob`] — failure and all, so the slot always
+    /// travels back to the collector (a dropped slot would drain the
+    /// pool and hang the other tenants).  A failed window does NOT
+    /// finish the driver: the collector sheds or quarantines the tenant
+    /// — quarantine deactivates it, so the next acquire detaches.
+    fn step(&mut self) -> StageStep {
+        let i = self.cursor;
+        if i >= self.input.len() || i >= self.limit {
+            return StageStep::Finished; // nothing past the limit is served
+        }
+        // materialize this window: preprocess in windows mode, take the
+        // precomputed snapshot (plus its exact edge diff) in edits mode
+        let (snap, delta): (Snapshot, Option<&EdgeDelta>) = match &self.input {
+            StageInput::Windows { stream, windows } => {
+                match preprocess_window(stream, windows[i].clone(), i) {
+                    Ok(s) => (s, None),
                     Err(e) => {
-                        if matches!(e, Error::Faulted { .. }) {
-                            injected += 1;
-                        }
-                        if e.is_transient() && attempt < retry_budget {
-                            attempt += 1;
-                            retries += 1;
-                            std::thread::sleep(Duration::from_micros(
-                                backoff_us << attempt.min(6),
-                            ));
-                            continue;
-                        }
-                        break Err(e);
+                        self.err = Some(e);
+                        return StageStep::Finished;
                     }
                 }
-            };
-            let stage_ms = t_req.elapsed().as_secs_f64() * 1e3;
-            let job = StagedJob {
-                tenant: task.id,
-                snap,
-                slot,
-                stage_ms,
-                t_req,
-                staged,
-                retries,
-                injected,
-            };
-            // the slot rides along even on failure so the collector can
-            // recycle it (a dropped slot would drain the pool and hang
-            // the other tenants).  A failed window does NOT end the
-            // thread: the collector sheds or quarantines the tenant —
-            // quarantine deactivates it, so the next acquire detaches.
-            if guard.tx.send(Msg::Job(job)).is_err() {
-                break;
+            }
+            StageInput::Edits(steps) => (steps[i].snap.clone(), Some(&steps[i].delta)),
+        };
+        let mut slot = match self.governor.acquire(self.id) {
+            Acquire::Granted(s) => s,
+            // removed / stopped / shut down — wind down cleanly
+            Acquire::Detached => return StageStep::Finished,
+            Acquire::Broken(e) => {
+                self.err = Some(e);
+                return StageStep::Finished;
+            }
+        };
+        let t_req = Instant::now();
+        // injected faults fire *before* the real stage call, so a
+        // retried window replays staging from scratch and a failed one
+        // never leaves the slot half-filled
+        let (mut attempt, mut retries, mut injected) = (0u32, 0u32, 0u32);
+        let staged = loop {
+            let res = self
+                .faults
+                .check(self.id, FaultPoint::Stage, i, attempt)
+                .and_then(|()| match self.stager.as_mut() {
+                    Some(s) => match delta {
+                        Some(d) => s.stage_edit(&snap, d, &mut slot).map(|_| ()),
+                        None => s.stage(&snap, &mut slot),
+                    },
+                    None => Err(Error::Graph("stage driver lost its stager".into())),
+                });
+            match res {
+                Ok(()) => break Ok(()),
+                Err(e) => {
+                    if matches!(e, Error::Faulted { .. }) {
+                        injected += 1;
+                    }
+                    if e.is_transient() && attempt < self.retry_budget {
+                        attempt += 1;
+                        retries += 1;
+                        std::thread::sleep(Duration::from_micros(
+                            self.backoff_us << attempt.min(6),
+                        ));
+                        continue;
+                    }
+                    break Err(e);
+                }
+            }
+        };
+        let stage_ms = t_req.elapsed().as_secs_f64() * 1e3;
+        let job = StagedJob {
+            tenant: self.id,
+            snap,
+            slot,
+            stage_ms,
+            t_req,
+            staged,
+            retries,
+            injected,
+        };
+        if self.tx.send(Msg::Job(job)).is_err() {
+            return StageStep::Finished; // collector gone — shutdown
+        }
+        self.cursor += 1;
+        StageStep::Continue
+    }
+}
+
+/// Thread-per-tenant staging (the default): a dedicated scope thread
+/// drives the tenant's [`StageDriver`] to exhaustion.  One tenant = one
+/// OS thread.
+fn spawn_stage<'scope>(
+    scope: &'scope std::thread::Scope<'scope, '_>,
+    mut driver: StageDriver,
+) -> std::thread::ScopedJoinHandle<'scope, ()> {
+    scope.spawn(move || {
+        while let StageStep::Continue = driver.step() {}
+        // driver drops here → Msg::Done
+    })
+}
+
+/// The work-stealing stage pool: per-worker deques of parked
+/// [`StageDriver`]s behind one lock + condvar.  One mutex for all
+/// queues is deliberate — queue operations are O(1) pushes/pops
+/// bracketing *milliseconds* of lock-free staging work, so the lock is
+/// never contended enough to matter, and a single lock makes
+/// close/steal trivially race-free.
+struct PoolState {
+    queues: Vec<VecDeque<StageDriver>>,
+    closed: bool,
+}
+
+struct StagePool {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+impl StagePool {
+    fn new(workers: usize) -> StagePool {
+        StagePool {
+            state: Mutex::new(PoolState {
+                queues: (0..workers.max(1)).map(|_| VecDeque::new()).collect(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, PoolState> {
+        self.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Park a driver on its home deque (tenant id mod workers — the
+    /// affinity that keeps one stream's windows on one warm worker when
+    /// the pool is balanced).  After close the driver is dropped
+    /// instead: its `Done` send fails harmlessly against the
+    /// already-gone receiver.
+    fn submit(&self, driver: StageDriver) {
+        let mut st = self.lock();
+        if st.closed {
+            return;
+        }
+        let home = driver.id % st.queues.len();
+        st.queues[home].push_back(driver);
+        drop(st);
+        self.cv.notify_all();
+    }
+
+    /// Worker `w`'s next driver: own deque front first (FIFO over this
+    /// worker's tenants), else steal from the **back** of the
+    /// most-loaded sibling (the classic split: owners drain oldest
+    /// work, thieves take newest, minimizing handoff churn).  Blocks
+    /// while every deque is empty; `None` means the pool closed.
+    fn take(&self, w: usize) -> Option<StageDriver> {
+        let mut st = self.lock();
+        loop {
+            if st.closed {
+                return None;
+            }
+            if let Some(d) = st.queues[w].pop_front() {
+                return Some(d);
+            }
+            let victim = (0..st.queues.len())
+                .filter(|&v| v != w)
+                .max_by_key(|&v| st.queues[v].len())
+                .filter(|&v| !st.queues[v].is_empty());
+            if let Some(v) = victim {
+                return st.queues[v].pop_back();
+            }
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Shut the pool down: drop every parked driver (their `Done` sends
+    /// fail against the already-dropped receiver) and wake every worker
+    /// so it exits.  Called after the collector's channel receiver is
+    /// gone and the governor is closed, so no worker can block again.
+    fn close(&self) {
+        let mut st = self.lock();
+        st.closed = true;
+        st.queues.iter_mut().for_each(|q| q.clear());
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// One stage-pool worker: take a driver, advance it one window, park it
+/// again.  A panic inside a driver's step (stager or session code) is
+/// caught and recorded — it finalizes that driver (run-fatal at
+/// shutdown, matching thread-per-tenant semantics) but the worker
+/// survives to keep serving its other tenants until the run winds down.
+fn stage_worker(w: usize, pool: &StagePool, panicked: &AtomicBool) {
+    while let Some(mut driver) = pool.take(w) {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| driver.step())) {
+            Ok(StageStep::Continue) => pool.submit(driver),
+            Ok(StageStep::Finished) => drop(driver),
+            Err(_) => {
+                panicked.store(true, Ordering::Relaxed);
+                driver.err =
+                    Some(Error::Graph("stage worker panicked during staging".into()));
+                drop(driver);
             }
         }
-        // guard drops here → Msg::Done
-    })
+    }
 }
 
 /// The multi-tenant scheduler: owns the shared engine and the staging
@@ -752,6 +951,8 @@ pub struct Scheduler {
     batch: bool,
     faults: Arc<FaultPlan>,
     policy: ServePolicy,
+    /// Stage-pool worker count; 0 = thread-per-tenant (the default).
+    stage_pool: usize,
 }
 
 impl Scheduler {
@@ -763,7 +964,20 @@ impl Scheduler {
             batch: false,
             faults: Arc::new(FaultPlan::new()),
             policy: ServePolicy::default(),
+            stage_pool: 0,
         }
+    }
+
+    /// Run staging on a fixed pool of `workers` work-stealing threads
+    /// instead of one thread per tenant (`workers == 0` keeps the
+    /// thread-per-tenant default).  Per-tenant FIFO, WFQ grant order,
+    /// drain/removal semantics and the bitwise per-tenant numerics are
+    /// identical in both modes (pinned by `rust/tests/prop_serve.rs`);
+    /// the pool only bounds the OS thread count, so tenant count
+    /// decouples from thread count.
+    pub fn with_stage_pool(mut self, workers: usize) -> Scheduler {
+        self.stage_pool = workers;
+        self
     }
 
     /// Toggle cross-stream batched projection (`serve::batch`): the
@@ -819,6 +1033,29 @@ impl Scheduler {
             let st = StreamStats::measure(stream, splitter_secs);
             max_nodes = max_nodes.max(st.max_nodes);
             max_edges = max_edges.max(st.max_edges);
+        }
+        Manifest {
+            max_nodes,
+            max_edges,
+            in_dim: dims.in_dim,
+            hidden_dim: dims.hidden_dim,
+            out_dim: dims.out_dim,
+        }
+    }
+
+    /// [`Self::manifest_for_streams`] for edit-stream tenants: the
+    /// shared staging pool's padded shapes must fit the widest step
+    /// snapshot of any edit stream a controller may admit.
+    pub fn manifest_for_edits<'a, I>(streams: I, dims: Dims) -> Manifest
+    where
+        I: IntoIterator<Item = &'a [EditStep]>,
+    {
+        let (mut max_nodes, mut max_edges) = (1usize, 1usize);
+        for steps in streams {
+            for st in steps {
+                max_nodes = max_nodes.max(st.snap.num_nodes());
+                max_edges = max_edges.max(st.snap.num_edges());
+            }
         }
         Manifest {
             max_nodes,
@@ -918,6 +1155,10 @@ impl Scheduler {
         let pool: Vec<StagingSlot> = (0..self.slots).map(|_| StagingSlot::new(manifest)).collect();
         let governor = Arc::new(SlotGovernor::new(pool));
         let (tx_ready, rx_ready) = mpsc::sync_channel::<Msg>(self.slots);
+        let use_pool = self.stage_pool > 0;
+        let stage_pool = StagePool::new(self.stage_pool);
+        let pool_panicked = AtomicBool::new(false);
+        let mut stage_threads = 0usize;
 
         let mut live: HashMap<TenantId, LiveTenant> = HashMap::new();
         let mut done: Vec<StreamOutcome> = Vec::new();
@@ -928,9 +1169,20 @@ impl Scheduler {
 
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
+            if use_pool {
+                // the fixed worker set is the run's whole staging thread
+                // budget: admissions only park drivers on its deques
+                for w in 0..self.stage_pool {
+                    let (pool_ref, flag) = (&stage_pool, &pool_panicked);
+                    handles.push(scope.spawn(move || stage_worker(w, pool_ref, flag)));
+                    stage_threads += 1;
+                }
+            }
             let mut pending: VecDeque<Command> =
                 tenants.into_iter().map(Command::Admit).collect();
-            let mut active_threads = 0usize;
+            // live stage drivers (tenants whose Done has not arrived),
+            // regardless of which backend executes them
+            let mut active_stagers = 0usize;
             // staged work drained from the channel but not yet served
             // (batching holds a tenant's further snapshots here while
             // one is in the current round)
@@ -962,7 +1214,14 @@ impl Scheduler {
                             // all tenants stall) — an oversized
                             // snapshot surfaces as a Budget error from
                             // its stage call, slot safely recycled
-                            let windows = spec.stream.split_windows(spec.splitter_secs).len();
+                            let input = match &spec.edits {
+                                Some(steps) => StageInput::Edits(Arc::clone(steps)),
+                                None => StageInput::Windows {
+                                    windows: spec.stream.split_windows(spec.splitter_secs),
+                                    stream: Arc::clone(&spec.stream),
+                                },
+                            };
+                            let expected = input.len().min(spec.limit);
                             let id = next_id;
                             next_id += 1;
                             let stager = spec.session.make_stager(manifest);
@@ -981,30 +1240,35 @@ impl Scheduler {
                                         health: TenantHealth::default(),
                                         state_delta: None,
                                         feature_delta: None,
+                                        csr_delta: None,
                                     },
                                     limit: spec.limit,
-                                    expected: windows.min(spec.limit),
+                                    expected,
                                     deadline_ms: spec.deadline_ms,
                                     consec_fails: 0,
                                     quarantined: false,
                                 },
                             );
-                            handles.push(spawn_stage(
-                                scope,
-                                StageTask {
-                                    id,
-                                    stream: spec.stream,
-                                    splitter_secs: spec.splitter_secs,
-                                    limit: spec.limit,
-                                },
-                                stager,
-                                Arc::clone(&governor),
-                                tx_ready.clone(),
-                                Arc::clone(&self.faults),
-                                self.policy.retries,
-                                self.policy.backoff_us,
-                            ));
-                            active_threads += 1;
+                            let driver = StageDriver {
+                                id,
+                                input,
+                                cursor: 0,
+                                limit: spec.limit,
+                                stager: Some(stager),
+                                tx: tx_ready.clone(),
+                                governor: Arc::clone(&governor),
+                                faults: Arc::clone(&self.faults),
+                                retry_budget: self.policy.retries,
+                                backoff_us: self.policy.backoff_us,
+                                err: None,
+                            };
+                            if use_pool {
+                                stage_pool.submit(driver);
+                            } else {
+                                handles.push(spawn_stage(scope, driver));
+                                stage_threads += 1;
+                            }
+                            active_stagers += 1;
                         }
                         Command::Remove(id) => governor.deactivate(id),
                         Command::SetWeight(id, w) => {
@@ -1021,7 +1285,7 @@ impl Scheduler {
                     }
                 }
 
-                if active_threads == 0 && ready.is_empty() {
+                if active_stagers == 0 && ready.is_empty() {
                     let cmds = control(ServeEvent::Idle);
                     if cmds.is_empty() {
                         break 'serve Ok(());
@@ -1030,9 +1294,9 @@ impl Scheduler {
                     continue;
                 }
 
-                // active stage threads guarantee a message eventually
-                // arrives (every thread's last word is Done, sent from
-                // a drop guard even on unwind)
+                // live stage drivers guarantee a message eventually
+                // arrives (every driver's last word is Done, sent from
+                // its Drop impl even on unwind)
                 if ready.is_empty() {
                     match rx_ready.recv() {
                         Ok(m) => ready.push_back(m),
@@ -1079,13 +1343,13 @@ impl Scheduler {
                     let Some(Msg::Done { tenant, stager, err }) = ready.remove(i) else {
                         unreachable!("probed above")
                     };
-                    active_threads -= 1;
+                    active_stagers -= 1;
                     let Some(mut l) = live.remove(&tenant) else { continue };
                     if let Some(e) = err {
-                        // the stage thread died outside a staged window
-                        // (preprocess error or governor breach): that
-                        // quarantines this tenant, not the run — every
-                        // other tenant keeps serving
+                        // the stage driver died outside a staged window
+                        // (preprocess error, governor breach, worker
+                        // panic): that quarantines this tenant, not the
+                        // run — every other tenant keeps serving
                         quarantine(
                             &mut l,
                             Error::Stage { tenant, step: "stage", source: Box::new(e) },
@@ -1094,6 +1358,7 @@ impl Scheduler {
                             &mut control,
                         );
                     }
+                    l.outcome.csr_delta = stager.as_ref().and_then(|s| s.csr_delta());
                     l.outcome.feature_delta = stager.and_then(|s| s.feature_delta());
                     l.outcome.state_delta = l.session.finish();
                     l.outcome.removed = l.outcome.steps.len() < l.expected;
@@ -1320,15 +1585,17 @@ impl Scheduler {
             };
 
             // shutdown in unblock order: receiver gone → stage sends
-            // fail; governor closed → blocked acquires return None
+            // fail; governor closed → blocked acquires return None;
+            // stage pool closed → parked drivers drop, workers exit
             drop(rx_ready);
             governor.close();
+            stage_pool.close();
             let mut panicked = false;
             for h in handles {
                 panicked |= h.join().is_err();
             }
             outcome?;
-            if panicked {
+            if panicked || pool_panicked.load(Ordering::Relaxed) {
                 return Err(Error::Graph("stage thread panicked".into()));
             }
             Ok(())
@@ -1346,7 +1613,7 @@ impl Scheduler {
         }
 
         done.sort_by_key(|o| o.id);
-        Ok(ServeReport { outcomes: done, batch: planner.stats, health })
+        Ok(ServeReport { outcomes: done, batch: planner.stats, health, stage_threads })
     }
 }
 
@@ -1766,6 +2033,56 @@ mod tests {
         gov.admit(2, 0);
         gov.set_weight(2, 3); // background → weighted joins at vtime 1.75
         assert_eq!(gov.lock().tenants[&2].granted, 5);
+    }
+
+    #[test]
+    fn stage_pool_matches_thread_per_tenant_and_bounds_threads() {
+        let engine = Arc::new(Engine::serial());
+        let streams: Vec<Arc<CooStream>> = (0..5)
+            .map(|i| Arc::new(synth::generate(&BC_ALPHA, 70 + i)))
+            .collect();
+        let manifest = Scheduler::manifest_for_streams(
+            streams.iter().map(|s| (s.as_ref(), BC_ALPHA.splitter_secs)),
+            Dims::default(),
+        );
+        let run = |pool: usize| {
+            let specs: Vec<TenantSpec> = streams
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let session = ModelKind::GcrnM2
+                        .build_session(&cfg(s, manifest.max_nodes, false, &engine));
+                    TenantSpec::new(
+                        &format!("t{i}"),
+                        Arc::clone(s),
+                        BC_ALPHA.splitter_secs,
+                        1,
+                        session,
+                    )
+                    .with_limit(6)
+                })
+                .collect();
+            let sched = Scheduler::new(Arc::clone(&engine), 3).with_stage_pool(pool);
+            let mut outs: Vec<(TenantId, usize, Vec<u32>)> = Vec::new();
+            let report = sched
+                .serve_report(&manifest, specs, |_| Vec::new(), |sid, snap, _slot, out| {
+                    outs.push((sid, snap.index, out.iter().map(|v| v.to_bits()).collect()));
+                    Ok(())
+                })
+                .unwrap();
+            assert_eq!(report.outcomes.len(), 5);
+            for o in &report.outcomes {
+                assert_eq!(o.steps.len(), 6, "{}", o.name);
+                assert!(!o.removed);
+            }
+            outs.sort();
+            (outs, report.stage_threads)
+        };
+        let (thread_outs, spawned_threads) = run(0);
+        let (pool_outs, spawned_pool) = run(2);
+        assert_eq!(thread_outs, pool_outs, "pool-mode serving must be bitwise-equal");
+        assert_eq!(spawned_threads, 5, "thread mode: one stage thread per tenant");
+        assert_eq!(spawned_pool, 2, "pool mode: exactly the worker count");
     }
 
     #[test]

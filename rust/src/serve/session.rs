@@ -31,8 +31,9 @@
 
 use super::batch::{step_unbatched, BatchKey, Projection};
 use crate::coordinator::{NodeStateStore, ResidentState};
+use crate::datasets::synth::EditStep;
 use crate::error::{Error, Result};
-use crate::graph::{CooStream, Snapshot};
+use crate::graph::{CooStream, CsrRebuild, EdgeDelta, Snapshot};
 use crate::models::{node_features_into, Dims, ModelKind, ModelParams};
 use crate::numerics::{gcn_layer_slice_into, gru_matrix_cell, lstm_gate_slices_into, Engine, Mat};
 use crate::runtime::{
@@ -104,6 +105,13 @@ pub struct TenantSpec {
     /// factor) and counts served steps that miss it — the inputs to
     /// deadline-aware reweighting and overload control.
     pub deadline_ms: Option<f64>,
+    /// Edit-stream mode (paper §VI end-to-end): `Some` replaces
+    /// `stream`/`splitter_secs` — the tenant's graph steps arrive as
+    /// edge-diff [`EditStep`]s over a stable node layout, staged through
+    /// [`SessionStager::stage_edit`] (CSR patching + skipped feature
+    /// movement) instead of per-window full snapshots.  Built with
+    /// [`TenantSpec::new_edits`].
+    pub edits: Option<Arc<Vec<EditStep>>>,
     pub session: Box<dyn DgnnSession>,
 }
 
@@ -122,6 +130,28 @@ impl TenantSpec {
             weight,
             limit: usize::MAX,
             deadline_ms: None,
+            edits: None,
+            session,
+        }
+    }
+
+    /// An edit-stream tenant: each served step is one [`EditStep`]
+    /// (snapshot + the edge diff from its predecessor).  The COO
+    /// stream/splitter fields are unused in this mode.
+    pub fn new_edits(
+        name: &str,
+        edits: Arc<Vec<EditStep>>,
+        weight: u32,
+        session: Box<dyn DgnnSession>,
+    ) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            stream: Arc::new(CooStream::default()),
+            splitter_secs: 1,
+            weight,
+            limit: usize::MAX,
+            deadline_ms: None,
+            edits: Some(edits),
             session,
         }
     }
@@ -143,8 +173,32 @@ impl TenantSpec {
 pub trait SessionStager: Send {
     /// Stage one snapshot into `slot`.
     fn stage(&mut self, snap: &Snapshot, slot: &mut StagingSlot) -> Result<()>;
+    /// Stage one edit-stream step into `slot`: `snap` is the step's
+    /// materialised snapshot, `delta` the edge diff from its
+    /// predecessor.  Implementations patch a cached CSR under a stable
+    /// node layout and fall back to full staging whenever the delta
+    /// contract is violated; the returned [`CsrRebuild`] reports which
+    /// path ran.  The default is exactly that fallback — full staging —
+    /// so every stager serves edit streams correctly even without a
+    /// patch path.
+    fn stage_edit(
+        &mut self,
+        snap: &Snapshot,
+        delta: &EdgeDelta,
+        slot: &mut StagingSlot,
+    ) -> Result<CsrRebuild> {
+        let _ = delta;
+        self.stage(snap, slot)?;
+        Ok(CsrRebuild::Full)
+    }
     /// Feature-row reuse counters (`Some` only on the delta path).
     fn feature_delta(&self) -> Option<DeltaCounts>;
+    /// CSR patch counters — `shared` steps took the
+    /// [`CsrRebuild::Patched`] path out of `seen` edit steps (`Some`
+    /// only after edit-stream staging).
+    fn csr_delta(&self) -> Option<DeltaCounts> {
+        None
+    }
 }
 
 /// One tenant's model session: the inference-side state machine every
@@ -232,6 +286,71 @@ pub trait BatchableSession {
     ) -> Result<()>;
 }
 
+/// A/B control for edit-stream serving: wraps any session so its stager
+/// loses the [`SessionStager::stage_edit`] override and every edit step
+/// falls back to the trait default — a full restage of the step's
+/// snapshot.  Serving the same edit stream once directly and once
+/// through this wrapper compares the CSR patch path against
+/// from-scratch rebuilds over identical per-step snapshots (the
+/// edits-vs-snapshot pair in `benches/serve_traffic.rs`, and the
+/// bitwise-equivalence property in `rust/tests/prop_serve.rs`).
+pub struct FullRestageSession(Box<dyn DgnnSession>);
+
+impl FullRestageSession {
+    pub fn new(inner: Box<dyn DgnnSession>) -> Box<dyn DgnnSession> {
+        Box::new(FullRestageSession(inner))
+    }
+}
+
+/// The stager half: delegates `stage` and the feature-delta counters,
+/// inherits the default (full-restage) `stage_edit` and the default
+/// `None` CSR-patch counters.
+struct FullRestageStager(Box<dyn SessionStager>);
+
+impl SessionStager for FullRestageStager {
+    fn stage(&mut self, snap: &Snapshot, slot: &mut StagingSlot) -> Result<()> {
+        self.0.stage(snap, slot)
+    }
+
+    fn feature_delta(&self) -> Option<DeltaCounts> {
+        self.0.feature_delta()
+    }
+}
+
+impl DgnnSession for FullRestageSession {
+    fn model(&self) -> ModelKind {
+        self.0.model()
+    }
+
+    fn dims(&self) -> Dims {
+        self.0.dims()
+    }
+
+    fn make_stager(&self, m: &Manifest) -> Box<dyn SessionStager> {
+        Box::new(FullRestageStager(self.0.make_stager(m)))
+    }
+
+    fn prepare(&mut self, snap: &Snapshot) -> Result<()> {
+        self.0.prepare(snap)
+    }
+
+    fn infer(&mut self, snap: &Snapshot, slot: &StagingSlot) -> Result<()> {
+        self.0.infer(snap, slot)
+    }
+
+    fn output(&self) -> &[f32] {
+        self.0.output()
+    }
+
+    fn finish(&mut self) -> Option<DeltaCounts> {
+        self.0.finish()
+    }
+
+    fn batchable(&mut self) -> Option<&mut dyn BatchableSession> {
+        self.0.batchable()
+    }
+}
+
 /// The model-independent stager: node features are a pure function of
 /// the raw id and the tenant seed (the DRAM feature store), so staging
 /// needs no model state.  With `delta`, adjacent-snapshot reuse runs
@@ -245,6 +364,10 @@ pub struct StreamStager {
     cache: StagingSlot,
     shared: usize,
     seen: usize,
+    /// Edit-stream counters: steps that took the CSR patch path, and
+    /// total edit steps staged.
+    patched: usize,
+    edit_steps: usize,
 }
 
 impl StreamStager {
@@ -256,6 +379,8 @@ impl StreamStager {
             cache: StagingSlot::new(m),
             shared: 0,
             seen: 0,
+            patched: 0,
+            edit_steps: 0,
         }
     }
 }
@@ -276,9 +401,41 @@ impl SessionStager for StreamStager {
         }
     }
 
+    /// The edit path always runs through the persistent cache slot —
+    /// it sees every step in order, so its CSR can take the
+    /// adjacent-step patch; recycled pool slots (which see every
+    /// POOL-th step) then adopt the result wholesale via
+    /// [`StagingSlot::adopt_staged`] (three `memcpy`s beat re-running
+    /// the counting sort).
+    fn stage_edit(
+        &mut self,
+        snap: &Snapshot,
+        delta: &EdgeDelta,
+        slot: &mut StagingSlot,
+    ) -> Result<CsrRebuild> {
+        let seed = self.seed;
+        let kind = self
+            .cache
+            .stage_edit(snap, delta, |raw, row| node_features_into(raw, seed, row))?;
+        self.edit_steps += 1;
+        if kind == CsrRebuild::Patched {
+            self.patched += 1;
+        }
+        slot.adopt_staged(snap, &self.cache)?;
+        Ok(kind)
+    }
+
     fn feature_delta(&self) -> Option<DeltaCounts> {
         if self.delta {
             Some(DeltaCounts { shared: self.shared, seen: self.seen })
+        } else {
+            None
+        }
+    }
+
+    fn csr_delta(&self) -> Option<DeltaCounts> {
+        if self.edit_steps > 0 {
+            Some(DeltaCounts { shared: self.patched, seen: self.edit_steps })
         } else {
             None
         }
@@ -1019,6 +1176,55 @@ mod tests {
         assert!(full.feature_delta().is_none());
         let c = delta.feature_delta().expect("delta stager counts reuse");
         assert!(c.shared > 0 && c.shared < c.seen);
+    }
+
+    #[test]
+    fn edit_stager_matches_full_staging_and_counts_patches() {
+        use crate::testutil::Pcg32;
+        let mut rng = Pcg32::seeded(46);
+        let steps = synth::edit_stream(&mut rng, 24, 72, 6, 0.2);
+        let m = Manifest {
+            max_nodes: 24,
+            max_edges: 96,
+            in_dim: Dims::default().in_dim,
+            hidden_dim: Dims::default().hidden_dim,
+            out_dim: Dims::default().out_dim,
+        };
+        let mut edit = StreamStager::new(&m, false, 42);
+        let mut full = StreamStager::new(&m, false, 42);
+        // two recycled pool slots, as the scheduler would hand out
+        let mut pool = [StagingSlot::new(&m), StagingSlot::new(&m)];
+        let mut slot_full = StagingSlot::new(&m);
+        for (i, st) in steps.iter().enumerate() {
+            let slot = &mut pool[i % 2];
+            let kind = edit.stage_edit(&st.snap, &st.delta, slot).unwrap();
+            assert_eq!(kind, if i == 0 { CsrRebuild::Full } else { CsrRebuild::Patched });
+            full.stage(&st.snap, &mut slot_full).unwrap();
+            assert_eq!(bits(&slot.x), bits(&slot_full.x), "step {i} staged X");
+            for r in 0..24 {
+                assert_eq!(slot.csr.row(r), slot_full.csr.row(r), "step {i} row {r}");
+            }
+        }
+        let c = edit.csr_delta().expect("edit stager counts patches");
+        assert_eq!(c.seen, steps.len());
+        assert_eq!(c.shared, steps.len() - 1, "everything after bootstrap patches");
+        assert!(full.csr_delta().is_none(), "snapshot staging reports no CSR delta");
+        // the default trait fallback serves edit steps as full stages
+        struct Fallback(StreamStager);
+        impl SessionStager for Fallback {
+            fn stage(&mut self, snap: &Snapshot, slot: &mut StagingSlot) -> Result<()> {
+                self.0.stage(snap, slot)
+            }
+            fn feature_delta(&self) -> Option<DeltaCounts> {
+                None
+            }
+        }
+        let mut fb = Fallback(StreamStager::new(&m, false, 42));
+        let mut slot_fb = StagingSlot::new(&m);
+        let st = &steps[0];
+        let kind = fb.stage_edit(&st.snap, &st.delta, &mut slot_fb).unwrap();
+        assert_eq!(kind, CsrRebuild::Full);
+        assert!(fb.csr_delta().is_none());
     }
 
     #[test]

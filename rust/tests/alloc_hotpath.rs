@@ -18,7 +18,10 @@
 //! allocation-free at steady state (borrowed X/H views + persistent
 //! scratch; the ROADMAP "allocation-free mirror sessions" item).
 //! EvolveGCN is exempt: its per-step matrix-GRU weight evolution
-//! allocates by design.
+//! allocates by design.  Edit-stream staging is measured both raw
+//! (`StagingSlot::stage_edit`) and as the scheduler drives it — the
+//! tenant's `StreamStager` patching its persistent cache and adopting
+//! the result into recycled pool slots (`StagingSlot::adopt_staged`).
 //!
 //! This binary intentionally holds a single `#[test]` so no concurrent
 //! test thread can perturb the allocation counter.
@@ -57,7 +60,7 @@ use dgnn_booster::datasets::{synth, BC_ALPHA};
 use dgnn_booster::models::{node_features_into, Dims, ModelKind};
 use dgnn_booster::numerics::{self, Engine, Kernels, Mat};
 use dgnn_booster::runtime::{Manifest, StagingSlot};
-use dgnn_booster::serve::SessionConfig;
+use dgnn_booster::serve::{SessionConfig, SessionStager, StreamStager};
 use dgnn_booster::testutil::Pcg32;
 use std::sync::Arc;
 
@@ -190,6 +193,39 @@ fn staging_path_steady_state_is_allocation_free() {
         after - before,
         0,
         "edit-stream staging performed {} heap allocations at steady state",
+        after - before
+    );
+
+    // --- edit staging as the scheduler drives it -----------------------
+    // The serve path per granted window: the tenant's `StreamStager`
+    // patches its *persistent cache* CSR from the edge diff, then the
+    // staged snapshot is memcpied into whichever recycled pool slot the
+    // governor granted (`StagingSlot::adopt_staged`).  Pool slots
+    // recycle round-robin, so adjacent-step deltas can never patch a
+    // slot's stale CSR directly — only the cache sees every step in
+    // order.  Steady state across 2 recycled slots must stay
+    // allocation-free (wrap-around again exercises the full-rebuild
+    // fallback under the same bar).
+    let mut srng = Pcg32::seeded(11);
+    let ssteps = synth::edit_stream(&mut srng, 200, 800, 6, 0.1);
+    let mut edit_stager = StreamStager::new(&em, false, 42);
+    let mut pool_slots = [StagingSlot::new(&em), StagingSlot::new(&em)];
+    for (i, st) in ssteps.iter().chain(ssteps.iter()).enumerate() {
+        edit_stager
+            .stage_edit(&st.snap, &st.delta, &mut pool_slots[i % 2])
+            .unwrap();
+    }
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for (i, st) in ssteps.iter().enumerate() {
+        edit_stager
+            .stage_edit(&st.snap, &st.delta, &mut pool_slots[i % 2])
+            .unwrap();
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "scheduler-driven edit staging performed {} heap allocations at steady state",
         after - before
     );
 

@@ -16,6 +16,11 @@
 //! fatal faults quarantine exactly one tenant (its prefix intact,
 //! everyone else untouched), and repeated transient failures trip the
 //! per-tenant circuit breaker — each at 1/2/4 engine threads.
+//!
+//! `SERVE_STAGE_POOL=N` reruns the whole suite with staging on an
+//! N-worker work-stealing pool instead of thread-per-tenant (the CI
+//! pool-mode job); one quarantine scenario additionally pins pool mode
+//! explicitly, independent of the env.
 
 use dgnn_booster::error::Error;
 use dgnn_booster::graph::{CooEdge, CooStream};
@@ -81,7 +86,17 @@ fn seed_of(tenant: usize) -> u64 {
     50 + tenant as u64
 }
 
-fn chaos_case(rng: &mut Pcg32, size: usize, threads: usize) {
+/// Stage-pool override for CI: `SERVE_STAGE_POOL=N` runs every
+/// scheduler in this suite on an N-worker pool (0 / unset =
+/// thread-per-tenant).
+fn stage_pool_from_env() -> usize {
+    std::env::var("SERVE_STAGE_POOL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0)
+}
+
+fn chaos_case(rng: &mut Pcg32, size: usize, threads: usize, stage_pool: usize) {
     let model = ModelKind::GcrnM2;
     let dims = Dims::default();
     let delta = rng.below(2) == 1;
@@ -129,7 +144,9 @@ fn chaos_case(rng: &mut Pcg32, size: usize, threads: usize) {
     );
     let engine = Arc::new(Engine::new(threads));
     let slots = 1 + rng.below(3);
-    let sched = Scheduler::new(Arc::clone(&engine), slots).with_batching(batch);
+    let sched = Scheduler::new(Arc::clone(&engine), slots)
+        .with_batching(batch)
+        .with_stage_pool(stage_pool);
 
     let initial: Vec<TenantSpec> = specs[..k0]
         .iter()
@@ -268,8 +285,12 @@ fn chaos_case(rng: &mut Pcg32, size: usize, threads: usize) {
 }
 
 fn chaos_at(threads: usize) {
+    chaos_at_pool(threads, stage_pool_from_env());
+}
+
+fn chaos_at_pool(threads: usize, stage_pool: usize) {
     forall(Config::default().cases(5).max_size(24).seed(0xC4A05 + threads as u64), |rng, size| {
-        chaos_case(rng, size, threads);
+        chaos_case(rng, size, threads, stage_pool);
     });
 }
 
@@ -283,7 +304,14 @@ struct FaultRun {
     outs: Vec<Outs>,
 }
 
-fn fault_run(threads: usize, n: usize, snaps: usize, plan: FaultPlan, policy: Option<ServePolicy>) -> FaultRun {
+fn fault_run(
+    threads: usize,
+    n: usize,
+    snaps: usize,
+    plan: FaultPlan,
+    policy: Option<ServePolicy>,
+    stage_pool: usize,
+) -> FaultRun {
     let model = ModelKind::GcrnM2;
     let dims = Dims::default();
     let streams: Vec<Arc<CooStream>> = (0..n)
@@ -309,7 +337,9 @@ fn fault_run(threads: usize, n: usize, snaps: usize, plan: FaultPlan, policy: Op
             TenantSpec::new(&format!("f{i}"), Arc::clone(stream), SPLITTER, 1, session)
         })
         .collect();
-    let mut sched = Scheduler::new(engine, 2).with_faults(Arc::new(plan));
+    let mut sched = Scheduler::new(engine, 2)
+        .with_faults(Arc::new(plan))
+        .with_stage_pool(stage_pool);
     if let Some(p) = policy {
         sched = sched.with_policy(p);
     }
@@ -331,14 +361,15 @@ fn fault_run(threads: usize, n: usize, snaps: usize, plan: FaultPlan, policy: Op
 #[test]
 fn transient_faults_recover_bitwise_identical() {
     for threads in [1, 2, 4] {
-        let clean = fault_run(threads, 3, 4, FaultPlan::new(), None);
+        let pool = stage_pool_from_env();
+        let clean = fault_run(threads, 3, 4, FaultPlan::new(), None, pool);
         // a stage fault that clears on the 3rd attempt and a prepare
         // fault that clears on the 2nd — both inside the default retry
         // budget, so nothing is shed and nothing diverges
         let plan = FaultPlan::new()
             .with(FaultSpec { tenant: 1, point: FaultPoint::Stage, index: 1, transient: true, fires: 2 })
             .with(FaultSpec { tenant: 2, point: FaultPoint::Prepare, index: 0, transient: true, fires: 1 });
-        let faulted = fault_run(threads, 3, 4, plan, None);
+        let faulted = fault_run(threads, 3, 4, plan, None, pool);
         assert_eq!(
             faulted.outs, clean.outs,
             "transient recovery must be bitwise (threads={threads})"
@@ -361,7 +392,8 @@ fn transient_faults_recover_bitwise_identical() {
 #[test]
 fn fatal_fault_quarantines_only_its_tenant() {
     for threads in [1, 2, 4] {
-        let clean = fault_run(threads, 3, 4, FaultPlan::new(), None);
+        let pool = stage_pool_from_env();
+        let clean = fault_run(threads, 3, 4, FaultPlan::new(), None, pool);
         let plan = FaultPlan::new().with(FaultSpec {
             tenant: 1,
             point: FaultPoint::Infer,
@@ -369,7 +401,7 @@ fn fatal_fault_quarantines_only_its_tenant() {
             transient: false,
             fires: 1,
         });
-        let run = fault_run(threads, 3, 4, plan, None);
+        let run = fault_run(threads, 3, 4, plan, None, pool);
         // the faulted tenant keeps the bitwise prefix it served before
         // the fatal window, and the outcome records the wrapped error
         assert_eq!(run.outs[1][..], clean.outs[1][..2], "threads={threads}");
@@ -402,7 +434,8 @@ fn fatal_fault_quarantines_only_its_tenant() {
 #[test]
 fn repeated_transient_failures_trip_the_breaker() {
     for threads in [1, 2, 4] {
-        let clean = fault_run(threads, 2, 4, FaultPlan::new(), None);
+        let pool = stage_pool_from_env();
+        let clean = fault_run(threads, 2, 4, FaultPlan::new(), None, pool);
         // two back-to-back windows whose transient infer fault outlives
         // the tightened retry budget: the first is shed, the second
         // trips the breaker_k=2 circuit breaker
@@ -410,7 +443,7 @@ fn repeated_transient_failures_trip_the_breaker() {
             .with(FaultSpec { tenant: 0, point: FaultPoint::Infer, index: 0, transient: true, fires: 10 })
             .with(FaultSpec { tenant: 0, point: FaultPoint::Infer, index: 1, transient: true, fires: 10 });
         let policy = ServePolicy { retries: 2, breaker_k: 2, ..Default::default() };
-        let run = fault_run(threads, 2, 4, plan, Some(policy));
+        let run = fault_run(threads, 2, 4, plan, Some(policy), pool);
         let o0 = &run.report.outcomes[0];
         assert!(run.outs[0].is_empty(), "both faulted windows must be shed (threads={threads})");
         assert!(o0.removed);
@@ -428,6 +461,32 @@ fn repeated_transient_failures_trip_the_breaker() {
     }
 }
 
+/// Failure domains hold identically when staging runs on a fixed
+/// 2-worker pool — pinned explicitly, independent of `SERVE_STAGE_POOL`:
+/// the fatal fault quarantines exactly one tenant (bitwise prefix
+/// intact, survivors untouched) and the run spawns exactly the pool's
+/// worth of stage threads for 3 tenants.
+#[test]
+fn fatal_fault_quarantine_holds_on_stage_pool() {
+    let clean = fault_run(2, 3, 4, FaultPlan::new(), None, 2);
+    let plan = FaultPlan::new().with(FaultSpec {
+        tenant: 1,
+        point: FaultPoint::Infer,
+        index: 2,
+        transient: false,
+        fires: 1,
+    });
+    let run = fault_run(2, 3, 4, plan, None, 2);
+    assert_eq!(run.report.stage_threads, 2, "pool mode spawned off-pool stage threads");
+    assert_eq!(run.outs[1][..], clean.outs[1][..2], "quarantined tenant lost its prefix");
+    assert!(run.report.outcomes[1].removed);
+    for id in [0, 2] {
+        assert_eq!(run.outs[id], clean.outs[id], "healthy tenant {id} diverged in pool mode");
+        assert!(!run.report.outcomes[id].removed);
+    }
+    assert_eq!(run.report.health.quarantined, 1);
+}
+
 #[test]
 fn chaos_scheduler_1_thread() {
     chaos_at(1);
@@ -441,4 +500,11 @@ fn chaos_scheduler_2_threads() {
 #[test]
 fn chaos_scheduler_4_threads() {
     chaos_at(4);
+}
+
+/// The full chaos script (admit/remove/reweight/stop under batching) on
+/// a 2-worker stage pool, regardless of the env override.
+#[test]
+fn chaos_scheduler_stage_pool_2() {
+    chaos_at_pool(2, 2);
 }

@@ -8,7 +8,10 @@
 //! reproduce full staging bit-for-bit across snapshot sequences.
 
 use dgnn_booster::datasets::synth::{edit_stream, random_snapshot};
-use dgnn_booster::graph::{CsrRebuild, EdgeDelta, RenumberTable, Snapshot, SnapshotCsr};
+use dgnn_booster::graph::{
+    CsrRebuild, EdgeDelta, RenumberTable, Snapshot, SnapshotCsr, DELTA_CHURN_ALL,
+    DELTA_CHURN_UNLIMITED,
+};
 use dgnn_booster::models::node_features_into;
 use dgnn_booster::numerics::{self, lstm_gate_slices_into, Engine, Kernels, Mat};
 use dgnn_booster::runtime::{Manifest, StagingSlot};
@@ -261,8 +264,8 @@ fn prop_delta_csr_rebuild_matches_full() {
         let stream = edit_stream(rng, n, e, steps, churn);
         let mut patched = SnapshotCsr::default();
         for (t, st) in stream.iter().enumerate() {
-            // max_churn 1.0: only structural violations may force Full
-            let kind = patched.rebuild_delta(&st.snap, &st.delta, 1.0);
+            // full-set budget: only structural violations may force Full
+            let kind = patched.rebuild_delta(&st.snap, &st.delta, DELTA_CHURN_ALL);
             if t == 0 {
                 assert_eq!(kind, CsrRebuild::Full, "bootstrap patches an empty CSR");
             } else {
@@ -293,9 +296,9 @@ fn prop_between_derived_deltas_patch_arbitrary_transitions() {
         for step in 0..4 {
             let next = random_snapshot(rng, n, rng.range(0, 3 * n));
             let delta = EdgeDelta::between(&csr, &next).expect("same node count");
-            // unrelated snapshots churn close to e_old + e_new; 2× the
-            // larger edge count always covers that
-            let kind = csr.rebuild_delta(&next, &delta, 2.0);
+            // unrelated snapshots churn close to e_old + e_new; only
+            // the unlimited budget always covers that
+            let kind = csr.rebuild_delta(&next, &delta, DELTA_CHURN_UNLIMITED);
             assert_eq!(kind, CsrRebuild::Patched, "step {step} n={n}");
             let full = SnapshotCsr::from_snapshot(&next);
             for r in 0..n {

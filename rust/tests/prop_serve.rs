@@ -9,14 +9,21 @@
 //! projection is held to the same bar: batch-on serving must be
 //! bitwise-equal per tenant to batch-off serving at 1/2/4 threads ×
 //! delta on/off × mixed model kinds (fusing and non-fusing tenants
-//! alike).
+//! alike).  Edit-stream serving and the work-stealing stage pool get
+//! the same treatment: an edits-mode tenant (CSR patched in place) is
+//! bitwise-equal to the same stream force-restaged from full snapshots
+//! ([`FullRestageSession`]) at 0/1/2/4 stage-pool workers, pool-mode
+//! scheduling is bitwise-equal to thread-per-tenant, and the pool
+//! decouples stage-thread count from tenant count (the run-time simd
+//! axis is covered by CI re-running this suite with `--features simd`).
 
+use dgnn_booster::datasets::synth;
 use dgnn_booster::graph::{CooEdge, CooStream};
 use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
 use dgnn_booster::serve::{
-    run_session, Command, DgnnSession, Scheduler, ServeEvent, SessionConfig, StreamSource,
-    TenantSpec,
+    run_session, Command, DgnnSession, FullRestageSession, Scheduler, ServeEvent, SessionConfig,
+    StreamSource, TenantSpec,
 };
 use dgnn_booster::testutil::{forall, Config, Pcg32};
 use std::sync::Arc;
@@ -539,6 +546,143 @@ fn batched_schedule_bitwise_equals_unbatched_per_tenant() {
             assert!(st_on.occupancy() >= 1.0);
         }
     }
+}
+
+/// Serve a set of edit-stream tenants through the scheduler, on a
+/// stage pool (`stage_pool > 0`) or thread-per-tenant, and optionally
+/// force-restaging every step from its full snapshot
+/// (`FullRestageSession` strips the CSR patch path).  Returns per-tenant
+/// outputs and the scheduler's stage-thread probe.
+fn run_edits(
+    streams: &[Arc<Vec<synth::EditStep>>],
+    nodes: usize,
+    threads: usize,
+    stage_pool: usize,
+    full_restage: bool,
+) -> (Vec<Outs>, usize) {
+    let engine = Arc::new(Engine::new(threads));
+    let manifest =
+        Scheduler::manifest_for_edits(streams.iter().map(|s| s.as_slice()), Dims::default());
+    let tenants: Vec<TenantSpec> = streams
+        .iter()
+        .enumerate()
+        .map(|(i, st)| {
+            let mut session = ModelKind::GcrnM2.build_session(&SessionConfig {
+                dims: Dims::default(),
+                seed: 7 + i as u64,
+                total_nodes: nodes,
+                max_nodes: manifest.max_nodes,
+                delta: false,
+                engine: Arc::clone(&engine),
+            });
+            if full_restage {
+                session = FullRestageSession::new(session);
+            }
+            TenantSpec::new_edits(&format!("e{i}"), Arc::clone(st), 1, session)
+        })
+        .collect();
+    let sched = Scheduler::new(engine, 3).with_stage_pool(stage_pool);
+    let mut outs: Vec<Outs> = vec![Vec::new(); streams.len()];
+    let report = sched
+        .serve_report(
+            &manifest,
+            tenants,
+            |_| Vec::new(),
+            |sid, snap, _slot, out| {
+                outs[sid].push((snap.index, bits(out)));
+                Ok(())
+            },
+        )
+        .unwrap();
+    for o in &report.outcomes {
+        assert!(o.fault.is_none(), "{}: spurious fault", o.name);
+        if full_restage {
+            // the restage twin never takes the patch path, so it
+            // reports no CSR counters at all
+            assert!(o.csr_delta.is_none(), "{}: restage twin patched a CSR", o.name);
+        } else {
+            let d = o.csr_delta.expect("edit tenants report CSR patch counters");
+            assert_eq!(d.seen, o.steps.len(), "{}: counter missed steps", o.name);
+        }
+    }
+    (outs, report.stage_threads)
+}
+
+/// Edits-mode serving (CSR patched in place under the stable node
+/// layout) is **bitwise** the same as serving the identical per-step
+/// snapshots rebuilt from scratch — across thread-per-tenant and
+/// 1/2/4-worker stage pools.
+#[test]
+fn edits_mode_bitwise_equals_full_snapshot_restaging_across_pool_sizes() {
+    let streams: Vec<Arc<Vec<synth::EditStep>>> = (0..3)
+        .map(|i| {
+            let mut rng = Pcg32::seeded(9000 + i as u64);
+            Arc::new(synth::edit_stream(&mut rng, 48, 120, 6, 0.2))
+        })
+        .collect();
+    // reference: the same steps force-restaged as full snapshots
+    let (reference, _) = run_edits(&streams, 48, 2, 0, true);
+    for o in &reference {
+        assert_eq!(o.len(), 6);
+    }
+    for pool in [0usize, 1, 2, 4] {
+        let (patched, _) = run_edits(&streams, 48, 2, pool, false);
+        assert_eq!(
+            patched, reference,
+            "stage_pool={pool}: CSR patching changed the numerics"
+        );
+    }
+}
+
+/// Pool-mode scheduling of windowed COO streams is bitwise-equal to the
+/// thread-per-tenant default at every pool size (incl. the empty-stream
+/// tenant, which must still drain cleanly through the pool).
+#[test]
+fn stage_pool_schedule_bitwise_equals_thread_per_tenant() {
+    let sources = fixed_sources();
+    let manifest = Scheduler::manifest_for(&sources, Dims::default());
+    let mut baseline: Option<Vec<Outs>> = None;
+    for pool in [0usize, 1, 2, 4] {
+        let engine = Arc::new(Engine::new(2));
+        let sessions: Vec<Box<dyn DgnnSession>> = sources
+            .iter()
+            .enumerate()
+            .map(|(i, s)| session_for(ModelKind::GcrnM2, s, i, manifest.max_nodes, true, &engine))
+            .collect();
+        let sched = Scheduler::new(engine, 3).with_stage_pool(pool);
+        let mut outs: Vec<Outs> = vec![Vec::new(); sources.len()];
+        sched
+            .run(&manifest, &sources, sessions, usize::MAX, |sid, snap, _slot, out| {
+                outs[sid].push((snap.index, bits(out)));
+                Ok(())
+            })
+            .unwrap();
+        match &baseline {
+            None => baseline = Some(outs),
+            Some(b) => assert_eq!(&outs, b, "stage_pool={pool} diverged from thread mode"),
+        }
+    }
+}
+
+/// The thread-count probe: 64 edit-stream tenants on a 4-worker pool
+/// spawn exactly 4 stage threads (thread mode would spawn 64), and
+/// every tenant still serves its full stream.
+#[test]
+fn stage_pool_decouples_thread_count_from_tenant_count() {
+    let streams: Vec<Arc<Vec<synth::EditStep>>> = (0..64)
+        .map(|i| {
+            let mut rng = Pcg32::seeded(9500 + i as u64);
+            Arc::new(synth::edit_stream(&mut rng, 16, 30, 2, 0.2))
+        })
+        .collect();
+    let (outs, stage_threads) = run_edits(&streams, 16, 1, 4, false);
+    assert_eq!(stage_threads, 4, "pool spawned off-pool stage threads");
+    for (sid, o) in outs.iter().enumerate() {
+        assert_eq!(o.len(), 2, "tenant {sid} under-served on the pool");
+    }
+    // thread-per-tenant as the contrast: one stage thread per tenant
+    let (_, per_tenant) = run_edits(&streams[..5], 16, 1, 0, false);
+    assert_eq!(per_tenant, 5);
 }
 
 #[test]
