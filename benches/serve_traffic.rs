@@ -31,8 +31,9 @@ use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
 use dgnn_booster::serve::{
     fairness_of, write_serve_json, BatchStats, Command, DgnnSession, FaultPlan, FaultPoint,
-    FaultSpec, FullRestageSession, HealthStats, Scheduler, ServeEvent, ServePolicy,
-    ServeRecorder, ServeRow, SessionConfig, StreamOutcome, StreamSource, TenantSpec,
+    FaultSpec, FullRestageSession, HealthStats, NetClient, NetEvent, NetServer, NetServerConfig,
+    Scheduler, ServeEvent, ServePolicy, ServeRecorder, ServeRow, SessionConfig, ShardConfig,
+    StreamOutcome, StreamSource, TenantRequest, TenantSpec,
 };
 use dgnn_booster::testutil::Pcg32;
 use std::sync::Arc;
@@ -742,6 +743,124 @@ fn main() {
         );
         println!("bench {:<44} {}", row.name, row.summary.line());
         rows.push(row);
+    }
+
+    // network load generator: open-loop arrivals against a real TCP
+    // frontend (2 scheduler shards behind the wire protocol) — each
+    // "request" admits a short-lived tenant over the socket, streams
+    // its edges, and is complete when its Done frame lands back.
+    // Arrivals are scheduled at the target rate regardless of
+    // completions (open-loop, so queueing delay shows up in the tail
+    // instead of throttling the generator); one latency-vs-QPS row per
+    // target rate.
+    {
+        let shards = 2;
+        let stage_pool = 2;
+        let qps_targets: &[f64] = if smoke { &[4.0, 8.0, 16.0] } else { &[2.0, 8.0, 32.0] };
+        let n_requests: usize = if smoke { 6 } else { 24 };
+        let req_limit: u64 = if smoke { 2 } else { 4 };
+        // small per-request stream: a prefix of a profile-shaped one,
+        // so each request stages/serves only a handful of windows
+        let base = synth::generate(&BC_ALPHA, 777);
+        let edges: Vec<_> = base.edges.iter().take(1200).copied().collect();
+        let small = CooStream::from_edges("netload", edges.clone()).expect("netload stream");
+
+        for &qps in qps_targets {
+            let manifest = Scheduler::manifest_for_streams(
+                [(&small, BC_ALPHA.splitter_secs)],
+                dims,
+            );
+            let server = NetServer::bind(
+                "127.0.0.1:0",
+                NetServerConfig {
+                    shards,
+                    shard: ShardConfig {
+                        engine_threads: THREADS,
+                        slots: 4,
+                        stage_pool,
+                        batch: false,
+                        delta: true,
+                        dims,
+                    },
+                    max_nodes: manifest.max_nodes,
+                    max_edges: manifest.max_edges,
+                },
+            )
+            .expect("bind netload server");
+            let addr = server.local_addr().expect("netload addr");
+            let server_thread = std::thread::spawn(move || server.run());
+
+            let mut client = NetClient::connect(addr).expect("netload connect");
+            let mut reader = client.try_clone().expect("netload reader clone");
+            let collector = std::thread::spawn(move || {
+                let mut done_at = std::collections::HashMap::new();
+                while done_at.len() < n_requests {
+                    match reader.next_event().expect("netload event") {
+                        NetEvent::Step { .. } => {}
+                        NetEvent::Done { token, .. } => {
+                            done_at.insert(token, std::time::Instant::now());
+                        }
+                        NetEvent::Error { token, msg } => {
+                            panic!("netload server error (token {token}): {msg}")
+                        }
+                    }
+                }
+                done_at
+            });
+
+            let start = std::time::Instant::now();
+            let mut issued = Vec::with_capacity(n_requests);
+            for k in 0..n_requests {
+                let due = start + std::time::Duration::from_secs_f64(k as f64 / qps);
+                let now = std::time::Instant::now();
+                if due > now {
+                    std::thread::sleep(due - now);
+                }
+                let token = k as u32;
+                issued.push(std::time::Instant::now());
+                client
+                    .admit(&TenantRequest {
+                        token,
+                        name: format!("req-{k}"),
+                        model,
+                        seed: 777,
+                        weight: 1,
+                        deadline_us: 0,
+                    })
+                    .expect("netload admit");
+                client.push_edits(token, &edges).expect("netload edits");
+                client
+                    .infer(token, BC_ALPHA.splitter_secs, req_limit)
+                    .expect("netload infer");
+            }
+            let done_at = collector.join().expect("netload collector");
+            let wall = issued[0].elapsed().as_secs_f64();
+            client.shutdown().expect("netload shutdown");
+            server_thread
+                .join()
+                .expect("netload server join")
+                .expect("netload server report");
+
+            let mut rec = ServeRecorder::new(65536);
+            for (k, t0) in issued.iter().enumerate() {
+                let t1 = done_at[&(k as u32)];
+                rec.record_ms(t1.duration_since(*t0).as_secs_f64() * 1e3);
+            }
+            let row = ServeRow {
+                name: format!("netload qps={qps:.0} shards={shards}"),
+                streams: n_requests,
+                delta: true,
+                edits: false,
+                threads: THREADS,
+                stage_pool,
+                summary: rec.summary(wall),
+                fairness: None,
+                batch: None,
+                health: None,
+            };
+            println!("bench {:<44} {}", row.name, row.summary.line());
+            rows.push(row);
+        }
     }
 
     write_serve_json(

@@ -62,8 +62,23 @@
 //!                              queued windows are shed, and the
 //!                              deadline controller reweights laggards
 //!                              (fractional values accepted)
+//!   --listen ADDR              `serve` binds a TCP frontend on ADDR
+//!                              (e.g. 127.0.0.1:7431; port 0 picks a
+//!                              free port) speaking the length-prefixed
+//!                              binary frame protocol of
+//!                              `serve::net` — admissions, edit pushes
+//!                              and inference requests then arrive over
+//!                              sockets instead of in-process streams
+//!   --shards N                 partition tenants across N independent
+//!                              scheduler shards (each with its own
+//!                              engine, slot pool and stage pool;
+//!                              routed by tenant id; default 1) —
+//!                              per-shard reports are merged into one
 //!   --nodes N / --degree N / --dim N / --iters N
 //!                              synthetic graph shape for `kernels`
+//!
+//! Unknown flags are rejected with a near-miss suggestion; giving the
+//! same flag twice is an error (no silent last-wins).
 //! ```
 
 use crate::error::{Error, Result};
@@ -71,6 +86,70 @@ use std::collections::HashMap;
 
 /// Flags that take no value: presence means `true`.
 const BOOL_FLAGS: [&str; 4] = ["delta", "churn", "batch", "edits"];
+
+/// Flags that take a value (`--key value`).  Anything outside this
+/// list and [`BOOL_FLAGS`] is an unknown flag — a `Usage` error with a
+/// near-miss suggestion, never a silent accept.
+const VALUE_FLAGS: [&str; 19] = [
+    "model",
+    "dataset",
+    "seed",
+    "snapshots",
+    "data",
+    "threads",
+    "streams",
+    "slots",
+    "weights",
+    "stage-pool",
+    "faults",
+    "deadline-ms",
+    "listen",
+    "shards",
+    "nodes",
+    "degree",
+    "dim",
+    "iters",
+    "steps",
+];
+
+/// Edit distance between two short flag names (classic two-row DP) —
+/// drives the "did you mean" suggestions on unknown flags.
+fn levenshtein(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    let mut cur = vec![0usize; b.len() + 1];
+    for (i, ca) in a.iter().enumerate() {
+        cur[0] = i + 1;
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur[j + 1] = sub.min(prev[j + 1] + 1).min(cur[j] + 1);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Known flags within edit distance 2 of `key` (or sharing a prefix),
+/// formatted as a "did you mean" hint — empty when nothing is close.
+fn near_misses(key: &str) -> String {
+    let mut near: Vec<&str> = BOOL_FLAGS
+        .iter()
+        .chain(VALUE_FLAGS.iter())
+        .copied()
+        .filter(|k| {
+            levenshtein(key, k) <= 2 || (!key.is_empty() && (k.starts_with(key) || key.starts_with(k)))
+        })
+        .collect();
+    near.sort_unstable();
+    near.dedup();
+    if near.is_empty() {
+        String::new()
+    } else {
+        let list: Vec<String> = near.iter().map(|k| format!("--{k}")).collect();
+        format!(" (did you mean {}?)", list.join(" / "))
+    }
+}
 
 /// Parsed command line.
 #[derive(Clone, Debug)]
@@ -92,14 +171,21 @@ impl Cli {
             let key = a
                 .strip_prefix("--")
                 .ok_or_else(|| Error::Usage(format!("expected --flag, got {a}")))?;
-            if BOOL_FLAGS.contains(&key) {
-                flags.insert(key.to_string(), "true".to_string());
-                continue;
+            let val = if BOOL_FLAGS.contains(&key) {
+                "true".to_string()
+            } else if VALUE_FLAGS.contains(&key) {
+                it.next()
+                    .ok_or_else(|| Error::Usage(format!("--{key} needs a value")))?
+                    .clone()
+            } else {
+                return Err(Error::Usage(format!(
+                    "unknown flag --{key}{}",
+                    near_misses(key)
+                )));
+            };
+            if flags.insert(key.to_string(), val).is_some() {
+                return Err(Error::Usage(format!("--{key} given more than once")));
             }
-            let val = it
-                .next()
-                .ok_or_else(|| Error::Usage(format!("--{key} needs a value")))?;
-            flags.insert(key.to_string(), val.clone());
         }
         Ok(Cli { command, flags })
     }
@@ -120,9 +206,14 @@ impl Cli {
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|e| Error::Usage(format!("--{key} {v}: {e}"))),
+            Some(v) => {
+                let t = v.trim();
+                if t.starts_with('-') {
+                    return Err(Error::Usage(format!("--{key} {v}: must be non-negative")));
+                }
+                t.parse()
+                    .map_err(|e| Error::Usage(format!("--{key} {v}: {e}")))
+            }
         }
     }
 
@@ -317,6 +408,61 @@ mod tests {
         assert_eq!(c.get_f64("deadline-ms", 50.0).unwrap(), 50.0);
         let c = Cli::parse(&s(&["serve", "--deadline-ms", "soon"])).unwrap();
         assert!(matches!(c.get_f64("deadline-ms", 0.0), Err(Error::Usage(_))));
+    }
+
+    #[test]
+    fn unknown_flag_is_rejected_with_near_miss_suggestion() {
+        // one char off a known flag: suggest it
+        let err = Cli::parse(&s(&["serve", "--stream", "4"])).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown flag --stream"), "{msg}");
+        assert!(msg.contains("--streams"), "{msg}");
+        // transposition: still within distance 2
+        let err = Cli::parse(&s(&["serve", "--weigths", "1,2"])).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--weights"), "{msg}");
+        // boolean flags get suggestions too
+        let err = Cli::parse(&s(&["serve", "--detla"])).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--delta"), "{msg}");
+        // nothing close: no "did you mean"
+        let err = Cli::parse(&s(&["serve", "--zzzzqqqq", "1"])).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("unknown flag --zzzzqqqq"), "{msg}");
+        assert!(!msg.contains("did you mean"), "{msg}");
+    }
+
+    #[test]
+    fn duplicate_flag_is_an_error_not_last_wins() {
+        let err = Cli::parse(&s(&["serve", "--threads", "2", "--threads", "4"])).unwrap_err();
+        assert!(format!("{err}").contains("--threads given more than once"));
+        let err = Cli::parse(&s(&["serve", "--delta", "--delta"])).unwrap_err();
+        assert!(format!("{err}").contains("--delta given more than once"));
+    }
+
+    #[test]
+    fn get_usize_rejects_negative_and_overflow_naming_the_flag() {
+        let c = Cli::parse(&s(&["serve", "--slots", "-3"])).unwrap();
+        let err = c.get_usize("slots", 2).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("--slots"), "{msg}");
+        assert!(msg.contains("non-negative"), "{msg}");
+        let c = Cli::parse(&s(&["serve", "--slots", "99999999999999999999999"])).unwrap();
+        let err = c.get_usize("slots", 2).unwrap_err();
+        assert!(format!("{err}").contains("--slots"));
+        // untouched keys still default
+        assert_eq!(c.get_usize("streams", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn listen_and_shards_flags_parse() {
+        // the CI smoke invocation: serve --listen 127.0.0.1:0 --shards 2
+        let c = Cli::parse(&s(&["serve", "--listen", "127.0.0.1:0", "--shards", "2"])).unwrap();
+        assert_eq!(c.get("listen"), Some("127.0.0.1:0"));
+        assert_eq!(c.get_usize("shards", 1).unwrap(), 2);
+        let c = Cli::parse(&s(&["serve"])).unwrap();
+        assert!(c.get("listen").is_none());
+        assert_eq!(c.get_usize("shards", 1).unwrap(), 1);
     }
 
     #[test]

@@ -72,6 +72,13 @@ pub enum Error {
         transient: bool,
     },
 
+    /// Network wire-protocol violation (`serve::net::wire`): bad
+    /// version byte, checksum mismatch, oversized or truncated frame,
+    /// unknown frame type.  Always fatal for the connection that sent
+    /// the frame, never for the serving shards behind it.
+    #[error("wire protocol error: {0}")]
+    Protocol(String),
+
     #[error("i/o error: {0}")]
     Io(#[from] std::io::Error),
 }

@@ -13,8 +13,9 @@ use dgnn_booster::models::Dims;
 use dgnn_booster::numerics::{self, Engine, Mat};
 use dgnn_booster::report::tables::{self, ReportCtx};
 use dgnn_booster::serve::{
-    fairness_of, Command, DeadlineController, FaultPlan, Scheduler, ServeEvent, ServeRecorder,
-    SessionConfig, TenantSpec,
+    fairness_of, Command, DeadlineController, FaultPlan, NetClient, NetEvent, NetServer,
+    NetServerConfig, Scheduler, ServeEvent, ServeRecorder, SessionConfig, ShardConfig,
+    TenantRequest, TenantSpec,
 };
 use dgnn_booster::testutil::Pcg32;
 use std::sync::Arc;
@@ -152,6 +153,112 @@ fn cmd_dse(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     Ok(())
 }
 
+/// Network serving frontend plus loopback drive (`serve --listen ADDR
+/// --shards N`): bind the wire-protocol listener, spawn N independent
+/// scheduler shards (each with its own engine, staging-slot pool and
+/// stage pool), then drive the server over its own TCP socket — admit
+/// `--streams` synthetic tenants, stream their COO edges, collect
+/// served steps until every tenant drains, and shut the tier down
+/// cleanly.  One self-contained command, so the CI smoke exercises
+/// listener, router, shards and client in a single invocation; outputs
+/// cross the wire as raw f32 bits and are bitwise-equal to an
+/// in-process run (`rust/tests/net_serve.rs`).
+fn cmd_serve_net(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
+    let model = cli.model()?;
+    let profile = cli.dataset()?;
+    let streams = cli.get_usize("streams", 2)?.max(1);
+    let threads = cli.threads()?;
+    let shards = cli.get_usize("shards", 1)?.max(1);
+    let stage_pool = cli.get_usize("stage-pool", 0)?;
+    let delta = cli.flag("delta");
+    let batch = cli.flag("batch");
+    let limit = cli.get_usize("snapshots", usize::MAX)?;
+    let slots = cli.get_usize("slots", (2 * streams).clamp(2, 16))?.max(1);
+    let weights = cli.weights(streams)?;
+    let addr = cli.get("listen").expect("cmd_serve checked --listen");
+    let dims = Dims::default();
+
+    // synthetic per-tenant streams; the manifest is sized over all of
+    // them because every shard's padded slot pool is fixed at spawn
+    let tenant_streams: Vec<Arc<CooStream>> = (0..streams)
+        .map(|i| Arc::new(datasets::synth::generate(profile, ctx.seed.wrapping_add(i as u64))))
+        .collect();
+    let manifest = Scheduler::manifest_for_streams(
+        tenant_streams.iter().map(|s| (s.as_ref(), profile.splitter_secs)),
+        dims,
+    );
+    let cfg = NetServerConfig {
+        shards,
+        shard: ShardConfig {
+            engine_threads: threads,
+            slots,
+            stage_pool,
+            batch,
+            delta,
+            dims,
+        },
+        max_nodes: manifest.max_nodes,
+        max_edges: manifest.max_edges,
+    };
+    let server = NetServer::bind(addr, cfg)?;
+    let bound = server.local_addr()?;
+    println!(
+        "serving {} on {bound}: {shards} shard(s), each engine x{threads}, {slots} slots, stage-pool {stage_pool}",
+        model.name()
+    );
+    let server_thread = std::thread::spawn(move || server.run());
+
+    // loopback drive: admit every tenant over TCP, stream its edges,
+    // seal with an infer request, then collect steps until all drain
+    let mut client = NetClient::connect(bound)?;
+    let wire_limit = if limit == usize::MAX { 0 } else { limit as u64 };
+    let t0 = std::time::Instant::now();
+    for (i, stream) in tenant_streams.iter().enumerate() {
+        let token = i as u32;
+        client.admit(&TenantRequest {
+            token,
+            name: format!("net-{i}"),
+            model,
+            seed: ctx.seed.wrapping_add(i as u64),
+            weight: weights[i],
+            deadline_us: 0,
+        })?;
+        client.push_edits(token, &stream.edges)?;
+        client.infer(token, profile.splitter_secs, wire_limit)?;
+    }
+    let mut done = 0usize;
+    let mut total_steps = 0u64;
+    while done < streams {
+        match client.next_event()? {
+            NetEvent::Step { .. } => total_steps += 1,
+            NetEvent::Done { token, steps, faulted } => {
+                done += 1;
+                println!(
+                    "  net-{token}: {steps} steps over TCP (shard {}){}",
+                    token as usize % shards,
+                    if faulted { ", faulted" } else { "" }
+                );
+            }
+            NetEvent::Error { token, msg } => {
+                return Err(Error::Protocol(format!("server reported (token {token}): {msg}")));
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    client.shutdown()?;
+    let report = server_thread
+        .join()
+        .map_err(|_| Error::Protocol("server thread panicked".into()))??;
+    println!(
+        "net serve: {} tenant(s) over {} shard(s), {total_steps} steps in {wall:.2}s ({:.1} steps/s), {} stage thread(s) total",
+        report.outcomes.len(),
+        shards,
+        total_steps as f64 / wall.max(1e-9),
+        report.stage_threads
+    );
+    Ok(())
+}
+
 /// Multi-stream serving over mirror sessions (no AOT artifacts needed):
 /// N tenant snapshot streams multiplexed by `serve::Scheduler` over one
 /// shared sparse engine and one recycled staging-slot pool, with
@@ -167,6 +274,9 @@ fn cmd_dse(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
 /// single-stream path lives in `examples/e2e_serve.rs`, which also
 /// cross-checks against the same mirror sessions.)
 fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
+    if cli.get("listen").is_some() {
+        return cmd_serve_net(cli, ctx);
+    }
     let model = cli.model()?;
     let profile = cli.dataset()?;
     let streams = cli.get_usize("streams", 1)?.max(1);

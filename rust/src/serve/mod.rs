@@ -34,6 +34,14 @@
 //!   weighted Jain index), the deadline-reweighting loop
 //!   ([`DeadlineController`]), batch-occupancy counters
 //!   ([`BatchStats`]), and the `BENCH_serve.json` emitter.
+//! * [`net`] — the network frontend: a length-prefixed binary wire
+//!   protocol with version byte + checksum ([`net::wire`]), a TCP
+//!   listener mapping connections onto the [`Command`] controller path,
+//!   and a [`ShardRouter`] partitioning tenants (`token % shards`)
+//!   across N independent [`Scheduler`] shards whose reports merge into
+//!   one.  Outputs cross the wire as raw f32 bits, so the loopback path
+//!   is bitwise-equal to an in-process run at any shard count.  CLI:
+//!   `serve --listen <addr> --shards N`.
 //! * [`faults`] — deterministic fault injection: a seeded [`FaultPlan`]
 //!   scripts per-tenant transient/fatal faults at the stage / prepare /
 //!   infer points, threaded through the scheduler so chaos tests
@@ -51,6 +59,7 @@
 pub mod batch;
 pub mod faults;
 pub mod metrics;
+pub mod net;
 pub mod scheduler;
 pub mod session;
 
@@ -61,6 +70,10 @@ pub use faults::{FaultPlan, FaultPoint, FaultSpec};
 pub use metrics::{
     fairness_of, fairness_summary, serve_json, write_serve_json, DeadlineController,
     FairnessSummary, LatencyRing, ServeRecorder, ServeRow, ServeSummary, TenantSummary,
+};
+pub use net::{
+    NetClient, NetEvent, NetServer, NetServerConfig, ShardConfig, ShardRouter, TenantRequest,
+    WireTenant,
 };
 pub use scheduler::{
     run_session, wfq_pick, Command, HealthStats, Scheduler, ServeEvent, ServePolicy,

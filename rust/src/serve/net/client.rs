@@ -1,0 +1,179 @@
+//! Minimal blocking client for the `serve::net` wire protocol — used
+//! by the CLI loopback drive (`serve --listen`), the load-generator
+//! bench and the loopback tests; it is deliberately the simplest
+//! correct speaker of the protocol, not a connection-pooling SDK.
+
+use super::wire::{model_to_u8, read_frame, write_frame, Frame};
+use crate::error::{Error, Result};
+use crate::graph::CooEdge;
+use crate::models::ModelKind;
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// Edges per [`Frame::PushEdits`] chunk: 20 wire bytes each keeps a
+/// chunk far under `MAX_PAYLOAD` while amortising header overhead.
+const EDIT_CHUNK: usize = 16_384;
+
+/// What a client asks the server to serve: mirrors the `Admit` frame.
+#[derive(Clone, Debug)]
+pub struct TenantRequest {
+    /// Client-chosen handle, unique per server; picks the shard
+    /// (`token % shards`).
+    pub token: u32,
+    pub name: String,
+    pub model: ModelKind,
+    pub seed: u64,
+    /// WFQ weight (0 = background).
+    pub weight: u32,
+    /// Latency target in microseconds; 0 = none.
+    pub deadline_us: u64,
+}
+
+/// A server → client event, decoded.
+#[derive(Clone, Debug)]
+pub enum NetEvent {
+    /// One served step; `out_bits` are the output row block's raw
+    /// IEEE-754 bit patterns (use [`NetEvent::out_f32`] helpers or
+    /// `f32::from_bits` to view them as floats).
+    Step {
+        token: u32,
+        index: u64,
+        out_bits: Vec<u32>,
+    },
+    /// The tenant drained; no further events carry this token.
+    Done {
+        token: u32,
+        steps: u64,
+        faulted: bool,
+    },
+    /// Application- or protocol-level error report from the server
+    /// (`token == u32::MAX` when not tenant-specific).
+    Error { token: u32, msg: String },
+}
+
+impl NetEvent {
+    /// A [`NetEvent::Step`]'s output decoded to floats (empty for other
+    /// events).
+    pub fn out_f32(&self) -> Vec<f32> {
+        match self {
+            NetEvent::Step { out_bits, .. } => {
+                out_bits.iter().map(|&b| f32::from_bits(b)).collect()
+            }
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// One blocking protocol connection.  Requests are fire-and-forget
+/// writes; responses interleave on the same socket and are pulled with
+/// [`NetClient::next_event`].  Clone the connection with
+/// [`NetClient::try_clone`] to split request and response pumping
+/// across threads (the load-generator's open-loop shape).
+pub struct NetClient {
+    stream: TcpStream,
+}
+
+impl NetClient {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        Ok(NetClient { stream })
+    }
+
+    /// A second handle on the same connection (shared socket): one
+    /// thread writes requests, another drains events.
+    pub fn try_clone(&self) -> Result<NetClient> {
+        Ok(NetClient {
+            stream: self.stream.try_clone()?,
+        })
+    }
+
+    /// Describe a tenant.  Follow with [`NetClient::push_edits`] and
+    /// seal with [`NetClient::infer`] — nothing is admitted before the
+    /// infer frame.
+    pub fn admit(&mut self, req: &TenantRequest) -> Result<()> {
+        write_frame(
+            &mut self.stream,
+            &Frame::Admit {
+                token: req.token,
+                model: model_to_u8(req.model),
+                weight: req.weight,
+                seed: req.seed,
+                deadline_us: req.deadline_us,
+                name: req.name.clone(),
+            },
+        )
+    }
+
+    /// Stream raw COO edges for a pending tenant (chunked
+    /// automatically).
+    pub fn push_edits(&mut self, token: u32, edges: &[CooEdge]) -> Result<()> {
+        for chunk in edges.chunks(EDIT_CHUNK) {
+            write_frame(
+                &mut self.stream,
+                &Frame::PushEdits {
+                    token,
+                    edges: chunk.to_vec(),
+                },
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Seal the pending tenant and start serving it: snapshots are cut
+    /// at `splitter_secs` windows, truncated at `limit` (0 =
+    /// unlimited).
+    pub fn infer(&mut self, token: u32, splitter_secs: i64, limit: u64) -> Result<()> {
+        write_frame(
+            &mut self.stream,
+            &Frame::Infer {
+                token,
+                splitter_secs,
+                limit,
+            },
+        )
+    }
+
+    /// Drain and remove a live tenant.
+    pub fn remove(&mut self, token: u32) -> Result<()> {
+        write_frame(&mut self.stream, &Frame::Remove { token })
+    }
+
+    /// Retune a live tenant's WFQ weight.
+    pub fn reweight(&mut self, token: u32, weight: u32) -> Result<()> {
+        write_frame(&mut self.stream, &Frame::Reweight { token, weight })
+    }
+
+    /// Ask the whole server to drain and stop (all connections, all
+    /// shards).
+    pub fn shutdown(&mut self) -> Result<()> {
+        write_frame(&mut self.stream, &Frame::Shutdown)
+    }
+
+    /// Block for the next server event on this connection.
+    pub fn next_event(&mut self) -> Result<NetEvent> {
+        match read_frame(&mut self.stream)? {
+            Frame::Step {
+                token,
+                index,
+                out_bits,
+            } => Ok(NetEvent::Step {
+                token,
+                index,
+                out_bits,
+            }),
+            Frame::Done {
+                token,
+                steps,
+                faulted,
+            } => Ok(NetEvent::Done {
+                token,
+                steps,
+                faulted,
+            }),
+            Frame::ErrorMsg { token, msg } => Ok(NetEvent::Error { token, msg }),
+            other => Err(Error::Protocol(format!(
+                "unexpected client-to-server frame from server: {other:?}"
+            ))),
+        }
+    }
+}

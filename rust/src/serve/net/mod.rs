@@ -1,0 +1,37 @@
+//! Network serving frontend: the paper's real-time DGNN inference
+//! claim behind a socket — a length-prefixed binary wire protocol
+//! ([`wire`]), a TCP listener mapping each connection onto the
+//! scheduler's `Command::Admit` / `Command::Remove` controller path
+//! ([`server`]), a tenant → shard router over N independent
+//! [`Scheduler`] shards ([`router`]), and a minimal blocking client
+//! ([`client`]).  CLI entry: `dgnn-booster serve --listen <addr>
+//! --shards N`.
+//!
+//! Guarantees, in order of importance:
+//!
+//! * **Bitwise transparency** — outputs cross the wire as raw f32 bit
+//!   patterns, and sharding composes with the scheduler's K-streams ≡
+//!   K-independent-runs invariant, so a tenant's served outputs are
+//!   bitwise-identical to an in-process `Scheduler::serve` run at any
+//!   shard count (`rust/tests/net_serve.rs`).
+//! * **Connection-scoped failure** — a malformed frame (version,
+//!   checksum, length, type) errors only the connection that sent it;
+//!   shards and other connections never observe it.
+//! * **Shard-scoped tenancy** — a tenant's whole life (session, WFQ
+//!   weight, failure domain) stays on shard `token % shards`; shards
+//!   share no engine, slots or locks, which is the seam a multi-process
+//!   deployment would split at.
+//!
+//! [`Scheduler`]: crate::serve::Scheduler
+
+pub mod client;
+pub mod router;
+pub mod server;
+pub mod wire;
+
+pub use client::{NetClient, NetEvent, TenantRequest};
+pub use router::{ShardConfig, ShardRouter, WireTenant};
+pub use server::{NetServer, NetServerConfig};
+pub use wire::{
+    model_from_u8, model_to_u8, read_frame, write_frame, Frame, MAX_PAYLOAD, WIRE_VERSION,
+};

@@ -1,0 +1,383 @@
+//! Tenant → shard routing over N independent [`Scheduler`] shards.
+//!
+//! Each shard is a full serving stack of its own — engine, staging-slot
+//! pool, stage pool, WFQ governor — built from one [`ShardConfig`] and
+//! driven to completion on a dedicated OS thread by one long
+//! [`Scheduler::serve_report`] call whose controller drains a
+//! message mailbox (the network frontend's admit / remove /
+//! reweight / shutdown commands map 1:1 onto the scheduler's
+//! [`Command`] path).  Tenants land on shard `token % shards`, so a
+//! tenant's whole lifetime stays inside one failure and numerics
+//! domain; the cross-shard determinism story is exactly the scheduler's
+//! K-streams ≡ K-independent-runs invariant, which is why the shard
+//! count never changes any tenant's bits (`rust/tests/net_serve.rs`).
+//!
+//! The split between *constructing* a scheduler (config) and *owning*
+//! its engine/pools (the shard thread) is what this module adds over
+//! `serve::scheduler`; a future multi-process tier can replace the
+//! `mpsc` mailbox with a socket without touching the scheduler.
+
+use crate::error::{Error, Result};
+use crate::graph::CooStream;
+use crate::models::{Dims, ModelKind};
+use crate::numerics::Engine;
+use crate::runtime::Manifest;
+use crate::serve::scheduler::{Command, Scheduler, ServeEvent, ServeReport, TenantId};
+use crate::serve::session::{SessionConfig, TenantSpec};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc};
+
+/// Everything needed to build one serving shard from scratch: the
+/// construction half of the scheduler, with ownership deferred to the
+/// shard thread.  `Copy`-cheap so the router can stamp out N shards.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Worker threads of the shard's shared sparse engine.
+    pub engine_threads: usize,
+    /// Staging slots bounding the shard's in-flight snapshots.
+    pub slots: usize,
+    /// Work-stealing stage-pool size; 0 = thread-per-tenant.
+    pub stage_pool: usize,
+    /// Cross-stream batched projection on the shard's inference thread.
+    pub batch: bool,
+    /// Delta-aware recurrent sessions (`SessionConfig::delta`).
+    pub delta: bool,
+    /// Model dimensions every tenant of this deployment shares.
+    pub dims: Dims,
+}
+
+impl ShardConfig {
+    /// Materialise the shard's owned runtime: a fresh engine plus a
+    /// scheduler wired to it.  Called on the shard thread, never on the
+    /// listener — shards share nothing but the process.
+    pub fn build(&self) -> (Arc<Engine>, Scheduler) {
+        let engine = Arc::new(Engine::new(self.engine_threads.max(1)));
+        let sched = Scheduler::new(Arc::clone(&engine), self.slots.max(1))
+            .with_stage_pool(self.stage_pool)
+            .with_batching(self.batch);
+        (engine, sched)
+    }
+}
+
+/// Wire-level description of a tenant-to-be (what [`Frame::Admit`]
+/// carries); the shard turns it into a real [`TenantSpec`] — sessions
+/// are built shard-side because they are not `Send`.
+///
+/// [`Frame::Admit`]: super::wire::Frame::Admit
+#[derive(Clone, Debug)]
+pub struct WireTenant {
+    /// Client-chosen tenant handle; also picks the shard
+    /// (`token % shards`).
+    pub token: u32,
+    pub name: String,
+    pub model: ModelKind,
+    /// Per-tenant parameter/RNG seed (`SessionConfig::seed`).
+    pub seed: u64,
+    /// WFQ weight (0 = background).
+    pub weight: u32,
+    /// Latency target in microseconds; 0 = no deadline.
+    pub deadline_us: u64,
+}
+
+/// A command into one shard's mailbox.
+pub(crate) enum ShardMsg {
+    /// Admit a fully described tenant; per-step replies flow back
+    /// through `reply` until the tenant drains.
+    Admit {
+        desc: WireTenant,
+        stream: Arc<CooStream>,
+        splitter_secs: i64,
+        limit: usize,
+        reply: mpsc::Sender<NetReply>,
+    },
+    Remove { token: u32 },
+    Reweight { token: u32, weight: u32 },
+    /// Stop the shard: drain every live tenant, then return the report.
+    Shutdown,
+}
+
+/// A shard's answer to the connection that admitted the tenant.
+pub(crate) enum NetReply {
+    Step {
+        token: u32,
+        index: u64,
+        out_bits: Vec<u32>,
+    },
+    Done {
+        token: u32,
+        steps: u64,
+        faulted: bool,
+    },
+    Err { token: u32, msg: String },
+}
+
+/// A live tenant's shard-side bookkeeping.
+struct ShardLive {
+    token: u32,
+    steps: u64,
+    faulted: bool,
+    reply: mpsc::Sender<NetReply>,
+}
+
+/// Mutable shard state shared between the controller and the `on_step`
+/// callback.  Both closures run on the shard's inference thread and
+/// are never re-entered, so a `RefCell` is sound.
+struct ShardState {
+    /// Predicted next scheduler tenant id.  Valid because every admit
+    /// flows through this mailbox in order and the default
+    /// `ServePolicy::admit_cap` (`usize::MAX`) never rejects, so the
+    /// scheduler's own sequential id assignment matches this counter.
+    next_id: TenantId,
+    by_id: HashMap<TenantId, ShardLive>,
+    by_token: HashMap<u32, TenantId>,
+    stopping: bool,
+}
+
+/// Translate one mailbox message into scheduler commands (and local
+/// bookkeeping).  Runs on the shard's inference thread.
+fn apply_msg(
+    engine: &Arc<Engine>,
+    cfg: &ShardConfig,
+    manifest: &Manifest,
+    msg: ShardMsg,
+    st: &mut ShardState,
+    cmds: &mut Vec<Command>,
+) {
+    match msg {
+        ShardMsg::Admit {
+            desc,
+            stream,
+            splitter_secs,
+            limit,
+            reply,
+        } => {
+            if st.by_token.contains_key(&desc.token) {
+                let _ = reply.send(NetReply::Err {
+                    token: desc.token,
+                    msg: format!("token {} is already serving on this shard", desc.token),
+                });
+                return;
+            }
+            let session = desc.model.build_session(&SessionConfig {
+                dims: cfg.dims,
+                seed: desc.seed,
+                total_nodes: stream.num_nodes as usize,
+                max_nodes: manifest.max_nodes,
+                delta: cfg.delta,
+                engine: Arc::clone(engine),
+            });
+            let mut spec = TenantSpec::new(&desc.name, stream, splitter_secs, desc.weight, session)
+                .with_limit(limit);
+            if desc.deadline_us > 0 {
+                spec = spec.with_deadline_ms(desc.deadline_us as f64 / 1e3);
+            }
+            let id = st.next_id;
+            st.next_id += 1;
+            st.by_id.insert(
+                id,
+                ShardLive {
+                    token: desc.token,
+                    steps: 0,
+                    faulted: false,
+                    reply,
+                },
+            );
+            st.by_token.insert(desc.token, id);
+            cmds.push(Command::Admit(spec));
+        }
+        ShardMsg::Remove { token } => {
+            if let Some(&id) = st.by_token.get(&token) {
+                cmds.push(Command::Remove(id));
+            }
+        }
+        ShardMsg::Reweight { token, weight } => {
+            if let Some(&id) = st.by_token.get(&token) {
+                cmds.push(Command::SetWeight(id, weight));
+            }
+        }
+        ShardMsg::Shutdown => {
+            st.stopping = true;
+            cmds.push(Command::Stop);
+        }
+    }
+}
+
+/// One shard's whole life: build the owned runtime, serve the mailbox
+/// until shutdown (or every sender hangs up), return the report.
+fn shard_serve(
+    cfg: ShardConfig,
+    manifest: Manifest,
+    rx: mpsc::Receiver<ShardMsg>,
+) -> Result<ServeReport> {
+    let (engine, sched) = cfg.build();
+    let state = RefCell::new(ShardState {
+        next_id: 0,
+        by_id: HashMap::new(),
+        by_token: HashMap::new(),
+        stopping: false,
+    });
+
+    sched.serve_report(
+        &manifest,
+        Vec::new(),
+        |ev| {
+            let st = &mut *state.borrow_mut();
+            let mut cmds = Vec::new();
+            // drain whatever the connections queued since the last event
+            while let Ok(msg) = rx.try_recv() {
+                apply_msg(&engine, &cfg, &manifest, msg, st, &mut cmds);
+            }
+            match ev {
+                ServeEvent::Quarantined { tenant } => {
+                    if let Some(live) = st.by_id.get_mut(&tenant) {
+                        live.faulted = true;
+                    }
+                }
+                ServeEvent::Drained { tenant } => {
+                    if let Some(live) = st.by_id.remove(&tenant) {
+                        st.by_token.remove(&live.token);
+                        let _ = live.reply.send(NetReply::Done {
+                            token: live.token,
+                            steps: live.steps,
+                            faulted: live.faulted,
+                        });
+                    }
+                }
+                ServeEvent::Idle => {
+                    // nothing live: block on the mailbox so an idle
+                    // shard costs no CPU; a hangup of every sender is
+                    // an implicit shutdown
+                    while cmds.is_empty() && !st.stopping {
+                        match rx.recv() {
+                            Ok(msg) => apply_msg(&engine, &cfg, &manifest, msg, st, &mut cmds),
+                            Err(_) => st.stopping = true,
+                        }
+                    }
+                }
+                ServeEvent::Step { .. } => {}
+            }
+            cmds
+        },
+        |id, snap, _slot, out| {
+            let mut st = state.borrow_mut();
+            if let Some(live) = st.by_id.get_mut(&id) {
+                live.steps += 1;
+                // raw bit patterns: the wire must not perturb numerics
+                let _ = live.reply.send(NetReply::Step {
+                    token: live.token,
+                    index: snap.index as u64,
+                    out_bits: out.iter().map(|v| v.to_bits()).collect(),
+                });
+            }
+            Ok(())
+        },
+    )
+}
+
+fn merge_reports(mut acc: ServeReport, next: ServeReport) -> ServeReport {
+    // outcomes keep shard-local ids (they collide across shards by
+    // design); consumers key on `name`, which the frontend keeps unique
+    acc.outcomes.extend(next.outcomes);
+    acc.batch.rounds += next.batch.rounds;
+    acc.batch.steps += next.batch.steps;
+    acc.batch.fallback_steps += next.batch.fallback_steps;
+    acc.batch.fused_calls += next.batch.fused_calls;
+    acc.batch.fused_requests += next.batch.fused_requests;
+    acc.batch.fused_rows += next.batch.fused_rows;
+    acc.health.faults_injected += next.health.faults_injected;
+    acc.health.retries += next.health.retries;
+    acc.health.shed += next.health.shed;
+    acc.health.deadline_shed += next.health.deadline_shed;
+    acc.health.deadline_misses += next.health.deadline_misses;
+    acc.health.breaker_trips += next.health.breaker_trips;
+    acc.health.quarantined += next.health.quarantined;
+    acc.health.admits_rejected += next.health.admits_rejected;
+    acc.stage_threads += next.stage_threads;
+    acc
+}
+
+/// N independent serving shards plus the token → shard map.  The
+/// router owns each shard's mailbox sender and join handle; dropping
+/// it without the explicit shutdown-and-join drain hangs up every
+/// mailbox, which shards treat as shutdown.
+pub struct ShardRouter {
+    txs: Vec<mpsc::Sender<ShardMsg>>,
+    handles: Vec<std::thread::JoinHandle<Result<ServeReport>>>,
+}
+
+impl ShardRouter {
+    /// Spawn `shards` (min 1) shard threads, each building its own
+    /// engine + scheduler from `cfg` under the shared padded
+    /// `manifest`.
+    pub(crate) fn spawn(cfg: ShardConfig, manifest: &Manifest, shards: usize) -> ShardRouter {
+        let n = shards.max(1);
+        let mut txs = Vec::with_capacity(n);
+        let mut handles = Vec::with_capacity(n);
+        for s in 0..n {
+            let (tx, rx) = mpsc::channel();
+            let m = manifest.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("dgnn-shard-{s}"))
+                    .spawn(move || shard_serve(cfg, m, rx))
+                    .expect("spawn shard thread"),
+            );
+            txs.push(tx);
+        }
+        ShardRouter { txs, handles }
+    }
+
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Which shard a token lands on.
+    pub fn shard_of(&self, token: u32) -> usize {
+        token as usize % self.txs.len()
+    }
+
+    /// A mailbox handle for `token`'s shard (connections clone one per
+    /// message batch; shards see per-connection FIFO order because each
+    /// connection sends from a single reader thread).
+    pub(crate) fn sender_for(&self, token: u32) -> mpsc::Sender<ShardMsg> {
+        self.txs[self.shard_of(token)].clone()
+    }
+
+    /// Stop every shard, join them, and merge the per-shard reports:
+    /// outcomes concatenated in shard order, counters summed.  The
+    /// first shard error (or panic) wins; later shards still get
+    /// joined so nothing leaks.
+    pub(crate) fn shutdown_and_join(self) -> Result<ServeReport> {
+        for tx in &self.txs {
+            let _ = tx.send(ShardMsg::Shutdown);
+        }
+        drop(self.txs);
+        let mut merged: Option<ServeReport> = None;
+        let mut first_err: Option<Error> = None;
+        for handle in self.handles {
+            match handle.join() {
+                Ok(Ok(report)) => {
+                    merged = Some(match merged.take() {
+                        None => report,
+                        Some(acc) => merge_reports(acc, report),
+                    });
+                }
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    if first_err.is_none() {
+                        first_err = Some(Error::Graph("shard thread panicked".into()));
+                    }
+                }
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        merged.ok_or_else(|| Error::Usage("router needs at least one shard".into()))
+    }
+}

@@ -1,0 +1,361 @@
+//! TCP serving frontend: a listener thread that speaks the
+//! `serve::net::wire` protocol and maps every connection onto the
+//! sharded scheduler tier.
+//!
+//! Threading shape per [`NetServer::run`]:
+//!
+//! * the calling thread runs the **accept loop** (non-blocking listener
+//!   polled against the shutdown flag);
+//! * each accepted connection gets a **reader thread** (decodes frames,
+//!   routes shard messages) and a **writer thread** (drains the
+//!   connection's reply mailbox back into response frames) — replies
+//!   never block a shard: the mailbox is unbounded and the writer owns
+//!   the socket's write half;
+//! * `shards` **shard threads** ([`ShardRouter`]) each drive one
+//!   independent `Scheduler`.
+//!
+//! A malformed frame (bad version / checksum / oversized length) errors
+//! only its own connection — the reader answers with one
+//! [`Frame::ErrorMsg`] and hangs up, and no shard ever observes the
+//! poison.  Application-level mistakes (unknown token, empty edge
+//! list, unknown model code) answer with an error frame and keep the
+//! connection alive.
+//!
+//! [`Frame::ErrorMsg`]: super::wire::Frame::ErrorMsg
+
+use super::router::{NetReply, ShardConfig, ShardMsg, ShardRouter, WireTenant};
+use super::wire::{model_from_u8, read_frame, write_frame, Frame};
+use crate::error::{Error, Result};
+use crate::graph::{CooEdge, CooStream};
+use crate::runtime::Manifest;
+use crate::serve::scheduler::ServeReport;
+use std::collections::HashMap;
+use std::io::ErrorKind;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Poll interval of the accept loop and of readers waiting between
+/// frames (both re-check the shutdown flag at this cadence).
+const POLL: Duration = Duration::from_millis(10);
+
+/// Read timeout *inside* a frame: a peer that stalls mid-frame for this
+/// long errors its connection (framing is unrecoverable mid-frame).
+const FRAME_STALL: Duration = Duration::from_secs(5);
+
+/// Deployment-wide sizing for a network serving tier: the per-shard
+/// runtime config plus the padded staging manifest every shard shares.
+/// Size `max_nodes` / `max_edges` over the widest snapshot any client
+/// may push (`Scheduler::manifest_for_streams` semantics) — an
+/// oversized snapshot surfaces as a per-tenant `Budget` fault, not a
+/// crash.
+#[derive(Clone, Copy, Debug)]
+pub struct NetServerConfig {
+    /// Independent scheduler shards (min 1); tenants land on
+    /// `token % shards`.
+    pub shards: usize,
+    /// Per-shard runtime: engine threads, slots, stage pool, batching,
+    /// delta mode, model dims.
+    pub shard: ShardConfig,
+    /// Padded node budget per staged snapshot (shared by all shards).
+    pub max_nodes: usize,
+    /// Padded edge budget per staged snapshot.
+    pub max_edges: usize,
+}
+
+impl NetServerConfig {
+    /// The padded staging manifest every shard builds its slot pool
+    /// from.
+    pub fn manifest(&self) -> Manifest {
+        Manifest {
+            max_nodes: self.max_nodes.max(1),
+            max_edges: self.max_edges.max(1),
+            in_dim: self.shard.dims.in_dim,
+            hidden_dim: self.shard.dims.hidden_dim,
+            out_dim: self.shard.dims.out_dim,
+        }
+    }
+}
+
+/// A bound-but-not-yet-serving network frontend.  `bind` then `run`;
+/// `run` consumes the server and returns the merged cross-shard
+/// [`ServeReport`] once a client sends [`Frame::Shutdown`].
+///
+/// [`Frame::Shutdown`]: super::wire::Frame::Shutdown
+pub struct NetServer {
+    listener: TcpListener,
+    cfg: NetServerConfig,
+    shutdown: Arc<AtomicBool>,
+}
+
+impl NetServer {
+    /// Bind the listener (use port 0 for an ephemeral port; read it
+    /// back with [`NetServer::local_addr`]).  Shards are not spawned
+    /// until [`NetServer::run`].
+    pub fn bind(addr: &str, cfg: NetServerConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        Ok(NetServer {
+            listener,
+            cfg,
+            shutdown: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// A handle that flips the server into shutdown from another
+    /// thread (the in-band [`Frame::Shutdown`] frame does the same).
+    ///
+    /// [`Frame::Shutdown`]: super::wire::Frame::Shutdown
+    pub fn shutdown_handle(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Serve until shutdown: spawn the shard tier, accept connections,
+    /// then drain — stop accepting, stop every shard (draining live
+    /// tenants), join connection threads, and merge the per-shard
+    /// reports.
+    pub fn run(self) -> Result<ServeReport> {
+        let manifest = self.cfg.manifest();
+        let router = ShardRouter::spawn(self.cfg.shard, &manifest, self.cfg.shards);
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut accept_err: Option<Error> = None;
+
+        while !self.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let senders: Vec<mpsc::Sender<ShardMsg>> =
+                        (0..router.shards() as u32).map(|s| router.sender_for(s)).collect();
+                    let flag = Arc::clone(&self.shutdown);
+                    conns.push(
+                        std::thread::Builder::new()
+                            .name("dgnn-net-conn".into())
+                            .spawn(move || handle_conn(stream, senders, flag))
+                            .expect("spawn connection thread"),
+                    );
+                }
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::Interrupted) => {
+                    std::thread::sleep(POLL);
+                }
+                Err(e) => {
+                    accept_err = Some(Error::Io(e));
+                    self.shutdown.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+
+        // drain order matters: shards first (readers route no further
+        // admits once the flag is up), so every live tenant's Done
+        // reply is in its connection mailbox before writers hang up
+        let report = router.shutdown_and_join();
+        for c in conns {
+            let _ = c.join();
+        }
+        match accept_err {
+            Some(e) => Err(e),
+            None => report,
+        }
+    }
+}
+
+/// A tenant described but not yet shipped to its shard (between
+/// `Admit` and `Infer` frames): the connection buffers its edges here.
+struct PendingTenant {
+    desc: WireTenant,
+    edges: Vec<CooEdge>,
+}
+
+fn handle_conn(stream: TcpStream, senders: Vec<mpsc::Sender<ShardMsg>>, shutdown: Arc<AtomicBool>) {
+    let _ = stream.set_nodelay(true);
+    let (reply_tx, reply_rx) = mpsc::channel::<NetReply>();
+    let writer_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let writer = std::thread::Builder::new()
+        .name("dgnn-net-write".into())
+        .spawn(move || write_loop(writer_stream, reply_rx))
+        .expect("spawn writer thread");
+    read_loop(stream, &senders, &reply_tx, &shutdown);
+    // the reader holds the last connection-side sender; shard-side
+    // clones die when the connection's tenants drain, so the writer's
+    // recv loop ends once both are gone
+    drop(reply_tx);
+    let _ = writer.join();
+}
+
+fn write_loop(mut stream: TcpStream, rx: mpsc::Receiver<NetReply>) {
+    while let Ok(reply) = rx.recv() {
+        let frame = match reply {
+            NetReply::Step {
+                token,
+                index,
+                out_bits,
+            } => Frame::Step {
+                token,
+                index,
+                out_bits,
+            },
+            NetReply::Done {
+                token,
+                steps,
+                faulted,
+            } => Frame::Done {
+                token,
+                steps,
+                faulted,
+            },
+            NetReply::Err { token, msg } => Frame::ErrorMsg { token, msg },
+        };
+        if write_frame(&mut stream, &frame).is_err() {
+            break; // client hung up; shards keep draining regardless
+        }
+    }
+}
+
+fn read_loop(
+    mut stream: TcpStream,
+    senders: &[mpsc::Sender<ShardMsg>],
+    reply_tx: &mpsc::Sender<NetReply>,
+    shutdown: &AtomicBool,
+) {
+    let mut pending: HashMap<u32, PendingTenant> = HashMap::new();
+    let mut probe = [0u8; 1];
+    loop {
+        // between frames: poll for the first byte without consuming it,
+        // so shutdown never splits a frame read
+        let _ = stream.set_read_timeout(Some(POLL));
+        match stream.peek(&mut probe) {
+            Ok(0) => return, // clean EOF
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        }
+        // a frame is inbound: read it with the stall guard
+        let _ = stream.set_read_timeout(Some(FRAME_STALL));
+        match read_frame(&mut stream) {
+            Ok(frame) => {
+                if !dispatch(frame, senders, reply_tx, &mut pending, shutdown) {
+                    return;
+                }
+            }
+            Err(e) => {
+                // malformed frame: fail THIS connection only — answer
+                // once, hang up, never forward anything to a shard
+                let _ = reply_tx.send(NetReply::Err {
+                    token: u32::MAX,
+                    msg: e.to_string(),
+                });
+                return;
+            }
+        }
+    }
+}
+
+/// Apply one well-formed frame; `false` ends the connection.
+fn dispatch(
+    frame: Frame,
+    senders: &[mpsc::Sender<ShardMsg>],
+    reply_tx: &mpsc::Sender<NetReply>,
+    pending: &mut HashMap<u32, PendingTenant>,
+    shutdown: &AtomicBool,
+) -> bool {
+    let nack = |token: u32, msg: String| {
+        let _ = reply_tx.send(NetReply::Err { token, msg });
+    };
+    match frame {
+        Frame::Admit {
+            token,
+            model,
+            weight,
+            seed,
+            deadline_us,
+            name,
+        } => {
+            let Some(kind) = model_from_u8(model) else {
+                nack(token, format!("unknown model code {model}"));
+                return true;
+            };
+            if pending.contains_key(&token) {
+                nack(token, format!("token {token} already has a pending admit"));
+                return true;
+            }
+            pending.insert(
+                token,
+                PendingTenant {
+                    desc: WireTenant {
+                        token,
+                        name,
+                        model: kind,
+                        seed,
+                        weight,
+                        deadline_us,
+                    },
+                    edges: Vec::new(),
+                },
+            );
+        }
+        Frame::PushEdits { token, edges } => match pending.get_mut(&token) {
+            Some(p) => p.edges.extend(edges),
+            None => nack(token, format!("push-edits for unknown token {token}")),
+        },
+        Frame::Infer {
+            token,
+            splitter_secs,
+            limit,
+        } => {
+            let Some(p) = pending.remove(&token) else {
+                nack(token, format!("infer for unknown token {token}"));
+                return true;
+            };
+            if splitter_secs <= 0 {
+                nack(token, format!("non-positive time splitter {splitter_secs}"));
+                return true;
+            }
+            match CooStream::from_edges(&p.desc.name, p.edges) {
+                Ok(stream) => {
+                    let msg = ShardMsg::Admit {
+                        desc: p.desc,
+                        stream: Arc::new(stream),
+                        splitter_secs,
+                        limit: if limit == 0 {
+                            usize::MAX
+                        } else {
+                            usize::try_from(limit).unwrap_or(usize::MAX)
+                        },
+                        reply: reply_tx.clone(),
+                    };
+                    let _ = senders[token as usize % senders.len()].send(msg);
+                }
+                Err(e) => nack(token, e.to_string()),
+            }
+        }
+        Frame::Remove { token } => {
+            let _ = senders[token as usize % senders.len()].send(ShardMsg::Remove { token });
+        }
+        Frame::Reweight { token, weight } => {
+            let _ = senders[token as usize % senders.len()]
+                .send(ShardMsg::Reweight { token, weight });
+        }
+        Frame::Shutdown => {
+            shutdown.store(true, Ordering::SeqCst);
+            return false;
+        }
+        Frame::Step { .. } | Frame::Done { .. } | Frame::ErrorMsg { .. } => {
+            // server→client frames arriving at the server are a
+            // protocol violation: fail the connection
+            nack(u32::MAX, "server-to-client frame sent by client".into());
+            return false;
+        }
+    }
+    true
+}

@@ -1,0 +1,588 @@
+//! Length-prefixed binary wire protocol for the network serving
+//! frontend.
+//!
+//! Every frame is a fixed 10-byte header followed by a payload:
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     version byte (== WIRE_VERSION)
+//! 1       1     frame type
+//! 2       4     payload length, u32 little-endian (<= MAX_PAYLOAD)
+//! 6       4     FNV-1a-32 checksum of the payload, u32 little-endian
+//! 10      len   payload (per-type layout below, all little-endian)
+//! ```
+//!
+//! Client → server frames: [`Frame::Admit`], [`Frame::PushEdits`],
+//! [`Frame::Infer`], [`Frame::Reweight`], [`Frame::Remove`],
+//! [`Frame::Shutdown`].  Server → client frames: [`Frame::Step`],
+//! [`Frame::Done`], [`Frame::ErrorMsg`].  A malformed frame (wrong
+//! version, bad checksum, oversized length, unknown type, truncated
+//! payload) is an [`Error::Protocol`] / [`Error::Io`] — fatal for the
+//! *connection*, invisible to the serving shards behind it.
+//!
+//! Floats cross the wire as raw IEEE-754 bit patterns (`f32::to_bits`),
+//! never as text, so the loopback path preserves outputs bitwise — the
+//! property `rust/tests/net_serve.rs` pins against an in-process run.
+
+use crate::error::{Error, Result};
+use crate::graph::CooEdge;
+use crate::models::ModelKind;
+use std::io::{Read, Write};
+
+/// Protocol version; bumped on any incompatible layout change.
+pub const WIRE_VERSION: u8 = 1;
+
+/// Hard cap on a single frame's payload (bytes).  Oversized length
+/// fields are rejected *before* any allocation.
+pub const MAX_PAYLOAD: u32 = 8 * 1024 * 1024;
+
+const HEADER_LEN: usize = 10;
+
+const T_ADMIT: u8 = 1;
+const T_REMOVE: u8 = 2;
+const T_REWEIGHT: u8 = 3;
+const T_PUSH_EDITS: u8 = 4;
+const T_INFER: u8 = 5;
+const T_SHUTDOWN: u8 = 6;
+const T_STEP: u8 = 16;
+const T_DONE: u8 = 17;
+const T_ERROR: u8 = 18;
+
+/// One protocol frame, either direction.  Tenants are addressed by a
+/// client-chosen `token` (u32); the server maps tokens to scheduler
+/// tenant ids internally and routes `token % shards`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Describe a tenant-to-be: model, RNG seed, WFQ weight, optional
+    /// deadline (µs, 0 = none).  Edges follow via [`Frame::PushEdits`];
+    /// nothing is admitted until [`Frame::Infer`].
+    Admit {
+        token: u32,
+        model: u8,
+        weight: u32,
+        seed: u64,
+        deadline_us: u64,
+        name: String,
+    },
+    /// Drain and detach a live tenant (maps to `Command::Remove`).
+    Remove { token: u32 },
+    /// Retune a live tenant's WFQ weight (maps to `Command::SetWeight`).
+    Reweight { token: u32, weight: u32 },
+    /// Append raw COO edges to a pending (admitted-not-yet-inferring)
+    /// tenant.  May repeat; large streams are chunked client-side.
+    PushEdits { token: u32, edges: Vec<CooEdge> },
+    /// Seal the pending tenant's edge stream and ship it to its shard:
+    /// the server builds the `CooStream`, the session, and issues
+    /// `Command::Admit`.  `limit` 0 means unlimited snapshots.
+    Infer {
+        token: u32,
+        splitter_secs: i64,
+        limit: u64,
+    },
+    /// Stop accepting connections and drain every shard; the server's
+    /// `run()` then returns the merged report.
+    Shutdown,
+    /// One served inference step: the tenant's output row block as raw
+    /// f32 bit patterns (bitwise-exact across the wire).
+    Step {
+        token: u32,
+        index: u64,
+        out_bits: Vec<u32>,
+    },
+    /// The tenant drained (stream exhausted, limit hit, or removed).
+    Done {
+        token: u32,
+        steps: u64,
+        faulted: bool,
+    },
+    /// Application-level error (unknown token, bad model code, empty
+    /// edge list...).  `token` = `u32::MAX` when not tenant-specific.
+    ErrorMsg { token: u32, msg: String },
+}
+
+/// Wire code for a model kind (`Admit.model`).
+pub fn model_to_u8(kind: ModelKind) -> u8 {
+    match kind {
+        ModelKind::EvolveGcn => 0,
+        ModelKind::GcrnM1 => 1,
+        ModelKind::GcrnM2 => 2,
+    }
+}
+
+/// Inverse of [`model_to_u8`]; `None` for unknown codes.
+pub fn model_from_u8(code: u8) -> Option<ModelKind> {
+    match code {
+        0 => Some(ModelKind::EvolveGcn),
+        1 => Some(ModelKind::GcrnM1),
+        2 => Some(ModelKind::GcrnM2),
+        _ => None,
+    }
+}
+
+/// FNV-1a 32-bit over the payload — cheap corruption tripwire, not
+/// cryptographic (the protocol assumes a trusted transport).
+fn fnv1a(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+fn perr(msg: String) -> Error {
+    Error::Protocol(msg)
+}
+
+// ---- payload encoding ----------------------------------------------
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn new() -> Enc {
+        Enc(Vec::new())
+    }
+    fn u8(&mut self, v: u8) {
+        self.0.push(v);
+    }
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn i64(&mut self, v: i64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn str16(&mut self, s: &str) -> Result<()> {
+        let b = s.as_bytes();
+        if b.len() > u16::MAX as usize {
+            return Err(perr(format!("string field too long: {} bytes", b.len())));
+        }
+        self.0.extend_from_slice(&(b.len() as u16).to_le_bytes());
+        self.0.extend_from_slice(b);
+        Ok(())
+    }
+}
+
+fn encode(frame: &Frame) -> Result<(u8, Vec<u8>)> {
+    let mut e = Enc::new();
+    let ty = match frame {
+        Frame::Admit {
+            token,
+            model,
+            weight,
+            seed,
+            deadline_us,
+            name,
+        } => {
+            e.u32(*token);
+            e.u8(*model);
+            e.u32(*weight);
+            e.u64(*seed);
+            e.u64(*deadline_us);
+            e.str16(name)?;
+            T_ADMIT
+        }
+        Frame::Remove { token } => {
+            e.u32(*token);
+            T_REMOVE
+        }
+        Frame::Reweight { token, weight } => {
+            e.u32(*token);
+            e.u32(*weight);
+            T_REWEIGHT
+        }
+        Frame::PushEdits { token, edges } => {
+            e.u32(*token);
+            e.u32(edges.len() as u32);
+            for edge in edges {
+                e.u32(edge.src);
+                e.u32(edge.dst);
+                e.u32(edge.weight.to_bits());
+                e.i64(edge.time);
+            }
+            T_PUSH_EDITS
+        }
+        Frame::Infer {
+            token,
+            splitter_secs,
+            limit,
+        } => {
+            e.u32(*token);
+            e.i64(*splitter_secs);
+            e.u64(*limit);
+            T_INFER
+        }
+        Frame::Shutdown => T_SHUTDOWN,
+        Frame::Step {
+            token,
+            index,
+            out_bits,
+        } => {
+            e.u32(*token);
+            e.u64(*index);
+            e.u32(out_bits.len() as u32);
+            for &b in out_bits {
+                e.u32(b);
+            }
+            T_STEP
+        }
+        Frame::Done {
+            token,
+            steps,
+            faulted,
+        } => {
+            e.u32(*token);
+            e.u64(*steps);
+            e.u8(u8::from(*faulted));
+            T_DONE
+        }
+        Frame::ErrorMsg { token, msg } => {
+            e.u32(*token);
+            e.str16(msg)?;
+            T_ERROR
+        }
+    };
+    Ok((ty, e.0))
+}
+
+// ---- payload decoding ----------------------------------------------
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| perr("truncated payload".into()))?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn str16(&mut self) -> Result<String> {
+        let len = self.u16()? as usize;
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec()).map_err(|_| perr("non-utf8 string field".into()))
+    }
+    fn done(&self) -> Result<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(perr(format!(
+                "{} trailing payload bytes",
+                self.buf.len() - self.pos
+            )))
+        }
+    }
+}
+
+fn decode(ty: u8, payload: &[u8]) -> Result<Frame> {
+    let mut d = Dec::new(payload);
+    let frame = match ty {
+        T_ADMIT => Frame::Admit {
+            token: d.u32()?,
+            model: d.u8()?,
+            weight: d.u32()?,
+            seed: d.u64()?,
+            deadline_us: d.u64()?,
+            name: d.str16()?,
+        },
+        T_REMOVE => Frame::Remove { token: d.u32()? },
+        T_REWEIGHT => Frame::Reweight {
+            token: d.u32()?,
+            weight: d.u32()?,
+        },
+        T_PUSH_EDITS => {
+            let token = d.u32()?;
+            let count = d.u32()? as usize;
+            // 20 wire bytes per edge: length-check before reserving
+            if count > payload.len() / 20 + 1 {
+                return Err(perr(format!("edge count {count} exceeds payload")));
+            }
+            let mut edges = Vec::with_capacity(count);
+            for _ in 0..count {
+                edges.push(CooEdge {
+                    src: d.u32()?,
+                    dst: d.u32()?,
+                    weight: f32::from_bits(d.u32()?),
+                    time: d.i64()?,
+                });
+            }
+            Frame::PushEdits { token, edges }
+        }
+        T_INFER => Frame::Infer {
+            token: d.u32()?,
+            splitter_secs: d.i64()?,
+            limit: d.u64()?,
+        },
+        T_SHUTDOWN => Frame::Shutdown,
+        T_STEP => {
+            let token = d.u32()?;
+            let index = d.u64()?;
+            let count = d.u32()? as usize;
+            if count > payload.len() / 4 + 1 {
+                return Err(perr(format!("output length {count} exceeds payload")));
+            }
+            let mut out_bits = Vec::with_capacity(count);
+            for _ in 0..count {
+                out_bits.push(d.u32()?);
+            }
+            Frame::Step {
+                token,
+                index,
+                out_bits,
+            }
+        }
+        T_DONE => Frame::Done {
+            token: d.u32()?,
+            steps: d.u64()?,
+            faulted: d.u8()? != 0,
+        },
+        T_ERROR => Frame::ErrorMsg {
+            token: d.u32()?,
+            msg: d.str16()?,
+        },
+        other => return Err(perr(format!("unknown frame type {other}"))),
+    };
+    d.done()?;
+    Ok(frame)
+}
+
+// ---- framed I/O ----------------------------------------------------
+
+/// Serialise one frame (header + payload) onto `w` and flush.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    let (ty, payload) = encode(frame)?;
+    if payload.len() > MAX_PAYLOAD as usize {
+        return Err(perr(format!(
+            "frame payload {} bytes exceeds cap {MAX_PAYLOAD}",
+            payload.len()
+        )));
+    }
+    let mut head = [0u8; HEADER_LEN];
+    head[0] = WIRE_VERSION;
+    head[1] = ty;
+    head[2..6].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    head[6..10].copy_from_slice(&fnv1a(&payload).to_le_bytes());
+    w.write_all(&head)?;
+    w.write_all(&payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read and validate one frame from `r`.  Version, length-cap and
+/// checksum are enforced here; a failure poisons only the caller's
+/// connection (the caller must stop reading — the stream position is
+/// unrecoverable after a malformed frame).
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut head = [0u8; HEADER_LEN];
+    r.read_exact(&mut head)?;
+    if head[0] != WIRE_VERSION {
+        return Err(perr(format!(
+            "unsupported wire version {} (expected {WIRE_VERSION})",
+            head[0]
+        )));
+    }
+    let len = u32::from_le_bytes(head[2..6].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(perr(format!(
+            "declared payload {len} bytes exceeds cap {MAX_PAYLOAD}"
+        )));
+    }
+    let want = u32::from_le_bytes(head[6..10].try_into().unwrap());
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    let got = fnv1a(&payload);
+    if got != want {
+        return Err(perr(format!(
+            "payload checksum mismatch: header {want:#010x}, computed {got:#010x}"
+        )));
+    }
+    decode(head[1], &payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, f).expect("encode");
+        let mut cur: &[u8] = &buf;
+        let back = read_frame(&mut cur).expect("decode");
+        assert!(cur.is_empty(), "decoder left trailing bytes");
+        back
+    }
+
+    #[test]
+    fn every_frame_kind_roundtrips_bitwise() {
+        let frames = vec![
+            Frame::Admit {
+                token: 7,
+                model: model_to_u8(ModelKind::GcrnM2),
+                weight: 4,
+                seed: 0xDEAD_BEEF_0042,
+                deadline_us: 1500,
+                name: "tenant-α".into(),
+            },
+            Frame::Remove { token: 3 },
+            Frame::Reweight { token: 3, weight: 9 },
+            Frame::PushEdits {
+                token: 1,
+                edges: vec![
+                    CooEdge {
+                        src: 5,
+                        dst: 2,
+                        weight: -0.0,
+                        time: -17,
+                    },
+                    CooEdge {
+                        src: 0,
+                        dst: 9,
+                        weight: f32::from_bits(0x7fc0_1234), // NaN payload survives
+                        time: i64::MAX,
+                    },
+                ],
+            },
+            Frame::Infer {
+                token: 1,
+                splitter_secs: 86_400,
+                limit: 0,
+            },
+            Frame::Shutdown,
+            Frame::Step {
+                token: 2,
+                index: 41,
+                out_bits: vec![0x3f80_0000, 0x8000_0000, 0xffff_ffff],
+            },
+            Frame::Done {
+                token: 2,
+                steps: 42,
+                faulted: true,
+            },
+            Frame::ErrorMsg {
+                token: u32::MAX,
+                msg: "unknown token 9".into(),
+            },
+        ];
+        for f in &frames {
+            let back = roundtrip(f);
+            match (f, &back) {
+                // PartialEq on f32 treats NaN != NaN; compare edges bitwise
+                (
+                    Frame::PushEdits { token: ta, edges: ea },
+                    Frame::PushEdits { token: tb, edges: eb },
+                ) => {
+                    assert_eq!(ta, tb);
+                    assert_eq!(ea.len(), eb.len());
+                    for (a, b) in ea.iter().zip(eb) {
+                        assert_eq!((a.src, a.dst, a.time), (b.src, b.dst, b.time));
+                        assert_eq!(a.weight.to_bits(), b.weight.to_bits());
+                    }
+                }
+                _ => assert_eq!(*f, back, "frame did not roundtrip"),
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_version_byte() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        buf[0] = WIRE_VERSION + 1;
+        let mut cur: &[u8] = &buf;
+        assert!(matches!(
+            read_frame(&mut cur),
+            Err(Error::Protocol(msg)) if msg.contains("version")
+        ));
+    }
+
+    #[test]
+    fn rejects_oversized_declared_length_before_allocating() {
+        let mut head = [0u8; HEADER_LEN];
+        head[0] = WIRE_VERSION;
+        head[1] = T_SHUTDOWN;
+        head[2..6].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        let mut cur: &[u8] = &head;
+        assert!(matches!(
+            read_frame(&mut cur),
+            Err(Error::Protocol(msg)) if msg.contains("cap")
+        ));
+    }
+
+    #[test]
+    fn rejects_corrupted_payload_via_checksum() {
+        let mut buf = Vec::new();
+        write_frame(
+            &mut buf,
+            &Frame::ErrorMsg {
+                token: 0,
+                msg: "x".into(),
+            },
+        )
+        .unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x40;
+        let mut cur: &[u8] = &buf;
+        assert!(matches!(
+            read_frame(&mut cur),
+            Err(Error::Protocol(msg)) if msg.contains("checksum")
+        ));
+    }
+
+    #[test]
+    fn truncated_header_and_payload_surface_as_io_errors() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Remove { token: 1 }).unwrap();
+        // chop mid-header and mid-payload
+        for cut in [4, HEADER_LEN + 2] {
+            let mut cur: &[u8] = &buf[..cut];
+            assert!(matches!(read_frame(&mut cur), Err(Error::Io(_))));
+        }
+    }
+
+    #[test]
+    fn unknown_frame_type_is_a_protocol_error() {
+        let payload: [u8; 0] = [];
+        let mut buf = vec![WIRE_VERSION, 200];
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&fnv1a(&payload).to_le_bytes());
+        let mut cur: &[u8] = &buf;
+        assert!(matches!(
+            read_frame(&mut cur),
+            Err(Error::Protocol(msg)) if msg.contains("unknown frame type")
+        ));
+    }
+
+    #[test]
+    fn model_codes_roundtrip_and_reject_unknown() {
+        for kind in [ModelKind::EvolveGcn, ModelKind::GcrnM1, ModelKind::GcrnM2] {
+            assert_eq!(model_from_u8(model_to_u8(kind)), Some(kind));
+        }
+        assert_eq!(model_from_u8(250), None);
+    }
+}

@@ -350,10 +350,21 @@ struct TenantSched {
     granted: u64,
     active: bool,
     waiting: bool,
+    /// Pool-mode backlog: the tenant's driver is parked off-thread
+    /// ([`SlotGovernor::try_acquire`] returned [`Acquire::Pending`])
+    /// but stays in the WFQ contention set (`waiting` remains true), so
+    /// the policy arbitrates over the *full* backlogged tenant set no
+    /// matter how few pool workers exist.
+    parked: bool,
 }
 
 struct GovState {
     free: Vec<StagingSlot>,
+    /// Slots the WFQ policy already granted to parked pool-mode tenants
+    /// ([`GovState::assign_grants`]), awaiting pickup by
+    /// [`SlotGovernor::pool_wake`] — the governor-side backlog queue's
+    /// handoff buffer.
+    assigned: HashMap<TenantId, StagingSlot>,
     tenants: HashMap<TenantId, TenantSched>,
     /// The pool's virtual time: the largest start tag
     /// `granted_before / weight` any grant has carried (SFQ-style,
@@ -386,6 +397,50 @@ impl GovState {
     fn frontier_grants(&self, weight: u32) -> u64 {
         (self.vtime * weight as f64).floor() as u64
     }
+
+    /// Move free slots to **parked** pool-mode waiters in WFQ order —
+    /// the governor-side backlog queue.  Blocked thread-mode waiters
+    /// self-serve from their condvar loop, so the assignment stops at
+    /// the first winner that isn't parked (the notify that follows the
+    /// caller wakes it).  Runs on every mutation that could pair a free
+    /// slot with a parked waiter, so `free` non-empty and a parked
+    /// tenant never coexist outside this lock.
+    fn assign_grants(&mut self) {
+        if self.closed {
+            return;
+        }
+        while !self.free.is_empty() {
+            let Some(id) = self.pick() else { break };
+            if !self.tenants.get(&id).map(|t| t.parked).unwrap_or(false) {
+                break;
+            }
+            let Some(slot) = self.free.pop() else { break };
+            let Some(t) = self.tenants.get_mut(&id) else {
+                self.free.push(slot);
+                break;
+            };
+            let start = if t.weight > 0 {
+                t.granted as f64 / t.weight as f64
+            } else {
+                f64::NEG_INFINITY // background grants don't move vtime
+            };
+            t.granted += 1;
+            t.waiting = false;
+            t.parked = false;
+            self.vtime = self.vtime.max(start);
+            self.assigned.insert(id, slot);
+        }
+    }
+}
+
+/// What [`SlotGovernor::pool_wake`] tells a parked pool-mode driver.
+enum PoolWake {
+    /// The WFQ policy assigned this tenant a slot while it was parked.
+    Grant(StagingSlot),
+    /// Removed, stopped, or shut down — the driver should finish.
+    Detach,
+    /// Still backlogged — stay parked.
+    Park,
 }
 
 /// What [`SlotGovernor::acquire`] resolves to.  `Broken` surfaces an
@@ -395,6 +450,10 @@ impl GovState {
 enum Acquire {
     /// The WFQ policy granted a free slot.
     Granted(StagingSlot),
+    /// No slot yet ([`SlotGovernor::try_acquire`] only): the tenant
+    /// stays registered in the WFQ waiting set — park the driver and
+    /// wait for [`SlotGovernor::pool_wake`] to deliver the grant.
+    Pending,
     /// The tenant was removed or the scheduler shut down — wind down.
     Detached,
     /// Governor state inconsistent (should be unreachable).
@@ -433,6 +492,7 @@ impl SlotGovernor {
         SlotGovernor {
             state: Mutex::new(GovState {
                 free,
+                assigned: HashMap::new(),
                 tenants: HashMap::new(),
                 vtime: 0.0,
                 closed: false,
@@ -448,8 +508,10 @@ impl SlotGovernor {
     fn admit(&self, id: TenantId, weight: u32) {
         let mut st = self.lock();
         let granted = st.frontier_grants(weight);
-        st.tenants
-            .insert(id, TenantSched { weight, granted, active: true, waiting: false });
+        st.tenants.insert(
+            id,
+            TenantSched { weight, granted, active: true, waiting: false, parked: false },
+        );
     }
 
     fn set_weight(&self, id: TenantId, weight: u32) {
@@ -468,6 +530,7 @@ impl SlotGovernor {
             };
             t.weight = weight;
         }
+        st.assign_grants();
         self.cv.notify_all();
     }
 
@@ -476,18 +539,32 @@ impl SlotGovernor {
         if let Some(t) = st.tenants.get_mut(&id) {
             t.active = false;
         }
+        // a grant assigned while the tenant was parked is recycled, not
+        // stranded — its driver detaches on its next wake
+        if let Some(slot) = st.assigned.remove(&id) {
+            st.free.push(slot);
+            st.assign_grants();
+        }
         self.cv.notify_all();
     }
 
     fn retire(&self, id: TenantId) {
         let mut st = self.lock();
         st.tenants.remove(&id);
+        if let Some(slot) = st.assigned.remove(&id) {
+            st.free.push(slot);
+            st.assign_grants();
+        }
         self.cv.notify_all();
     }
 
     fn close(&self) {
         let mut st = self.lock();
         st.closed = true;
+        // undelivered backlog grants return to the pool so the run's
+        // slot-leak audit stays exact
+        let undelivered: Vec<StagingSlot> = st.assigned.drain().map(|(_, s)| s).collect();
+        st.free.extend(undelivered);
         self.cv.notify_all();
     }
 
@@ -548,9 +625,73 @@ impl SlotGovernor {
         }
     }
 
+    /// Non-blocking [`Self::acquire`] for pool-mode drivers.  A loser
+    /// stays registered in the WFQ waiting set (flagged parked) instead
+    /// of holding a worker thread hostage, so the policy arbitrates
+    /// over every backlogged tenant no matter how few workers exist —
+    /// exact weight-ratio convergence no longer needs
+    /// pool ≥ tenant count.  [`Acquire::Pending`] means: park the
+    /// driver; the grant arrives later through [`Self::pool_wake`].
+    fn try_acquire(&self, id: TenantId) -> Acquire {
+        let mut st = self.lock();
+        // a grant assigned while this driver was queued behind others
+        if let Some(slot) = st.assigned.remove(&id) {
+            return Acquire::Granted(slot);
+        }
+        let live = !st.closed && st.tenants.get(&id).map(|t| t.active).unwrap_or(false);
+        if !live {
+            if let Some(t) = st.tenants.get_mut(&id) {
+                t.waiting = false;
+                t.parked = false;
+            }
+            return Acquire::Detached;
+        }
+        let vtime = st.vtime;
+        let Some(t) = st.tenants.get_mut(&id) else { return Acquire::Detached };
+        // rejoin at the frontier, exactly like the blocking path: once
+        // per window, on entry — a continuously backlogged tenant is
+        // never behind vtime, so the clamp never touches it
+        if t.weight > 0 {
+            t.granted = t.granted.max((vtime * t.weight as f64).floor() as u64);
+        }
+        t.waiting = true;
+        t.parked = true;
+        // the waiting set grew: let WFQ place every free slot now
+        st.assign_grants();
+        match st.assigned.remove(&id) {
+            Some(slot) => Acquire::Granted(slot),
+            None => Acquire::Pending,
+        }
+    }
+
+    /// What a parked pool-mode driver should do now: pick up the grant
+    /// WFQ assigned it, detach (removed / stopped / shut down), or stay
+    /// parked.  [`StagePool::pump`] polls this for every parked driver;
+    /// [`StagePool::park`] checks it once before parking to close the
+    /// race where the grant landed between [`Acquire::Pending`] and the
+    /// park itself.
+    fn pool_wake(&self, id: TenantId) -> PoolWake {
+        let mut st = self.lock();
+        if let Some(slot) = st.assigned.remove(&id) {
+            return PoolWake::Grant(slot);
+        }
+        let live = !st.closed && st.tenants.get(&id).map(|t| t.active).unwrap_or(false);
+        if !live {
+            if let Some(t) = st.tenants.get_mut(&id) {
+                t.waiting = false;
+                t.parked = false;
+            }
+            return PoolWake::Detach;
+        }
+        PoolWake::Park
+    }
+
     fn release(&self, slot: StagingSlot) {
         let mut st = self.lock();
         st.free.push(slot);
+        // backlogged pool-mode tenants take their grants here, in WFQ
+        // order; blocked thread-mode waiters wake on the notify below
+        st.assign_grants();
         self.cv.notify_all();
     }
 
@@ -692,6 +833,11 @@ impl StageInput {
 enum StageStep {
     /// A window was staged (or shed into its job): run me again.
     Continue,
+    /// Pool mode only: the window is materialized but the WFQ policy
+    /// has no slot for this tenant yet — park me off-thread
+    /// ([`StagePool::park`]); [`StagePool::pump`] re-enqueues me once
+    /// my grant (or my detach) arrives.
+    Blocked,
     /// Stream exhausted, limit hit, tenant detached, or a stream-level
     /// error was recorded — drop me (my `Drop` sends [`Msg::Done`]).
     Finished,
@@ -720,14 +866,29 @@ struct StageDriver {
     /// Stream-level error (preprocess failure, governor breach, worker
     /// panic) delivered to the collector through `Done`.
     err: Option<Error>,
+    /// Pool mode: acquire slots non-blockingly and park on
+    /// [`Acquire::Pending`] instead of holding a worker thread.
+    pooled: bool,
+    /// The cursor's window, materialized once and cached across a
+    /// parked wait so a re-woken driver resumes without re-running
+    /// preprocessing.
+    snap: Option<Snapshot>,
+    /// A slot [`StagePool::pump`] / [`StagePool::park`] delivered while
+    /// this driver was parked — consumed by the next [`Self::step`].
+    granted: Option<StagingSlot>,
 }
 
 /// The driver's `Done` travels from `Drop` so the collector always
 /// learns the tenant's staging ended — clean exit, stream error, pool
 /// shutdown, and unwind alike (post-shutdown sends fail harmlessly:
-/// the receiver is already gone).
+/// the receiver is already gone).  A delivered-but-unused grant goes
+/// back to the governor first, so shutdown can never strand a slot in
+/// a dropped driver.
 impl Drop for StageDriver {
     fn drop(&mut self) {
+        if let Some(slot) = self.granted.take() {
+            self.governor.release(slot);
+        }
         let _ = self.tx.send(Msg::Done {
             tenant: self.id,
             stager: self.stager.take(),
@@ -750,27 +911,46 @@ impl StageDriver {
             return StageStep::Finished; // nothing past the limit is served
         }
         // materialize this window: preprocess in windows mode, take the
-        // precomputed snapshot (plus its exact edge diff) in edits mode
-        let (snap, delta): (Snapshot, Option<&EdgeDelta>) = match &self.input {
-            StageInput::Windows { stream, windows } => {
-                match preprocess_window(stream, windows[i].clone(), i) {
-                    Ok(s) => (s, None),
-                    Err(e) => {
-                        self.err = Some(e);
-                        return StageStep::Finished;
+        // precomputed snapshot in edits mode.  Cached across a parked
+        // wait, so a re-woken driver goes straight to its grant.
+        if self.snap.is_none() {
+            let snap = match &self.input {
+                StageInput::Windows { stream, windows } => {
+                    match preprocess_window(stream, windows[i].clone(), i) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            self.err = Some(e);
+                            return StageStep::Finished;
+                        }
                     }
                 }
-            }
-            StageInput::Edits(steps) => (steps[i].snap.clone(), Some(&steps[i].delta)),
+                StageInput::Edits(steps) => steps[i].snap.clone(),
+            };
+            self.snap = Some(snap);
+        }
+        // a grant pump delivered while parked, else ask the governor —
+        // non-blocking in pool mode (a loser parks, the backlog queue
+        // keeps it in WFQ contention), blocking in thread mode
+        let acq = match self.granted.take() {
+            Some(slot) => Acquire::Granted(slot),
+            None if self.pooled => self.governor.try_acquire(self.id),
+            None => self.governor.acquire(self.id),
         };
-        let mut slot = match self.governor.acquire(self.id) {
+        let mut slot = match acq {
             Acquire::Granted(s) => s,
+            Acquire::Pending => return StageStep::Blocked,
             // removed / stopped / shut down — wind down cleanly
             Acquire::Detached => return StageStep::Finished,
             Acquire::Broken(e) => {
                 self.err = Some(e);
                 return StageStep::Finished;
             }
+        };
+        let snap = self.snap.take().expect("materialized above");
+        // the edits-mode exact edge diff rides in the input itself
+        let delta: Option<&EdgeDelta> = match &self.input {
+            StageInput::Edits(steps) => Some(&steps[i].delta),
+            StageInput::Windows { .. } => None,
         };
         let t_req = Instant::now();
         // injected faults fire *before* the real stage call, so a
@@ -846,6 +1026,10 @@ fn spawn_stage<'scope>(
 /// close/steal trivially race-free.
 struct PoolState {
     queues: Vec<VecDeque<StageDriver>>,
+    /// Drivers parked off-thread while backlogged at the governor
+    /// ([`StageStep::Blocked`]) — they occupy no worker and no deque
+    /// until [`StagePool::pump`] delivers their grant or their detach.
+    blocked: HashMap<TenantId, StageDriver>,
     closed: bool,
 }
 
@@ -859,6 +1043,7 @@ impl StagePool {
         StagePool {
             state: Mutex::new(PoolState {
                 queues: (0..workers.max(1)).map(|_| VecDeque::new()).collect(),
+                blocked: HashMap::new(),
                 closed: false,
             }),
             cv: Condvar::new(),
@@ -910,28 +1095,105 @@ impl StagePool {
         }
     }
 
+    /// Park a driver that came back [`StageStep::Blocked`]: it waits in
+    /// `blocked` — off every deque, occupying no worker — until
+    /// [`Self::pump`] wakes it.  One [`SlotGovernor::pool_wake`] check
+    /// first closes the race where the grant (or a detach) landed
+    /// between the driver's `Pending` and this park: the driver is then
+    /// re-enqueued immediately instead of parked.
+    fn park(&self, mut driver: StageDriver, governor: &SlotGovernor) {
+        let mut st = self.lock();
+        if st.closed {
+            return; // dropped; Done + grant-return handled by Drop
+        }
+        match governor.pool_wake(driver.id) {
+            PoolWake::Grant(slot) => {
+                driver.granted = Some(slot);
+                let home = driver.id % st.queues.len();
+                st.queues[home].push_back(driver);
+                drop(st);
+                self.cv.notify_all();
+            }
+            PoolWake::Detach => {
+                // re-enqueue: the driver's next step sees Detached and
+                // finishes cleanly (Done via Drop)
+                let home = driver.id % st.queues.len();
+                st.queues[home].push_back(driver);
+                drop(st);
+                self.cv.notify_all();
+            }
+            PoolWake::Park => {
+                st.blocked.insert(driver.id, driver);
+            }
+        }
+    }
+
+    /// Deliver governor news to parked drivers: re-enqueue every one
+    /// whose WFQ grant is ready (in tenant-id order, for determinism)
+    /// and every one whose tenant detached.  The inference thread calls
+    /// this after command processing and before blocking on the job
+    /// channel — a release whose slot went to a parked tenant would
+    /// otherwise leave everyone asleep.
+    fn pump(&self, governor: &SlotGovernor) {
+        let mut st = self.lock();
+        if st.closed || st.blocked.is_empty() {
+            return;
+        }
+        let mut ids: Vec<TenantId> = st.blocked.keys().copied().collect();
+        ids.sort_unstable();
+        let mut woke = false;
+        for id in ids {
+            match governor.pool_wake(id) {
+                PoolWake::Grant(slot) => {
+                    let Some(mut d) = st.blocked.remove(&id) else { continue };
+                    d.granted = Some(slot);
+                    let home = id % st.queues.len();
+                    st.queues[home].push_back(d);
+                    woke = true;
+                }
+                PoolWake::Detach => {
+                    let Some(d) = st.blocked.remove(&id) else { continue };
+                    let home = id % st.queues.len();
+                    st.queues[home].push_back(d);
+                    woke = true;
+                }
+                PoolWake::Park => {}
+            }
+        }
+        if woke {
+            drop(st);
+            self.cv.notify_all();
+        }
+    }
+
     /// Shut the pool down: drop every parked driver (their `Done` sends
-    /// fail against the already-dropped receiver) and wake every worker
+    /// fail against the already-dropped receiver; a delivered grant is
+    /// released back through the driver's `Drop`) and wake every worker
     /// so it exits.  Called after the collector's channel receiver is
     /// gone and the governor is closed, so no worker can block again.
     fn close(&self) {
         let mut st = self.lock();
         st.closed = true;
         st.queues.iter_mut().for_each(|q| q.clear());
+        st.blocked.clear();
         drop(st);
         self.cv.notify_all();
     }
 }
 
 /// One stage-pool worker: take a driver, advance it one window, park it
-/// again.  A panic inside a driver's step (stager or session code) is
+/// again.  A backlogged driver ([`StageStep::Blocked`]) parks off every
+/// deque — the worker moves straight on to other tenants, which is what
+/// lets the governor's backlog queue see every backlogged tenant at
+/// once.  A panic inside a driver's step (stager or session code) is
 /// caught and recorded — it finalizes that driver (run-fatal at
 /// shutdown, matching thread-per-tenant semantics) but the worker
 /// survives to keep serving its other tenants until the run winds down.
-fn stage_worker(w: usize, pool: &StagePool, panicked: &AtomicBool) {
+fn stage_worker(w: usize, pool: &StagePool, governor: &SlotGovernor, panicked: &AtomicBool) {
     while let Some(mut driver) = pool.take(w) {
         match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| driver.step())) {
             Ok(StageStep::Continue) => pool.submit(driver),
+            Ok(StageStep::Blocked) => pool.park(driver, governor),
             Ok(StageStep::Finished) => drop(driver),
             Err(_) => {
                 panicked.store(true, Ordering::Relaxed);
@@ -1174,7 +1436,8 @@ impl Scheduler {
                 // budget: admissions only park drivers on its deques
                 for w in 0..self.stage_pool {
                     let (pool_ref, flag) = (&stage_pool, &pool_panicked);
-                    handles.push(scope.spawn(move || stage_worker(w, pool_ref, flag)));
+                    let gov = Arc::clone(&governor);
+                    handles.push(scope.spawn(move || stage_worker(w, pool_ref, &gov, flag)));
                     stage_threads += 1;
                 }
             }
@@ -1261,6 +1524,9 @@ impl Scheduler {
                                 retry_budget: self.policy.retries,
                                 backoff_us: self.policy.backoff_us,
                                 err: None,
+                                pooled: use_pool,
+                                snap: None,
+                                granted: None,
                             };
                             if use_pool {
                                 stage_pool.submit(driver);
@@ -1283,6 +1549,17 @@ impl Scheduler {
                             }
                         }
                     }
+                }
+
+                // pool mode: deliver WFQ grants the governor assigned to
+                // parked (backlogged) drivers — and wake detached ones —
+                // before blocking on the channel.  Releases on this
+                // thread run `assign_grants` under the governor lock, so
+                // every slot a parked tenant won is sitting in the
+                // assigned map by now; pump moves those drivers back
+                // onto the worker deques.
+                if use_pool {
+                    stage_pool.pump(&governor);
                 }
 
                 if active_stagers == 0 && ready.is_empty() {
@@ -2083,6 +2360,41 @@ mod tests {
         assert_eq!(thread_outs, pool_outs, "pool-mode serving must be bitwise-equal");
         assert_eq!(spawned_threads, 5, "thread mode: one stage thread per tenant");
         assert_eq!(spawned_pool, 2, "pool mode: exactly the worker count");
+    }
+
+    #[test]
+    fn backlog_queue_assigns_grants_to_parked_tenants_in_wfq_order() {
+        let m = Manifest { max_nodes: 2, max_edges: 2, in_dim: 2, hidden_dim: 2, out_dim: 2 };
+        let gov = SlotGovernor::new(vec![StagingSlot::new(&m)]);
+        gov.admit(0, 1);
+        gov.admit(1, 4);
+        gov.admit(2, 1);
+        // sole waiter self-grants through the non-blocking path
+        let held = gov.try_acquire(2).granted().expect("free slot, no contention");
+        // two backlogged tenants park — more tenants than the one slot,
+        // the exact shape a small stage pool produces
+        assert!(matches!(gov.try_acquire(0), Acquire::Pending));
+        assert!(matches!(gov.try_acquire(1), Acquire::Pending));
+        // the release routes the slot to the parked WFQ winner: weight 4
+        // beats weight 1 at equal progress
+        gov.release(held);
+        assert!(matches!(gov.pool_wake(0), PoolWake::Park), "loser stays parked");
+        let PoolWake::Grant(won) = gov.pool_wake(1) else {
+            panic!("heavy parked tenant must receive the assigned grant")
+        };
+        assert_eq!(gov.lock().tenants[&1].granted, 1);
+        assert_eq!(gov.free_slots(), 0, "assigned grant left the free pool exactly once");
+        // next release reaches the remaining parked tenant
+        gov.release(won);
+        let PoolWake::Grant(won0) = gov.pool_wake(0) else {
+            panic!("remaining parked tenant gets the next grant")
+        };
+        // a parked tenant whose tenant is removed detaches on its wake
+        assert!(matches!(gov.try_acquire(1), Acquire::Pending));
+        gov.deactivate(1);
+        assert!(matches!(gov.pool_wake(1), PoolWake::Detach));
+        gov.release(won0);
+        assert_eq!(gov.free_slots(), 1, "no slot stranded in the backlog queue");
     }
 
     #[test]

@@ -1,0 +1,317 @@
+//! Loopback tests of the network serving frontend (`serve::net`).
+//!
+//! The tentpole property: a tenant served **over TCP** — admitted via
+//! wire frames, edges streamed in chunks, outputs returned as raw f32
+//! bit patterns — is **bitwise-equal** to the same tenant served by an
+//! in-process `Scheduler::serve` run, at 1 shard and at 2 shards.
+//! Sharding composes with the scheduler's K-streams ≡
+//! K-independent-runs invariant, so the shard count (and the
+//! admission interleaving the network adds) must never change any
+//! tenant's bits.
+//!
+//! The robustness property: malformed frames (truncated header, wrong
+//! version byte, oversized declared length) error only the connection
+//! that sent them — a subsequent clean connection to the same server
+//! still serves bitwise-correct results, proving the shards never saw
+//! the poison.
+
+use dgnn_booster::datasets::{synth, BC_ALPHA};
+use dgnn_booster::graph::{CooEdge, CooStream};
+use dgnn_booster::models::{Dims, ModelKind};
+use dgnn_booster::numerics::Engine;
+use dgnn_booster::serve::net::wire::{read_frame, Frame, MAX_PAYLOAD, WIRE_VERSION};
+use dgnn_booster::serve::{
+    NetClient, NetEvent, NetServer, NetServerConfig, Scheduler, SessionConfig, ShardConfig,
+    TenantRequest, TenantSpec,
+};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::Arc;
+
+const THREADS: usize = 2;
+const TENANTS: usize = 4;
+const LIMIT: usize = 3;
+const EDGES_PER_TENANT: usize = 600;
+
+/// Raw (uncompacted) edge list for tenant `i` — the client pushes these
+/// bytes; both the server and the in-process reference run
+/// `CooStream::from_edges` over them, so id compaction is identical.
+fn raw_edges(i: usize) -> Vec<CooEdge> {
+    let stream = synth::generate(&BC_ALPHA, 100 + i as u64);
+    stream.edges.iter().take(EDGES_PER_TENANT).copied().collect()
+}
+
+fn streams() -> Vec<Arc<CooStream>> {
+    (0..TENANTS)
+        .map(|i| {
+            Arc::new(CooStream::from_edges(&format!("net-{i}"), raw_edges(i)).expect("stream"))
+        })
+        .collect()
+}
+
+type PerTenant = Vec<(u64, Vec<u32>)>;
+
+/// Reference: all tenants in one in-process scheduler run; per-tenant
+/// `(snapshot index, output bits)` in served order.
+fn inproc_outputs(delta: bool) -> Vec<PerTenant> {
+    let streams = streams();
+    let model = ModelKind::GcrnM2;
+    let dims = Dims::default();
+    let engine = Arc::new(Engine::new(THREADS));
+    let manifest = Scheduler::manifest_for_streams(
+        streams.iter().map(|s| (s.as_ref(), BC_ALPHA.splitter_secs)),
+        dims,
+    );
+    let tenants: Vec<TenantSpec> = streams
+        .iter()
+        .enumerate()
+        .map(|(i, stream)| {
+            let session = model.build_session(&SessionConfig {
+                dims,
+                seed: 7 + i as u64,
+                total_nodes: stream.num_nodes as usize,
+                max_nodes: manifest.max_nodes,
+                delta,
+                engine: Arc::clone(&engine),
+            });
+            TenantSpec::new(
+                &format!("net-{i}"),
+                Arc::clone(stream),
+                BC_ALPHA.splitter_secs,
+                1,
+                session,
+            )
+            .with_limit(LIMIT)
+        })
+        .collect();
+    let sched = Scheduler::new(engine, 4).with_stage_pool(2);
+    let mut out: Vec<PerTenant> = vec![Vec::new(); TENANTS];
+    sched
+        .serve(
+            &manifest,
+            tenants,
+            |_| Vec::new(),
+            |id, snap, _slot, row| {
+                out[id].push((snap.index as u64, row.iter().map(|v| v.to_bits()).collect()));
+                Ok(())
+            },
+        )
+        .expect("in-process reference run");
+    out
+}
+
+fn spawn_server(shards: usize, delta: bool) -> (std::net::SocketAddr, std::thread::JoinHandle<dgnn_booster::error::Result<dgnn_booster::serve::ServeReport>>) {
+    let streams = streams();
+    let manifest = Scheduler::manifest_for_streams(
+        streams.iter().map(|s| (s.as_ref(), BC_ALPHA.splitter_secs)),
+        Dims::default(),
+    );
+    let server = NetServer::bind(
+        "127.0.0.1:0",
+        NetServerConfig {
+            shards,
+            shard: ShardConfig {
+                engine_threads: THREADS,
+                slots: 4,
+                stage_pool: 2,
+                batch: false,
+                delta,
+                dims: Dims::default(),
+            },
+            max_nodes: manifest.max_nodes,
+            max_edges: manifest.max_edges,
+        },
+    )
+    .expect("bind server");
+    let addr = server.local_addr().expect("local addr");
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+/// Admit `TENANTS` tenants over TCP and collect per-token outputs.
+fn net_outputs(addr: std::net::SocketAddr) -> (Vec<PerTenant>, Vec<u64>) {
+    let mut client = NetClient::connect(addr).expect("connect");
+    for i in 0..TENANTS {
+        let token = i as u32;
+        client
+            .admit(&TenantRequest {
+                token,
+                name: format!("net-{i}"),
+                model: ModelKind::GcrnM2,
+                seed: 7 + i as u64,
+                weight: 1,
+                deadline_us: 0,
+            })
+            .expect("admit");
+        client.push_edits(token, &raw_edges(i)).expect("push edits");
+        client
+            .infer(token, BC_ALPHA.splitter_secs, LIMIT as u64)
+            .expect("infer");
+    }
+    let mut out: Vec<PerTenant> = vec![Vec::new(); TENANTS];
+    let mut steps = vec![0u64; TENANTS];
+    let mut done = 0;
+    while done < TENANTS {
+        match client.next_event().expect("event") {
+            NetEvent::Step {
+                token,
+                index,
+                out_bits,
+            } => out[token as usize].push((index, out_bits)),
+            NetEvent::Done {
+                token,
+                steps: n,
+                faulted,
+            } => {
+                assert!(!faulted, "tenant {token} faulted over the wire");
+                steps[token as usize] = n;
+                done += 1;
+            }
+            NetEvent::Error { token, msg } => panic!("server error (token {token}): {msg}"),
+        }
+    }
+    client.shutdown().expect("shutdown frame");
+    (out, steps)
+}
+
+#[test]
+fn loopback_outputs_match_in_process_run_at_1_and_2_shards() {
+    let reference = inproc_outputs(true);
+    assert!(
+        reference.iter().all(|t| !t.is_empty()),
+        "reference run served no steps"
+    );
+    for shards in [1usize, 2] {
+        let (addr, server) = spawn_server(shards, true);
+        let (got, steps) = net_outputs(addr);
+        let report = server
+            .join()
+            .expect("server thread")
+            .expect("server report");
+        assert_eq!(report.outcomes.len(), TENANTS);
+        for i in 0..TENANTS {
+            assert_eq!(
+                steps[i],
+                reference[i].len() as u64,
+                "tenant {i} step count over TCP (shards={shards})"
+            );
+            assert_eq!(
+                got[i], reference[i],
+                "tenant {i} outputs diverged over the wire (shards={shards})"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharding_is_invisible_to_delta_off_tenants_too() {
+    let reference = inproc_outputs(false);
+    let (addr, server) = spawn_server(2, false);
+    let (got, _steps) = net_outputs(addr);
+    server.join().expect("server thread").expect("server report");
+    assert_eq!(got, reference);
+}
+
+/// Send raw malformed bytes on one connection, then prove the server
+/// still serves clean bitwise-correct results on a fresh connection.
+#[test]
+fn malformed_frames_error_the_connection_without_poisoning_the_shard() {
+    let (addr, server) = spawn_server(1, true);
+
+    // case 1: truncated header — peer writes 4 bytes and closes.
+    {
+        let mut s = TcpStream::connect(addr).expect("connect raw");
+        s.write_all(&[WIRE_VERSION, 1, 9, 9]).expect("partial header");
+        s.shutdown(std::net::Shutdown::Write).expect("half-close");
+        // server answers with one ErrorMsg frame, then closes
+        let reply = read_frame(&mut s).expect("error reply");
+        assert!(matches!(reply, Frame::ErrorMsg { .. }), "got {reply:?}");
+        assert!(read_frame(&mut s).is_err(), "connection should be closed");
+    }
+
+    // case 2: wrong version byte on an otherwise complete header.
+    {
+        let mut s = TcpStream::connect(addr).expect("connect raw");
+        let mut head = [0u8; 10];
+        head[0] = WIRE_VERSION + 7;
+        head[1] = 6; // shutdown frame type, but the version gate hits first
+        s.write_all(&head).expect("bad version header");
+        let reply = read_frame(&mut s).expect("error reply");
+        match reply {
+            Frame::ErrorMsg { msg, .. } => assert!(msg.contains("version"), "msg: {msg}"),
+            other => panic!("expected ErrorMsg, got {other:?}"),
+        }
+        assert!(read_frame(&mut s).is_err(), "connection should be closed");
+    }
+
+    // case 3: oversized declared payload length.
+    {
+        let mut s = TcpStream::connect(addr).expect("connect raw");
+        let mut head = [0u8; 10];
+        head[0] = WIRE_VERSION;
+        head[1] = 4; // push-edits
+        head[2..6].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        s.write_all(&head).expect("oversized header");
+        let reply = read_frame(&mut s).expect("error reply");
+        match reply {
+            Frame::ErrorMsg { msg, .. } => assert!(msg.contains("cap"), "msg: {msg}"),
+            other => panic!("expected ErrorMsg, got {other:?}"),
+        }
+        assert!(read_frame(&mut s).is_err(), "connection should be closed");
+    }
+
+    // the shard behind those three poisoned connections still serves a
+    // clean run, bitwise-equal to the in-process reference
+    let reference = inproc_outputs(true);
+    let (got, _steps) = net_outputs(addr);
+    server.join().expect("server thread").expect("server report");
+    assert_eq!(got, reference, "shard state was poisoned by a bad connection");
+}
+
+/// Application-level mistakes keep the connection alive: an infer for
+/// an unknown token answers with an error frame, and the same
+/// connection can still admit and serve a tenant afterwards.
+#[test]
+fn app_level_errors_keep_the_connection_alive() {
+    let (addr, server) = spawn_server(1, true);
+    let mut client = NetClient::connect(addr).expect("connect");
+    client
+        .infer(9, BC_ALPHA.splitter_secs, 1)
+        .expect("send bogus infer");
+    match client.next_event().expect("error event") {
+        NetEvent::Error { token, msg } => {
+            assert_eq!(token, 9);
+            assert!(msg.contains("unknown token"), "msg: {msg}");
+        }
+        other => panic!("expected Error event, got {other:?}"),
+    }
+    // same connection, real work
+    client
+        .admit(&TenantRequest {
+            token: 0,
+            name: "alive".into(),
+            model: ModelKind::GcrnM2,
+            seed: 7,
+            weight: 1,
+            deadline_us: 0,
+        })
+        .expect("admit");
+    client.push_edits(0, &raw_edges(0)).expect("edits");
+    client
+        .infer(0, BC_ALPHA.splitter_secs, LIMIT as u64)
+        .expect("infer");
+    let mut served = 0u64;
+    loop {
+        match client.next_event().expect("event") {
+            NetEvent::Step { .. } => served += 1,
+            NetEvent::Done { steps, faulted, .. } => {
+                assert!(!faulted);
+                assert_eq!(steps, served);
+                break;
+            }
+            NetEvent::Error { token, msg } => panic!("server error (token {token}): {msg}"),
+        }
+    }
+    assert!(served > 0, "no steps served after the app-level error");
+    client.shutdown().expect("shutdown");
+    server.join().expect("server thread").expect("server report");
+}
