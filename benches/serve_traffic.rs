@@ -7,7 +7,11 @@
 //! 1:2:4 under a tight slot pool, with the per-tenant fairness summary)
 //! and a **churn** run (one tenant admitted mid-run, one drained) —
 //! and record per-request end-to-end latency tails + throughput per
-//! sweep point.  Edit-stream serving gets its own sweeps: an
+//! sweep point.  A **model sweep** pairs the TGAT temporal-attention
+//! mirror against GCRN-M2 on identical rosters (batch on, so both
+//! families' projection fusion shows up), and a **konect-vs-synth**
+//! pair serves the vendored KONECT slice loaded from `data/konect/`
+//! next to the synthetic stream generated from the same profile.  Edit-stream serving gets its own sweeps: an
 //! **edits-vs-snapshot** pair (the same per-step snapshots staged via
 //! the CSR patch path vs force-restaged from scratch through
 //! [`FullRestageSession`]), a **pool-vs-thread-per-tenant** pair
@@ -25,7 +29,7 @@
 //! `cargo bench --bench serve_traffic -- --smoke` — 2 streams, tiny
 //! snapshot budget (the CI gate).
 
-use dgnn_booster::datasets::{synth, BC_ALPHA};
+use dgnn_booster::datasets::{self, synth, BC_ALPHA, KONECT_FORUM};
 use dgnn_booster::graph::CooStream;
 use dgnn_booster::models::{Dims, ModelKind};
 use dgnn_booster::numerics::Engine;
@@ -243,6 +247,133 @@ fn main() {
             }
             rows.push(row);
         }
+    }
+
+    // model sweep: identical tenant rosters served by the TGAT
+    // temporal-attention mirror vs the GCRN-M2 recurrent mirror, batch
+    // on with one shared parameter seed — the pair prices temporal
+    // attention (time-encoded softmax over in-neighbors) against the
+    // GRU recurrence at serve scale, and both families' cross-tenant
+    // projection fusion lands in the occupancy counters
+    for &k in stream_counts {
+        for kind in [ModelKind::GcrnM2, ModelKind::Tgat] {
+            let streams: Vec<Arc<CooStream>> = (0..k)
+                .map(|i| Arc::new(synth::generate(&BC_ALPHA, 1042 + i as u64)))
+                .collect();
+            let engine = Arc::new(Engine::new(THREADS));
+            let manifest = Scheduler::manifest_for_streams(
+                streams.iter().map(|s| (s.as_ref(), BC_ALPHA.splitter_secs)),
+                dims,
+            );
+            let tenants: Vec<TenantSpec> = streams
+                .iter()
+                .enumerate()
+                .map(|(i, stream)| {
+                    let session = kind.build_session(&session_cfg(
+                        stream,
+                        4242,
+                        manifest.max_nodes,
+                        true,
+                        &engine,
+                    ));
+                    TenantSpec::new(
+                        &format!("mk-{i}"),
+                        Arc::clone(stream),
+                        BC_ALPHA.splitter_secs,
+                        1,
+                        session,
+                    )
+                    .with_limit(limit)
+                })
+                .collect();
+            let sched = Scheduler::new(engine, (2 * k).clamp(2, 16)).with_batching(true);
+            let t0 = std::time::Instant::now();
+            let report = sched
+                .serve_report(&manifest, tenants, |_| Vec::new(), |_, _, _, _| Ok(()))
+                .expect("model sweep point");
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = report.batch;
+            let name = format!("serve model {} streams={k} batch=on", kind.name());
+            let row = row_from(
+                name,
+                k,
+                true,
+                false,
+                0,
+                wall,
+                &report.outcomes,
+                false,
+                Some(stats),
+                None,
+            );
+            println!(
+                "bench {:<44} {} occupancy={:.2}",
+                row.name,
+                row.summary.line(),
+                stats.occupancy()
+            );
+            rows.push(row);
+        }
+    }
+
+    // konect-vs-synth pair: tenant 0 serves the vendored KONECT slice
+    // loaded from data/konect/ (the real file-parsing path end to end),
+    // its twin serves the synthetic stream generated from the same
+    // profile — real-trace vs generator traffic shape at identical
+    // Table-III-style stats.  Tenant 1 is synthetic in both runs.
+    for vendored in [false, true] {
+        let k = 2usize;
+        let streams: Vec<Arc<CooStream>> = (0..k)
+            .map(|i| {
+                if i == 0 && vendored {
+                    Arc::new(
+                        datasets::load_or_generate(&KONECT_FORUM, "data", 7)
+                            .expect("vendored konect slice under data/"),
+                    )
+                } else {
+                    Arc::new(synth::generate(&KONECT_FORUM, 1142 + i as u64))
+                }
+            })
+            .collect();
+        let engine = Arc::new(Engine::new(THREADS));
+        let manifest = Scheduler::manifest_for_streams(
+            streams.iter().map(|s| (s.as_ref(), KONECT_FORUM.splitter_secs)),
+            dims,
+        );
+        let tenants: Vec<TenantSpec> = streams
+            .iter()
+            .enumerate()
+            .map(|(i, stream)| {
+                let session = model.build_session(&session_cfg(
+                    stream,
+                    1142 + i as u64,
+                    manifest.max_nodes,
+                    true,
+                    &engine,
+                ));
+                TenantSpec::new(
+                    &format!("kn-{i}"),
+                    Arc::clone(stream),
+                    KONECT_FORUM.splitter_secs,
+                    1,
+                    session,
+                )
+                .with_limit(limit)
+            })
+            .collect();
+        let sched = Scheduler::new(engine, 4);
+        let t0 = std::time::Instant::now();
+        let report = sched
+            .serve_report(&manifest, tenants, |_| Vec::new(), |_, _, _, _| Ok(()))
+            .expect("konect sweep point");
+        let wall = t0.elapsed().as_secs_f64();
+        let name = format!(
+            "serve konect {} streams={k}",
+            if vendored { "vendored" } else { "synth" }
+        );
+        let row = row_from(name, k, true, false, 0, wall, &report.outcomes, false, None, None);
+        println!("bench {:<44} {}", row.name, row.summary.line());
+        rows.push(row);
     }
 
     // weighted point: 3 tenants at 1:2:4 over a tight 2-slot pool —

@@ -270,16 +270,53 @@ impl Cli {
             "evolvegcn" => Ok(crate::models::ModelKind::EvolveGcn),
             "gcrn-m1" | "stacked" => Ok(crate::models::ModelKind::GcrnM1),
             "gcrn" | "gcrn-m2" => Ok(crate::models::ModelKind::GcrnM2),
+            "tgat" | "attention" => Ok(crate::models::ModelKind::Tgat),
             other => Err(Error::Usage(format!("unknown --model {other}"))),
         }
     }
 
-    pub fn dataset(&self) -> Result<&'static crate::datasets::DatasetProfile> {
-        match self.get_or("dataset", "bc-alpha").as_str() {
-            "bc-alpha" | "bitcoin-alpha" => Ok(&crate::datasets::BC_ALPHA),
-            "uci" => Ok(&crate::datasets::UCI),
-            other => Err(Error::Usage(format!("unknown --dataset {other}"))),
+    /// Every name `--dataset` accepts: the paper profiles plus the
+    /// vendored `konect:<slice>` selectors — the candidate pool for
+    /// value-level near-miss suggestions.
+    fn dataset_names() -> Vec<&'static str> {
+        let mut names = vec!["bc-alpha", "bitcoin-alpha", "uci"];
+        for p in crate::datasets::konect::vendored() {
+            names.push(p.name);
         }
+        names
+    }
+
+    /// Resolve `--dataset`: a paper profile by name, or a vendored
+    /// KONECT slice as `konect:<name>` (loaded from the checked-in file
+    /// under `data/konect/`).  Unknown values are rejected with the same
+    /// strict near-miss treatment unknown flags get.
+    pub fn dataset(&self) -> Result<&'static crate::datasets::DatasetProfile> {
+        let spec = self.get_or("dataset", "bc-alpha");
+        if let Some(slice) = spec.strip_prefix("konect:") {
+            if let Some(p) = crate::datasets::konect::vendored_slice(slice) {
+                return Ok(p);
+            }
+        } else {
+            match spec.as_str() {
+                "bc-alpha" | "bitcoin-alpha" => return Ok(&crate::datasets::BC_ALPHA),
+                "uci" => return Ok(&crate::datasets::UCI),
+                _ => {}
+            }
+        }
+        let mut near: Vec<&str> = Self::dataset_names()
+            .into_iter()
+            .filter(|k| {
+                levenshtein(&spec, k) <= 2 || k.starts_with(spec.as_str()) || spec.starts_with(k)
+            })
+            .collect();
+        near.sort_unstable();
+        near.dedup();
+        let hint = if near.is_empty() {
+            String::new()
+        } else {
+            format!(" (did you mean {}?)", near.join(" / "))
+        };
+        Err(Error::Usage(format!("unknown --dataset {spec}{hint}")))
     }
 }
 
@@ -470,7 +507,45 @@ mod tests {
         let c = Cli::parse(&s(&["serve", "--model", "gcrn-m2", "--dataset", "uci"])).unwrap();
         assert_eq!(c.model().unwrap(), crate::models::ModelKind::GcrnM2);
         assert_eq!(c.dataset().unwrap().name, "uci");
+        let c = Cli::parse(&s(&["serve", "--model", "tgat"])).unwrap();
+        assert_eq!(c.model().unwrap(), crate::models::ModelKind::Tgat);
         let bad = Cli::parse(&s(&["serve", "--model", "bert"])).unwrap();
         assert!(bad.model().is_err());
+    }
+
+    #[test]
+    fn dataset_resolves_vendored_konect_slices() {
+        // the CI smoke invocation: serve --dataset konect:forum --streams 2 --batch
+        let c = Cli::parse(&s(&["serve", "--dataset", "konect:forum", "--streams", "2", "--batch"]))
+            .unwrap();
+        let p = c.dataset().unwrap();
+        assert_eq!(p.name, "konect:forum");
+        assert!(!p.weighted);
+        let c = Cli::parse(&s(&["serve", "--dataset", "konect:trust"])).unwrap();
+        assert_eq!(c.dataset().unwrap().name, "konect:trust");
+        // default unchanged
+        let c = Cli::parse(&s(&["serve"])).unwrap();
+        assert_eq!(c.dataset().unwrap().name, "bc-alpha");
+    }
+
+    #[test]
+    fn unknown_dataset_is_rejected_with_near_miss_suggestion() {
+        // one char off a profile name
+        let c = Cli::parse(&s(&["serve", "--dataset", "ucii"])).unwrap();
+        let msg = format!("{}", c.dataset().unwrap_err());
+        assert!(msg.contains("unknown --dataset ucii"), "{msg}");
+        assert!(msg.contains("uci"), "{msg}");
+        // misspelled slice name after the konect: prefix
+        let c = Cli::parse(&s(&["serve", "--dataset", "konect:form"])).unwrap();
+        let msg = format!("{}", c.dataset().unwrap_err());
+        assert!(msg.contains("konect:forum"), "{msg}");
+        // bare prefix suggests the vendored slices
+        let c = Cli::parse(&s(&["serve", "--dataset", "konect:"])).unwrap();
+        let msg = format!("{}", c.dataset().unwrap_err());
+        assert!(msg.contains("konect:forum") && msg.contains("konect:trust"), "{msg}");
+        // nothing close: no suggestion block
+        let c = Cli::parse(&s(&["serve", "--dataset", "zzzzqqqq"])).unwrap();
+        let msg = format!("{}", c.dataset().unwrap_err());
+        assert!(!msg.contains("did you mean"), "{msg}");
     }
 }

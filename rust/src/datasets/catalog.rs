@@ -60,6 +60,43 @@ pub fn all() -> [&'static DatasetProfile; 2] {
     [&BC_ALPHA, &UCI]
 }
 
+/// Vendored KONECT-format slice: an unweighted message graph in the
+/// standard `out.*` layout, checked into `data/konect/` so the real
+/// file-loading path runs in CI without network access.  The file is a
+/// deterministic synthetic sample (NOT KONECT collection data — see its
+/// `%` header and README.md); the stats below are measured from it
+/// exactly, and the `konect` module's tests pin file ↔ profile
+/// agreement so neither drifts alone.
+pub const KONECT_FORUM: DatasetProfile = DatasetProfile {
+    name: "konect:forum",
+    konect_file: "konect/out.forum-sample",
+    total_nodes: 57,
+    total_edges: 373,
+    splitter_secs: 24 * 3600, // 1 day
+    snapshots: 8,
+    avg_nodes: 42,
+    avg_edges: 47,
+    max_nodes: 49,
+    max_edges: 60,
+    weighted: false,
+};
+
+/// Vendored KONECT-format slice with signed trust ratings (weighted
+/// edges, BC-Alpha-shaped).  Same provenance as [`KONECT_FORUM`].
+pub const KONECT_TRUST: DatasetProfile = DatasetProfile {
+    name: "konect:trust",
+    konect_file: "konect/out.trust-sample",
+    total_nodes: 46,
+    total_edges: 200,
+    splitter_secs: 7 * 24 * 3600, // 1 week
+    snapshots: 6,
+    avg_nodes: 33,
+    avg_edges: 33,
+    max_nodes: 38,
+    max_edges: 43,
+    weighted: true,
+};
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -76,9 +113,15 @@ mod tests {
 
     #[test]
     fn max_shapes_fit_aot_budget() {
-        // AOT defaults: 608 nodes, 1728 edges (model.py ModelConfig)
+        // AOT defaults: 608 nodes, 1728 edges (model.py ModelConfig).
+        // The vendored slices must fit even as full-universe edit
+        // snapshots (every window staged over total_nodes rows).
         for p in all() {
             assert!(p.max_nodes <= 608, "{}", p.name);
+            assert!(p.max_edges <= 1728, "{}", p.name);
+        }
+        for p in [&KONECT_FORUM, &KONECT_TRUST] {
+            assert!(p.total_nodes <= 608, "{}", p.name);
             assert!(p.max_edges <= 1728, "{}", p.name);
         }
     }

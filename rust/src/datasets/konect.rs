@@ -1,4 +1,4 @@
-//! KONECT temporal-graph file parser.
+//! KONECT temporal-graph file parser and vendored-slice serving glue.
 //!
 //! The KONECT `out.<name>` format is line-oriented:
 //! ```text
@@ -7,10 +7,86 @@
 //! ```
 //! Both paper datasets carry 4 columns (src dst weight time).  When a
 //! weight column is absent the weight defaults to 1.0.
+//!
+//! Two small KONECT-format slices are vendored under `data/konect/`
+//! (deterministic synthetic samples, NOT KONECT collection data — see
+//! their `%` headers), so the real file-loading path runs end-to-end in
+//! CI: `serve --dataset konect:<name>` resolves through [`vendored_slice`],
+//! loads the file, and either windows it into per-snapshot streams or —
+//! with `--edits` — converts it via [`edit_steps`] into full-universe
+//! [`EditStep`]s whose CSRs the serving layer patches in place.
 
+use super::catalog::{DatasetProfile, KONECT_FORUM, KONECT_TRUST};
+use super::synth::EditStep;
 use crate::error::{Error, Result};
-use crate::graph::{CooEdge, CooStream};
+use crate::graph::{
+    normalize_gcn, CooEdge, CooStream, EdgeDelta, RenumberTable, Snapshot, SnapshotCsr,
+};
 use std::io::BufRead;
+
+/// The vendored KONECT-format slices, selectable as
+/// `--dataset konect:<short-name>`.
+pub fn vendored() -> [&'static DatasetProfile; 2] {
+    [&KONECT_FORUM, &KONECT_TRUST]
+}
+
+/// Resolve a vendored slice by its short name (the part after the
+/// `konect:` prefix): `forum`, `trust`.
+pub fn vendored_slice(name: &str) -> Option<&'static DatasetProfile> {
+    vendored()
+        .into_iter()
+        .find(|p| p.name.strip_prefix("konect:") == Some(name))
+}
+
+/// Convert a loaded stream into an edit stream over its **full node
+/// universe**: every window becomes one [`EditStep`] whose snapshot
+/// spans all `num_nodes` nodes under a stable identity renumbering (the
+/// [`EdgeDelta`] stable-layout contract), with GCN normalisation
+/// recomputed per window (nodes idle in a window keep selfcoef 1.0).
+/// Step 0's delta lists every edge as an addition (the bootstrap full
+/// rebuild); each later delta is derived exactly via
+/// [`EdgeDelta::between`] against the previous window's CSR, so a
+/// patched CSR equals a full rebuild bit-for-bit.
+pub fn edit_steps(stream: &CooStream, splitter_secs: i64) -> Result<Vec<EditStep>> {
+    let n = stream.num_nodes as usize;
+    if n == 0 {
+        return Err(Error::Dataset(format!("{}: empty node universe", stream.name)));
+    }
+    let renumber = RenumberTable::build((0..n as u32).map(|i| (i, i)));
+    let windows = stream.split_windows(splitter_secs);
+    let mut out = Vec::with_capacity(windows.len());
+    let mut prev: Option<SnapshotCsr> = None;
+    for (index, w) in windows.into_iter().enumerate() {
+        let edges = &stream.edges[w.clone()];
+        let src: Vec<u32> = edges.iter().map(|e| e.src).collect();
+        let dst: Vec<u32> = edges.iter().map(|e| e.dst).collect();
+        let weights: Vec<f32> = edges.iter().map(|e| e.weight).collect();
+        let (coef, selfcoef) = normalize_gcn(n, &src, &dst, &weights);
+        let snap = Snapshot {
+            index,
+            src,
+            dst,
+            coef,
+            selfcoef,
+            renumber: renumber.clone(),
+            t_start: stream.edges[w.start].time,
+        };
+        let delta = match &prev {
+            None => {
+                let mut d = EdgeDelta::new();
+                for ((&s, &dd), &c) in snap.src.iter().zip(&snap.dst).zip(&snap.coef) {
+                    d.added.push((s, dd, c));
+                }
+                d
+            }
+            Some(csr) => EdgeDelta::between(csr, &snap)
+                .expect("edit steps share one node universe"),
+        };
+        prev = Some(SnapshotCsr::from_snapshot(&snap));
+        out.push(EditStep { snap, delta });
+    }
+    Ok(out)
+}
 
 /// Parse one KONECT file into a time-sorted [`CooStream`].
 pub fn load(name: &str, path: &str) -> Result<CooStream> {
@@ -65,9 +141,11 @@ mod tests {
     use super::*;
     use std::io::Write;
 
-    fn write_tmp(content: &str) -> String {
+    /// Per-test temp file: tests run concurrently in one process, so the
+    /// tag (not just the pid) keys the path.
+    fn write_tmp(tag: &str, content: &str) -> String {
         let path = format!(
-            "{}/konect_test_{}.txt",
+            "{}/konect_test_{}_{tag}.txt",
             std::env::temp_dir().display(),
             std::process::id()
         );
@@ -78,7 +156,7 @@ mod tests {
 
     #[test]
     fn parses_four_column_format() {
-        let p = write_tmp("% sym\n1 2 5 100\n2 3 -3 200\n");
+        let p = write_tmp("four_col", "% sym\n1 2 5 100\n2 3 -3 200\n");
         let s = load("t", &p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(s.edges.len(), 2);
@@ -90,7 +168,7 @@ mod tests {
 
     #[test]
     fn skips_comments_and_blank_lines() {
-        let p = write_tmp("% a\n# b\n\n1 2 1 10\n");
+        let p = write_tmp("comments", "% a\n# b\n\n1 2 1 10\n");
         let s = load("t", &p).unwrap();
         std::fs::remove_file(&p).ok();
         assert_eq!(s.edges.len(), 1);
@@ -111,7 +189,16 @@ mod tests {
 
     #[test]
     fn malformed_line_is_error() {
-        let p = write_tmp("1 x 1 10\n");
+        let p = write_tmp("bad_dst", "1 x 1 10\n");
+        assert!(load("t", &p).is_err());
+        std::fs::remove_file(&p).ok();
+        // a lone endpoint and a non-numeric time are malformed too, and
+        // the error names the offending line
+        let p = write_tmp("lone_src", "1 2 1 10\n5\n");
+        let err = load("t", &p).unwrap_err();
+        std::fs::remove_file(&p).ok();
+        assert!(format!("{err}").contains(":2:"), "{err}");
+        let p = write_tmp("bad_time", "1 2 1 yesterday\n");
         assert!(load("t", &p).is_err());
         std::fs::remove_file(&p).ok();
     }
@@ -126,5 +213,148 @@ mod tests {
         // some KONECT exports write times as 1.1107e+09
         let e = parse_line("1 2 1 1.1107e+09").unwrap();
         assert_eq!(e.time, 1110700000);
+    }
+
+    #[test]
+    fn duplicate_edges_are_kept_as_multi_edges() {
+        // repeated interactions are distinct temporal edges in KONECT;
+        // the loader must not dedup them
+        let p = write_tmp("dups", "7 9 1 10\n7 9 1 10\n7 9 2 30\n");
+        let s = load("t", &p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(s.edges.len(), 3);
+        assert_eq!(s.num_nodes, 2);
+        assert_eq!(s.edges[0], s.edges[1]);
+    }
+
+    #[test]
+    fn out_of_order_timestamps_are_sorted() {
+        let p = write_tmp("unsorted", "1 2 1 300\n2 3 1 100\n3 4 1 200\n");
+        let s = load("t", &p).unwrap();
+        std::fs::remove_file(&p).ok();
+        let times: Vec<i64> = s.edges.iter().map(|e| e.time).collect();
+        assert_eq!(times, vec![100, 200, 300]);
+        // compaction happened before the sort: ids are keyed by
+        // first-seen *file* order, so reordering by time cannot change
+        // the mapping
+        assert_eq!(s.edges.iter().map(|e| (e.src, e.dst)).collect::<Vec<_>>(),
+                   vec![(1, 2), (2, 3), (0, 1)]);
+    }
+
+    #[test]
+    fn id_remapping_is_stable_across_loads() {
+        // sparse 1-based KONECT ids compact to dense first-seen order,
+        // identically on every load of the same file
+        let content = "% hdr\n900 17 1 10\n17 4242 1 20\n900 4242 1 30\n";
+        let p = write_tmp("remap_a", content);
+        let a = load("t", &p).unwrap();
+        std::fs::remove_file(&p).ok();
+        let p = write_tmp("remap_b", content);
+        let b = load("t", &p).unwrap();
+        std::fs::remove_file(&p).ok();
+        assert_eq!(a.num_nodes, 3);
+        assert_eq!(a.edges, b.edges);
+        // first-seen: 900 -> 0, 17 -> 1, 4242 -> 2
+        assert_eq!((a.edges[0].src, a.edges[0].dst), (0, 1));
+        assert_eq!((a.edges[1].src, a.edges[1].dst), (1, 2));
+        assert_eq!((a.edges[2].src, a.edges[2].dst), (0, 2));
+    }
+
+    #[test]
+    fn vendored_slice_lookup_resolves_short_names() {
+        assert_eq!(vendored_slice("forum").unwrap().name, "konect:forum");
+        assert_eq!(vendored_slice("trust").unwrap().name, "konect:trust");
+        assert!(vendored_slice("forums").is_none());
+        assert!(vendored_slice("").is_none());
+        for p in vendored() {
+            assert!(p.name.starts_with("konect:"), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn vendored_files_match_their_profiles() {
+        // the catalog constants are measured from the checked-in files;
+        // this pins file <-> profile agreement so neither drifts alone
+        for profile in vendored() {
+            let path = format!("data/{}", profile.konect_file);
+            let s = load(profile.name, &path).unwrap();
+            assert_eq!(s.num_nodes as usize, profile.total_nodes, "{}", profile.name);
+            assert_eq!(s.edges.len(), profile.total_edges, "{}", profile.name);
+            let windows = s.split_windows(profile.splitter_secs);
+            assert_eq!(windows.len(), profile.snapshots, "{}", profile.name);
+            let max_e = windows.iter().map(|w| w.len()).max().unwrap();
+            assert_eq!(max_e, profile.max_edges, "{}", profile.name);
+            if profile.weighted {
+                assert!(s.edges.iter().any(|e| e.weight < 0.0));
+            } else {
+                assert!(s.edges.iter().all(|e| e.weight == 1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn edit_steps_round_trip_patched_csr_equals_full_rebuild() {
+        use crate::graph::{CsrRebuild, DELTA_CHURN_UNLIMITED};
+        // windowed stream over a small universe, multi-edges included
+        let p = write_tmp(
+            "roundtrip",
+            "% hdr\n1 2 2 0\n2 3 1 5\n3 1 -1 9\n\
+             1 3 1 100\n2 3 1 105\n2 3 1 106\n\
+             4 1 3 200\n1 2 2 201\n3 4 1 209\n",
+        );
+        let s = load("t", &p).unwrap();
+        std::fs::remove_file(&p).ok();
+        let steps = edit_steps(&s, 100).unwrap();
+        assert_eq!(steps.len(), 3);
+        let n = s.num_nodes as usize;
+        let mut csr = SnapshotCsr::new();
+        for (i, st) in steps.iter().enumerate() {
+            st.snap.validate().unwrap();
+            assert_eq!(st.snap.num_nodes(), n, "full universe at every step");
+            let kind = csr.rebuild_delta(&st.snap, &st.delta, DELTA_CHURN_UNLIMITED);
+            if i == 0 {
+                assert_eq!(kind, CsrRebuild::Full, "bootstrap step rebuilds");
+            } else {
+                assert_eq!(kind, CsrRebuild::Patched, "step {i}");
+            }
+            let want = SnapshotCsr::from_snapshot(&st.snap);
+            for d in 0..n {
+                let (gs, gv) = csr.row(d);
+                let (ws, wv) = want.row(d);
+                assert_eq!(gs, ws, "step {i} row {d} sources");
+                assert_eq!(
+                    gv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    wv.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "step {i} row {d} coefficients"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn edit_steps_of_vendored_slices_reconstruct_exactly() {
+        use crate::graph::{CsrRebuild, DELTA_CHURN_UNLIMITED};
+        for profile in vendored() {
+            let path = format!("data/{}", profile.konect_file);
+            let s = load(profile.name, &path).unwrap();
+            let steps = edit_steps(&s, profile.splitter_secs).unwrap();
+            assert_eq!(steps.len(), profile.snapshots, "{}", profile.name);
+            let n = s.num_nodes as usize;
+            let mut csr = SnapshotCsr::new();
+            for (i, st) in steps.iter().enumerate() {
+                st.snap.validate().unwrap();
+                let kind = csr.rebuild_delta(&st.snap, &st.delta, DELTA_CHURN_UNLIMITED);
+                assert_eq!(
+                    kind,
+                    if i == 0 { CsrRebuild::Full } else { CsrRebuild::Patched },
+                    "{} step {i}",
+                    profile.name
+                );
+                let want = SnapshotCsr::from_snapshot(&st.snap);
+                for d in 0..n {
+                    assert_eq!(csr.row(d), want.row(d), "{} step {i} row {d}", profile.name);
+                }
+            }
+        }
     }
 }

@@ -19,7 +19,7 @@ pub mod konect;
 pub mod stats;
 pub mod synth;
 
-pub use catalog::{DatasetProfile, BC_ALPHA, UCI};
+pub use catalog::{DatasetProfile, BC_ALPHA, KONECT_FORUM, KONECT_TRUST, UCI};
 pub use stats::{table3_row, StreamStats};
 
 use crate::error::Result;

@@ -302,11 +302,15 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     // streams); without it tenants keep per-tenant seeds
     let session_seed = |i: u64| if batch { ctx.seed } else { ctx.seed.wrapping_add(i) };
 
-    // tenant 0 serves the real dataset when present under --data;
-    // additional tenants get independent synthetic streams.  With
-    // --edits every tenant instead carries a synthetic edit stream
-    // (profile-shaped node universe, fixed live-edge count, exact
-    // per-step deltas) staged through the CSR patch path.
+    // tenant 0 serves the real dataset when present under --data (for
+    // the vendored `konect:<slice>` profiles the checked-in file always
+    // is); additional tenants get independent synthetic streams.  With
+    // --edits every tenant instead carries an edit stream staged through
+    // the CSR patch path: synthetic (profile-shaped node universe, fixed
+    // live-edge count, exact per-step deltas) — except a konect tenant
+    // 0, whose loaded windows convert to full-universe edit steps
+    // (`datasets::konect::edit_steps`).
+    let is_konect = profile.name.starts_with("konect:");
     let edit_len = limit.min(profile.snapshots).max(1);
     let edit_stream_for = |seed: u64| {
         let mut rng = Pcg32::seeded(seed);
@@ -322,7 +326,16 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     let mut edit_streams: Vec<Arc<Vec<EditStep>>> = Vec::new();
     if edits {
         for i in 0..streams {
-            edit_streams.push(edit_stream_for(ctx.seed.wrapping_add(i as u64)));
+            if i == 0 && is_konect {
+                let stream =
+                    datasets::load_or_generate(profile, &cli.get_or("data", "data"), ctx.seed)?;
+                edit_streams.push(Arc::new(datasets::konect::edit_steps(
+                    &stream,
+                    profile.splitter_secs,
+                )?));
+            } else {
+                edit_streams.push(edit_stream_for(ctx.seed.wrapping_add(i as u64)));
+            }
         }
     } else {
         for i in 0..streams {
@@ -364,8 +377,11 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
     };
     let session_cfg =
         |stream: &CooStream, seed: u64| cfg_for(stream.num_nodes as usize, seed);
-    // edit streams live on a fixed identity-renumbered universe
-    let edit_nodes = profile.avg_nodes.max(1);
+    // edit streams live on a fixed identity-renumbered universe; its
+    // size is per-stream (a konect tenant spans the slice's full node
+    // universe, synthetic tenants the profile's average)
+    let edit_universe =
+        |steps: &[EditStep]| steps.first().map(|s| s.snap.num_nodes()).unwrap_or(1);
     let finish_spec = |mut spec: TenantSpec| {
         if let Some(dl) = deadline_ms {
             spec = spec.with_deadline_ms(dl);
@@ -377,7 +393,8 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
             .iter()
             .enumerate()
             .map(|(i, steps)| {
-                let session = model.build_session(&cfg_for(edit_nodes, session_seed(i as u64)));
+                let session =
+                    model.build_session(&cfg_for(edit_universe(steps.as_slice()), session_seed(i as u64)));
                 finish_spec(
                     TenantSpec::new_edits(
                         &format!("stream-{i}"),
@@ -474,7 +491,8 @@ fn cmd_serve(cli: &Cli, ctx: &ReportCtx) -> Result<()> {
                 }
                 if let Some(steps) = churn_edits.take() {
                     println!("  [churn] admitting tenant churn-0 (weight 2) at step {served_total}");
-                    let session = model.build_session(&cfg_for(edit_nodes, churn_seed));
+                    let session =
+                        model.build_session(&cfg_for(edit_universe(steps.as_slice()), churn_seed));
                     let spec = finish_spec(
                         TenantSpec::new_edits("churn-0", steps, 2, session).with_limit(limit),
                     );

@@ -8,6 +8,12 @@
 //! * [`ModelKind::GcrnM2`] — integrated DGNN (Table I row 2); graph-conv
 //!   LSTM.  Base model for DGNN-Booster **V2**.
 //!
+//! Plus [`ModelKind::GcrnM1`] (the stacked Table I row 1 variant) and a
+//! fourth family beyond the paper's three: [`ModelKind::Tgat`], a
+//! TGAT-style temporal-attention DGNN (cosine time-encoded neighbor
+//! attention between Q/K/V and output projections) that proves the
+//! serve stack generalises past RNN-flavoured models.
+//!
 //! Parameters are generated deterministically from a seed with the same
 //! scheme on the Rust and (via the e2e driver feeding them in) HLO side,
 //! so numerics cross-check bit-for-bit inputs.
@@ -23,6 +29,10 @@ pub enum ModelKind {
     GcrnM1,
     /// Integrated DGNN (GCRN-M2): graph-convolutional LSTM.
     GcrnM2,
+    /// Temporal-attention DGNN (TGAT-style): Q/K/V projections, cosine
+    /// time-encoded neighbor attention, output projection.  Stateless
+    /// across steps (attention re-reads the time channel per snapshot).
+    Tgat,
 }
 
 /// The three discrete-time DGNN dataflow classes of the paper's Table I.
@@ -42,6 +52,7 @@ impl ModelKind {
             ModelKind::EvolveGcn => "EvolveGCN",
             ModelKind::GcrnM1 => "GCRN-M1",
             ModelKind::GcrnM2 => "GCRN-M2",
+            ModelKind::Tgat => "TGAT",
         }
     }
 
@@ -51,6 +62,8 @@ impl ModelKind {
             ModelKind::EvolveGcn => DataflowType::WeightsEvolved,
             ModelKind::GcrnM1 => DataflowType::Stacked,
             ModelKind::GcrnM2 => DataflowType::Integrated,
+            // attention is a spatial encoder per step; steps independent
+            ModelKind::Tgat => DataflowType::Stacked,
         }
     }
 
@@ -70,11 +83,17 @@ impl ModelKind {
             ModelKind::EvolveGcn => 1,
             ModelKind::GcrnM1 => 2,
             ModelKind::GcrnM2 => 2,
+            ModelKind::Tgat => 2,
         }
     }
 
-    pub fn all() -> [ModelKind; 3] {
-        [ModelKind::EvolveGcn, ModelKind::GcrnM1, ModelKind::GcrnM2]
+    pub fn all() -> [ModelKind; 4] {
+        [
+            ModelKind::EvolveGcn,
+            ModelKind::GcrnM1,
+            ModelKind::GcrnM2,
+            ModelKind::Tgat,
+        ]
     }
 }
 
@@ -199,6 +218,45 @@ impl GcrnM2Params {
     }
 }
 
+/// Number of cosine features in the TGAT time-encoding bank
+/// (`score += Σ_j wt[j]·cos(omega[j]·t)`).
+pub const TGAT_TIME_DIM: usize = 8;
+
+/// Full TGAT-style parameter set: Q/K/V projections, output projection,
+/// and the cosine time-encoding bank.
+#[derive(Clone, Debug)]
+pub struct TgatParams {
+    pub dims: Dims,
+    /// Query projection [in_dim × hidden_dim], row-major.
+    pub wq: Vec<f32>,
+    /// Key projection [in_dim × hidden_dim].
+    pub wk: Vec<f32>,
+    /// Value projection [in_dim × hidden_dim].
+    pub wv: Vec<f32>,
+    /// Output projection [hidden_dim × out_dim].
+    pub wo: Vec<f32>,
+    /// Time-encoding frequencies [TGAT_TIME_DIM].
+    pub omega: Vec<f32>,
+    /// Time-encoding feature weights [TGAT_TIME_DIM].
+    pub wt: Vec<f32>,
+}
+
+impl TgatParams {
+    pub fn init(seed: u64, dims: Dims) -> Self {
+        let mut rng = Pcg32::new(seed, 0x7A);
+        let scale = 0.3;
+        TgatParams {
+            dims,
+            wq: rng.normal_vec(dims.in_dim * dims.hidden_dim, scale),
+            wk: rng.normal_vec(dims.in_dim * dims.hidden_dim, scale),
+            wv: rng.normal_vec(dims.in_dim * dims.hidden_dim, scale),
+            wo: rng.normal_vec(dims.hidden_dim * dims.out_dim, scale),
+            omega: rng.normal_vec(TGAT_TIME_DIM, 1.0),
+            wt: rng.normal_vec(TGAT_TIME_DIM, 0.1),
+        }
+    }
+}
+
 /// Parameter set for any [`ModelKind`] behind one seeded constructor, so
 /// every serving surface (examples, CLI `serve`, benches, tests)
 /// initialises a model identically.  `serve::session` builds its
@@ -208,6 +266,7 @@ pub enum ModelParams {
     EvolveGcn(EvolveGcnParams),
     GcrnM1(GcrnM1Params),
     GcrnM2(GcrnM2Params),
+    Tgat(TgatParams),
 }
 
 impl ModelParams {
@@ -216,6 +275,7 @@ impl ModelParams {
             ModelParams::EvolveGcn(_) => ModelKind::EvolveGcn,
             ModelParams::GcrnM1(_) => ModelKind::GcrnM1,
             ModelParams::GcrnM2(_) => ModelKind::GcrnM2,
+            ModelParams::Tgat(_) => ModelKind::Tgat,
         }
     }
 
@@ -224,6 +284,7 @@ impl ModelParams {
             ModelParams::EvolveGcn(p) => p.dims,
             ModelParams::GcrnM1(p) => p.dims,
             ModelParams::GcrnM2(p) => p.dims,
+            ModelParams::Tgat(p) => p.dims,
         }
     }
 }
@@ -237,6 +298,7 @@ impl ModelKind {
             ModelKind::EvolveGcn => ModelParams::EvolveGcn(EvolveGcnParams::init(seed, dims)),
             ModelKind::GcrnM1 => ModelParams::GcrnM1(GcrnM1Params::init(seed, dims)),
             ModelKind::GcrnM2 => ModelParams::GcrnM2(GcrnM2Params::init(seed, dims)),
+            ModelKind::Tgat => ModelParams::Tgat(TgatParams::init(seed, dims)),
         }
     }
 }
@@ -308,6 +370,28 @@ mod tests {
             ModelParams::GcrnM2(p) => assert_eq!(p.wx, GcrnM2Params::init(9, d).wx),
             _ => panic!("wrong variant"),
         }
+    }
+
+    #[test]
+    fn tgat_param_shapes_and_determinism() {
+        let d = Dims::default();
+        let p = TgatParams::init(3, d);
+        assert_eq!(p.wq.len(), 32 * 32);
+        assert_eq!(p.wk.len(), 32 * 32);
+        assert_eq!(p.wv.len(), 32 * 32);
+        assert_eq!(p.wo.len(), 32 * 32);
+        assert_eq!(p.omega.len(), TGAT_TIME_DIM);
+        assert_eq!(p.wt.len(), TGAT_TIME_DIM);
+        // distinct seeding streams: Q and K projections differ
+        assert_ne!(p.wq, p.wk);
+        let q = TgatParams::init(3, d);
+        assert_eq!(p.wq, q.wq);
+        assert_eq!(p.omega, q.omega);
+        // the fourth family rides every ModelKind surface
+        assert_eq!(ModelKind::Tgat.name(), "TGAT");
+        assert_eq!(ModelKind::Tgat.dataflow(), DataflowType::Stacked);
+        assert!(ModelKind::Tgat.supports_version(2));
+        assert!(ModelKind::all().contains(&ModelKind::Tgat));
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Time-encoded neighbor attention: the TGAT-style message-passing
+//! kernel behind `ModelKind::Tgat`.
+//!
+//! Per destination row the kernel scores the self term and every
+//! in-edge with a scaled dot product `q·k / √d` plus a cosine time
+//! encoding of the edge's scalar channel (the normalised adjacency
+//! coefficient; the self term uses the node's self-loop coefficient —
+//! the recency-flavoured scalar the staging layer already carries),
+//! softmaxes the scores with the max-subtraction trick, and emits the
+//! attention-weighted sum of the value rows.  Structurally this is the
+//! aggregation kernel of [`super::spmm`] with data-dependent
+//! coefficients, so it row-parallelises the same way: disjoint
+//! destination-row ranges, one accumulator chain per output element,
+//! self term first then in-edges in CSR order — **bitwise-equal** at
+//! any thread count and between the scalar oracle here and the 8-wide
+//! lanes twin in `simd` (the scores and softmax are computed by the
+//! shared scalar routine in both; only the weighted-value accumulation
+//! is lane-tiled).
+//!
+//! The public face is [`super::spmm::Engine::attention_slice_into`];
+//! which kernel set runs is chosen by [`super::spmm::Kernels`] exactly
+//! like the aggregate/matmul/fused kernels.
+
+use crate::graph::SnapshotCsr;
+
+/// Single ascending-order accumulator chain from +0.0 — the doctrine
+/// every kernel in this crate follows so parallel and lane paths stay
+/// bitwise-equal to the serial scalar oracle.
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Cosine time encoding `Σ_j wt[j]·cos(omega[j]·t)` — a fixed random
+/// Fourier feature bank projected back to a scalar score bias, the
+/// functional form TGAT uses for Bochner time features.
+#[inline]
+fn time_enc(t: f32, omega: &[f32], wt: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (&o, &w) in omega.iter().zip(wt) {
+        acc += w * (o * t).cos();
+    }
+    acc
+}
+
+/// Score + softmax for one destination row, shared verbatim by the
+/// scalar and lanes kernels (so the attention weights are the same bits
+/// on both paths).  On return `scores` holds the normalised attention
+/// weights: `scores[0]` for the self term, then one per in-edge in CSR
+/// row order.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_row_scores(
+    csr: &SnapshotCsr,
+    selfcoef: &[f32],
+    q: &[f32],
+    k: &[f32],
+    d: usize,
+    omega: &[f32],
+    wt: &[f32],
+    r: usize,
+    scores: &mut Vec<f32>,
+) {
+    let inv = 1.0 / (d as f32).sqrt();
+    let qrow = &q[r * d..(r + 1) * d];
+    scores.clear();
+    scores.push(dot(qrow, &k[r * d..(r + 1) * d]) * inv + time_enc(selfcoef[r], omega, wt));
+    let (srcs, coefs) = csr.row(r);
+    for (&s, &c) in srcs.iter().zip(coefs) {
+        let krow = &k[s as usize * d..(s as usize + 1) * d];
+        scores.push(dot(qrow, krow) * inv + time_enc(c, omega, wt));
+    }
+    // max-subtracted softmax: subtracting the row max before exp keeps
+    // every exponent ≤ 0, so the sum never overflows and the weights
+    // stay finite for any score magnitude
+    let m = scores.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+    for sc in scores.iter_mut() {
+        *sc = (*sc - m).exp();
+    }
+    let mut sum = 0.0f32;
+    for &sc in scores.iter() {
+        sum += sc;
+    }
+    for sc in scores.iter_mut() {
+        *sc /= sum;
+    }
+}
+
+/// Scalar time-encoded attention over destination rows `lo..hi` — the
+/// bitwise oracle.  `q`/`k`/`v` are `[num_nodes × d]` row-major; `out`
+/// covers exactly rows `lo..hi`.  Per output element the accumulation
+/// order is: zero, self term, in-edges in CSR row order — the exact
+/// sequence of [`super::spmm::aggregate_rows`] with attention weights
+/// in place of graph coefficients.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_rows(
+    csr: &SnapshotCsr,
+    selfcoef: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    d: usize,
+    omega: &[f32],
+    wt: &[f32],
+    out: &mut [f32],
+    lo: usize,
+    hi: usize,
+    scores: &mut Vec<f32>,
+) {
+    debug_assert_eq!(out.len(), (hi - lo) * d);
+    for r in lo..hi {
+        attention_row_scores(csr, selfcoef, q, k, d, omega, wt, r, scores);
+        let orow = &mut out[(r - lo) * d..(r - lo + 1) * d];
+        orow.fill(0.0);
+        let a0 = scores[0];
+        for (o, &val) in orow.iter_mut().zip(&v[r * d..(r + 1) * d]) {
+            *o += a0 * val;
+        }
+        let (srcs, _) = csr.row(r);
+        for (i, &s) in srcs.iter().enumerate() {
+            let a = scores[i + 1];
+            let srow = &v[s as usize * d..(s as usize + 1) * d];
+            for (o, &val) in orow.iter_mut().zip(srow) {
+                *o += a * val;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::synth::random_snapshot;
+    use crate::numerics::{Engine, Kernels};
+    use crate::testutil::Pcg32;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn bank(rng: &mut Pcg32) -> (Vec<f32>, Vec<f32>) {
+        (rng.normal_vec(8, 1.0), rng.normal_vec(8, 0.1))
+    }
+
+    #[test]
+    fn lane_attention_bitwise_equals_scalar_across_tail_widths_and_threads() {
+        let mut rng = Pcg32::seeded(101);
+        for d in [1usize, 7, 8, 9, 15, 17] {
+            let snap = random_snapshot(&mut rng, 29, 120);
+            let csr = crate::graph::SnapshotCsr::from_snapshot(&snap);
+            let q: Vec<f32> = rng.normal_vec(29 * d, 1.0);
+            let k: Vec<f32> = rng.normal_vec(29 * d, 1.0);
+            let v: Vec<f32> = rng.normal_vec(29 * d, 1.0);
+            let (omega, wt) = bank(&mut rng);
+            let mut want = vec![0.0f32; 29 * d];
+            Engine::new_with(1, Kernels::Scalar).attention_slice_into(
+                &csr, &snap.selfcoef, &q, &k, &v, d, &omega, &wt, &mut want,
+            );
+            for threads in [1usize, 2, 4] {
+                for kern in [Kernels::Scalar, Kernels::Lanes] {
+                    let mut got = vec![9.0f32; 29 * d];
+                    Engine::new_with(threads, kern).attention_slice_into(
+                        &csr, &snap.selfcoef, &q, &k, &v, d, &omega, &wt, &mut got,
+                    );
+                    assert_eq!(bits(&got), bits(&want), "d={d} threads={threads} {kern:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_node_copies_its_value_row() {
+        // one node, no edges: the softmax over the single self term is
+        // exactly 1.0, so the output is the value row bit for bit
+        let snap = random_snapshot(&mut Pcg32::seeded(5), 1, 0);
+        let csr = crate::graph::SnapshotCsr::from_snapshot(&snap);
+        let mut rng = Pcg32::seeded(6);
+        let d = 5;
+        let q = rng.normal_vec(d, 1.0);
+        let k = rng.normal_vec(d, 1.0);
+        let v = rng.normal_vec(d, 1.0);
+        let (omega, wt) = bank(&mut rng);
+        let mut out = vec![0.0f32; d];
+        Engine::serial()
+            .attention_slice_into(&csr, &snap.selfcoef, &q, &k, &v, d, &omega, &wt, &mut out);
+        assert_eq!(bits(&out), bits(&v));
+    }
+
+    #[test]
+    fn attention_weights_are_a_convex_combination() {
+        let mut rng = Pcg32::seeded(7);
+        let snap = random_snapshot(&mut rng, 17, 90);
+        let csr = crate::graph::SnapshotCsr::from_snapshot(&snap);
+        let d = 6;
+        let q = rng.normal_vec(17 * d, 1.0);
+        let k = rng.normal_vec(17 * d, 1.0);
+        let (omega, wt) = bank(&mut rng);
+        let mut scores = Vec::new();
+        for r in 0..17 {
+            attention_row_scores(&csr, &snap.selfcoef, &q, &k, d, &omega, &wt, r, &mut scores);
+            assert_eq!(scores.len(), csr.row(r).0.len() + 1);
+            assert!(scores.iter().all(|&a| a > 0.0 && a <= 1.0), "row {r}: {scores:?}");
+            let sum: f32 = scores.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5, "row {r}: sum {sum}");
+        }
+    }
+
+    #[test]
+    fn extreme_scores_stay_finite_via_max_subtraction() {
+        // huge q/k magnitudes would overflow a naive softmax; the
+        // max-subtracted form keeps every weight finite
+        let mut rng = Pcg32::seeded(8);
+        let snap = random_snapshot(&mut rng, 9, 40);
+        let csr = crate::graph::SnapshotCsr::from_snapshot(&snap);
+        let d = 4;
+        let q: Vec<f32> = rng.normal_vec(9 * d, 1.0).iter().map(|x| x * 200.0).collect();
+        let k: Vec<f32> = rng.normal_vec(9 * d, 1.0).iter().map(|x| x * 200.0).collect();
+        let v = rng.normal_vec(9 * d, 1.0);
+        let (omega, wt) = bank(&mut rng);
+        let mut out = vec![0.0f32; 9 * d];
+        Engine::serial()
+            .attention_slice_into(&csr, &snap.selfcoef, &q, &k, &v, d, &omega, &wt, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()), "{out:?}");
+    }
+}

@@ -21,6 +21,7 @@
 //! functions build a serial engine and a throwaway CSR per call and
 //! remain bitwise-compatible wrappers.
 
+pub mod attention;
 pub mod gcn;
 pub mod rnn;
 pub(crate) mod simd;
@@ -33,7 +34,7 @@ pub use spmm::{Engine, Kernels, MatmulReq};
 pub use tensor::Mat;
 
 use crate::graph::{Snapshot, SnapshotCsr};
-use crate::models::{EvolveGcnParams, GcrnM2Params, GruParams};
+use crate::models::{EvolveGcnParams, GcrnM2Params, GruParams, TgatParams};
 
 /// One EvolveGCN-O snapshot step: evolve both layer weights with the
 /// matrix GRU, then run the 2-layer GCN.  Mirrors
@@ -143,6 +144,53 @@ pub fn gcrn_m2_step_with(
     let mut ph = Mat::zeros(agg_h.rows, wh.cols);
     eng.matmul_into(&agg_h, &wh, &mut ph);
     lstm_gate_stage_with(eng, &px, &ph, &params.b, c)
+}
+
+/// One TGAT-style snapshot step: project node features to
+/// query/key/value, run time-encoded neighbor attention over the
+/// snapshot graph ([`spmm::Engine::attention_slice_into`]), then
+/// project the attended rows to the output dimension.  The stateless
+/// reference the mirror serve session is cross-checked against.
+pub fn tgat_step(snap: &Snapshot, x: &Mat, params: &TgatParams) -> Mat {
+    let csr = SnapshotCsr::from_snapshot(snap);
+    tgat_step_with(&Engine::serial(), &csr, snap, x, params)
+}
+
+/// [`tgat_step`] over a caller-cached CSR and engine.
+pub fn tgat_step_with(
+    eng: &Engine,
+    csr: &SnapshotCsr,
+    snap: &Snapshot,
+    x: &Mat,
+    params: &TgatParams,
+) -> Mat {
+    let d = params.dims;
+    let wq = Mat::from_vec(d.in_dim, d.hidden_dim, params.wq.clone());
+    let wk = Mat::from_vec(d.in_dim, d.hidden_dim, params.wk.clone());
+    let wv = Mat::from_vec(d.in_dim, d.hidden_dim, params.wv.clone());
+    let wo = Mat::from_vec(d.hidden_dim, d.out_dim, params.wo.clone());
+    let n = x.rows;
+    let mut q = Mat::zeros(n, d.hidden_dim);
+    let mut k = Mat::zeros(n, d.hidden_dim);
+    let mut v = Mat::zeros(n, d.hidden_dim);
+    eng.matmul_into(x, &wq, &mut q);
+    eng.matmul_into(x, &wk, &mut k);
+    eng.matmul_into(x, &wv, &mut v);
+    let mut attn = vec![0.0f32; n * d.hidden_dim];
+    eng.attention_slice_into(
+        csr,
+        &snap.selfcoef,
+        &q.data,
+        &k.data,
+        &v.data,
+        d.hidden_dim,
+        &params.omega,
+        &params.wt,
+        &mut attn,
+    );
+    let mut out = Mat::zeros(n, d.out_dim);
+    eng.matmul_packed_into(&attn, n, d.hidden_dim, &wo, &mut out.data);
+    out
 }
 
 /// Re-borrow GRU params as `Mat`s (gates rows×rows, biases rows×cols).

@@ -210,6 +210,64 @@ pub(crate) fn fused_rows_lanes(
     }
 }
 
+/// Lane-unrolled time-encoded attention over destination rows `lo..hi`
+/// — the SIMD twin of [`super::attention::attention_rows`].  Scores and
+/// softmax come from the shared scalar routine
+/// (`attention::attention_row_scores`), so the attention weights are
+/// identical bits on both paths; only the weighted-value accumulation
+/// is lane-tiled, with the same per-element chain (zero, self term,
+/// in-edges in CSR row order) as the scalar oracle.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn attention_rows_lanes(
+    csr: &SnapshotCsr,
+    selfcoef: &[f32],
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    d: usize,
+    omega: &[f32],
+    wt: &[f32],
+    out: &mut [f32],
+    lo: usize,
+    hi: usize,
+    scores: &mut Vec<f32>,
+) {
+    debug_assert_eq!(out.len(), (hi - lo) * d);
+    for r in lo..hi {
+        super::attention::attention_row_scores(csr, selfcoef, q, k, d, omega, wt, r, scores);
+        let orow = &mut out[(r - lo) * d..(r - lo + 1) * d];
+        let a0 = scores[0];
+        let vrow = &v[r * d..(r + 1) * d];
+        let (srcs, _) = csr.row(r);
+        let mut t = 0;
+        while t + LANES <= d {
+            let mut acc = [0.0f32; LANES];
+            for l in 0..LANES {
+                acc[l] += a0 * vrow[t + l];
+            }
+            for (i, &s) in srcs.iter().enumerate() {
+                let a = scores[i + 1];
+                let srow = &v[s as usize * d + t..s as usize * d + t + LANES];
+                for l in 0..LANES {
+                    acc[l] += a * srow[l];
+                }
+            }
+            orow[t..t + LANES].copy_from_slice(&acc);
+            t += LANES;
+        }
+        // scalar tail: same per-element op sequence
+        while t < d {
+            let mut acc = 0.0f32;
+            acc += a0 * vrow[t];
+            for (i, &s) in srcs.iter().enumerate() {
+                acc += scores[i + 1] * v[s as usize * d + t];
+            }
+            orow[t] = acc;
+            t += 1;
+        }
+    }
+}
+
 /// Lane-unrolled LSTM gate stage over node rows `lo..hi` — the SIMD
 /// twin of the scalar gate loop in `rnn`.  Pre-activations for all four
 /// gates are computed as 8-wide adds (`px + ph + b`, left to right like

@@ -40,6 +40,7 @@
 //! only flips which one [`Kernels::default`] — and therefore
 //! [`Engine::new`]/[`Engine::serial`] — picks.
 
+use super::attention;
 use super::simd;
 use super::tensor::Mat;
 use crate::graph::SnapshotCsr;
@@ -138,6 +139,34 @@ impl Kernels {
             Kernels::Lanes => {
                 simd::fused_rows_lanes(csr, selfcoef, x, d, w, out, lo, hi, scratch)
             }
+        }
+    }
+
+    /// Dispatch the per-range time-encoded attention kernel.
+    #[inline]
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn attention_rows(
+        self,
+        csr: &SnapshotCsr,
+        selfcoef: &[f32],
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        omega: &[f32],
+        wt: &[f32],
+        out: &mut [f32],
+        lo: usize,
+        hi: usize,
+        scores: &mut Vec<f32>,
+    ) {
+        match self {
+            Kernels::Scalar => attention::attention_rows(
+                csr, selfcoef, q, k, v, d, omega, wt, out, lo, hi, scores,
+            ),
+            Kernels::Lanes => simd::attention_rows_lanes(
+                csr, selfcoef, q, k, v, d, omega, wt, out, lo, hi, scores,
+            ),
         }
     }
 }
@@ -577,6 +606,49 @@ impl Engine {
             });
         });
     }
+
+    /// Time-encoded neighbor attention into `out`: per destination row,
+    /// score the self term then the in-edges (scaled `q·k` dot plus a
+    /// cosine time encoding of the edge's scalar channel), softmax with
+    /// max subtraction, and accumulate the attention-weighted value
+    /// rows — the TGAT-style message-passing step (`super::attention`).
+    /// Row-parallel like [`Self::aggregate_slice_into`] and
+    /// bitwise-equal at any thread count and with either kernel set.
+    /// `q`/`k`/`v` are `[num_nodes × d]` row-major; `omega`/`wt` are the
+    /// model's cosine time-encoding bank.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attention_slice_into(
+        &self,
+        csr: &SnapshotCsr,
+        selfcoef: &[f32],
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        d: usize,
+        omega: &[f32],
+        wt: &[f32],
+        out: &mut [f32],
+    ) {
+        let n = csr.num_nodes();
+        assert_eq!(q.len(), n * d, "query slice length");
+        assert_eq!(k.len(), n * d, "key slice length");
+        assert_eq!(v.len(), n * d, "value slice length");
+        assert_eq!(selfcoef.len(), n, "selfcoef length");
+        assert_eq!(out.len(), n * d, "output slice length");
+        assert_eq!(omega.len(), wt.len(), "time-encoding bank length");
+        let ptr = SendPtr(out.as_mut_ptr());
+        self.run_partitioned(n, |lo, hi| {
+            // SAFETY: disjoint row ranges — see SendPtr
+            let slice =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(lo * d), (hi - lo) * d) };
+            ATTN_SCORES.with(|cell| {
+                let mut scores = cell.borrow_mut();
+                self.kernels.attention_rows(
+                    csr, selfcoef, q, k, v, d, omega, wt, slice, lo, hi, &mut scores,
+                );
+            });
+        });
+    }
 }
 
 /// One request of a row-stacked [`Engine::matmul_multi_into`] call:
@@ -594,6 +666,11 @@ thread_local! {
     /// [`WorkerPool::broadcast`] moved to the generation-counter loop
     /// (asserted by `tests/alloc_hotpath.rs`).
     static FUSED_SCRATCH: std::cell::RefCell<Vec<f32>> = std::cell::RefCell::new(Vec::new());
+    /// Per-thread score buffer for the attention kernel (one entry per
+    /// self-term/in-edge of the row in flight).  Grows to the worst row
+    /// degree once and is then reused, so steady-state attention
+    /// dispatch allocates nothing.
+    static ATTN_SCORES: std::cell::RefCell<Vec<f32>> = std::cell::RefCell::new(Vec::new());
 }
 
 /// Serial Â·X over destination rows `lo..hi`; `x` is `[num_nodes × d]`

@@ -13,12 +13,21 @@
 //! [`BatchKey`] (tenants whose keys are equal are *guaranteed* to hold
 //! bitwise-identical weight matrices), issues **one** row-stacked
 //! cache-blocked call per group (`Engine::matmul_multi_into`), and then
-//! every tenant finishes its step from its own result rows
-//! ([`BatchableSession::finish_step`]).  The engine splits that
+//! every tenant resumes its step from its own result rows
+//! ([`BatchableSession::resume_step`]).  The engine splits that
 //! row-stacked call operand-aware: row blocks sized to the L2 working
 //! set (`Engine::run_chunked`) are dealt round-robin across the pool,
 //! so one oversized fused group no longer serializes on a single
 //! worker while the rest idle.
+//!
+//! Rounds are scheduled **dependency-level by dependency-level**: a
+//! tenant whose resume announces further projections (EvolveGCN's
+//! layer-2 GEMM chains on the relu of layer 1; TGAT's output projection
+//! chains on the attention over its Q/K/V projections) re-enters the
+//! group-fuse-resume loop in the next wave alongside every other tenant
+//! at the same level, so *both* levels of a two-layer model fuse across
+//! tenants instead of only the first.  Single-level sessions simply
+//! announce nothing from their first resume and the loop ends.
 //!
 //! Per tenant the batched path is **bitwise-equal** to the unbatched
 //! one: the row-stacked kernel accumulates each output row's k-terms in
@@ -36,8 +45,9 @@ use crate::models::{Dims, ModelKind};
 use crate::numerics::{Engine, Mat, MatmulReq};
 use std::collections::HashMap;
 
-/// The most projections one session may announce per step (the mirror
-/// sessions emit one or two).
+/// The most projections one session may announce per dependency level,
+/// and the most levels one step may chain (the mirror sessions emit up
+/// to three per level — TGAT's Q/K/V wave — over at most two levels).
 pub const MAX_PROJ: usize = 4;
 
 /// Fusion fingerprint of one projection: requests with equal keys are
@@ -57,13 +67,16 @@ pub struct BatchKey {
     pub dims: Dims,
     /// Weight-evolution epoch (0 forever for static weights).
     pub version: u64,
-    /// Which of the session's per-step projections this is (its index
-    /// in the `begin_step` output).
+    /// Which of the session's projections this is — the selector its
+    /// [`BatchableSession::operand`]/[`BatchableSession::weight`]
+    /// lookups answer to, stable across dependency levels (a session
+    /// announcing at level 1 keeps numbering where level 0 left off).
     pub tag: u8,
 }
 
 /// One batchable dense projection announced by a session's
-/// [`BatchableSession::begin_step`]: multiply the `[rows × k]` operand
+/// [`BatchableSession::begin_step`] (or, for a later dependency level,
+/// its [`BatchableSession::resume_step`]): multiply the `[rows × k]` operand
 /// (readable via [`BatchableSession::operand`]) by the session's weight
 /// matrix ([`BatchableSession::weight`]) into `[rows × n]` result rows.
 #[derive(Clone, Copy, Debug)]
@@ -126,10 +139,14 @@ pub struct RoundMember<'a> {
 }
 
 /// One projection request's place inside a round: which member emitted
-/// it, under which tag, and how many result values it owns.
+/// it, under which session tag (the operand/weight selector), at which
+/// position in the member's current-level announcement (the positional
+/// index its resumed rows arrive at), and how many result values it
+/// owns.
 struct Entry {
     member: usize,
     tag: usize,
+    pos: usize,
     rows: usize,
     len: usize,
 }
@@ -156,15 +173,19 @@ struct Group {
 #[derive(Default)]
 pub struct BatchPlanner {
     pub stats: BatchStats,
-    /// Per-member projection specs (inner Vecs keep their capacity).
+    /// Per-member projection specs of the current dependency level
+    /// (inner Vecs keep their capacity).
     specs: Vec<Vec<Projection>>,
-    /// Same-key groups of the current round (entry Vecs keep capacity).
+    /// Per-member announcements of the *next* level, swapped into
+    /// `specs` between waves.
+    next: Vec<Vec<Projection>>,
+    /// Same-key groups of the current level (entry Vecs keep capacity).
     groups: Vec<Group>,
-    /// Key → index into `groups` for the current round.
+    /// Key → index into `groups` for the current level.
     index: HashMap<BatchKey, usize>,
-    /// Per (member, tag): offset + length into `out_buf`.
+    /// Per (member, position-in-level): offset + length into `out_buf`.
     member_offs: Vec<[(usize, usize); MAX_PROJ]>,
-    /// The round's shared projected-rows buffer.
+    /// The level's shared projected-rows buffer.
     out_buf: Vec<f32>,
 }
 
@@ -173,11 +194,12 @@ impl BatchPlanner {
         BatchPlanner::default()
     }
 
-    /// Serve one round: run every member's `begin_step`, fuse same-key
-    /// projections across members into row-stacked GEMMs, then run
-    /// every member's `finish_step` in round order.  Members must be
-    /// **distinct tenants** (one step each — a recurrent tenant's next
-    /// snapshot depends on this one's state).
+    /// Serve one round: run every member's `begin_step`, then — once
+    /// per dependency level — fuse same-key projections across members
+    /// into row-stacked GEMMs and run every member's `resume_step` in
+    /// round order, repeating while any resume announced a next level.
+    /// Members must be **distinct tenants** (one step each — a
+    /// recurrent tenant's next snapshot depends on this one's state).
     ///
     /// On error the round is abandoned mid-step; the scheduler treats
     /// that as fatal to the run, exactly like an `infer` error.
@@ -185,11 +207,16 @@ impl BatchPlanner {
         if members.is_empty() {
             return Ok(());
         }
-        // phase A: front half of every step, collecting projection specs
-        if self.specs.len() < members.len() {
-            self.specs.resize_with(members.len(), Vec::new);
+        let nm = members.len();
+        // phase A: front half of every step, collecting the first
+        // level's projection specs
+        if self.specs.len() < nm {
+            self.specs.resize_with(nm, Vec::new);
         }
-        for sp in &mut self.specs[..members.len()] {
+        if self.next.len() < nm {
+            self.next.resize_with(nm, Vec::new);
+        }
+        for sp in &mut self.specs[..nm] {
             sp.clear();
         }
         for (m, sp) in members.iter_mut().zip(&mut self.specs) {
@@ -201,142 +228,198 @@ impl BatchPlanner {
                 )));
             }
         }
-        let specs = &self.specs[..members.len()];
 
-        // phase B: group by key (first-seen order), assign every entry a
-        // contiguous region of one shared result buffer.  Group slots
-        // are recycled so their entry Vecs keep capacity across rounds.
-        let mut ngroups = 0usize;
-        self.index.clear();
-        for (mi, sp) in specs.iter().enumerate() {
-            for (tag, p) in sp.iter().enumerate() {
-                let gi = *self.index.entry(p.key).or_insert_with(|| {
-                    if ngroups == self.groups.len() {
-                        self.groups.push(Group { k: p.k, n: p.n, entries: Vec::new() });
-                    } else {
-                        let g = &mut self.groups[ngroups];
-                        g.k = p.k;
-                        g.n = p.n;
-                        g.entries.clear();
-                    }
-                    ngroups += 1;
-                    ngroups - 1
-                });
-                debug_assert_eq!(
-                    (self.groups[gi].k, self.groups[gi].n),
-                    (p.k, p.n),
-                    "key fixes the shape"
-                );
-                self.groups[gi].entries.push(Entry {
-                    member: mi,
-                    tag,
-                    rows: p.rows,
-                    len: p.rows * p.n,
-                });
-            }
-        }
-        let groups = &self.groups[..ngroups];
-        self.member_offs.clear();
-        self.member_offs.resize(members.len(), [(0usize, 0usize); MAX_PROJ]);
-        let mut total = 0usize;
-        for g in groups {
-            for e in &g.entries {
-                self.member_offs[e.member][e.tag] = (total, e.len);
-                total += e.len;
-            }
-        }
-        self.out_buf.clear();
-        self.out_buf.resize(total, 0.0);
-
-        // phase C: one row-stacked engine call per group — the weight
-        // comes from the first member, which the BatchKey contract makes
-        // representative of every member in the group
-        {
-            let mut rest: &mut [f32] = &mut self.out_buf;
-            for g in groups {
-                let glen: usize = g.entries.iter().map(|e| e.len).sum();
-                let (mut region, tail) = std::mem::take(&mut rest).split_at_mut(glen);
-                rest = tail;
-                let mut reqs: Vec<MatmulReq> = Vec::with_capacity(g.entries.len());
-                for e in &g.entries {
-                    let (o, r2) = std::mem::take(&mut region).split_at_mut(e.len);
-                    region = r2;
-                    reqs.push(MatmulReq {
-                        a: members[e.member].session.operand(e.tag),
-                        out: o,
+        let mut level = 0usize;
+        loop {
+            // phase B: group this level by key (first-seen order),
+            // assign every entry a contiguous region of one shared
+            // result buffer.  Group slots are recycled so their entry
+            // Vecs keep capacity across rounds.
+            let specs = &self.specs[..nm];
+            let mut ngroups = 0usize;
+            self.index.clear();
+            for (mi, sp) in specs.iter().enumerate() {
+                for (pos, p) in sp.iter().enumerate() {
+                    let gi = *self.index.entry(p.key).or_insert_with(|| {
+                        if ngroups == self.groups.len() {
+                            self.groups.push(Group { k: p.k, n: p.n, entries: Vec::new() });
+                        } else {
+                            let g = &mut self.groups[ngroups];
+                            g.k = p.k;
+                            g.n = p.n;
+                            g.entries.clear();
+                        }
+                        ngroups += 1;
+                        ngroups - 1
+                    });
+                    debug_assert_eq!(
+                        (self.groups[gi].k, self.groups[gi].n),
+                        (p.k, p.n),
+                        "key fixes the shape"
+                    );
+                    self.groups[gi].entries.push(Entry {
+                        member: mi,
+                        tag: p.key.tag as usize,
+                        pos,
+                        rows: p.rows,
+                        len: p.rows * p.n,
                     });
                 }
-                let first = &g.entries[0];
-                let w: &Mat = members[first.member].session.weight(first.tag);
-                engine.matmul_multi_into(g.k, w, &mut reqs);
-                self.stats.fused_calls += 1;
-                self.stats.fused_requests += g.entries.len() as u64;
-                self.stats.fused_rows += g.entries.iter().map(|e| e.rows as u64).sum::<u64>();
             }
-        }
+            let groups = &self.groups[..ngroups];
+            self.member_offs.clear();
+            self.member_offs.resize(nm, [(0usize, 0usize); MAX_PROJ]);
+            let mut total = 0usize;
+            for g in groups {
+                for e in &g.entries {
+                    self.member_offs[e.member][e.pos] = (total, e.len);
+                    total += e.len;
+                }
+            }
+            self.out_buf.clear();
+            self.out_buf.resize(total, 0.0);
 
-        // phase D: back half of every step, in round order
-        for (mi, m) in members.iter_mut().enumerate() {
-            let sp = &self.specs[mi];
-            let mut refs: [&[f32]; MAX_PROJ] = [&[]; MAX_PROJ];
-            for (t, r) in refs.iter_mut().enumerate().take(sp.len()) {
-                let (off, len) = self.member_offs[mi][t];
-                *r = &self.out_buf[off..off + len];
+            // phase C: one row-stacked engine call per group — the
+            // weight comes from the first member, which the BatchKey
+            // contract makes representative of every member in the group
+            {
+                let mut rest: &mut [f32] = &mut self.out_buf;
+                for g in groups {
+                    let glen: usize = g.entries.iter().map(|e| e.len).sum();
+                    let (mut region, tail) = std::mem::take(&mut rest).split_at_mut(glen);
+                    rest = tail;
+                    let mut reqs: Vec<MatmulReq> = Vec::with_capacity(g.entries.len());
+                    for e in &g.entries {
+                        let (o, r2) = std::mem::take(&mut region).split_at_mut(e.len);
+                        region = r2;
+                        reqs.push(MatmulReq {
+                            a: members[e.member].session.operand(e.tag),
+                            out: o,
+                        });
+                    }
+                    let first = &g.entries[0];
+                    let w: &Mat = members[first.member].session.weight(first.tag);
+                    engine.matmul_multi_into(g.k, w, &mut reqs);
+                    self.stats.fused_calls += 1;
+                    self.stats.fused_requests += g.entries.len() as u64;
+                    self.stats.fused_rows += g.entries.iter().map(|e| e.rows as u64).sum::<u64>();
+                }
             }
-            m.session.finish_step(m.snap, m.slot, &refs[..sp.len()])?;
-            self.stats.steps += 1;
+
+            // phase D: resume every step in round order; members may
+            // announce the next level's projections.  The first level
+            // visits every member (a projection-free session still
+            // completes its step there); later levels only the members
+            // still in flight.
+            for sp in &mut self.next[..nm] {
+                sp.clear();
+            }
+            for (mi, m) in members.iter_mut().enumerate() {
+                let sp = &self.specs[mi];
+                if level > 0 && sp.is_empty() {
+                    continue;
+                }
+                let mut refs: [&[f32]; MAX_PROJ] = [&[]; MAX_PROJ];
+                for (pos, r) in refs.iter_mut().enumerate().take(sp.len()) {
+                    let (off, len) = self.member_offs[mi][pos];
+                    *r = &self.out_buf[off..off + len];
+                }
+                m.session.resume_step(m.snap, m.slot, &refs[..sp.len()], &mut self.next[mi])?;
+                if self.next[mi].len() > MAX_PROJ {
+                    return Err(Error::Usage(format!(
+                        "session announced {} projections (max {MAX_PROJ})",
+                        self.next[mi].len()
+                    )));
+                }
+            }
+            std::mem::swap(&mut self.specs, &mut self.next);
+            level += 1;
+            if self.specs[..nm].iter().all(|sp| sp.is_empty()) {
+                break;
+            }
+            if level >= MAX_PROJ {
+                return Err(Error::Usage(format!(
+                    "session kept announcing projections after {MAX_PROJ} dependency levels"
+                )));
+            }
         }
+        self.stats.steps += nm as u64;
         self.stats.rounds += 1;
         Ok(())
     }
 }
 
+/// Reusable scratch of one session's unbatched step resolution
+/// ([`step_unbatched`]): the per-level projection specs, the next
+/// level's announcements, and the shared projected-rows buffer.  Owned
+/// by the caller (the mirror sessions keep one) so steady-state steps
+/// allocate nothing once the high-water capacities are reached.
+#[derive(Default)]
+pub struct StepScratch {
+    specs: Vec<Projection>,
+    next: Vec<Projection>,
+    out: Vec<f32>,
+}
+
 /// Resolve one session's step without cross-tenant fusion: the same
 /// begin → project (one [`Engine::matmul_packed_into`] per projection)
-/// → finish sequence the planner runs, specialized to a single member.
-/// `MirrorSession::infer` is this function over per-session scratch, so
-/// batch-off serving and batch-on serving share every arithmetic step
-/// except the (bitwise-neutral) row stacking.
-///
-/// `specs` and `out` are caller scratch so steady-state calls allocate
-/// nothing once their high-water capacity is reached.
+/// → resume loop the planner runs, specialized to a single member —
+/// dependency levels included.  `MirrorSession::infer` is this function
+/// over per-session scratch (except where a fused single-tenant fast
+/// path is bitwise-equal anyway), so batch-off serving and batch-on
+/// serving share every arithmetic step except the (bitwise-neutral) row
+/// stacking.
 pub fn step_unbatched(
     eng: &Engine,
     session: &mut dyn BatchableSession,
     snap: &crate::graph::Snapshot,
     slot: &crate::runtime::StagingSlot,
-    specs: &mut Vec<Projection>,
-    out: &mut Vec<f32>,
+    scratch: &mut StepScratch,
 ) -> Result<()> {
-    specs.clear();
-    session.begin_step(snap, slot, specs)?;
-    if specs.len() > MAX_PROJ {
-        // same recoverable failure mode as the planner's round path
-        return Err(Error::Usage(format!(
-            "session announced {} projections (max {MAX_PROJ})",
-            specs.len()
-        )));
+    scratch.specs.clear();
+    session.begin_step(snap, slot, &mut scratch.specs)?;
+    let mut level = 0usize;
+    loop {
+        if scratch.specs.len() > MAX_PROJ {
+            // same recoverable failure mode as the planner's round path
+            return Err(Error::Usage(format!(
+                "session announced {} projections (max {MAX_PROJ})",
+                scratch.specs.len()
+            )));
+        }
+        let specs = &scratch.specs;
+        let mut offs = [0usize; MAX_PROJ + 1];
+        for (i, p) in specs.iter().enumerate() {
+            offs[i + 1] = offs[i] + p.rows * p.n;
+        }
+        scratch.out.resize(offs[specs.len()], 0.0);
+        for (i, p) in specs.iter().enumerate() {
+            eng.matmul_packed_into(
+                session.operand(p.key.tag as usize),
+                p.rows,
+                p.k,
+                session.weight(p.key.tag as usize),
+                &mut scratch.out[offs[i]..offs[i + 1]],
+            );
+        }
+        let mut refs: [&[f32]; MAX_PROJ] = [&[]; MAX_PROJ];
+        for (i, r) in refs.iter_mut().enumerate().take(specs.len()) {
+            *r = &scratch.out[offs[i]..offs[i + 1]];
+        }
+        scratch.next.clear();
+        session.resume_step(snap, slot, &refs[..specs.len()], &mut scratch.next)?;
+        std::mem::swap(&mut scratch.specs, &mut scratch.next);
+        level += 1;
+        if scratch.specs.is_empty() {
+            break;
+        }
+        if level >= MAX_PROJ {
+            return Err(Error::Usage(format!(
+                "session kept announcing projections after {MAX_PROJ} dependency levels"
+            )));
+        }
     }
-    let mut offs = [0usize; MAX_PROJ + 1];
-    for (i, p) in specs.iter().enumerate() {
-        offs[i + 1] = offs[i] + p.rows * p.n;
-    }
-    let total = offs[specs.len()];
-    out.resize(total, 0.0);
-    for (i, p) in specs.iter().enumerate() {
-        eng.matmul_packed_into(
-            session.operand(i),
-            p.rows,
-            p.k,
-            session.weight(i),
-            &mut out[offs[i]..offs[i + 1]],
-        );
-    }
-    let mut refs: [&[f32]; MAX_PROJ] = [&[]; MAX_PROJ];
-    for (i, r) in refs.iter_mut().enumerate().take(specs.len()) {
-        *r = &out[offs[i]..offs[i + 1]];
-    }
-    session.finish_step(snap, slot, &refs[..specs.len()])
+    Ok(())
 }
 
 #[cfg(test)]
@@ -433,6 +516,63 @@ mod tests {
         assert_eq!(st.fused_requests, 6 * snaps.len() as u64);
         assert!((st.occupancy() - 1.5).abs() < 1e-12, "occupancy {}", st.occupancy());
         assert!(st.rows_per_call() >= 1.0);
+    }
+
+    /// Two same-seed EvolveGCN tenants plus one GCRN-M2: the round's
+    /// first wave fuses the EvolveGCN layer-1 pair and M2's two
+    /// projections, the second wave fuses the layer-2 pair that chains
+    /// on the relu of layer 1 (round-level dependency scheduling) — and
+    /// the whole thing stays bitwise-equal to independent `infer`
+    /// drives, which for EvolveGCN take the batch-off fused fast path.
+    #[test]
+    fn planner_schedules_evolvegcn_layer2_wave_and_matches_infer() {
+        let (snaps, m, total) = setup();
+        let engine = Arc::new(Engine::new(2));
+        let specs: [(ModelKind, u64); 3] = [
+            (ModelKind::EvolveGcn, 7),
+            (ModelKind::EvolveGcn, 7), // fuses with the first, both waves
+            (ModelKind::GcrnM2, 9),    // single-level bystander
+        ];
+        let mut batched: Vec<Box<dyn DgnnSession>> = specs
+            .iter()
+            .map(|(k, s)| k.build_session(&cfg(total, m.max_nodes, *s, &engine)))
+            .collect();
+        let mut reference: Vec<Box<dyn DgnnSession>> = specs
+            .iter()
+            .map(|(k, s)| k.build_session(&cfg(total, m.max_nodes, *s, &engine)))
+            .collect();
+        let mut stager = batched[0].make_stager(&m);
+        let mut slot = StagingSlot::new(&m);
+        let mut planner = BatchPlanner::new();
+        for snap in &snaps {
+            stager.stage(snap, &mut slot).unwrap();
+            for s in batched.iter_mut().chain(reference.iter_mut()) {
+                s.prepare(snap).unwrap();
+            }
+            let mut members: Vec<RoundMember> = batched
+                .iter_mut()
+                .map(|s| RoundMember {
+                    session: s.batchable().expect("mirror sessions batch"),
+                    snap,
+                    slot: &slot,
+                })
+                .collect();
+            planner.run_round(&engine, &mut members).unwrap();
+            drop(members);
+            for (b, r) in batched.iter().zip(reference.iter_mut()) {
+                r.infer(snap, &slot).unwrap();
+                assert_eq!(bits(b.output()), bits(r.output()), "batched step diverged");
+            }
+        }
+        let st = planner.stats;
+        assert_eq!(st.rounds, snaps.len() as u64);
+        assert_eq!(st.steps, 3 * snaps.len() as u64);
+        // per round: wave 0 = EvolveGCN layer-1 pair (1 call, 2 reqs) +
+        // M2's two singleton tags (2 calls, 2 reqs); wave 1 = the
+        // layer-2 pair (1 call, 2 reqs) → 4 calls, 6 requests
+        assert_eq!(st.fused_calls, 4 * snaps.len() as u64);
+        assert_eq!(st.fused_requests, 6 * snaps.len() as u64);
+        assert!((st.occupancy() - 1.5).abs() < 1e-12, "occupancy {}", st.occupancy());
     }
 
     #[test]

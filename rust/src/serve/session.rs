@@ -1,10 +1,12 @@
 //! The unified model session: one object-safe trait every serving
-//! surface drives, with mirror (pure-Rust, artifact-free) and PJRT
-//! (AOT-compiled) implementations for all three models.
+//! surface drives, with mirror (pure-Rust, artifact-free)
+//! implementations for all four model families and PJRT (AOT-compiled)
+//! ones for the three with artifact sets (TGAT is mirror-only).
 //!
 //! A [`DgnnSession`] owns everything that evolves across a tenant's
 //! snapshot stream — evolved GCN weights for EvolveGCN, H/C recurrent
-//! node state for the GCRN variants — behind `prepare`/`infer` hooks,
+//! node state for the GCRN variants, nothing at all for the stateless
+//! TGAT attention encoder — behind `prepare`/`infer` hooks,
 //! and hands the pipeline its stage-side half through
 //! [`DgnnSession::make_stager`]: a [`SessionStager`] is the `Send` part
 //! that pads graphs, rebuilds CSRs and materialises node features on a
@@ -20,7 +22,8 @@
 //!
 //! Mirror sessions additionally implement the **split-step**
 //! [`BatchableSession`] API (`begin_step` → announced [`Projection`]s →
-//! `finish_step`) that the scheduler's cross-stream batching layer
+//! `resume_step`, once per dependency level) that the scheduler's
+//! cross-stream batching layer
 //! (`serve::batch`) fuses across tenants, and they run
 //! **allocation-free at steady state**: feature and recurrent-state
 //! operands are borrowed views (`StagingSlot::x`, the `RecurrentState`
@@ -29,7 +32,7 @@
 //! `rust/tests/alloc_hotpath.rs` for the recurrent models (EvolveGCN's
 //! matrix-GRU weight evolution still allocates).
 
-use super::batch::{step_unbatched, BatchKey, Projection};
+use super::batch::{step_unbatched, BatchKey, Projection, StepScratch};
 use crate::coordinator::{NodeStateStore, ResidentState};
 use crate::datasets::synth::EditStep;
 use crate::error::{Error, Result};
@@ -252,14 +255,18 @@ pub trait DgnnSession {
 /// across tenants.
 ///
 /// Contract: `begin_step` pushes one [`Projection`] per batchable GEMM
-/// (its index is the `tag`); between `begin_step` and `finish_step`,
+/// of the step's **first dependency level**, each carrying a
+/// session-chosen `tag` in its key; while any level is in flight,
 /// [`Self::operand`]`(tag)` exposes the `[rows × k]` operand rows and
 /// [`Self::weight`]`(tag)` the weight matrix — and two sessions whose
 /// projections carry equal [`BatchKey`]s **must** hold bitwise-identical
-/// weights (the planner fuses on that contract).  `finish_step` consumes
-/// `projected[tag]` (`[rows × n]` result rows) and completes the step,
-/// after which [`DgnnSession::output`] reads the embedding exactly as if
-/// `infer` had run.
+/// weights (the planner fuses on that contract).  `resume_step` then
+/// consumes the level's projected rows (`projected[i]` pairs with the
+/// i-th announced projection) and either completes the step or
+/// announces the next level; once a resume announces nothing,
+/// [`DgnnSession::output`] reads the embedding exactly as if `infer`
+/// had run.  `finish_step` is the single-level completion the default
+/// `resume_step` forwards to.
 pub trait BatchableSession {
     /// Run the step's front half (state advance, sparse aggregation —
     /// everything before the dense projections) and announce the
@@ -277,13 +284,33 @@ pub trait BatchableSession {
     /// Weight matrix of projection `tag` (`[k × n]`).
     fn weight(&self, tag: usize) -> &Mat;
 
-    /// Complete the step from the projected rows.
+    /// Complete the step from the projected rows in one go (the
+    /// single-level remainder; multi-level sessions also accept it as
+    /// "resolve everything after the first level privately").
     fn finish_step(
         &mut self,
         snap: &Snapshot,
         slot: &StagingSlot,
         projected: &[&[f32]],
     ) -> Result<()>;
+
+    /// Consume one dependency level's projected rows and either
+    /// complete the step or announce the next level's projections into
+    /// `out` (left empty = step complete).  The planner and
+    /// [`step_unbatched`] drive every step through this hook; the
+    /// default forwards to [`Self::finish_step`] and announces nothing —
+    /// the single-level behaviour every session had before round-level
+    /// dependency scheduling.
+    fn resume_step(
+        &mut self,
+        snap: &Snapshot,
+        slot: &StagingSlot,
+        projected: &[&[f32]],
+        out: &mut Vec<Projection>,
+    ) -> Result<()> {
+        let _ = out;
+        self.finish_step(snap, slot, projected)
+    }
 }
 
 /// A/B control for edit-stream serving: wraps any session so its stager
@@ -556,11 +583,13 @@ enum MirrorState {
     Evolve(EvolveState),
     GcrnM1(M1State),
     GcrnM2(M2State),
+    Tgat(TgatState),
 }
 
 /// EvolveGCN-O: GRU-evolved layer weights; the layer-1 projection
-/// `(Â·X) @ w1` is the batchable GEMM, layer 2 chains on its output and
-/// runs unbatched in `finish_step`.
+/// `(Â·X) @ w1` is the first batchable level, the layer-2 projection
+/// `(Â·relu(L1)) @ w2` the second — a two-level dependency chain the
+/// planner schedules round-level so both layers fuse across tenants.
 struct EvolveState {
     params: Box<crate::models::EvolveGcnParams>,
     w1: Mat,
@@ -568,13 +597,42 @@ struct EvolveState {
     /// Served steps == weight-evolution epochs (the batch-key version:
     /// same-seed tenants fuse only while in lock-step).
     steps: u64,
-    /// Â·X, `[n × in_dim]` — the announced operand.
+    /// Â·X, `[n × in_dim]` — the level-0 operand (tag 0).
     agg1: Vec<f32>,
     /// relu-ed layer-1 rows, `[n × hidden_dim]`.
     h1: Vec<f32>,
-    /// Two-step scratch of the unbatched second layer.
+    /// Â·relu(L1), `[n × hidden_dim]` — the level-1 operand (tag 1).
     agg2: Vec<f32>,
     cur_n: usize,
+    /// Which dependency level the in-flight step is at (0 = layer-1
+    /// projection pending, 1 = layer-2 projection pending).
+    phase: u8,
+}
+
+/// TGAT-style temporal attention (stateless across steps): the Q/K/V
+/// input projections (tags 0–2) are the first batchable level, the
+/// output projection of the attended rows (tag 3) the second — the
+/// same two-level dependency chain shape as EvolveGCN, with the
+/// time-encoded attention kernel between the levels.
+struct TgatState {
+    params: Box<crate::models::TgatParams>,
+    wq: Mat,
+    wk: Mat,
+    wv: Mat,
+    wo: Mat,
+    /// Copy of the staged feature rows, `[n × in_dim]` — the Q/K/V
+    /// operand must outlive the staging-slot borrow `begin_step` gets.
+    xin: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Attention-weighted value rows, `[n × hidden_dim]` — the output
+    /// projection's operand (tag 3).
+    attn: Vec<f32>,
+    cur_n: usize,
+    /// Which dependency level the in-flight step is at (0 = Q/K/V
+    /// projections pending, 1 = output projection pending).
+    phase: u8,
 }
 
 /// GCRN-M1 (stacked): two GCN layers feed a dense LSTM; the LSTM input
@@ -623,9 +681,8 @@ pub struct MirrorSession {
     engine: Arc<Engine>,
     state: MirrorState,
     out: Vec<f32>,
-    /// `infer`'s reusable projection scratch (see [`step_unbatched`]).
-    proj_specs: Vec<Projection>,
-    proj_out: Vec<f32>,
+    /// `infer`'s reusable step scratch (see [`step_unbatched`]).
+    scratch: StepScratch,
 }
 
 impl ModelKind {
@@ -645,6 +702,7 @@ impl ModelKind {
                     h1: Vec::new(),
                     agg2: Vec::new(),
                     cur_n: 0,
+                    phase: 0,
                 })
             }
             ModelParams::GcrnM1(p) => {
@@ -678,6 +736,23 @@ impl ModelKind {
                     cur_n: 0,
                 })
             }
+            ModelParams::Tgat(p) => {
+                let d = p.dims;
+                MirrorState::Tgat(TgatState {
+                    wq: Mat::from_vec(d.in_dim, d.hidden_dim, p.wq.clone()),
+                    wk: Mat::from_vec(d.in_dim, d.hidden_dim, p.wk.clone()),
+                    wv: Mat::from_vec(d.in_dim, d.hidden_dim, p.wv.clone()),
+                    wo: Mat::from_vec(d.hidden_dim, d.out_dim, p.wo.clone()),
+                    params: Box::new(p),
+                    xin: Vec::new(),
+                    q: Vec::new(),
+                    k: Vec::new(),
+                    v: Vec::new(),
+                    attn: Vec::new(),
+                    cur_n: 0,
+                    phase: 0,
+                })
+            }
         };
         Box::new(MirrorSession {
             kind: self,
@@ -687,8 +762,7 @@ impl ModelKind {
             engine: Arc::clone(&cfg.engine),
             state,
             out: Vec::new(),
-            proj_specs: Vec::new(),
-            proj_out: Vec::new(),
+            scratch: StepScratch::default(),
         })
     }
 }
@@ -709,6 +783,7 @@ impl BatchableSession for MirrorSession {
         match &mut self.state {
             MirrorState::Evolve(s) => {
                 s.cur_n = n;
+                s.phase = 0;
                 s.w1 = gru_matrix_cell(&s.w1, &s.params.gru1);
                 s.w2 = gru_matrix_cell(&s.w2, &s.params.gru2);
                 s.agg1.resize(n * d.in_dim, 0.0);
@@ -770,6 +845,22 @@ impl BatchableSession for MirrorSession {
                     n: 4 * d.hidden_dim,
                 });
             }
+            MirrorState::Tgat(s) => {
+                s.cur_n = n;
+                s.phase = 0;
+                s.xin.resize(n * d.in_dim, 0.0);
+                s.xin.copy_from_slice(x);
+                // Q/K/V share the operand but not the weight — three
+                // tags, one wave
+                for tag in 0..3u8 {
+                    out.push(Projection {
+                        key: key(tag, 0),
+                        rows: n,
+                        k: d.in_dim,
+                        n: d.hidden_dim,
+                    });
+                }
+            }
         }
         Ok(())
     }
@@ -778,10 +869,13 @@ impl BatchableSession for MirrorSession {
         let dh = self.dims.hidden_dim;
         match (&self.state, tag) {
             (MirrorState::Evolve(s), 0) => &s.agg1,
+            (MirrorState::Evolve(s), 1) => &s.agg2,
             (MirrorState::GcrnM1(s), 0) => &s.x2,
             (MirrorState::GcrnM1(s), 1) => &s.rec.h()[..s.cur_n * dh],
             (MirrorState::GcrnM2(s), 0) => &s.agg_x,
             (MirrorState::GcrnM2(s), 1) => &s.agg_h,
+            (MirrorState::Tgat(s), 0 | 1 | 2) => &s.xin,
+            (MirrorState::Tgat(s), 3) => &s.attn,
             _ => panic!("no projection with tag {tag}"),
         }
     }
@@ -789,10 +883,15 @@ impl BatchableSession for MirrorSession {
     fn weight(&self, tag: usize) -> &Mat {
         match (&self.state, tag) {
             (MirrorState::Evolve(s), 0) => &s.w1,
+            (MirrorState::Evolve(s), 1) => &s.w2,
             (MirrorState::GcrnM1(s), 0) => &s.wx,
             (MirrorState::GcrnM1(s), 1) => &s.wh,
             (MirrorState::GcrnM2(s), 0) => &s.wx,
             (MirrorState::GcrnM2(s), 1) => &s.wh,
+            (MirrorState::Tgat(s), 0) => &s.wq,
+            (MirrorState::Tgat(s), 1) => &s.wk,
+            (MirrorState::Tgat(s), 2) => &s.wv,
+            (MirrorState::Tgat(s), 3) => &s.wo,
             _ => panic!("no projection with tag {tag}"),
         }
     }
@@ -867,8 +966,110 @@ impl BatchableSession for MirrorSession {
                 self.out.clear();
                 self.out.extend_from_slice(&s.hn);
             }
+            MirrorState::Tgat(s) => {
+                // single-level remainder: adopt Q/K/V, run the
+                // attention kernel, project the attended rows privately
+                let n = s.cur_n;
+                s.q.resize(n * dh, 0.0);
+                s.q.copy_from_slice(projected[0]);
+                s.k.resize(n * dh, 0.0);
+                s.k.copy_from_slice(projected[1]);
+                s.v.resize(n * dh, 0.0);
+                s.v.copy_from_slice(projected[2]);
+                s.attn.resize(n * dh, 0.0);
+                eng.attention_slice_into(
+                    &slot.csr,
+                    &snap.selfcoef,
+                    &s.q,
+                    &s.k,
+                    &s.v,
+                    dh,
+                    &s.params.omega,
+                    &s.params.wt,
+                    &mut s.attn,
+                );
+                self.out.resize(n * d.out_dim, 0.0);
+                eng.matmul_packed_into(&s.attn, n, dh, &s.wo, &mut self.out);
+                s.phase = 0;
+            }
         }
         Ok(())
+    }
+
+    fn resume_step(
+        &mut self,
+        snap: &Snapshot,
+        slot: &StagingSlot,
+        projected: &[&[f32]],
+        out: &mut Vec<Projection>,
+    ) -> Result<()> {
+        let d = self.dims;
+        let dh = d.hidden_dim;
+        let (kind, seed) = (self.kind, self.seed);
+        let key = |tag: u8, version: u64| BatchKey { kind, seed, dims: d, version, tag };
+        match &mut self.state {
+            // EvolveGCN level 0: relu the projected layer-1 rows,
+            // aggregate them, and announce the layer-2 projection — the
+            // dependency `finish_step` resolves privately instead fuses
+            // across tenants at the same level.
+            MirrorState::Evolve(s) if s.phase == 0 => {
+                let n = s.cur_n;
+                s.h1.resize(n * dh, 0.0);
+                s.h1.copy_from_slice(projected[0]);
+                for v in s.h1.iter_mut() {
+                    *v = v.max(0.0);
+                }
+                s.agg2.resize(n * dh, 0.0);
+                self.engine
+                    .aggregate_slice_into(&slot.csr, &snap.selfcoef, &s.h1, dh, &mut s.agg2);
+                out.push(Projection { key: key(1, s.steps), rows: n, k: dh, n: d.out_dim });
+                s.phase = 1;
+                Ok(())
+            }
+            // EvolveGCN level 1: the projected rows are the embedding
+            MirrorState::Evolve(s) => {
+                self.out.clear();
+                self.out.extend_from_slice(projected[0]);
+                s.steps += 1;
+                s.phase = 0;
+                Ok(())
+            }
+            // TGAT level 0: adopt Q/K/V, run the attention kernel, and
+            // announce the output projection
+            MirrorState::Tgat(s) if s.phase == 0 => {
+                let n = s.cur_n;
+                s.q.resize(n * dh, 0.0);
+                s.q.copy_from_slice(projected[0]);
+                s.k.resize(n * dh, 0.0);
+                s.k.copy_from_slice(projected[1]);
+                s.v.resize(n * dh, 0.0);
+                s.v.copy_from_slice(projected[2]);
+                s.attn.resize(n * dh, 0.0);
+                self.engine.attention_slice_into(
+                    &slot.csr,
+                    &snap.selfcoef,
+                    &s.q,
+                    &s.k,
+                    &s.v,
+                    dh,
+                    &s.params.omega,
+                    &s.params.wt,
+                    &mut s.attn,
+                );
+                out.push(Projection { key: key(3, 0), rows: n, k: dh, n: d.out_dim });
+                s.phase = 1;
+                Ok(())
+            }
+            // TGAT level 1: the projected rows are the embedding
+            MirrorState::Tgat(s) => {
+                self.out.clear();
+                self.out.extend_from_slice(projected[0]);
+                s.phase = 0;
+                Ok(())
+            }
+            // the GCRN models complete in one level
+            _ => self.finish_step(snap, slot, projected),
+        }
     }
 }
 
@@ -886,15 +1087,52 @@ impl DgnnSession for MirrorSession {
     }
 
     fn infer(&mut self, snap: &Snapshot, slot: &StagingSlot) -> Result<()> {
+        if let MirrorState::Evolve(s) = &mut self.state {
+            // batch-off fused fast path: with no cross-tenant fusion to
+            // feed, both layers run [`gcn_layer_slice_into`] (the fused
+            // aggregate-project kernel where profitable) instead of the
+            // level-by-level projection machinery.  Bitwise-equal to the
+            // planner's two-wave path because fused ≡
+            // aggregate-then-matmul (`numerics::spmm` pins it).
+            let n = snap.num_nodes();
+            let d = self.dims;
+            s.cur_n = n;
+            s.phase = 0;
+            s.w1 = gru_matrix_cell(&s.w1, &s.params.gru1);
+            s.w2 = gru_matrix_cell(&s.w2, &s.params.gru2);
+            let x = &slot.x[..n * d.in_dim];
+            gcn_layer_slice_into(
+                &self.engine,
+                &slot.csr,
+                &snap.selfcoef,
+                x,
+                d.in_dim,
+                &s.w1,
+                true,
+                &mut s.h1,
+                &mut s.agg1,
+            );
+            gcn_layer_slice_into(
+                &self.engine,
+                &slot.csr,
+                &snap.selfcoef,
+                &s.h1,
+                d.hidden_dim,
+                &s.w2,
+                false,
+                &mut self.out,
+                &mut s.agg2,
+            );
+            s.steps += 1;
+            return Ok(());
+        }
         // the unbatched step is the batched one with a single member —
         // shared code keeps the two serving paths bitwise-equal by
         // construction
         let engine = Arc::clone(&self.engine);
-        let mut specs = std::mem::take(&mut self.proj_specs);
-        let mut buf = std::mem::take(&mut self.proj_out);
-        let res = step_unbatched(&engine, self, snap, slot, &mut specs, &mut buf);
-        self.proj_specs = specs;
-        self.proj_out = buf;
+        let mut scratch = std::mem::take(&mut self.scratch);
+        let res = step_unbatched(&engine, self, snap, slot, &mut scratch);
+        self.scratch = scratch;
         res
     }
 
@@ -904,7 +1142,9 @@ impl DgnnSession for MirrorSession {
 
     fn finish(&mut self) -> Option<DeltaCounts> {
         match &mut self.state {
-            MirrorState::Evolve(_) => None,
+            // neither EvolveGCN (weights only) nor TGAT (stateless)
+            // keeps per-node state resident
+            MirrorState::Evolve(_) | MirrorState::Tgat(_) => None,
             MirrorState::GcrnM1(M1State { rec, .. }) | MirrorState::GcrnM2(M2State { rec, .. }) => {
                 rec.finish()
             }
@@ -951,9 +1191,14 @@ pub fn build_pjrt_session(
         }
         ModelParams::GcrnM1(p) => PjrtBackend::M1(GcrnM1Executor::new(client, dir, &p)?),
         ModelParams::GcrnM2(p) => PjrtBackend::M2(GcrnExecutor::new(client, dir, &p)?),
+        ModelParams::Tgat(_) => {
+            return Err(Error::Artifact(
+                "TGAT is a mirror-only model (no AOT artifact set)".into(),
+            ))
+        }
     };
     let rec = match kind {
-        ModelKind::EvolveGcn => None,
+        ModelKind::EvolveGcn | ModelKind::Tgat => None,
         ModelKind::GcrnM1 | ModelKind::GcrnM2 => Some(RecurrentState::new(cfg)),
     };
     Ok(Box::new(PjrtSession {
@@ -1140,6 +1385,25 @@ mod tests {
     }
 
     #[test]
+    fn mirror_tgat_session_matches_direct_numerics() {
+        let (snaps, m, total) = small_setup();
+        let d = Dims::default();
+        let mut session = ModelKind::Tgat.build_session(&cfg(total, m.max_nodes, false));
+        let got = drive(session.as_mut(), &snaps, &m);
+
+        let params = match ModelKind::Tgat.init_params(42, d) {
+            ModelParams::Tgat(p) => p,
+            _ => unreachable!(),
+        };
+        for (i, s) in snaps.iter().enumerate() {
+            let x = crate::baselines::cpu::features_for(s, d, 42);
+            let out = numerics::tgat_step(s, &x, &params);
+            assert_eq!(got[i], bits(&out.data), "step {i} diverged");
+        }
+        assert!(session.finish().is_none(), "TGAT keeps no resident state");
+    }
+
+    #[test]
     fn delta_session_bitwise_matches_full_session() {
         let (snaps, m, total) = small_setup();
         for kind in ModelKind::all() {
@@ -1150,7 +1414,7 @@ mod tests {
             assert_eq!(a, b, "{}: delta path diverged", kind.name());
             assert!(full.finish().is_none());
             let fin = delta.finish();
-            if kind == ModelKind::EvolveGcn {
+            if matches!(kind, ModelKind::EvolveGcn | ModelKind::Tgat) {
                 assert!(fin.is_none()); // no per-node state to keep resident
             } else {
                 let c = fin.expect("delta session reports state counters");

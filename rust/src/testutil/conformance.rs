@@ -1,0 +1,468 @@
+//! Serving conformance kit: the parameterized invariant suite every
+//! `(ModelKind, backend)` pair must pass to be servable.
+//!
+//! The serve layer's contract is *numerics-neutral scheduling*: no
+//! scheduler feature — cross-tenant batching, delta-aware staging,
+//! multi-tenant interleaving, in-place CSR edit patching, fault
+//! quarantine — may change a single output bit relative to the plainest
+//! path that computes the same thing.  Each model family re-proves that
+//! contract here instead of accreting its own ad-hoc copies:
+//!
+//! | invariant | check |
+//! |---|---|
+//! | batch-on ≡ batch-off        | [`Conformance::check_batch_toggle`] |
+//! | delta ≡ full staging        | [`Conformance::check_delta_vs_full`] |
+//! | K-stream sched ≡ K solo     | [`Conformance::check_scheduler_vs_standalone`] |
+//! | edits ≡ full restage        | [`Conformance::check_edits_vs_restage`] |
+//! | fault quarantines 1 tenant  | [`Conformance::check_fault_quarantine`] |
+//! | allocation-free steady step | [`check_steady_state_allocs`] |
+//!
+//! All comparisons are **bitwise** (`f32::to_bits`), not approximate.
+//! `rust/tests/prop_serve.rs` instantiates the suite for every
+//! [`ModelKind`] at 1/2/4 engine threads (CI re-runs it under
+//! `--features simd` for the lane-kernel backend); the allocation
+//! invariant needs a counting global allocator, so it takes the counter
+//! as a closure and runs from the dedicated single-test
+//! `alloc_hotpath` binary for the kinds [`alloc_check_applicable`]
+//! admits.
+
+use crate::coordinator::preprocess::preprocess_stream;
+use crate::datasets::synth::{self, EditStep};
+use crate::graph::{CooEdge, CooStream, Snapshot};
+use crate::models::{Dims, ModelKind};
+use crate::numerics::Engine;
+use crate::runtime::{Manifest, StagingSlot};
+use crate::serve::{
+    run_session, DgnnSession, FaultPlan, FaultPoint, FaultSpec, FullRestageSession, Scheduler,
+    SessionConfig, SessionStager, StreamSource, TenantSpec,
+};
+use crate::testutil::Pcg32;
+use std::sync::Arc;
+
+const SPLITTER: i64 = 100;
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Per-stream outputs in serve order: (snapshot index, output bits).
+type Outs = Vec<(usize, Vec<u32>)>;
+
+/// Small deterministic tenant stream: `snaps` windows on the fixed
+/// splitter grid, random edges over a small universe so adjacent
+/// windows overlap (giving the delta paths shared rows to exploit).
+fn tenant_stream(seed: u64, universe: usize, snaps: usize, max_epe: usize) -> CooStream {
+    let mut rng = Pcg32::seeded(seed);
+    let mut edges = Vec::new();
+    for s in 0..snaps {
+        let base = s as i64 * SPLITTER;
+        let count = 1 + rng.below(max_epe);
+        for j in 0..count {
+            // the first edge of window 0 anchors the splitter grid at 0
+            let t = if j == 0 {
+                base
+            } else {
+                base + 1 + rng.below(SPLITTER as usize - 2) as i64
+            };
+            edges.push(CooEdge {
+                src: rng.below(universe) as u32,
+                dst: rng.below(universe) as u32,
+                weight: 1.0 + (rng.below(5) as f32),
+                time: t,
+            });
+        }
+    }
+    CooStream::from_edges("conformance", edges).unwrap()
+}
+
+/// Three live tenants plus one with an empty stream (zero snapshots),
+/// so every invariant also covers the degenerate tenant.
+fn fixed_sources(base_seed: u64) -> Vec<StreamSource> {
+    let mut v: Vec<StreamSource> = (0..3)
+        .map(|i| StreamSource {
+            name: format!("t{i}"),
+            stream: tenant_stream(base_seed + i as u64, 24, 6, 8),
+            splitter_secs: SPLITTER,
+        })
+        .collect();
+    v.push(StreamSource {
+        name: "empty".into(),
+        stream: CooStream::default(),
+        splitter_secs: SPLITTER,
+    });
+    v
+}
+
+/// One model-kind/thread-count instantiation of the conformance suite.
+#[derive(Clone, Copy, Debug)]
+pub struct Conformance {
+    pub kind: ModelKind,
+    pub threads: usize,
+}
+
+impl Conformance {
+    pub fn new(kind: ModelKind, threads: usize) -> Conformance {
+        Conformance { kind, threads }
+    }
+
+    fn ctx(&self) -> String {
+        format!("kind={} threads={}", self.kind.name(), self.threads)
+    }
+
+    fn session_for(
+        &self,
+        tenant: usize,
+        total_nodes: usize,
+        max_nodes: usize,
+        delta: bool,
+        engine: &Arc<Engine>,
+    ) -> Box<dyn DgnnSession> {
+        self.kind.build_session(&SessionConfig {
+            dims: Dims::default(),
+            seed: 7 + tenant as u64,
+            total_nodes,
+            max_nodes,
+            delta,
+            engine: Arc::clone(engine),
+        })
+    }
+
+    /// Serve `sources` through the multi-tenant scheduler.
+    fn run_scheduled(&self, sources: &[StreamSource], delta: bool, batch: bool) -> Vec<Outs> {
+        let engine = Arc::new(Engine::new(self.threads));
+        let manifest = Scheduler::manifest_for(sources, Dims::default());
+        let sessions: Vec<Box<dyn DgnnSession>> = sources
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                self.session_for(i, s.stream.num_nodes as usize, manifest.max_nodes, delta, &engine)
+            })
+            .collect();
+        let sched = Scheduler::new(engine, 3).with_batching(batch);
+        let mut outs: Vec<Outs> = vec![Vec::new(); sources.len()];
+        sched
+            .run(&manifest, sources, sessions, usize::MAX, |sid, snap, _slot, out| {
+                outs[sid].push((snap.index, bits(out)));
+                Ok(())
+            })
+            .unwrap_or_else(|e| panic!("{}: scheduled run failed: {e}", self.ctx()));
+        outs
+    }
+
+    /// K independent single-stream runs over the same padded shapes.
+    fn run_standalone(&self, sources: &[StreamSource], delta: bool) -> Vec<Outs> {
+        let manifest = Scheduler::manifest_for(sources, Dims::default());
+        sources
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let engine = Arc::new(Engine::new(self.threads));
+                let mut session = self.session_for(
+                    i,
+                    s.stream.num_nodes as usize,
+                    manifest.max_nodes,
+                    delta,
+                    &engine,
+                );
+                let mut outs: Outs = Vec::new();
+                run_session(
+                    session.as_mut(),
+                    &s.stream,
+                    s.splitter_secs,
+                    &manifest,
+                    2,
+                    usize::MAX,
+                    |snap, _slot, out| {
+                        outs.push((snap.index, bits(out)));
+                        Ok(())
+                    },
+                )
+                .unwrap_or_else(|e| panic!("{}: standalone run failed: {e}", self.ctx()));
+                outs
+            })
+            .collect()
+    }
+
+    /// K-stream scheduling ≡ K standalone runs, bitwise per stream, at
+    /// delta off and on.
+    pub fn check_scheduler_vs_standalone(&self) {
+        let sources = fixed_sources(1000);
+        for delta in [false, true] {
+            let a = self.run_scheduled(&sources, delta, false);
+            let b = self.run_standalone(&sources, delta);
+            assert_eq!(a.len(), b.len());
+            for (sid, (x, y)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    x,
+                    y,
+                    "{} delta={delta} stream={sid}: scheduling changed the numerics",
+                    self.ctx()
+                );
+                // live tenants serve all 6 windows; the empty one none
+                assert_eq!(x.len(), if sid == 3 { 0 } else { 6 });
+            }
+        }
+    }
+
+    /// Batch-on serving ≡ batch-off serving, bitwise per tenant, at
+    /// delta off and on (roster seeds are shared, so same-shape
+    /// projections actually fuse).
+    pub fn check_batch_toggle(&self) {
+        let sources = fixed_sources(2000);
+        for delta in [false, true] {
+            let off = self.run_scheduled(&sources, delta, false);
+            let on = self.run_scheduled(&sources, delta, true);
+            for (sid, (a, b)) in on.iter().zip(&off).enumerate() {
+                assert_eq!(
+                    a,
+                    b,
+                    "{} delta={delta} tenant={sid}: batching changed the numerics",
+                    self.ctx()
+                );
+            }
+        }
+    }
+
+    /// Delta-aware staging/state ≡ full re-staging, bitwise per tenant
+    /// (batch off and on).
+    pub fn check_delta_vs_full(&self) {
+        let sources = fixed_sources(3000);
+        for batch in [false, true] {
+            let full = self.run_scheduled(&sources, false, batch);
+            let delta = self.run_scheduled(&sources, true, batch);
+            for (sid, (a, b)) in delta.iter().zip(&full).enumerate() {
+                assert_eq!(
+                    a,
+                    b,
+                    "{} batch={batch} tenant={sid}: delta staging changed the numerics",
+                    self.ctx()
+                );
+            }
+        }
+    }
+
+    /// Serve edit-stream tenants, optionally force-restaging every step
+    /// from its full snapshot ([`FullRestageSession`] strips the CSR
+    /// patch path).
+    fn run_edits(
+        &self,
+        streams: &[Arc<Vec<EditStep>>],
+        nodes: usize,
+        stage_pool: usize,
+        full_restage: bool,
+    ) -> Vec<Outs> {
+        let engine = Arc::new(Engine::new(self.threads));
+        let manifest =
+            Scheduler::manifest_for_edits(streams.iter().map(|s| s.as_slice()), Dims::default());
+        let tenants: Vec<TenantSpec> = streams
+            .iter()
+            .enumerate()
+            .map(|(i, st)| {
+                let mut session =
+                    self.session_for(i, nodes, manifest.max_nodes, false, &engine);
+                if full_restage {
+                    session = FullRestageSession::new(session);
+                }
+                TenantSpec::new_edits(&format!("e{i}"), Arc::clone(st), 1, session)
+            })
+            .collect();
+        let sched = Scheduler::new(engine, 3).with_stage_pool(stage_pool);
+        let mut outs: Vec<Outs> = vec![Vec::new(); streams.len()];
+        let report = sched
+            .serve_report(
+                &manifest,
+                tenants,
+                |_| Vec::new(),
+                |sid, snap, _slot, out| {
+                    outs[sid].push((snap.index, bits(out)));
+                    Ok(())
+                },
+            )
+            .unwrap_or_else(|e| panic!("{}: edit run failed: {e}", self.ctx()));
+        for o in &report.outcomes {
+            assert!(o.fault.is_none(), "{}: {} spuriously faulted", self.ctx(), o.name);
+        }
+        outs
+    }
+
+    /// Edits-mode serving (CSR patched in place under the stable node
+    /// layout) ≡ the same per-step snapshots rebuilt from scratch,
+    /// bitwise — thread-per-tenant and on a 2-worker stage pool.
+    pub fn check_edits_vs_restage(&self) {
+        let streams: Vec<Arc<Vec<EditStep>>> = (0..3)
+            .map(|i| {
+                let mut rng = Pcg32::seeded(4000 + i as u64);
+                Arc::new(synth::edit_stream(&mut rng, 32, 60, 5, 0.2))
+            })
+            .collect();
+        let reference = self.run_edits(&streams, 32, 0, true);
+        for o in &reference {
+            assert_eq!(o.len(), 5, "{}", self.ctx());
+        }
+        for pool in [0usize, 2] {
+            let patched = self.run_edits(&streams, 32, pool, false);
+            assert_eq!(
+                patched,
+                reference,
+                "{} stage_pool={pool}: CSR patching changed the numerics",
+                self.ctx()
+            );
+        }
+    }
+
+    /// A fatal injected fault quarantines exactly its tenant: the
+    /// victim keeps the bitwise prefix served before the fault, every
+    /// other tenant is bitwise identical to the fault-free run.
+    pub fn check_fault_quarantine(&self) {
+        let sources: Vec<StreamSource> = (0..3)
+            .map(|i| StreamSource {
+                name: format!("t{i}"),
+                stream: tenant_stream(5000 + i as u64, 24, 4, 6),
+                splitter_secs: SPLITTER,
+            })
+            .collect();
+        let serve = |plan: FaultPlan| {
+            let engine = Arc::new(Engine::new(self.threads));
+            let manifest = Scheduler::manifest_for(&sources, Dims::default());
+            let tenants: Vec<TenantSpec> = sources
+                .iter()
+                .enumerate()
+                .map(|(i, s)| {
+                    let session = self.session_for(
+                        i,
+                        s.stream.num_nodes as usize,
+                        manifest.max_nodes,
+                        false,
+                        &engine,
+                    );
+                    TenantSpec::new(&s.name, Arc::new(s.stream.clone()), SPLITTER, 1, session)
+                })
+                .collect();
+            let sched = Scheduler::new(engine, 2).with_faults(Arc::new(plan));
+            let mut outs: Vec<Outs> = vec![Vec::new(); sources.len()];
+            let report = sched
+                .serve_report(
+                    &manifest,
+                    tenants,
+                    |_| Vec::new(),
+                    |sid, snap, _slot, out| {
+                        outs[sid].push((snap.index, bits(out)));
+                        Ok(())
+                    },
+                )
+                .unwrap_or_else(|e| panic!("{}: fault run failed: {e}", self.ctx()));
+            (outs, report)
+        };
+        let (clean, clean_report) = serve(FaultPlan::new());
+        assert_eq!(clean_report.health.quarantined, 0, "{}", self.ctx());
+        let plan = FaultPlan::new().with(FaultSpec {
+            tenant: 1,
+            point: FaultPoint::Infer,
+            index: 2,
+            transient: false,
+            fires: 1,
+        });
+        let (outs, report) = serve(plan);
+        // the victim keeps exactly the windows served before the fault
+        assert_eq!(outs[1][..], clean[1][..2], "{}: victim lost its prefix", self.ctx());
+        let o1 = &report.outcomes[1];
+        assert!(o1.fault.is_some(), "{}: quarantine must record the fault", self.ctx());
+        assert!(o1.removed, "{}: quarantined tenant must finalize removed", self.ctx());
+        for sid in [0usize, 2] {
+            assert_eq!(
+                outs[sid], clean[sid],
+                "{}: healthy tenant {sid} disturbed by the quarantine",
+                self.ctx()
+            );
+            assert!(report.outcomes[sid].fault.is_none());
+            assert!(!report.outcomes[sid].removed);
+        }
+        assert_eq!(report.health.quarantined, 1, "{}", self.ctx());
+    }
+
+    /// Every invariant the suite can prove without a counting
+    /// allocator (see [`check_steady_state_allocs`] for the last one).
+    pub fn run_all(&self) {
+        self.check_scheduler_vs_standalone();
+        self.check_batch_toggle();
+        self.check_delta_vs_full();
+        self.check_edits_vs_restage();
+        self.check_fault_quarantine();
+    }
+}
+
+/// Whether the allocation-free invariant applies to `kind`.  EvolveGCN
+/// is exempt by design: its per-step matrix-GRU weight evolution
+/// allocates fresh weight matrices.  The GCRN mirrors and TGAT (whose
+/// attention scratch is thread-local and whose projection resolution
+/// runs over the session's persistent [`StepScratch`]) are held to the
+/// zero-allocation bar.
+///
+/// [`StepScratch`]: crate::serve::batch::StepScratch
+pub fn alloc_check_applicable(kind: ModelKind) -> bool {
+    !matches!(kind, ModelKind::EvolveGcn)
+}
+
+/// Steady-state allocation-free stage + infer for one model kind:
+/// after two warm-up cycles over the stream (every buffer at
+/// high-water capacity), a full serve step — `SessionStager::stage`
+/// (full and delta twin) plus `DgnnSession::infer` — must perform zero
+/// heap allocations.  `allocs` reads the caller's counting global
+/// allocator; the serial engine isolates the session's own behavior
+/// (parallel dispatch is asserted separately by the staging harness).
+///
+/// # Panics
+/// Panics if a measured step allocates, or if `kind` is not
+/// [`alloc_check_applicable`].
+pub fn check_steady_state_allocs(kind: ModelKind, allocs: &dyn Fn() -> usize) {
+    assert!(alloc_check_applicable(kind), "{} is exempt", kind.name());
+    let dims = Dims::default();
+    let stream = tenant_stream(42, 40, 10, 12);
+    let snaps: Vec<Snapshot> = preprocess_stream(&stream, SPLITTER).unwrap();
+    let m = Manifest {
+        max_nodes: snaps.iter().map(Snapshot::num_nodes).max().unwrap(),
+        max_edges: snaps.iter().map(Snapshot::num_edges).max().unwrap(),
+        in_dim: dims.in_dim,
+        hidden_dim: dims.hidden_dim,
+        out_dim: dims.out_dim,
+    };
+    let engine = Arc::new(Engine::serial());
+    let cfg = |delta: bool| SessionConfig {
+        dims,
+        seed: 42,
+        total_nodes: stream.num_nodes as usize,
+        max_nodes: m.max_nodes,
+        delta,
+        engine: Arc::clone(&engine),
+    };
+    // one delta and one full-gather session, so both staging paths are
+    // measured
+    let mut sessions = vec![kind.build_session(&cfg(false)), kind.build_session(&cfg(true))];
+    let mut stagers: Vec<_> = sessions.iter().map(|s| s.make_stager(&m)).collect();
+    let mut slot = StagingSlot::new(&m);
+    // warm-up: two full cycles bring every scratch buffer (projection
+    // specs, attention scores, H/C rows, delta caches) to high water
+    for s in snaps.iter().chain(snaps.iter()) {
+        for (session, stager) in sessions.iter_mut().zip(&mut stagers) {
+            stager.stage(s, &mut slot).unwrap();
+            session.prepare(s).unwrap();
+            session.infer(s, &slot).unwrap();
+        }
+    }
+    let before = allocs();
+    for s in snaps.iter() {
+        for (session, stager) in sessions.iter_mut().zip(&mut stagers) {
+            stager.stage(s, &mut slot).unwrap();
+            session.prepare(s).unwrap();
+            session.infer(s, &slot).unwrap();
+        }
+    }
+    let after = allocs();
+    assert_eq!(
+        after - before,
+        0,
+        "{}: serve step performed {} heap allocations at steady state",
+        kind.name(),
+        after - before
+    );
+}

@@ -1,11 +1,14 @@
 //! Test utilities: a seeded PRNG and a small property-testing harness.
 //!
 //! The offline crate set has neither `rand` nor `proptest`, so this module
-//! provides the two pieces the test suites need: [`rng::Pcg32`], a tiny
-//! deterministic PRNG (PCG-XSH-RR 64/32), and [`prop`], a
+//! provides the pieces the test suites need: [`rng::Pcg32`], a tiny
+//! deterministic PRNG (PCG-XSH-RR 64/32), [`prop`], a
 //! proptest-flavoured harness (seeded case generation, failure shrinking,
-//! seed reporting) used by the coordinator/graph invariant tests.
+//! seed reporting) used by the coordinator/graph invariant tests, and
+//! [`conformance`], the parameterized serving-invariant suite every
+//! `(ModelKind, backend)` pair must pass.
 
+pub mod conformance;
 pub mod prop;
 pub mod rng;
 

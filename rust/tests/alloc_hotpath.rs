@@ -276,4 +276,18 @@ fn staging_path_steady_state_is_allocation_free() {
         "mirror-session serve path performed {} heap allocations at steady state",
         after - before
     );
+
+    // --- conformance kit: the parameterized allocation invariant -------
+    // `testutil::conformance` owns the model-generic statement of the
+    // same bar (stage + infer allocation-free at steady state, full and
+    // delta staging both); it takes the counter as a closure because
+    // the counting allocator must be this binary's global.  Runs for
+    // every kind the kit admits — today the GCRN mirrors and TGAT,
+    // with EvolveGCN exempt (weight evolution allocates by design).
+    use dgnn_booster::testutil::conformance;
+    for kind in ModelKind::all() {
+        if conformance::alloc_check_applicable(kind) {
+            conformance::check_steady_state_allocs(kind, &|| ALLOCS.load(Ordering::Relaxed));
+        }
+    }
 }

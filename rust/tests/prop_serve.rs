@@ -25,6 +25,7 @@ use dgnn_booster::serve::{
     run_session, Command, DgnnSession, FullRestageSession, Scheduler, ServeEvent, SessionConfig,
     StreamSource, TenantSpec,
 };
+use dgnn_booster::testutil::conformance::Conformance;
 use dgnn_booster::testutil::{forall, Config, Pcg32};
 use std::sync::Arc;
 
@@ -683,6 +684,25 @@ fn stage_pool_decouples_thread_count_from_tenant_count() {
     // thread-per-tenant as the contrast: one stage thread per tenant
     let (_, per_tenant) = run_edits(&streams[..5], 16, 1, 0, false);
     assert_eq!(per_tenant, 5);
+}
+
+/// The conformance kit ([`testutil::conformance`]): every model kind
+/// must pass the full serving-invariant suite — batch-on ≡ batch-off,
+/// delta ≡ full staging, K-stream scheduling ≡ K standalone runs,
+/// edits ≡ full restage, fault quarantine isolates one tenant — all
+/// bitwise, at 1/2/4 engine threads.  New model families get serving
+/// conformance by construction: add the kind to `ModelKind::all()` and
+/// this test holds it to the same bar (CI re-runs the suite under
+/// `--features simd`, covering the lane-kernel backend).
+///
+/// [`testutil::conformance`]: dgnn_booster::testutil::conformance
+#[test]
+fn conformance_kit_holds_for_every_model_kind_and_thread_count() {
+    for kind in ModelKind::all() {
+        for threads in [1usize, 2, 4] {
+            Conformance::new(kind, threads).run_all();
+        }
+    }
 }
 
 #[test]
